@@ -1,0 +1,78 @@
+//! Scenario: a wireless federation under churn — the paper's motivating
+//! deployment. Compares a clean 64-peer MAR-FL run against runs with 20%
+//! sudden dropouts and 50% participation, demonstrating the resilience
+//! claims of §3.2 (Figure 3).
+//!
+//! ```bash
+//! cargo run --release --example churn_resilience
+//! ```
+
+use marfl::config::ExperimentConfig;
+use marfl::fl::Trainer;
+use marfl::models::default_artifact_dir;
+use marfl::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&default_artifact_dir())?;
+    let base = ExperimentConfig {
+        model: "head".into(),
+        peers: 64,
+        group_size: 4,
+        mar_rounds: 3,
+        iterations: 24,
+        samples_per_peer: 64,
+        test_samples: 1000,
+        eval_every: 4,
+        seed: 606,
+        ..Default::default()
+    };
+
+    let scenarios = [
+        ("stable network           ", 1.0, 0.0),
+        ("20% sudden dropouts      ", 1.0, 0.2),
+        ("50% participation        ", 0.5, 0.0),
+        ("50% part. + 20% dropouts ", 0.5, 0.2),
+    ];
+
+    println!("64-peer MAR-FL federation on the 20NG-like task, T=24\n");
+    println!("scenario                    accuracy   data(MiB)   sim(s)");
+    let mut rows = Vec::new();
+    for (label, participation, dropout) in scenarios {
+        let cfg = ExperimentConfig { participation, dropout, ..base.clone() };
+        let summary = Trainer::new(cfg, &rt)?.run()?;
+        println!(
+            "{label}  {:>8.3}  {:>10.1}  {:>7.1}",
+            summary.final_accuracy,
+            summary.comm.data_bytes as f64 / (1 << 20) as f64,
+            summary.sim_time_s
+        );
+        rows.push((label, summary));
+    }
+
+    let clean = rows[0].1.final_accuracy;
+    let dropped = rows[1].1.final_accuracy;
+    println!(
+        "\ndropouts cost {:.1} accuracy points (paper: dropouts alone cause no extra degradation)",
+        (clean - dropped) * 100.0
+    );
+    println!(
+        "partial participation is the axis that hurts — {:.3} -> {:.3} at 50%",
+        clean, rows[2].1.final_accuracy
+    );
+
+    // Bursty wireless availability (Gilbert–Elliott traces): mean Up
+    // sojourn 10 iterations, Down 2.5 — ~80% stationary availability but
+    // correlated outages, the paper's wireless motivation.
+    let mut markov_cfg = base.clone();
+    markov_cfg.churn_model = "markov".into();
+    markov_cfg.markov_p_down = 0.1;
+    markov_cfg.markov_p_up = 0.4;
+    let summary = Trainer::new(markov_cfg, &rt)?.run()?;
+    println!(
+        "\nbursty wireless trace (markov, ~80% availability): acc {:.3}, data {:.1} MiB — \
+         MAR-FL's dynamic matchmaking regroups around whoever is present",
+        summary.final_accuracy,
+        summary.comm.data_bytes as f64 / (1 << 20) as f64
+    );
+    Ok(())
+}

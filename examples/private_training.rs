@@ -1,0 +1,58 @@
+//! Scenario: privacy-preserving collaborative training (paper §2.2
+//! "Privacy considerations" + Figure 4). Runs fully decentralized
+//! DP-MAR-FL at three privatization strengths and reports the (ε, δ)
+//! guarantee from the RDP accountant next to model utility.
+//!
+//! ```bash
+//! cargo run --release --example private_training
+//! ```
+
+use marfl::config::ExperimentConfig;
+use marfl::fl::Trainer;
+use marfl::models::default_artifact_dir;
+use marfl::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&default_artifact_dir())?;
+    let base = {
+        let mut c = ExperimentConfig {
+            model: "head".into(),
+            peers: 64,
+            group_size: 4,
+            mar_rounds: 3,
+            iterations: 20,
+            samples_per_peer: 64,
+            test_samples: 1000,
+            eval_every: 4,
+            seed: 909,
+            ..Default::default()
+        };
+        c.dp.enabled = true;
+        c
+    };
+
+    println!("fully decentralized DP (Algorithm 4) on 64 peers, T=20, δ=1e-5\n");
+    println!("σ_mult   accuracy   ε(δ=1e-5)   final clip bound");
+    for sigma in [0.1, 0.3, 0.6] {
+        let mut cfg = base.clone();
+        cfg.dp.noise_multiplier = sigma;
+        let mut trainer = Trainer::new(cfg, &rt)?;
+        let summary = trainer.run()?;
+        println!(
+            "{sigma:>6}   {:>8.3}   {:>9.2}   (adaptive, γ=0.5)",
+            summary.final_accuracy,
+            summary.epsilon.unwrap(),
+        );
+    }
+    println!(
+        "\nno-DP reference: σ=0 disables clipping+noise entirely (privacy loss unbounded):"
+    );
+    let mut cfg = base.clone();
+    cfg.dp.enabled = false;
+    let summary = Trainer::new(cfg, &rt)?.run()?;
+    println!("  none   {:>8.3}        inf", summary.final_accuracy);
+    println!(
+        "\nprivacy loss accrues entirely from local computation; MAR merely\naverages privatized models across groups (paper §2.2)."
+    );
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Scenario: capacity planning — how does each aggregation technique's
+//! per-iteration traffic grow with the federation size? Measures the
+//! ledger for N ∈ {8, 16, 27, 64, 125, 216} (no training needed: traffic
+//! is independent of parameter values) and prints the scaling table that
+//! motivates the paper (O(N log N) vs O(N²)).
+//!
+//! ```bash
+//! cargo run --release --example scaling_sweep
+//! ```
+
+use std::sync::Arc;
+
+use marfl::aggregation::{AggCtx, Aggregate, AllToAll, FedAvgServer, PeerState, RingRdfl};
+use marfl::coordinator::MarAggregator;
+use marfl::metrics::CommLedger;
+use marfl::net::Fabric;
+use marfl::rng::Rng;
+use marfl::sim::SimClock;
+
+const P: usize = 18432; // cnn-size states
+
+/// (N, M, G) sweep points: perfect grids where available.
+const SWEEP: &[(usize, usize, usize)] =
+    &[(8, 2, 3), (16, 4, 2), (27, 3, 3), (64, 4, 3), (125, 5, 3), (216, 6, 3)];
+
+fn model() -> marfl::models::ModelMeta {
+    marfl::models::ModelMeta {
+        name: "cnn".into(),
+        param_count: P,
+        padded_len: P,
+        input_shape: vec![16, 16, 1],
+        classes: 10,
+        batch: 64,
+        eval_chunk: 250,
+        init_file: String::new(),
+        artifacts: Default::default(),
+    }
+}
+
+fn states(n: usize, rng: &mut Rng) -> Vec<PeerState> {
+    (0..n)
+        .map(|_| PeerState {
+            theta: (0..P).map(|_| rng.normal() as f32).collect(),
+            momentum: vec![0.0; P],
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("per-iteration data traffic (MiB), cnn-size states (2·{P}·4 B each)\n");
+    println!(
+        "{:>5} {:>10} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "N", "FedAvg", "MAR-FL", "RDFL", "AR-FL", "MAR msgs", "N(N-1)"
+    );
+    for &(n, m, g) in SWEEP {
+        let measure = |which: &str| -> (u64, u64) {
+            let ledger = Arc::new(CommLedger::new());
+            let fabric = Fabric::new(ledger.clone(), 12.5e6, 0.02);
+            let mut clock = SimClock::new();
+            let mut rng = Rng::new(9);
+            let mut st = states(n, &mut rng);
+            let agg: Vec<usize> = (0..n).collect();
+            let mdl = model();
+            let mut mar;
+            let aggregator: &mut dyn Aggregate = match which {
+                "marfl" => {
+                    mar = MarAggregator::new(n, m, g, ledger.clone(), 3);
+                    ledger.reset(); // exclude one-time join traffic
+                    &mut mar
+                }
+                "fedavg" => &mut FedAvgServer,
+                "rdfl" => &mut RingRdfl,
+                _ => &mut AllToAll,
+            };
+            let mut ctx = AggCtx {
+                fabric: &fabric,
+                clock: &mut clock,
+                rng: &mut rng,
+                runtime: None,
+                model: &mdl,
+            };
+            aggregator.aggregate(&mut st, &agg, &mut ctx).unwrap();
+            let s = ledger.snapshot();
+            (s.data_bytes, s.data_msgs)
+        };
+        let (fedavg, _) = measure("fedavg");
+        let (marfl, mar_msgs) = measure("marfl");
+        let (rdfl, _) = measure("rdfl");
+        let (arfl, _) = measure("arfl");
+        let mib = |b: u64| b as f64 / (1 << 20) as f64;
+        println!(
+            "{:>5} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>12} {:>12}",
+            n,
+            mib(fedavg),
+            mib(marfl),
+            mib(rdfl),
+            mib(arfl),
+            mar_msgs,
+            n * (n - 1)
+        );
+    }
+    println!(
+        "\nMAR-FL transfers ≈ N·G·(M−1) = O(N log_M N); ring/all-to-all = N(N−1) = O(N²)."
+    );
+    Ok(())
+}

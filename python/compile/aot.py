@@ -1,0 +1,136 @@
+"""AOT lowering: JAX/Pallas (L2+L1) -> HLO text artifacts for the Rust L3.
+
+Runs ONCE at build time (`make artifacts`); Python never executes on the
+training path. Interchange format is HLO *text*, NOT `.serialize()`:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Artifacts written, per model m in {cnn, head}:
+  {m}_train_step.hlo.txt   (theta, mom, x, y, eta, mu) -> (theta', mom', loss)
+  {m}_eval.hlo.txt         (theta, x, y) -> (loss_sum, correct)
+  {m}_logits.hlo.txt       (theta, x) -> z
+  {m}_kd_step.hlo.txt      (theta, mom, x, y, zbar, lam, eta, mu) -> (...)
+  group_mean_{m}_{k}.hlo.txt  (stack[k, P_pad]) -> mean[P_pad], k in 2..8
+  {m}_init.bin             initial flat params, f32 little-endian, P_pad
+plus meta.json describing every shape Rust needs, and .stamp for make.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model as M
+from compile.kernels.group_mean import group_mean
+from compile.kernels.momentum import STRIP
+
+GROUP_SIZES = list(range(2, 9))  # paper uses M in {3, 5}; we lower 2..8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_model(name: str, outdir: str) -> dict:
+    spec = M.MODELS[name]
+    p, p_pad, _ = M.flat_info(name)
+    b = spec.batch
+    e = spec.eval_chunk
+
+    theta = _spec((p_pad,))
+    mom = _spec((p_pad,))
+    x_b = _spec(spec.batched(b))
+    y_b = _spec((b,), jnp.int32)
+    x_e = _spec(spec.batched(e))
+    y_e = _spec((e,), jnp.int32)
+    zbar = _spec((b, spec.classes))
+    scalar = _spec((1,))
+
+    entries = {
+        f"{name}_train_step": (M.make_train_step(name),
+                               (theta, mom, x_b, y_b, scalar, scalar)),
+        f"{name}_eval": (M.make_eval_step(name), (theta, x_e, y_e)),
+        f"{name}_logits": (M.make_logits(name), (theta, x_b)),
+        f"{name}_kd_step": (M.make_kd_step(name),
+                            (theta, mom, x_b, y_b, zbar, scalar, scalar, scalar)),
+    }
+    for k in GROUP_SIZES:
+        entries[f"group_mean_{name}_{k}"] = (group_mean, (_spec((k, p_pad)),))
+
+    files = {}
+    for fname, (fn, args) in entries.items():
+        # Wrap so every entry point returns a flat tuple (return_tuple=True
+        # then makes the root a single tuple the Rust side unpacks).
+        def wrapped(*a, _fn=fn):
+            out = _fn(*a)
+            return out if isinstance(out, tuple) else (out,)
+
+        text = to_hlo_text(jax.jit(wrapped).lower(*args))
+        path = os.path.join(outdir, f"{fname}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        files[fname] = f"{fname}.hlo.txt"
+        print(f"  lowered {fname}: {len(text)} chars")
+
+    init = M.init_flat(name)
+    import numpy as np
+    init_path = os.path.join(outdir, f"{name}_init.bin")
+    np.asarray(init, dtype="<f4").tofile(init_path)
+    print(f"  wrote {init_path} ({p_pad} f32)")
+
+    return {
+        "param_count": int(p),
+        "padded_len": int(p_pad),
+        "input_shape": list(spec.input_shape),
+        "classes": int(spec.classes),
+        "batch": int(b),
+        "eval_chunk": int(e),
+        "init": f"{name}_init.bin",
+        "artifacts": files,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact directory (default: ../artifacts)")
+    ap.add_argument("--models", nargs="*", default=list(M.MODELS))
+    args = ap.parse_args()
+    outdir = os.path.abspath(args.out)
+    os.makedirs(outdir, exist_ok=True)
+
+    meta = {
+        "strip": STRIP,
+        "kd_tau": M.KD_TAU,
+        "group_sizes": GROUP_SIZES,
+        "models": {},
+    }
+    for name in args.models:
+        print(f"lowering model {name!r} ...")
+        meta["models"][name] = lower_model(name, outdir)
+
+    with open(os.path.join(outdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    with open(os.path.join(outdir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print(f"artifacts complete in {outdir}")
+
+
+if __name__ == "__main__":
+    main()

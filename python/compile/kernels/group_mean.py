@@ -1,0 +1,38 @@
+"""Group-mean aggregation Pallas kernel (L1).
+
+The MAR aggregation hot-spot: a Moshpit group of `k` peers averages their
+flat parameter (and momentum) vectors. The kernel reduces a `[k, S]` stack
+to `mean[S]`, strip-mined over S.
+
+TPU mapping: each grid step loads a `[k, STRIP]` tile into VMEM, reduces
+over the (small, <=8) peer axis, and writes one strip. On hardware this is
+double-buffered — the HBM->VMEM copy of strip i+1 overlaps the reduce of
+strip i — which BlockSpec's sequential grid expresses. `interpret=True` on
+CPU; the Rust coordinator also has a native fallback and `micro_hotpath`
+benches both (DESIGN.md §Perf).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+STRIP = 1024
+
+
+def _group_mean_kernel(stack_ref, out_ref):
+    out_ref[...] = jnp.mean(stack_ref[...], axis=0)
+
+
+def group_mean(stack: jax.Array) -> jax.Array:
+    """Mean over axis 0 of a `[k, S]` stack, `S % STRIP == 0`."""
+    k, s = stack.shape
+    assert s % STRIP == 0, f"stack width {s} not a multiple of {STRIP}"
+    grid = (s // STRIP,)
+    return pl.pallas_call(
+        _group_mean_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, STRIP), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((STRIP,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((s,), jnp.float32),
+        interpret=True,
+    )(stack)

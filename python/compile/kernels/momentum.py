@@ -1,0 +1,64 @@
+"""Fused damped-momentum SGD update Pallas kernel (L1).
+
+MAR-FL peers update locally with the damped momentum rule of Reddi et al.
+(2020):
+
+    m' = mu * m + (1 - mu) * g
+    theta' = theta - eta * m'
+
+Done as three separate XLA ops this streams theta/m/g from HBM three times;
+the fused kernel reads each strip once and writes (theta', m') once.
+
+TPU mapping: parameters live as a flat `f32[P]` vector padded to a multiple
+of `STRIP` (1024 = 8 sublanes x 128 lanes); BlockSpec strip-mines P so each
+grid step is one VMEM-resident strip — a pure VPU/bandwidth kernel whose
+roofline is HBM bandwidth (no MXU work). `interpret=True` on CPU.
+
+`eta`/`mu` ride along as `f32[1]` operands so a single lowered artifact
+serves every learning-rate configuration.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Strip width: 8 sublanes x 128 lanes. All flat parameter vectors are padded
+# to a multiple of this at flatten time (see model.py).
+STRIP = 1024
+
+
+def _momentum_kernel(theta_ref, m_ref, g_ref, eta_ref, mu_ref, theta_out, m_out):
+    mu = mu_ref[0]
+    eta = eta_ref[0]
+    m_new = mu * m_ref[...] + (1.0 - mu) * g_ref[...]
+    m_out[...] = m_new
+    theta_out[...] = theta_ref[...] - eta * m_new
+
+
+def fused_momentum(theta: jax.Array, m: jax.Array, g: jax.Array,
+                   eta: jax.Array, mu: jax.Array):
+    """Apply the damped momentum update over flat padded vectors.
+
+    Args:
+      theta, m, g: `f32[P]` with `P % STRIP == 0`.
+      eta, mu:     `f32[1]` scalars (learning rate, momentum).
+
+    Returns `(theta', m')`.
+    """
+    (p,) = theta.shape
+    assert p % STRIP == 0, f"flat vector length {p} not a multiple of {STRIP}"
+    grid = (p // STRIP,)
+    strip = pl.BlockSpec((STRIP,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    theta2, m2 = pl.pallas_call(
+        _momentum_kernel,
+        grid=grid,
+        in_specs=[strip, strip, strip, scalar, scalar],
+        out_specs=[strip, strip],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+        ],
+        interpret=True,
+    )(theta, m, g, eta, mu)
+    return theta2, m2

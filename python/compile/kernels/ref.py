@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness references).
+
+pytest checks each kernel against these under hypothesis-driven shape/seed
+sweeps (python/tests/test_kernels.py). Keep these boring and obviously
+correct — they are the ground truth.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent_ref(logits: jax.Array, onehot: jax.Array):
+    """Per-example cross-entropy and dlogits, plain jnp."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.sum(onehot * logp, axis=-1)
+    dz = jax.nn.softmax(logits, axis=-1) - onehot
+    return loss, dz
+
+
+def momentum_ref(theta, m, g, eta, mu):
+    """Damped momentum update (Reddi et al. 2020), plain jnp."""
+    m_new = mu * m + (1.0 - mu) * g
+    return theta - eta * m_new, m_new
+
+
+def group_mean_ref(stack):
+    """Mean over the peer axis of a [k, S] stack."""
+    return jnp.mean(stack, axis=0)

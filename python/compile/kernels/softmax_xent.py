@@ -1,0 +1,99 @@
+"""Fused softmax-cross-entropy Pallas kernel (L1).
+
+The training hot-spot of both MAR-FL models is the classification loss:
+softmax -> NLL -> gradient w.r.t. logits. Done naively this materializes
+softmax probabilities in HBM three times (forward, loss, backward). The
+fused kernel computes per-example loss AND dlogits in a single VMEM-resident
+pass over a `[block_b, C]` tile.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the row-block tiling keeps
+each tile in VMEM; on real hardware `C` would be padded to the 128-lane VPU
+register width and `block_b` to the 8-sublane height. Here we run under
+`interpret=True` (CPU PJRT cannot execute Mosaic custom-calls), so the tile
+shape documents the schedule rather than changing codegen.
+
+Exposed as `softmax_xent(logits, onehot) -> loss[B]` with a custom VJP that
+reuses the dlogits computed in the forward pass — the backward pass is free.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block height. 8 divides every batch size we lower (16, 64) and matches
+# the TPU sublane count.
+BLOCK_B = 8
+
+
+def _softmax_xent_kernel(z_ref, y_ref, loss_ref, dz_ref):
+    """One `[block_b, C]` tile: loss_i = logsumexp(z_i) - <y_i, z_i>,
+    dz_i = softmax(z_i) - y_i."""
+    z = z_ref[...]
+    y = y_ref[...]
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    shifted = z - zmax
+    ez = jnp.exp(shifted)
+    denom = jnp.sum(ez, axis=-1, keepdims=True)
+    p = ez / denom
+    logp = shifted - jnp.log(denom)
+    loss_ref[...] = -jnp.sum(y * logp, axis=-1)
+    dz_ref[...] = p - y
+
+
+def _block_b_for(batch: int) -> int:
+    if batch % BLOCK_B == 0:
+        return BLOCK_B
+    # Fall back to the largest divisor <= BLOCK_B so odd eval shapes work.
+    for b in range(min(BLOCK_B, batch), 0, -1):
+        if batch % b == 0:
+            return b
+    return 1
+
+
+@partial(jax.jit, static_argnames=())
+def _fused_fwd(logits: jax.Array, onehot: jax.Array):
+    """Run the Pallas kernel over the whole batch; returns (loss[B], dz[B,C])."""
+    batch, classes = logits.shape
+    bb = _block_b_for(batch)
+    grid = (batch // bb,)
+    loss, dz = pl.pallas_call(
+        _softmax_xent_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, classes), lambda i: (i, 0)),
+            pl.BlockSpec((bb, classes), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb, classes), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+            jax.ShapeDtypeStruct((batch, classes), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, onehot)
+    return loss, dz
+
+
+@jax.custom_vjp
+def softmax_xent(logits: jax.Array, onehot: jax.Array) -> jax.Array:
+    """Per-example cross-entropy loss of `logits[B,C]` against one-hot
+    targets, computed by the fused Pallas kernel."""
+    loss, _ = _fused_fwd(logits, onehot)
+    return loss
+
+
+def _softmax_xent_vjp_fwd(logits, onehot):
+    loss, dz = _fused_fwd(logits, onehot)
+    return loss, dz
+
+
+def _softmax_xent_vjp_bwd(dz, g):
+    # g: cotangent of loss[B]; dlogits computed in the forward pass.
+    return g[:, None] * dz, jnp.zeros_like(dz)
+
+
+softmax_xent.defvjp(_softmax_xent_vjp_fwd, _softmax_xent_vjp_bwd)

@@ -1,0 +1,232 @@
+"""Layer-2 JAX model definitions for MAR-FL (build-time only).
+
+Two models, matching the paper's two tasks:
+
+* ``cnn``  — the MNIST-like vision task: a small two-block convolutional
+  network with an MLP head over 16x16x1 synthetic digit images, 10 classes
+  (paper: two-block CNN on MNIST).
+* ``head`` — the 20NG-like language task: a trainable MLP classification
+  head over frozen-encoder embeddings (d=64), 20 classes (paper: frozen
+  DistilBERT + head; the frozen encoder is simulated by the Rust data
+  substrate, which emits CLS-like embeddings directly — DESIGN.md
+  §Substitutions).
+
+Flat-parameter ABI (DESIGN.md): every entry point sees parameters as a
+single ``f32[P_pad]`` vector, ``P_pad`` a multiple of the momentum kernel's
+STRIP so the fused update strip-mines cleanly. Rust never learns the pytree
+structure.
+
+Entry points lowered by aot.py, per model:
+  train_step(theta, mom, x, y, eta, mu)          -> (theta', mom', loss)
+  eval_step(theta, x, y)                         -> (loss_sum, correct)
+  logits(theta, x)                               -> z[B,C]
+  kd_step(theta, mom, x, y, zbar, lam, eta, mu)  -> (theta', mom', loss)
+
+All training losses run through the fused Pallas softmax-XENT kernel; all
+updates through the fused Pallas momentum kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.flatten_util import ravel_pytree
+
+from compile.kernels.momentum import STRIP, fused_momentum
+from compile.kernels.softmax_xent import softmax_xent
+
+# KD temperature (paper: tau = 3.0, Hinton et al. 2015). Fixed at lowering.
+KD_TAU = 3.0
+
+
+# --------------------------------------------------------------------------
+# Model zoo
+# --------------------------------------------------------------------------
+
+class ModelSpec:
+    """Static description of one model variant."""
+
+    def __init__(self, name, input_shape, classes, batch, eval_chunk):
+        self.name = name
+        self.input_shape = tuple(input_shape)  # per-example
+        self.classes = classes
+        self.batch = batch          # local-update minibatch (paper: 64 / 16)
+        self.eval_chunk = eval_chunk
+
+    def batched(self, n):
+        return (n,) + self.input_shape
+
+
+MODELS = {
+    # paper: MNIST, 64 samples per peer per round
+    "cnn": ModelSpec("cnn", (16, 16, 1), 10, 64, 250),
+    # paper: 20NG, 16 samples per peer per round
+    "head": ModelSpec("head", (64,), 20, 16, 250),
+}
+
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def init_params(name: str, seed: int = 0):
+    """Initial parameter pytree (identical across peers, paper §2.2)."""
+    key = jax.random.PRNGKey(seed)
+    if name == "cnn":
+        k = jax.random.split(key, 4)
+        return {
+            "conv1_w": _he(k[0], (3, 3, 1, 8), 9),
+            "conv1_b": jnp.zeros((8,), jnp.float32),
+            "conv2_w": _he(k[1], (3, 3, 8, 16), 72),
+            "conv2_b": jnp.zeros((16,), jnp.float32),
+            "fc1_w": _he(k[2], (256, 64), 256),
+            "fc1_b": jnp.zeros((64,), jnp.float32),
+            "fc2_w": _he(k[3], (64, 10), 64),
+            "fc2_b": jnp.zeros((10,), jnp.float32),
+        }
+    if name == "head":
+        k = jax.random.split(key, 2)
+        return {
+            "fc1_w": _he(k[0], (64, 128), 64),
+            "fc1_b": jnp.zeros((128,), jnp.float32),
+            "fc2_w": _he(k[1], (128, 20), 128),
+            "fc2_b": jnp.zeros((20,), jnp.float32),
+        }
+    raise ValueError(f"unknown model {name!r}")
+
+
+def _maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(name: str, params, x):
+    """Logits for a batch. cnn: x[B,16,16,1]; head: x[B,64]."""
+    if name == "cnn":
+        h = lax.conv_general_dilated(
+            x, params["conv1_w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + params["conv1_b"]
+        h = jax.nn.relu(h)
+        h = _maxpool2(h)  # 8x8x8
+        h = lax.conv_general_dilated(
+            h, params["conv2_w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + params["conv2_b"]
+        h = jax.nn.relu(h)
+        h = _maxpool2(h)  # 4x4x16
+        h = h.reshape((h.shape[0], -1))  # 256
+        h = jax.nn.relu(h @ params["fc1_w"] + params["fc1_b"])
+        return h @ params["fc2_w"] + params["fc2_b"]
+    if name == "head":
+        h = jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"])
+        return h @ params["fc2_w"] + params["fc2_b"]
+    raise ValueError(f"unknown model {name!r}")
+
+
+# --------------------------------------------------------------------------
+# Flat-parameter ABI
+# --------------------------------------------------------------------------
+
+def flat_info(name: str):
+    """(param_count P, padded length P_pad, unflatten fn)."""
+    params = init_params(name)
+    flat, unflatten = ravel_pytree(params)
+    p = flat.shape[0]
+    p_pad = ((p + STRIP - 1) // STRIP) * STRIP
+    return p, p_pad, unflatten
+
+
+def pad_flat(flat: jax.Array, p_pad: int) -> jax.Array:
+    return jnp.concatenate(
+        [flat, jnp.zeros((p_pad - flat.shape[0],), jnp.float32)]
+    )
+
+
+def init_flat(name: str, seed: int = 0) -> jax.Array:
+    """Initial parameters as the padded flat vector Rust loads from disk."""
+    _, p_pad, _ = flat_info(name)
+    flat, _ = ravel_pytree(init_params(name, seed))
+    return pad_flat(flat, p_pad)
+
+
+# --------------------------------------------------------------------------
+# Entry points (lowered by aot.py)
+# --------------------------------------------------------------------------
+
+def _mean_xent(z, y, classes):
+    onehot = jax.nn.one_hot(y, classes, dtype=jnp.float32)
+    return jnp.mean(softmax_xent(z, onehot))
+
+
+def make_train_step(name: str):
+    spec = MODELS[name]
+    p, p_pad, unflatten = flat_info(name)
+
+    def train_step(theta, mom, x, y, eta, mu):
+        params = unflatten(theta[:p])
+
+        def loss_fn(params):
+            return _mean_xent(forward(name, params, x), y, spec.classes)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        gflat = pad_flat(ravel_pytree(grads)[0], p_pad)
+        theta2, mom2 = fused_momentum(theta, mom, gflat, eta, mu)
+        return theta2, mom2, loss
+
+    return train_step
+
+
+def make_eval_step(name: str):
+    spec = MODELS[name]
+    p, _, unflatten = flat_info(name)
+
+    def eval_step(theta, x, y):
+        params = unflatten(theta[:p])
+        z = forward(name, params, x)
+        logp = jax.nn.log_softmax(z, axis=-1)
+        onehot = jax.nn.one_hot(y, spec.classes, dtype=jnp.float32)
+        loss_sum = -jnp.sum(onehot * logp)
+        correct = jnp.sum((jnp.argmax(z, axis=-1) == y).astype(jnp.float32))
+        return loss_sum, correct
+
+    return eval_step
+
+
+def make_logits(name: str):
+    p, _, unflatten = flat_info(name)
+
+    def logits(theta, x):
+        return forward(name, unflatten(theta[:p]), x)
+
+    return logits
+
+
+def make_kd_step(name: str, tau: float = KD_TAU):
+    """Moshpit-KD student step (Algorithm 2): L = (1-lam)*CE + lam*tau^2*KL,
+    lam the linearly-decayed KL weight, zbar the averaged top-ell teacher
+    ensemble logits."""
+    spec = MODELS[name]
+    p, p_pad, unflatten = flat_info(name)
+
+    def kd_step(theta, mom, x, y, zbar, lam, eta, mu):
+        params = unflatten(theta[:p])
+        l = lam[0]
+
+        def loss_fn(params):
+            s = forward(name, params, x)
+            onehot = jax.nn.one_hot(y, spec.classes, dtype=jnp.float32)
+            ce = jnp.mean(softmax_xent(s, onehot))
+            # KL(p_teacher || p_student) at temperature tau, Hinton rescaling
+            pt = jax.nn.softmax(zbar / tau, axis=-1)
+            log_pt = jax.nn.log_softmax(zbar / tau, axis=-1)
+            log_ps = jax.nn.log_softmax(s / tau, axis=-1)
+            kl = jnp.mean(jnp.sum(pt * (log_pt - log_ps), axis=-1))
+            return (1.0 - l) * ce + l * (tau ** 2) * kl
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        gflat = pad_flat(ravel_pytree(grads)[0], p_pad)
+        theta2, mom2 = fused_momentum(theta, mom, gflat, eta, mu)
+        return theta2, mom2, loss
+
+    return kd_step

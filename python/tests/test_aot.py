@@ -1,0 +1,70 @@
+"""AOT lowering smoke tests: HLO-text interchange invariants.
+
+Full artifact generation is exercised by `make artifacts`; here we lower a
+representative subset and assert the properties the Rust loader depends on.
+"""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.kernels.group_mean import group_mean
+
+
+def _lower(fn, *specs):
+    def wrapped(*a):
+        out = fn(*a)
+        return out if isinstance(out, tuple) else (out,)
+    return aot.to_hlo_text(jax.jit(wrapped).lower(*specs))
+
+
+def test_head_logits_hlo_text():
+    p, p_pad, _ = M.flat_info("head")
+    spec = M.MODELS["head"]
+    text = _lower(M.make_logits("head"),
+                  jax.ShapeDtypeStruct((p_pad,), jnp.float32),
+                  jax.ShapeDtypeStruct(spec.batched(spec.batch), jnp.float32))
+    assert "ENTRY" in text
+    # root must be a tuple (return_tuple=True) so Rust can unpack uniformly
+    assert re.search(r"ROOT .* tuple", text), text[-500:]
+    # no custom-calls: interpret-mode pallas lowers to plain HLO the CPU
+    # PJRT client can run (Mosaic would be a custom-call)
+    assert "custom-call" not in text
+
+
+def test_group_mean_hlo_text_no_custom_call():
+    _, p_pad, _ = M.flat_info("head")
+    text = _lower(group_mean, jax.ShapeDtypeStruct((3, p_pad), jnp.float32))
+    assert "ENTRY" in text
+    assert "custom-call" not in text
+
+
+def test_train_step_hlo_is_tuple_of_three():
+    p, p_pad, _ = M.flat_info("head")
+    spec = M.MODELS["head"]
+    text = _lower(
+        M.make_train_step("head"),
+        jax.ShapeDtypeStruct((p_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((p_pad,), jnp.float32),
+        jax.ShapeDtypeStruct(spec.batched(spec.batch), jnp.float32),
+        jax.ShapeDtypeStruct((spec.batch,), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+    # inspect the ENTRY computation's ROOT (inner computations also have
+    # ROOT tuples — e.g. loop bodies — so scope the search)
+    entry = text[text.rindex("ENTRY"):]
+    root = re.search(r"ROOT [^=]*= \((.*?)\) tuple", entry)
+    # three leaves: theta', mom', loss
+    assert root is not None and root.group(1).count("f32") == 3, entry[:800]
+
+
+def test_meta_shapes_consistent():
+    for name in M.MODELS:
+        p, p_pad, _ = M.flat_info(name)
+        assert p_pad % aot.STRIP == 0
+        assert all(2 <= k <= 8 for k in aot.GROUP_SIZES)

@@ -1,0 +1,168 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes/dtypes/seeds; numpy.testing.assert_allclose is the
+acceptance criterion. These tests are the core correctness signal for the
+kernels that end up inside every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.group_mean import group_mean
+from compile.kernels.momentum import STRIP, fused_momentum
+from compile.kernels.softmax_xent import softmax_xent, _fused_fwd
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# --------------------------------------------------------------------------
+# softmax-XENT
+# --------------------------------------------------------------------------
+
+@given(
+    batch=st.sampled_from([8, 16, 24, 64]),
+    classes=st.sampled_from([2, 10, 20, 37]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_matches_ref(batch, classes, seed):
+    r = _rng(seed)
+    logits = jnp.asarray(r.normal(0, 3, (batch, classes)), jnp.float32)
+    labels = r.integers(0, classes, batch)
+    onehot = jax.nn.one_hot(labels, classes, dtype=jnp.float32)
+    loss, dz = _fused_fwd(logits, onehot)
+    loss_ref, dz_ref = ref.softmax_xent_ref(logits, onehot)
+    np.testing.assert_allclose(loss, loss_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(dz, dz_ref, rtol=1e-5, atol=1e-6)
+
+
+@given(
+    batch=st.sampled_from([8, 16]),
+    classes=st.sampled_from([5, 10]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_gradient_matches_autodiff_of_ref(batch, classes, seed):
+    """jax.grad through the custom VJP must equal autodiff of the oracle."""
+    r = _rng(seed)
+    logits = jnp.asarray(r.normal(0, 2, (batch, classes)), jnp.float32)
+    labels = r.integers(0, classes, batch)
+    onehot = jax.nn.one_hot(labels, classes, dtype=jnp.float32)
+
+    g_kernel = jax.grad(lambda z: jnp.mean(softmax_xent(z, onehot)))(logits)
+    g_ref = jax.grad(lambda z: jnp.mean(ref.softmax_xent_ref(z, onehot)[0]))(logits)
+    np.testing.assert_allclose(g_kernel, g_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    """Large-magnitude logits must not overflow (max-subtraction in-kernel)."""
+    logits = jnp.asarray([[1000.0, 0.0], [-1000.0, 0.0]], jnp.float32)
+    onehot = jnp.asarray([[1.0, 0.0], [0.0, 1.0]], jnp.float32)
+    loss, dz = _fused_fwd(logits, onehot)
+    assert np.isfinite(np.asarray(loss)).all()
+    assert np.isfinite(np.asarray(dz)).all()
+    np.testing.assert_allclose(loss[0], 0.0, atol=1e-5)
+
+
+def test_softmax_xent_uniform_logits():
+    """Zero logits -> loss = log C exactly."""
+    batch, classes = 8, 10
+    onehot = jax.nn.one_hot(jnp.arange(batch) % classes, classes)
+    loss, _ = _fused_fwd(jnp.zeros((batch, classes), jnp.float32), onehot)
+    np.testing.assert_allclose(loss, np.log(classes), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# fused momentum
+# --------------------------------------------------------------------------
+
+@given(
+    strips=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+    eta=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.99),
+)
+def test_momentum_matches_ref(strips, seed, eta, mu):
+    p = strips * STRIP
+    r = _rng(seed)
+    theta = jnp.asarray(r.normal(0, 1, p), jnp.float32)
+    m = jnp.asarray(r.normal(0, 0.1, p), jnp.float32)
+    g = jnp.asarray(r.normal(0, 1, p), jnp.float32)
+    t2, m2 = fused_momentum(theta, m, g,
+                            jnp.asarray([eta], jnp.float32),
+                            jnp.asarray([mu], jnp.float32))
+    t_ref, m_ref = ref.momentum_ref(theta, m, g, eta, mu)
+    np.testing.assert_allclose(t2, t_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m2, m_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_momentum_zero_gradient_decays_momentum():
+    p = STRIP
+    theta = jnp.ones((p,), jnp.float32)
+    m = jnp.ones((p,), jnp.float32)
+    g = jnp.zeros((p,), jnp.float32)
+    t2, m2 = fused_momentum(theta, m, g,
+                            jnp.asarray([0.1], jnp.float32),
+                            jnp.asarray([0.9], jnp.float32))
+    np.testing.assert_allclose(m2, 0.9, rtol=1e-6)
+    np.testing.assert_allclose(t2, 1.0 - 0.1 * 0.9, rtol=1e-6)
+
+
+def test_momentum_mu_zero_is_damped_sgd():
+    """mu = 0 reduces to plain SGD (damping factor (1-mu) = 1)."""
+    p = STRIP
+    r = _rng(7)
+    theta = jnp.asarray(r.normal(0, 1, p), jnp.float32)
+    g = jnp.asarray(r.normal(0, 1, p), jnp.float32)
+    t2, m2 = fused_momentum(theta, jnp.zeros_like(theta), g,
+                            jnp.asarray([0.5], jnp.float32),
+                            jnp.asarray([0.0], jnp.float32))
+    np.testing.assert_allclose(t2, theta - 0.5 * g, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m2, g, rtol=1e-6)
+
+
+def test_momentum_rejects_unaligned_length():
+    bad = jnp.zeros((STRIP + 1,), jnp.float32)
+    with pytest.raises(AssertionError):
+        fused_momentum(bad, bad, bad,
+                       jnp.asarray([0.1], jnp.float32),
+                       jnp.asarray([0.9], jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# group mean
+# --------------------------------------------------------------------------
+
+@given(
+    k=st.integers(2, 8),
+    strips=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_group_mean_matches_ref(k, strips, seed):
+    r = _rng(seed)
+    stack = jnp.asarray(r.normal(0, 1, (k, strips * STRIP)), jnp.float32)
+    got = group_mean(stack)
+    np.testing.assert_allclose(got, ref.group_mean_ref(stack),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_group_mean_identical_rows_is_identity():
+    row = jnp.arange(STRIP, dtype=jnp.float32)
+    stack = jnp.stack([row] * 5)
+    np.testing.assert_allclose(group_mean(stack), row, rtol=1e-7)
+
+
+def test_group_mean_permutation_invariant():
+    r = _rng(3)
+    stack = jnp.asarray(r.normal(0, 1, (4, STRIP)), jnp.float32)
+    perm = stack[jnp.asarray([2, 0, 3, 1])]
+    # summation order differs -> f32 rounding differs; allow ulp-scale slack
+    np.testing.assert_allclose(group_mean(stack), group_mean(perm),
+                               rtol=1e-5, atol=1e-6)

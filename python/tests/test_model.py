@@ -1,0 +1,169 @@
+"""L2 correctness: model entry points (shapes, learning behaviour, KD, ABI)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.momentum import STRIP
+
+
+def _toy_batch(name, n, seed=0):
+    """Linearly separable-ish synthetic batch for learning-sanity tests."""
+    spec = M.MODELS[name]
+    r = np.random.default_rng(seed)
+    y = r.integers(0, spec.classes, n)
+    if name == "cnn":
+        x = r.normal(0, 0.3, (n, 16, 16, 1))
+        for i, c in enumerate(y):
+            x[i, c, :, 0] += 2.0  # class-indexed bright row
+    else:
+        x = r.normal(0, 0.3, (n, 64))
+        for i, c in enumerate(y):
+            x[i, c % 64] += 3.0
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.int32)
+
+
+@pytest.mark.parametrize("name", ["cnn", "head"])
+def test_flat_info_padding(name):
+    p, p_pad, unflatten = M.flat_info(name)
+    assert p_pad % STRIP == 0
+    assert p <= p_pad < p + STRIP
+    # round-trip
+    flat = M.init_flat(name)
+    assert flat.shape == (p_pad,)
+    params = unflatten(flat[:p])
+    flat2, _ = jax.flatten_util.ravel_pytree(params)
+    np.testing.assert_array_equal(np.asarray(flat[:p]), np.asarray(flat2))
+    # padding is zero
+    np.testing.assert_array_equal(np.asarray(flat[p:]), 0.0)
+
+
+@pytest.mark.parametrize("name", ["cnn", "head"])
+def test_forward_shapes(name):
+    spec = M.MODELS[name]
+    params = M.init_params(name)
+    x, _ = _toy_batch(name, spec.batch)
+    z = M.forward(name, params, x)
+    assert z.shape == (spec.batch, spec.classes)
+    assert np.isfinite(np.asarray(z)).all()
+
+
+@pytest.mark.parametrize("name", ["cnn", "head"])
+def test_train_step_reduces_loss(name):
+    spec = M.MODELS[name]
+    step = jax.jit(M.make_train_step(name))
+    theta = M.init_flat(name)
+    mom = jnp.zeros_like(theta)
+    x, y = _toy_batch(name, spec.batch)
+    eta = jnp.asarray([0.1], jnp.float32)
+    mu = jnp.asarray([0.9], jnp.float32)
+    losses = []
+    for _ in range(25):
+        theta, mom, loss = step(theta, mom, x, y, eta, mu)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses
+    assert np.isfinite(losses).all()
+
+
+@pytest.mark.parametrize("name", ["cnn", "head"])
+def test_train_step_keeps_padding_zero(name):
+    """Gradient padding is zero, so the padded tail must never move —
+    the Rust aggregation layer relies on this (flat-ABI invariant)."""
+    spec = M.MODELS[name]
+    p, p_pad, _ = M.flat_info(name)
+    step = jax.jit(M.make_train_step(name))
+    theta = M.init_flat(name)
+    mom = jnp.zeros_like(theta)
+    x, y = _toy_batch(name, spec.batch)
+    for _ in range(3):
+        theta, mom, _ = step(theta, mom, x, y,
+                             jnp.asarray([0.1], jnp.float32),
+                             jnp.asarray([0.9], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(theta[p:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(mom[p:]), 0.0)
+
+
+@pytest.mark.parametrize("name", ["cnn", "head"])
+def test_eval_step_counts(name):
+    spec = M.MODELS[name]
+    ev = jax.jit(M.make_eval_step(name))
+    theta = M.init_flat(name)
+    x, y = _toy_batch(name, spec.eval_chunk)
+    loss_sum, correct = ev(theta, x, y)
+    assert 0.0 <= float(correct) <= spec.eval_chunk
+    assert float(loss_sum) > 0.0
+    # untrained model ~ chance accuracy
+    assert float(correct) / spec.eval_chunk < 0.5
+
+
+@pytest.mark.parametrize("name", ["cnn", "head"])
+def test_logits_matches_forward(name):
+    spec = M.MODELS[name]
+    lg = jax.jit(M.make_logits(name))
+    theta = M.init_flat(name)
+    x, _ = _toy_batch(name, spec.batch)
+    p, _, unflatten = M.flat_info(name)
+    np.testing.assert_allclose(
+        np.asarray(lg(theta, x)),
+        np.asarray(M.forward(name, unflatten(theta[:p]), x)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("name", ["head"])
+def test_kd_step_lam_zero_equals_train_step(name):
+    """With lam = 0 the KD loss collapses to plain CE: kd_step must
+    reproduce train_step bit-for-bit-ish."""
+    spec = M.MODELS[name]
+    train = jax.jit(M.make_train_step(name))
+    kd = jax.jit(M.make_kd_step(name))
+    theta = M.init_flat(name)
+    mom = jnp.zeros_like(theta)
+    x, y = _toy_batch(name, spec.batch)
+    zbar = jnp.zeros((spec.batch, spec.classes), jnp.float32)
+    eta = jnp.asarray([0.1], jnp.float32)
+    mu = jnp.asarray([0.9], jnp.float32)
+    t1, m1, l1 = train(theta, mom, x, y, eta, mu)
+    t2, m2, l2 = kd(theta, mom, x, y, zbar, jnp.asarray([0.0], jnp.float32),
+                    eta, mu)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_kd_step_pulls_student_toward_teacher():
+    """With lam = 1 (pure distillation) the student's logits move toward
+    the teacher ensemble distribution."""
+    name = "head"
+    spec = M.MODELS[name]
+    kd = jax.jit(M.make_kd_step(name))
+    lg = jax.jit(M.make_logits(name))
+    theta = M.init_flat(name)
+    mom = jnp.zeros_like(theta)
+    x, y = _toy_batch(name, spec.batch, seed=5)
+    # teacher prefers class 7 strongly
+    zbar = jnp.zeros((spec.batch, spec.classes), jnp.float32).at[:, 7].set(8.0)
+    tau = M.KD_TAU
+
+    def kl_to_teacher(theta):
+        s = lg(theta, x)
+        pt = jax.nn.softmax(zbar / tau, -1)
+        return float(jnp.mean(jnp.sum(
+            pt * (jax.nn.log_softmax(zbar / tau, -1) -
+                  jax.nn.log_softmax(s / tau, -1)), -1)))
+
+    before = kl_to_teacher(theta)
+    for _ in range(10):
+        theta, mom, _ = kd(theta, mom, x, y, zbar,
+                           jnp.asarray([1.0], jnp.float32),
+                           jnp.asarray([0.1], jnp.float32),
+                           jnp.asarray([0.9], jnp.float32))
+    after = kl_to_teacher(theta)
+    assert after < before * 0.8, (before, after)
+
+
+def test_models_registry_consistent():
+    for name, spec in M.MODELS.items():
+        assert spec.name == name
+        assert spec.batch % 8 == 0, "batch must align with kernel BLOCK_B"

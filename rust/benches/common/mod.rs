@@ -1,0 +1,137 @@
+//! Shared bench harness (offline environment: no criterion — each bench is
+//! a `harness = false` binary that prints the paper-figure table it
+//! regenerates and writes `results/<fig>.csv`).
+
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use marfl::aggregation::{AggCtx, PeerState};
+use marfl::metrics::{write_csv, CommLedger};
+use marfl::models::{default_artifact_dir, ModelMeta};
+use marfl::net::Fabric;
+use marfl::rng::Rng;
+use marfl::runtime::Runtime;
+use marfl::sim::SimClock;
+
+/// Where figure CSVs land.
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("results");
+    std::fs::create_dir_all(&dir).expect("create results/");
+    dir
+}
+
+pub fn runtime() -> Runtime {
+    let dir = default_artifact_dir();
+    assert!(
+        dir.join("meta.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    Runtime::new(&dir).expect("PJRT runtime")
+}
+
+pub fn mib(bytes: u64) -> f64 {
+    bytes as f64 / (1 << 20) as f64
+}
+
+/// Reduced-iteration mode for CI-speed runs; set MARFL_BENCH_FULL=1 for
+/// paper-scale sweeps.
+pub fn full_mode() -> bool {
+    std::env::var_os("MARFL_BENCH_FULL").is_some()
+}
+
+pub fn iters(quick: usize, full: usize) -> usize {
+    if full_mode() {
+        full
+    } else {
+        quick
+    }
+}
+
+/// Write a CSV and echo where it went.
+pub fn emit_csv(name: &str, rows: &[Vec<String>]) {
+    let path = results_dir().join(name);
+    write_csv(&path, rows).expect("write csv");
+    println!("  -> {}", path.display());
+}
+
+/// Time a closure (single shot, for coarse stage timing).
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("  [{label}] {:.2}s", t0.elapsed().as_secs_f64());
+    out
+}
+
+/// Median-of-runs micro timer (ns per op).
+pub fn bench_ns(label: &str, warmup: usize, reps: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    println!("  {label:<44} {:>12.1} µs/op (median of {reps})", med / 1e3);
+    med
+}
+
+/// A self-owning aggregation context over synthetic states (comm-only
+/// benches need no PJRT).
+pub struct SynthBundle {
+    pub ledger: Arc<CommLedger>,
+    pub fabric: Fabric,
+    pub clock: SimClock,
+    pub rng: Rng,
+    pub model: ModelMeta,
+}
+
+impl SynthBundle {
+    pub fn new(padded_len: usize) -> Self {
+        let ledger = Arc::new(CommLedger::new());
+        SynthBundle {
+            fabric: Fabric::new(ledger.clone(), 12.5e6, 0.02),
+            ledger,
+            clock: SimClock::new(),
+            rng: Rng::new(0xBE9C4),
+            model: ModelMeta {
+                name: "cnn".into(),
+                param_count: padded_len,
+                padded_len,
+                input_shape: vec![16, 16, 1],
+                classes: 10,
+                batch: 64,
+                eval_chunk: 250,
+                init_file: String::new(),
+                artifacts: Default::default(),
+            },
+        }
+    }
+
+    pub fn ctx(&mut self) -> AggCtx<'_> {
+        AggCtx {
+            fabric: &self.fabric,
+            clock: &mut self.clock,
+            rng: &mut self.rng,
+            runtime: None,
+            model: &self.model,
+        }
+    }
+
+    pub fn states(&mut self, n: usize) -> Vec<PeerState> {
+        (0..n)
+            .map(|_| PeerState {
+                theta: (0..self.model.padded_len)
+                    .map(|_| self.rng.normal() as f32)
+                    .collect(),
+                momentum: vec![0.0; self.model.padded_len],
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,95 @@
+//! Figures 2 & 9 — Moshpit-KD communication efficiency.
+//!
+//! Paper claims: with MKD, MAR-FL reaches 50% accuracy on 20NG with >2×
+//! less total communication (Fig. 2), and 95% on MNIST with up to 3× less
+//! (Fig. 9), despite the higher per-iteration load.
+//!
+//! Default: the 20NG-like head task (Fig. 2). Set MARFL_DATASET=cnn for
+//! the MNIST-like series (Fig. 9 — slower; use MARFL_BENCH_FULL=1 for the
+//! paper-scale peer count).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{emit_csv, full_mode, iters, mib, runtime, timed};
+use marfl::config::ExperimentConfig;
+use marfl::fl::Trainer;
+
+fn main() {
+    let dataset =
+        std::env::var("MARFL_DATASET").unwrap_or_else(|_| "head".into());
+    let (target, label) = match dataset.as_str() {
+        "cnn" => (0.80, "MNIST-like (Fig. 9 analogue, target 80%)"),
+        _ => (0.50, "20NG-like (Fig. 2, target 50%)"),
+    };
+    let peers = if full_mode() { 125 } else { 64 };
+    let (m, g) = if peers == 125 { (5, 3) } else { (4, 3) };
+    let t = iters(40, 80);
+    println!("Figure 2/9 — MKD communication efficiency on {label}");
+    println!("peers={peers} M={m} G={g} T={t}\n");
+
+    let rt = runtime();
+    let base = ExperimentConfig {
+        model: dataset.clone(),
+        peers,
+        group_size: m,
+        mar_rounds: g,
+        iterations: t,
+        samples_per_peer: 64,
+        test_samples: 1000,
+        eval_every: 2,
+        target_accuracy: target,
+        seed: 1234,
+        ..Default::default()
+    };
+
+    let plain = timed("MAR-FL (no MKD)", || {
+        Trainer::new(base.clone(), &rt).unwrap().run().unwrap()
+    });
+    let mut kd_cfg = base.clone();
+    kd_cfg.kd.enabled = true;
+    kd_cfg.kd.k_iterations = 6;
+    let kd = timed("MAR-FL + MKD (K=6)", || {
+        Trainer::new(kd_cfg, &rt).unwrap().run().unwrap()
+    });
+
+    let mut rows = vec![vec![
+        "variant".into(),
+        "iteration".into(),
+        "data_bytes".into(),
+        "accuracy".into(),
+    ]];
+    for (name, run) in [("marfl", &plain), ("marfl+mkd", &kd)] {
+        for p in &run.curve.points {
+            rows.push(vec![
+                name.into(),
+                p.iteration.to_string(),
+                p.data_bytes.to_string(),
+                format!("{:.4}", p.accuracy),
+            ]);
+        }
+    }
+    emit_csv("fig2_mkd_comm.csv", &rows);
+
+    let plain_bytes = plain.curve.bytes_to_accuracy(target);
+    let kd_bytes = kd.curve.bytes_to_accuracy(target);
+    println!("\nbytes to {:.0}% accuracy:", target * 100.0);
+    println!(
+        "  MAR-FL        : {}",
+        plain_bytes.map(|b| format!("{:.1} MiB", mib(b))).unwrap_or_else(|| "not reached".into())
+    );
+    println!(
+        "  MAR-FL + MKD  : {}",
+        kd_bytes.map(|b| format!("{:.1} MiB", mib(b))).unwrap_or_else(|| "not reached".into())
+    );
+    if let (Some(p), Some(k)) = (plain_bytes, kd_bytes) {
+        let speedup = p as f64 / k as f64;
+        println!("  MKD communication advantage: {speedup:.2}x (paper: >2x on 20NG)");
+        assert!(
+            speedup > 1.0,
+            "MKD must reduce total communication to target accuracy"
+        );
+    } else {
+        println!("  (target not reached in {t} iterations — rerun with MARFL_BENCH_FULL=1)");
+    }
+}

@@ -1,0 +1,95 @@
+//! Micro benchmarks of the hot paths (perf instrument for EXPERIMENTS.md
+//! §Perf):
+//!
+//! * PJRT step latencies (train / logits / kd / eval) — the compute floor.
+//! * Within-group averaging: Pallas `group_mean` artifact vs the native
+//!   f64 path (ablation: which should `average_group` prefer?).
+//! * Full 125-peer MAR aggregation (native) — the coordinator's own cost.
+//! * DHT matchmaking round — the control-plane cost.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{bench_ns, runtime, SynthBundle};
+use marfl::aggregation::{average_group, Aggregate};
+use marfl::coordinator::MarAggregator;
+use marfl::data::synth;
+use marfl::rng::Rng;
+
+fn main() {
+    let rt = runtime();
+    println!("micro_hotpath — PJRT entry points\n");
+    let m = rt.meta.model("cnn").unwrap().clone();
+    let h = rt.meta.model("head").unwrap().clone();
+    let mut rng = Rng::new(42);
+    let theta = rt.init_params("cnn").unwrap();
+    let mom = vec![0.0f32; theta.len()];
+    let data = synth::mnist_like(m.batch, &mut rng);
+    let idx: Vec<usize> = (0..m.batch).collect();
+    let (x, y) = data.gather(&idx);
+
+    let theta_h = rt.init_params("head").unwrap();
+    let mom_h = vec![0.0f32; theta_h.len()];
+    let data_h = synth::newsgroups_like(h.batch.max(h.eval_chunk), &mut rng);
+    let idx_h: Vec<usize> = (0..h.batch).collect();
+    let (xh, yh) = data_h.gather(&idx_h);
+    let idx_e: Vec<usize> = (0..h.eval_chunk).collect();
+    let (xe, ye) = data_h.gather(&idx_e);
+    let zbar = vec![0.0f32; h.batch * h.classes];
+
+    bench_ns("cnn train_step (B=64)", 3, 20, || {
+        rt.train_step(&m, &theta, &mom, &x, &y, 0.1, 0.9).unwrap();
+    });
+    bench_ns("head train_step (B=16)", 3, 30, || {
+        rt.train_step(&h, &theta_h, &mom_h, &xh, &yh, 0.1, 0.9).unwrap();
+    });
+    bench_ns("head logits (KD teacher fwd)", 3, 30, || {
+        rt.logits(&h, &theta_h, &xh).unwrap();
+    });
+    bench_ns("head kd_step", 3, 30, || {
+        rt.kd_step(&h, &theta_h, &mom_h, &xh, &yh, &zbar, 0.5, 0.1, 0.9)
+            .unwrap();
+    });
+    bench_ns("head eval chunk (E=250)", 3, 20, || {
+        rt.evaluate(&h, &theta_h, &xe, &ye).unwrap();
+    });
+
+    println!("\ngroup averaging ablation (k=5, cnn-size vectors)\n");
+    let k = 5usize;
+    let stack: Vec<f32> =
+        (0..k * m.padded_len).map(|_| rng.normal() as f32).collect();
+    bench_ns("group_mean via Pallas artifact (PJRT)", 3, 30, || {
+        rt.group_mean(&m, &stack, k).unwrap();
+    });
+    {
+        let mut b = SynthBundle::new(m.padded_len);
+        let mut states = b.states(k);
+        let members: Vec<usize> = (0..k).collect();
+        bench_ns("group average native (f64 accumulate)", 3, 30, || {
+            let mut ctx = b.ctx();
+            average_group(&mut states, &members, &mut ctx).unwrap();
+        });
+    }
+
+    println!("\ncoordinator-scale operations\n");
+    {
+        let mut b = SynthBundle::new(m.padded_len);
+        let mut states = b.states(125);
+        let agg: Vec<usize> = (0..125).collect();
+        let mut mar = MarAggregator::new(125, 5, 3, b.ledger.clone(), 5);
+        bench_ns("MAR aggregate 125 peers (native, M=5 G=3)", 1, 5, || {
+            let mut ctx = b.ctx();
+            mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        });
+    }
+    {
+        let mut b = SynthBundle::new(64);
+        let mut states = b.states(125);
+        let agg: Vec<usize> = (0..125).collect();
+        let mut mar = MarAggregator::new(125, 5, 3, b.ledger.clone(), 6);
+        bench_ns("MAR matchmaking+avg 125 peers (tiny vectors)", 1, 5, || {
+            let mut ctx = b.ctx();
+            mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        });
+    }
+}

@@ -1,0 +1,120 @@
+//! Table 1 — related-work feature matrix, made executable.
+//!
+//! The paper positions MAR-FL against RDFL, SAPS and BrainTorrent on five
+//! qualitative axes. All of those systems are implemented in this repo, so
+//! the table's *quantitative core* — how fast does one iteration's
+//! communication mix information globally? — can be measured: for every
+//! strategy, run one aggregation round over 125 dispersed peers and report
+//! (bytes spent, distortion removed, bytes per decade of mixing).
+//!
+//! Shapes asserted: gossip/SAPS spend little but barely mix (no global
+//! aggregation — their Table-1 gap); RDFL/AR-FL mix exactly but at O(N²)
+//! cost; MAR-FL mixes exactly at O(N log N); BAR is byte-optimal but
+//! leaves the non-2^k remainder entirely unmixed.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{emit_csv, mib, SynthBundle};
+use marfl::aggregation::{
+    Aggregate, AllToAll, Butterfly, FedAvgServer, Gossip, RingRdfl, Saps,
+};
+use marfl::coordinator::mixing::avg_distortion;
+use marfl::coordinator::MarAggregator;
+
+const N: usize = 125;
+const P: usize = 18432;
+
+fn run(which: &str) -> (u64, f64, f64) {
+    let mut b = SynthBundle::new(P);
+    let mut states = b.states(N);
+    let agg: Vec<usize> = (0..N).collect();
+    let thetas = |st: &[marfl::aggregation::PeerState]| {
+        st.iter().map(|s| s.theta.clone()).collect::<Vec<_>>()
+    };
+    let before = avg_distortion(&thetas(&states));
+    let mut mar;
+    let mut gossip = Gossip::default();
+    let mut saps = Saps::default();
+    let aggregator: &mut dyn Aggregate = match which {
+        "marfl" => {
+            mar = MarAggregator::new(N, 5, 3, b.ledger.clone(), 80);
+            b.ledger.reset();
+            &mut mar
+        }
+        "fedavg" => &mut FedAvgServer,
+        "rdfl" => &mut RingRdfl,
+        "arfl" => &mut AllToAll,
+        "bar" => &mut Butterfly,
+        "gossip" => &mut gossip,
+        "saps" => &mut saps,
+        _ => unreachable!(),
+    };
+    let mut ctx = b.ctx();
+    aggregator.aggregate(&mut states, &agg, &mut ctx).unwrap();
+    let after = avg_distortion(&thetas(&states));
+    let bytes = b.ledger.snapshot().data_bytes;
+    (bytes, before, after)
+}
+
+fn main() {
+    println!(
+        "Table 1 (executable) — one aggregation round over {N} dispersed peers\n"
+    );
+    println!(
+        "{:<10} {:>12} {:>14} {:>14} {:>18}",
+        "strategy", "data(MiB)", "distortion", "residual %", "global agg?"
+    );
+    let mut rows = vec![vec![
+        "strategy".into(),
+        "data_bytes".into(),
+        "distortion_before".into(),
+        "distortion_after".into(),
+    ]];
+    let mut residual = std::collections::BTreeMap::new();
+    let mut bytes_map = std::collections::BTreeMap::new();
+    for which in ["fedavg", "marfl", "bar", "rdfl", "arfl", "gossip", "saps"] {
+        let (bytes, before, after) = run(which);
+        let resid = after / before * 100.0;
+        println!(
+            "{which:<10} {:>12.1} {before:>7.3}→{after:<6.3} {resid:>13.2}% {:>18}",
+            mib(bytes),
+            if resid < 1.0 { "exact/near" } else { "NO (local only)" }
+        );
+        rows.push(vec![
+            which.into(),
+            bytes.to_string(),
+            format!("{before:.5}"),
+            format!("{after:.5}"),
+        ]);
+        residual.insert(which, resid);
+        bytes_map.insert(which, bytes);
+    }
+    emit_csv("table1_related_work.csv", &rows);
+
+    // ---- Table-1 shape assertions ------------------------------------
+    // global-aggregation systems: near-zero residual in ONE iteration
+    for s in ["marfl", "fedavg", "rdfl", "arfl"] {
+        assert!(residual[s] < 0.1, "{s} should mix (near-)exactly: {}", residual[s]);
+    }
+    // gossip & SAPS: cheap but no global aggregation — large residual
+    for s in ["gossip", "saps"] {
+        assert!(
+            residual[s] > 20.0,
+            "{s} must show the no-global-aggregation gap: {}",
+            residual[s]
+        );
+        assert!(bytes_map[s] < bytes_map["marfl"], "{s} should be cheap");
+    }
+    // BAR: exact for its 2^k subset, but 61/125 peers keep full distortion
+    assert!(
+        residual["bar"] > 5.0,
+        "BAR leaves the non-power-of-two remainder unmixed: {}",
+        residual["bar"]
+    );
+    println!(
+        "\nTable 1 shape holds: only MAR-FL combines global aggregation with \
+         sub-quadratic bytes ({}x below RDFL).",
+        bytes_map["rdfl"] / bytes_map["marfl"].max(1)
+    );
+}

@@ -1,0 +1,92 @@
+//! AR-FL — naive all-to-all All-Reduce FL (paper baseline).
+//!
+//! Every aggregator broadcasts its full state to every other aggregator
+//! and averages locally: N(N−1) state transfers per iteration, O(N²) — the
+//! second baseline whose communication MAR-FL undercuts by ~10× at N=125.
+
+use anyhow::Result;
+
+use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState};
+use crate::metrics::Plane;
+
+#[derive(Debug, Default)]
+pub struct AllToAll;
+
+impl Aggregate for AllToAll {
+    fn name(&self) -> &'static str {
+        "arfl"
+    }
+
+    fn aggregate(
+        &mut self,
+        states: &mut [PeerState],
+        agg: &[usize],
+        ctx: &mut AggCtx<'_>,
+    ) -> Result<AggReport> {
+        let n = agg.len();
+        if n < 2 {
+            return Ok(AggReport::default());
+        }
+        let bytes = payload_bytes(states, agg);
+        // each peer sends its state to n-1 others; peers act in parallel,
+        // per-peer sends are sequential over its uplink
+        let mut lane_times = Vec::with_capacity(n);
+        for _ in 0..n {
+            lane_times.push(ctx.fabric.sequential(n - 1, bytes, Plane::Data));
+        }
+        ctx.clock.parallel(lane_times);
+        let (theta, mom) = mean_of(states, agg);
+        for &i in agg {
+            states[i].theta.copy_from_slice(&theta);
+            states[i].momentum.copy_from_slice(&mom);
+        }
+        Ok(AggReport { rounds: 1, groups: 1 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::test_support::*;
+
+    #[test]
+    fn exact_global_average() {
+        let mut states = random_states(5, 16, 11);
+        let agg: Vec<usize> = (0..5).collect();
+        let (want_t, want_m) = mean_of(&states, &agg);
+        let mut tc = TestCtx::new(16);
+        let mut ctx = tc.ctx();
+        AllToAll.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        for s in &states {
+            crate::testing::assert_allclose(&s.theta, &want_t, 1e-6, 1e-7);
+            crate::testing::assert_allclose(&s.momentum, &want_m, 1e-6, 1e-7);
+        }
+    }
+
+    #[test]
+    fn quadratic_transfer_count() {
+        let n = 12;
+        let mut states = random_states(n, 8, 12);
+        let agg: Vec<usize> = (0..n).collect();
+        let mut tc = TestCtx::new(8);
+        let mut ctx = tc.ctx();
+        AllToAll.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        assert_eq!(tc.ledger.snapshot().data_msgs as usize, n * (n - 1));
+    }
+
+    #[test]
+    fn parallel_time_scales_with_n_not_n_squared() {
+        // with per-peer parallel lanes, duration ~ (n-1) * transfer, not
+        // n(n-1) — the fabric model distinguishes bytes from wall time
+        let mut tc = TestCtx::new(8);
+        let bytes = crate::aggregation::state_bytes(&tc.model) as f64;
+        let per = 0.001 + bytes / 1e6;
+        let n = 6;
+        let mut states = random_states(n, 8, 13);
+        let agg: Vec<usize> = (0..n).collect();
+        let mut ctx = tc.ctx();
+        AllToAll.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        let want = (n - 1) as f64 * per;
+        assert!((tc.clock.now() - want).abs() < 1e-9, "{} vs {want}", tc.clock.now());
+    }
+}

@@ -1,0 +1,151 @@
+//! BAR — Butterfly All-Reduce (paper Appendix B.3).
+//!
+//! The hypercube recursive-halving reduce-scatter + recursive-doubling
+//! all-gather: log₂(n) rounds, each peer exchanging a halving parameter
+//! segment with its rank-XOR partner. Per-peer traffic is only
+//! `2·(n−1)/n` state transfers — asymptotically optimal — **but** the
+//! paper excludes BAR as a baseline because it "requires peers to be
+//! totally reliable": every peer owns a disjoint chunk, so the butterfly
+//! only runs over a power-of-two participant set and any missing peer
+//! stalls whole chunks of the model.
+//!
+//! This implementation makes that limitation measurable: aggregation runs
+//! over the largest 2^k subset of `A_t` (rank order); the remaining
+//! `|A_t| − 2^k` peers are **left out entirely** (their state stays
+//! stale), which is exactly the incomplete-aggregation behaviour Appendix
+//! B.3 describes under heterogeneous participation.
+
+use anyhow::Result;
+
+use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState};
+use crate::metrics::Plane;
+
+#[derive(Debug, Default)]
+pub struct Butterfly;
+
+impl Butterfly {
+    /// Largest power-of-two prefix of the aggregator set.
+    pub fn butterfly_subset(agg: &[usize]) -> &[usize] {
+        if agg.len() < 2 {
+            return &agg[..0];
+        }
+        let k = usize::BITS - 1 - agg.len().leading_zeros();
+        &agg[..1 << k]
+    }
+}
+
+impl Aggregate for Butterfly {
+    fn name(&self) -> &'static str {
+        "bar"
+    }
+
+    fn aggregate(
+        &mut self,
+        states: &mut [PeerState],
+        agg: &[usize],
+        ctx: &mut AggCtx<'_>,
+    ) -> Result<AggReport> {
+        let subset: Vec<usize> = Self::butterfly_subset(agg).to_vec();
+        let n = subset.len();
+        if n < 2 {
+            return Ok(AggReport::default());
+        }
+        let bytes = payload_bytes(states, &subset);
+        let rounds = n.trailing_zeros() as usize; // log2(n)
+        // reduce-scatter: round r exchanges segments of bytes / 2^(r+1);
+        // all-gather mirrors it. All pairs act in parallel per round.
+        for r in 0..rounds {
+            let seg = bytes >> (r + 1);
+            let mut lane_times = Vec::with_capacity(n);
+            for _ in 0..n {
+                lane_times.push(ctx.fabric.send(seg.max(1), Plane::Data));
+            }
+            ctx.clock.parallel(lane_times);
+        }
+        for r in (0..rounds).rev() {
+            let seg = bytes >> (r + 1);
+            let mut lane_times = Vec::with_capacity(n);
+            for _ in 0..n {
+                lane_times.push(ctx.fabric.send(seg.max(1), Plane::Data));
+            }
+            ctx.clock.parallel(lane_times);
+        }
+        // the butterfly computes the exact mean over the 2^k subset
+        let (theta, mom) = mean_of(states, &subset);
+        for &i in &subset {
+            states[i].theta.copy_from_slice(&theta);
+            states[i].momentum.copy_from_slice(&mom);
+        }
+        Ok(AggReport { rounds: 2 * rounds, groups: 1 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::test_support::*;
+
+    #[test]
+    fn power_of_two_set_gets_exact_average() {
+        let mut states = random_states(8, 32, 40);
+        let agg: Vec<usize> = (0..8).collect();
+        let (want, _) = mean_of(&states, &agg);
+        let mut tc = TestCtx::new(32);
+        let mut ctx = tc.ctx();
+        Butterfly.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        for s in &states {
+            crate::testing::assert_allclose(&s.theta, &want, 1e-6, 1e-7);
+        }
+    }
+
+    #[test]
+    fn traffic_is_two_n_minus_one_over_n_states() {
+        let n = 16;
+        let p = 1024;
+        let mut states = random_states(n, p, 41);
+        let agg: Vec<usize> = (0..n).collect();
+        let mut tc = TestCtx::new(p);
+        let mut ctx = tc.ctx();
+        Butterfly.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        let got = tc.ledger.snapshot().data_bytes;
+        // per peer: 2 * sum_{r=1..log2 n} bytes/2^r = 2*bytes*(n-1)/n
+        let state = 2 * p as u64 * 4;
+        let want = n as u64 * 2 * state * (n as u64 - 1) / n as u64;
+        assert_eq!(got, want, "got {got} want {want}");
+    }
+
+    #[test]
+    fn stragglers_beyond_power_of_two_left_stale() {
+        // 11 aggregators -> butterfly over 8; peers 8..10 untouched: the
+        // incomplete-aggregation behaviour of Appendix B.3
+        let mut states = random_states(11, 16, 42);
+        let before9 = states[9].theta.clone();
+        let agg: Vec<usize> = (0..11).collect();
+        let (want_subset, _) = mean_of(&states, &agg[..8]);
+        let mut tc = TestCtx::new(16);
+        let mut ctx = tc.ctx();
+        Butterfly.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        crate::testing::assert_allclose(&states[0].theta, &want_subset, 1e-6, 1e-7);
+        assert_eq!(states[9].theta, before9, "straggler must be left out");
+    }
+
+    #[test]
+    fn bar_beats_even_marfl_on_bytes_but_excludes_peers() {
+        // why the paper still prefers MAR: BAR's efficiency only covers
+        // the 2^k subset; with 125 aggregators, 61 peers get nothing
+        let agg: Vec<usize> = (0..125).collect();
+        let subset = Butterfly::butterfly_subset(&agg);
+        assert_eq!(subset.len(), 64);
+        assert_eq!(125 - subset.len(), 61);
+    }
+
+    #[test]
+    fn single_pair_works() {
+        let mut states = random_states(2, 8, 43);
+        let (want, _) = mean_of(&states, &[0, 1]);
+        let mut tc = TestCtx::new(8);
+        let mut ctx = tc.ctx();
+        Butterfly.aggregate(&mut states, &[0, 1], &mut ctx).unwrap();
+        crate::testing::assert_allclose(&states[0].theta, &want, 1e-6, 1e-7);
+    }
+}

@@ -1,0 +1,97 @@
+//! Client-server FedAvg reference (McMahan et al. 2017).
+//!
+//! A virtual server collects every aggregator's state, averages, and
+//! broadcasts — 2N state transfers per iteration, O(N) bytes, but all of
+//! them crossing the single server link: the simulated clock charges
+//! uploads and broadcasts sequentially at the server, reproducing the
+//! coordinator bottleneck the paper's P2P pitch targets.
+
+use anyhow::Result;
+
+use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState};
+use crate::metrics::Plane;
+
+#[derive(Debug, Default)]
+pub struct FedAvgServer;
+
+impl Aggregate for FedAvgServer {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn aggregate(
+        &mut self,
+        states: &mut [PeerState],
+        agg: &[usize],
+        ctx: &mut AggCtx<'_>,
+    ) -> Result<AggReport> {
+        if agg.len() < 2 {
+            return Ok(AggReport::default());
+        }
+        let bytes = payload_bytes(states, agg);
+        // N uploads through the server's ingress link (sequential at the
+        // server — the bottleneck), then the average, then N broadcasts.
+        let upload = ctx.fabric.sequential(agg.len(), bytes, Plane::Data);
+        let (theta, mom) = mean_of(states, agg);
+        let broadcast = ctx.fabric.sequential(agg.len(), bytes, Plane::Data);
+        ctx.clock.advance(upload + broadcast);
+        for &i in agg {
+            states[i].theta.copy_from_slice(&theta);
+            states[i].momentum.copy_from_slice(&mom);
+        }
+        Ok(AggReport { rounds: 1, groups: 1 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::test_support::*;
+
+    #[test]
+    fn produces_exact_global_average() {
+        let mut states = random_states(6, 32, 3);
+        let agg: Vec<usize> = (0..6).collect();
+        let (want_t, _) = mean_of(&states, &agg);
+        let mut tc = TestCtx::new(32);
+        let mut ctx = tc.ctx();
+        FedAvgServer.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        for s in &states {
+            crate::testing::assert_allclose(&s.theta, &want_t, 1e-6, 1e-7);
+        }
+    }
+
+    #[test]
+    fn books_2n_transfers() {
+        let mut states = random_states(10, 16, 4);
+        let agg: Vec<usize> = (0..10).collect();
+        let mut tc = TestCtx::new(16);
+        let mut ctx = tc.ctx();
+        FedAvgServer.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        let snap = tc.ledger.snapshot();
+        assert_eq!(snap.data_msgs, 20);
+        assert_eq!(snap.data_bytes, 20 * 2 * 16 * 4);
+        assert!(tc.clock.now() > 0.0);
+    }
+
+    #[test]
+    fn respects_aggregator_subset() {
+        let mut states = random_states(5, 8, 5);
+        let before2 = states[2].theta.clone();
+        let mut tc = TestCtx::new(8);
+        let mut ctx = tc.ctx();
+        FedAvgServer.aggregate(&mut states, &[0, 1, 3], &mut ctx).unwrap();
+        assert_eq!(states[2].theta, before2, "non-aggregator was touched");
+    }
+
+    #[test]
+    fn single_peer_is_noop() {
+        let mut states = random_states(3, 8, 6);
+        let before = states[1].theta.clone();
+        let mut tc = TestCtx::new(8);
+        let mut ctx = tc.ctx();
+        let rep = FedAvgServer.aggregate(&mut states, &[1], &mut ctx).unwrap();
+        assert_eq!(rep, AggReport::default());
+        assert_eq!(states[1].theta, before);
+    }
+}

@@ -1,0 +1,169 @@
+//! BrainTorrent-style gossip (Roy et al. 2019) — Table 1 related work.
+//!
+//! Serverless P2P flexibility through dynamic model fetching and merging:
+//! each round, every peer pulls the model of one uniformly random other
+//! peer and merges by (weighted) averaging. No synchronized global
+//! aggregation exists — information spreads epidemically, which is why the
+//! paper calls gossip's global propagation "inefficient" and excludes it
+//! from the evaluation: reaching consensus takes Θ(log N) *iterations*
+//! (each a full local-update round), versus MAR's G rounds *within* one
+//! iteration, and progress is sensitive to churn.
+//!
+//! Implemented with `fanout` pulls per peer per iteration (BrainTorrent's
+//! dynamic fetching ≈ fanout 1).
+
+use anyhow::Result;
+
+use super::{payload_bytes, AggCtx, AggReport, Aggregate, PeerState};
+use crate::metrics::Plane;
+
+#[derive(Debug)]
+pub struct Gossip {
+    /// models pulled per peer per iteration
+    pub fanout: usize,
+}
+
+impl Default for Gossip {
+    fn default() -> Self {
+        Gossip { fanout: 1 }
+    }
+}
+
+impl Aggregate for Gossip {
+    fn name(&self) -> &'static str {
+        "gossip"
+    }
+
+    fn aggregate(
+        &mut self,
+        states: &mut [PeerState],
+        agg: &[usize],
+        ctx: &mut AggCtx<'_>,
+    ) -> Result<AggReport> {
+        let n = agg.len();
+        if n < 2 {
+            return Ok(AggReport::default());
+        }
+        let bytes = payload_bytes(states, agg);
+        // snapshot: pulls within one round all see round-start models
+        let snapshot: Vec<(Vec<f32>, Vec<f32>)> = agg
+            .iter()
+            .map(|&i| (states[i].theta.clone(), states[i].momentum.clone()))
+            .collect();
+        let mut lane_times = Vec::with_capacity(n);
+        for (slot, &peer) in agg.iter().enumerate() {
+            let mut lane = 0.0;
+            for _ in 0..self.fanout {
+                // pull from a uniformly random *other* peer
+                let other = (slot + 1 + ctx.rng.below(n - 1)) % n;
+                lane += ctx.fabric.send(bytes, Plane::Data);
+                let (ot, om) = &snapshot[other];
+                // merge: equal-weight average of own and pulled state
+                for (dst, &v) in states[peer].theta.iter_mut().zip(ot) {
+                    *dst = 0.5 * (*dst + v);
+                }
+                for (dst, &v) in states[peer].momentum.iter_mut().zip(om) {
+                    *dst = 0.5 * (*dst + v);
+                }
+            }
+            lane_times.push(lane);
+        }
+        ctx.clock.parallel(lane_times);
+        Ok(AggReport { rounds: 1, groups: n })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::test_support::*;
+    use crate::coordinator::mixing::avg_distortion;
+
+    fn thetas(states: &[PeerState]) -> Vec<Vec<f32>> {
+        states.iter().map(|s| s.theta.clone()).collect()
+    }
+
+    #[test]
+    fn linear_traffic_per_iteration() {
+        let n = 20;
+        let mut states = random_states(n, 16, 50);
+        let agg: Vec<usize> = (0..n).collect();
+        let mut tc = TestCtx::new(16);
+        let mut ctx = tc.ctx();
+        Gossip::default().aggregate(&mut states, &agg, &mut ctx).unwrap();
+        // fanout 1: exactly N transfers — O(N), cheap per iteration
+        assert_eq!(tc.ledger.snapshot().data_msgs as usize, n);
+    }
+
+    #[test]
+    fn gossip_reduces_distortion_but_slower_than_mar() {
+        let n = 27;
+        let p = 32;
+        let agg: Vec<usize> = (0..n).collect();
+
+        // gossip: one iteration of fanout-1 pulls
+        let mut g_states = random_states(n, p, 51);
+        let before = avg_distortion(&thetas(&g_states));
+        let mut tc = TestCtx::new(p);
+        let mut ctx = tc.ctx();
+        Gossip::default().aggregate(&mut g_states, &agg, &mut ctx).unwrap();
+        let after_gossip = avg_distortion(&thetas(&g_states));
+
+        // MAR: one iteration (G=3 rounds) from the identical start
+        let mut m_states = random_states(n, p, 51);
+        let mut tc2 = TestCtx::new(p);
+        let mut mar = crate::coordinator::MarAggregator::new(
+            n,
+            3,
+            3,
+            tc2.ledger.clone(),
+            52,
+        );
+        let mut ctx2 = tc2.ctx();
+        mar.aggregate(&mut m_states, &agg, &mut ctx2).unwrap();
+        let after_mar = avg_distortion(&thetas(&m_states));
+
+        assert!(after_gossip < before, "gossip must mix at least a little");
+        assert!(
+            after_mar < after_gossip * 1e-3,
+            "MAR must mix orders of magnitude faster per iteration: \
+             gossip {after_gossip:.3e} vs MAR {after_mar:.3e}"
+        );
+    }
+
+    #[test]
+    fn gossip_preserves_mean_in_expectation_only() {
+        // single pull-merge is NOT mean-preserving per round (pull
+        // weights are asymmetric); over many rounds it concentrates near
+        // the mean. Verify long-run consensus lands within the initial
+        // spread of the true mean.
+        let n = 16;
+        let p = 4;
+        let mut states = random_states(n, p, 53);
+        let agg: Vec<usize> = (0..n).collect();
+        let (want, _) = crate::aggregation::mean_of(&states, &agg);
+        let mut tc = TestCtx::new(p);
+        let mut g = Gossip::default();
+        for _ in 0..60 {
+            let mut ctx = tc.ctx();
+            g.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        }
+        let spread = avg_distortion(&thetas(&states));
+        assert!(spread < 1e-4, "gossip should reach near-consensus: {spread}");
+        // consensus point is within ~1 sigma of the true mean
+        for (got, want) in states[0].theta.iter().zip(&want) {
+            assert!((got - want).abs() < 1.0, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn fanout_increases_traffic_linearly() {
+        let n = 10;
+        let mut states = random_states(n, 8, 54);
+        let agg: Vec<usize> = (0..n).collect();
+        let mut tc = TestCtx::new(8);
+        let mut ctx = tc.ctx();
+        Gossip { fanout: 3 }.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        assert_eq!(tc.ledger.snapshot().data_msgs as usize, 3 * n);
+    }
+}

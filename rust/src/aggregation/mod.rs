@@ -1,0 +1,396 @@
+//! Aggregation strategies: the paper's baselines and the shared machinery
+//! MAR builds on.
+//!
+//! All strategies implement [`Aggregate`] over flat peer states
+//! (θ ‖ momentum — the paper's Moshpit-AR averages both). Communication is
+//! booked byte-exactly on the fabric; one "state transfer" is
+//! `2 · P_pad · 4` bytes for every technique, so cross-technique ratios
+//! (the paper's headline results) are unit-independent.
+//!
+//! Per-iteration data-plane cost (N peers, group size M, G MAR rounds):
+//!
+//! | technique | state transfers | asymptotic |
+//! |---|---|---|
+//! | FedAvg   | 2N              | O(N)       |
+//! | AR-FL    | N(N−1)          | O(N²)      |
+//! | RDFL     | N(N−1)          | O(N²)      |
+//! | MAR-FL   | ≤ N·G·(M−1)     | O(N log N) |
+
+pub mod alltoall;
+pub mod butterfly;
+pub mod fedavg;
+pub mod gossip;
+pub mod ring;
+pub mod saps;
+
+pub use alltoall::AllToAll;
+pub use butterfly::Butterfly;
+pub use fedavg::FedAvgServer;
+pub use gossip::Gossip;
+pub use ring::RingRdfl;
+pub use saps::Saps;
+
+use anyhow::Result;
+
+use crate::metrics::Plane;
+use crate::models::ModelMeta;
+use crate::net::Fabric;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::sim::SimClock;
+
+/// One peer's aggregatable state: flat parameters + momentum (both length
+/// `P_pad`).
+#[derive(Clone, Debug)]
+pub struct PeerState {
+    pub theta: Vec<f32>,
+    pub momentum: Vec<f32>,
+}
+
+impl PeerState {
+    pub fn new(theta: Vec<f32>) -> Self {
+        let momentum = vec![0.0; theta.len()];
+        PeerState { theta, momentum }
+    }
+}
+
+/// Wire size of one full state transfer (θ + momentum) for a plain
+/// (non-DP) iteration — static per-model accounting used by the analytic
+/// benches.
+pub fn state_bytes(model: &ModelMeta) -> u64 {
+    model.model_bytes() * 2
+}
+
+/// Actual wire size of the states being aggregated right now. During DP
+/// iterations the momentum vector carries the smoothed delta and the clip
+/// indicator (Algorithm 4 averages four quantities through MAR), so the
+/// payload is larger than the static `state_bytes`.
+pub fn payload_bytes(states: &[PeerState], members: &[usize]) -> u64 {
+    let s = &states[members[0]];
+    ((s.theta.len() + s.momentum.len()) * 4) as u64
+}
+
+/// Shared context threaded through an aggregation call.
+pub struct AggCtx<'a> {
+    pub fabric: &'a Fabric,
+    pub clock: &'a mut SimClock,
+    pub rng: &'a mut Rng,
+    /// When present, within-group averaging runs through the Pallas
+    /// `group_mean` artifact; otherwise the native f64 path is used.
+    pub runtime: Option<&'a Runtime>,
+    pub model: &'a ModelMeta,
+}
+
+/// What an aggregation did (for ledger-independent assertions).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AggReport {
+    /// communication rounds executed
+    pub rounds: usize,
+    /// groups formed across all rounds (MAR) or 1 (global techniques)
+    pub groups: usize,
+}
+
+/// An aggregation technique. `agg` lists the indices of peers in `A_t`
+/// (participants that survived dropout); only their states may be read or
+/// written.
+pub trait Aggregate {
+    fn name(&self) -> &'static str;
+
+    fn aggregate(
+        &mut self,
+        states: &mut [PeerState],
+        agg: &[usize],
+        ctx: &mut AggCtx<'_>,
+    ) -> Result<AggReport>;
+}
+
+// ---------------------------------------------------------------------
+// Shared vector math
+// ---------------------------------------------------------------------
+
+/// Native mean of the selected peers' (θ, m), f64 accumulation. The
+/// momentum vector may be longer than θ (DP packs extra averaged
+/// quantities onto it); each vector is averaged at its own length.
+pub fn mean_of(states: &[PeerState], members: &[usize]) -> (Vec<f32>, Vec<f32>) {
+    assert!(!members.is_empty());
+    let p = states[members[0]].theta.len();
+    let q = states[members[0]].momentum.len();
+    let mut theta = vec![0.0f64; p];
+    let mut mom = vec![0.0f64; q];
+    for &i in members {
+        assert_eq!(states[i].theta.len(), p, "ragged theta lengths");
+        assert_eq!(states[i].momentum.len(), q, "ragged momentum lengths");
+        for (a, &v) in theta.iter_mut().zip(&states[i].theta) {
+            *a += v as f64;
+        }
+        for (a, &v) in mom.iter_mut().zip(&states[i].momentum) {
+            *a += v as f64;
+        }
+    }
+    let inv = 1.0 / members.len() as f64;
+    (
+        theta.iter().map(|&v| (v * inv) as f32).collect(),
+        mom.iter().map(|&v| (v * inv) as f32).collect(),
+    )
+}
+
+/// Use the Pallas `group_mean` artifact for within-group averaging?
+/// Benchmarked ablation (`micro_hotpath`): at this model scale the PJRT
+/// call overhead (~0.7 ms literal marshalling + dispatch) outweighs the
+/// kernel win, so the native f64 path is the default; set
+/// `MARFL_PJRT_GROUP_MEAN=1` to flip (and on a real TPU backend the
+/// artifact path is the one that scales). See EXPERIMENTS.md §Perf.
+fn prefer_pjrt_group_mean() -> bool {
+    static FLAG: once_cell::sync::Lazy<bool> = once_cell::sync::Lazy::new(|| {
+        std::env::var_os("MARFL_PJRT_GROUP_MEAN").is_some()
+    });
+    *FLAG
+}
+
+/// Average the states of `members` and write the result back to each of
+/// them. Default: native f64 accumulation; the Pallas group-mean artifact
+/// is used when `MARFL_PJRT_GROUP_MEAN=1` and the shapes/group size match
+/// (see `prefer_pjrt_group_mean`).
+pub fn average_group(
+    states: &mut [PeerState],
+    members: &[usize],
+    ctx: &mut AggCtx<'_>,
+) -> Result<()> {
+    if members.len() < 2 {
+        return Ok(());
+    }
+    let plain_shape = states[members[0]].theta.len() == ctx.model.padded_len
+        && states[members[0]].momentum.len() == ctx.model.padded_len;
+    let (theta, mom) = match ctx.runtime {
+        Some(rt)
+            if prefer_pjrt_group_mean()
+                && plain_shape
+                && rt.meta.group_sizes.contains(&members.len()) =>
+        {
+            let p = ctx.model.padded_len;
+            let mut stack = Vec::with_capacity(members.len() * p);
+            for &i in members {
+                stack.extend_from_slice(&states[i].theta);
+            }
+            let theta = rt.group_mean(ctx.model, &stack, members.len())?;
+            stack.clear();
+            for &i in members {
+                stack.extend_from_slice(&states[i].momentum);
+            }
+            let mom = rt.group_mean(ctx.model, &stack, members.len())?;
+            (theta, mom)
+        }
+        _ => mean_of(states, members),
+    };
+    for &i in members {
+        states[i].theta.copy_from_slice(&theta);
+        states[i].momentum.copy_from_slice(&mom);
+    }
+    Ok(())
+}
+
+/// How a Moshpit group moves its states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GroupExchange {
+    /// Every member sends its full state to every other member:
+    /// k(k−1) transfers of `bytes` per group. Matches the accounting the
+    /// paper's headline ratios imply (≈10× vs RDFL at N=125).
+    FullGather,
+    /// Moshpit-SGD's chunked protocol: each member owns 1/k of the
+    /// vector; reduce-scatter + all-gather moves 2·(k−1)/k·bytes per
+    /// member — a further (k/2)× reduction, exposed as the
+    /// `mar.reduce_scatter` ablation.
+    ReduceScatter,
+}
+
+/// Book one group's exchange; returns the group's simulated duration
+/// (each member's sends are sequential; members operate in parallel).
+pub fn book_group_exchange_mode(
+    group_len: usize,
+    bytes: u64,
+    mode: GroupExchange,
+    ctx: &mut AggCtx<'_>,
+) -> f64 {
+    if group_len < 2 {
+        return 0.0;
+    }
+    let k = group_len as u64;
+    match mode {
+        GroupExchange::FullGather => {
+            let mut per_member = 0.0f64;
+            for _ in 0..group_len {
+                per_member = ctx
+                    .fabric
+                    .sequential(group_len - 1, bytes, Plane::Data)
+                    .max(per_member);
+            }
+            per_member
+        }
+        GroupExchange::ReduceScatter => {
+            // 2(k−1) chunk messages of bytes/k per member
+            let chunk = bytes.div_ceil(k);
+            let mut per_member = 0.0f64;
+            for _ in 0..group_len {
+                per_member = ctx
+                    .fabric
+                    .sequential(2 * (group_len - 1), chunk, Plane::Data)
+                    .max(per_member);
+            }
+            per_member
+        }
+    }
+}
+
+/// Back-compat: full-gather exchange.
+pub fn book_group_exchange(group_len: usize, bytes: u64, ctx: &mut AggCtx<'_>) -> f64 {
+    book_group_exchange_mode(group_len, bytes, GroupExchange::FullGather, ctx)
+}
+
+/// Build an `Aggregate` for a strategy (MAR is constructed separately in
+/// `coordinator`, since it owns the DHT).
+pub fn baseline_for(
+    strategy: crate::config::Strategy,
+) -> Option<Box<dyn Aggregate>> {
+    use crate::config::Strategy::*;
+    match strategy {
+        FedAvg => Some(Box::new(FedAvgServer::default())),
+        Rdfl => Some(Box::new(RingRdfl::default())),
+        ArFl => Some(Box::new(AllToAll::default())),
+        Bar => Some(Box::new(Butterfly::default())),
+        Gossip => Some(Box::new(gossip::Gossip::default())),
+        Saps => Some(Box::new(saps::Saps::default())),
+        MarFl => None,
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::metrics::CommLedger;
+    use std::sync::Arc;
+
+    /// A self-owning AggCtx bundle for aggregation unit tests.
+    pub struct TestCtx {
+        pub ledger: Arc<CommLedger>,
+        pub fabric: Fabric,
+        pub clock: SimClock,
+        pub rng: Rng,
+        pub model: ModelMeta,
+    }
+
+    impl TestCtx {
+        pub fn new(padded_len: usize) -> Self {
+            let ledger = Arc::new(CommLedger::new());
+            let fabric = Fabric::new(ledger.clone(), 1e6, 0.001);
+            TestCtx {
+                ledger,
+                fabric,
+                clock: SimClock::new(),
+                rng: Rng::new(0xA11CE),
+                model: ModelMeta {
+                    name: "toy".into(),
+                    param_count: padded_len,
+                    padded_len,
+                    input_shape: vec![4],
+                    classes: 3,
+                    batch: 8,
+                    eval_chunk: 8,
+                    init_file: String::new(),
+                    artifacts: Default::default(),
+                },
+            }
+        }
+
+        pub fn ctx(&mut self) -> AggCtx<'_> {
+            AggCtx {
+                fabric: &self.fabric,
+                clock: &mut self.clock,
+                rng: &mut self.rng,
+                runtime: None,
+                model: &self.model,
+            }
+        }
+    }
+
+    /// Random peer states for math tests.
+    pub fn random_states(n: usize, p: usize, seed: u64) -> Vec<PeerState> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| PeerState {
+                theta: (0..p).map(|_| rng.normal() as f32).collect(),
+                momentum: (0..p).map(|_| rng.normal() as f32 * 0.1).collect(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::*;
+    use super::*;
+
+    #[test]
+    fn mean_of_matches_hand_computation() {
+        let states = vec![
+            PeerState { theta: vec![1.0, 2.0], momentum: vec![0.0, 4.0] },
+            PeerState { theta: vec![3.0, 6.0], momentum: vec![2.0, 0.0] },
+        ];
+        let (t, m) = mean_of(&states, &[0, 1]);
+        assert_eq!(t, vec![2.0, 4.0]);
+        assert_eq!(m, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn average_group_writes_back_to_all_members() {
+        let mut states = random_states(5, 16, 1);
+        let mut tc = TestCtx::new(16);
+        let mut ctx = tc.ctx();
+        let (want_t, want_m) = mean_of(&states, &[1, 3, 4]);
+        average_group(&mut states, &[1, 3, 4], &mut ctx).unwrap();
+        for &i in &[1, 3, 4] {
+            crate::testing::assert_allclose(&states[i].theta, &want_t, 1e-6, 1e-7);
+            crate::testing::assert_allclose(&states[i].momentum, &want_m, 1e-6, 1e-7);
+        }
+        // non-members untouched
+        let fresh = random_states(5, 16, 1);
+        assert_eq!(states[0].theta, fresh[0].theta);
+        assert_eq!(states[2].theta, fresh[2].theta);
+    }
+
+    #[test]
+    fn singleton_group_is_noop() {
+        let mut states = random_states(2, 8, 2);
+        let orig = states[0].theta.clone();
+        let mut tc = TestCtx::new(8);
+        let mut ctx = tc.ctx();
+        average_group(&mut states, &[0], &mut ctx).unwrap();
+        assert_eq!(states[0].theta, orig);
+    }
+
+    #[test]
+    fn group_exchange_books_k_times_k_minus_one_transfers() {
+        let mut tc = TestCtx::new(32);
+        let bytes = state_bytes(&tc.model);
+        let mut ctx = tc.ctx();
+        let dur = book_group_exchange(5, bytes, &mut ctx);
+        assert!(dur > 0.0);
+        let snap = tc.ledger.snapshot();
+        assert_eq!(snap.data_msgs, 5 * 4);
+        assert_eq!(snap.data_bytes, 5 * 4 * 2 * 32 * 4);
+    }
+
+    #[test]
+    fn payload_bytes_tracks_extended_momentum() {
+        let mut states = random_states(2, 16, 14);
+        assert_eq!(payload_bytes(&states, &[0, 1]), 2 * 16 * 4);
+        // DP iteration: momentum carries Δ̄ and the clip indicator
+        states[0].momentum.extend_from_slice(&[0.0; 17]);
+        assert_eq!(payload_bytes(&states, &[0]), (16 + 33) * 4);
+    }
+
+    #[test]
+    fn state_bytes_counts_theta_and_momentum() {
+        let tc = TestCtx::new(100);
+        assert_eq!(state_bytes(&tc.model), 800);
+    }
+}

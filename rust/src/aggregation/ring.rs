@@ -1,0 +1,138 @@
+//! RDFL — Ring Decentralized FL (Hu et al. 2020, Galaxy FL).
+//!
+//! Full models circulate a closed ring: in each of the N−1 ring steps every
+//! peer forwards the state it just received to its successor, accumulating
+//! a running sum; after the walk each peer holds the exact global average.
+//! Total traffic N(N−1) state transfers — the O(N²) cost the paper reports
+//! (orders of magnitude above FedAvg) — and the closed topology is why RDFL
+//! cannot tolerate churn mid-round (here: the ring is re-formed from `A_t`
+//! each iteration; a dropout *during* a walk would stall it, which the
+//! paper cites as RDFL's weakness).
+
+use anyhow::Result;
+
+use super::{payload_bytes, AggCtx, AggReport, Aggregate, PeerState};
+use crate::metrics::Plane;
+
+#[derive(Debug, Default)]
+pub struct RingRdfl;
+
+impl Aggregate for RingRdfl {
+    fn name(&self) -> &'static str {
+        "rdfl"
+    }
+
+    fn aggregate(
+        &mut self,
+        states: &mut [PeerState],
+        agg: &[usize],
+        ctx: &mut AggCtx<'_>,
+    ) -> Result<AggReport> {
+        let n = agg.len();
+        if n < 2 {
+            return Ok(AggReport::default());
+        }
+        let p = states[agg[0]].theta.len();
+        let q = states[agg[0]].momentum.len(); // may exceed p under DP
+        let bytes = payload_bytes(states, agg);
+
+        // running f64 sums per ring slot; slot r accumulates the states it
+        // has seen so far while they travel the ring
+        let mut sum_t = vec![vec![0.0f64; p]; n];
+        let mut sum_m = vec![vec![0.0f64; q]; n];
+        for (slot, &peer) in agg.iter().enumerate() {
+            for (a, &v) in sum_t[slot].iter_mut().zip(&states[peer].theta) {
+                *a += v as f64;
+            }
+            for (a, &v) in sum_m[slot].iter_mut().zip(&states[peer].momentum) {
+                *a += v as f64;
+            }
+        }
+        // N-1 ring steps: every peer sends its *current carried state* to
+        // its successor; all links are active in parallel per step
+        for step in 1..n {
+            let mut lane_times = Vec::with_capacity(n);
+            for _ in 0..n {
+                lane_times.push(ctx.fabric.send(bytes, Plane::Data));
+            }
+            ctx.clock.parallel(lane_times);
+            // slot r receives the original state of the peer (r - step)
+            for slot in 0..n {
+                let src = agg[(slot + n - step) % n];
+                for (a, &v) in sum_t[slot].iter_mut().zip(&states[src].theta) {
+                    *a += v as f64;
+                }
+                for (a, &v) in sum_m[slot].iter_mut().zip(&states[src].momentum) {
+                    *a += v as f64;
+                }
+            }
+        }
+        let inv = 1.0 / n as f64;
+        for (slot, &peer) in agg.iter().enumerate() {
+            for (dst, &s) in states[peer].theta.iter_mut().zip(&sum_t[slot]) {
+                *dst = (s * inv) as f32;
+            }
+            for (dst, &s) in states[peer].momentum.iter_mut().zip(&sum_m[slot]) {
+                *dst = (s * inv) as f32;
+            }
+        }
+        Ok(AggReport { rounds: n - 1, groups: 1 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::test_support::*;
+    use crate::aggregation::mean_of;
+
+    #[test]
+    fn ring_walk_yields_exact_global_average() {
+        let mut states = random_states(7, 24, 7);
+        let agg: Vec<usize> = (0..7).collect();
+        let (want_t, want_m) = mean_of(&states, &agg);
+        let mut tc = TestCtx::new(24);
+        let mut ctx = tc.ctx();
+        RingRdfl.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        for s in &states {
+            crate::testing::assert_allclose(&s.theta, &want_t, 1e-5, 1e-6);
+            crate::testing::assert_allclose(&s.momentum, &want_m, 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn books_n_times_n_minus_one_transfers() {
+        let n = 9;
+        let mut states = random_states(n, 16, 8);
+        let agg: Vec<usize> = (0..n).collect();
+        let mut tc = TestCtx::new(16);
+        let mut ctx = tc.ctx();
+        let rep = RingRdfl.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        assert_eq!(rep.rounds, n - 1);
+        let snap = tc.ledger.snapshot();
+        assert_eq!(snap.data_msgs as usize, n * (n - 1));
+    }
+
+    #[test]
+    fn ring_over_subset_only() {
+        let mut states = random_states(6, 8, 9);
+        let untouched = states[4].theta.clone();
+        let agg = vec![0, 2, 5];
+        let (want_t, _) = mean_of(&states, &agg);
+        let mut tc = TestCtx::new(8);
+        let mut ctx = tc.ctx();
+        RingRdfl.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        crate::testing::assert_allclose(&states[5].theta, &want_t, 1e-5, 1e-6);
+        assert_eq!(states[4].theta, untouched);
+    }
+
+    #[test]
+    fn two_peer_ring() {
+        let mut states = random_states(2, 8, 10);
+        let (want_t, _) = mean_of(&states, &[0, 1]);
+        let mut tc = TestCtx::new(8);
+        let mut ctx = tc.ctx();
+        RingRdfl.aggregate(&mut states, &[0, 1], &mut ctx).unwrap();
+        crate::testing::assert_allclose(&states[0].theta, &want_t, 1e-5, 1e-6);
+    }
+}

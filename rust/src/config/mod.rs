@@ -1,0 +1,467 @@
+//! Experiment configuration system.
+//!
+//! Defaults reproduce the paper's setup (§3.1): 125 peers, LDA(α=1.0)
+//! non-iid splits, full participation, momentum-SGD η=0.1 μ=0.9, eval
+//! every 5th iteration, exact MAR (M=5, G=3 for 125 peers). Presets for
+//! each figure live in `configs/` and are parsed by [`toml_lite`];
+//! `key=value` CLI overrides are applied on top.
+
+pub mod toml_lite;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use toml_lite::{parse_value, Value};
+
+/// Aggregation technique (paper baselines + contribution).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Moshpit All-Reduce FL (the paper's system).
+    MarFl,
+    /// Ring Decentralized FL (Galaxy FL; full-model ring circulation).
+    Rdfl,
+    /// Naive all-to-all All-Reduce FL.
+    ArFl,
+    /// Client-server FedAvg reference.
+    FedAvg,
+    /// Butterfly All-Reduce (Appendix B.3: efficient but requires totally
+    /// reliable peers; only the largest 2^k subset aggregates).
+    Bar,
+    /// BrainTorrent-style gossip (Roy et al. 2019, Table 1): epidemic
+    /// pull-merge, no synchronized global aggregation.
+    Gossip,
+    /// SAPS-style sparsified pairwise exchange (Tang et al. 2020,
+    /// Table 1): cheap but spreads information only locally.
+    Saps,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "marfl" | "mar-fl" | "mar" => Strategy::MarFl,
+            "rdfl" | "ring" => Strategy::Rdfl,
+            "arfl" | "ar-fl" | "alltoall" | "all-to-all" => Strategy::ArFl,
+            "fedavg" | "fed-avg" | "cs" => Strategy::FedAvg,
+            "bar" | "butterfly" => Strategy::Bar,
+            "gossip" | "braintorrent" => Strategy::Gossip,
+            "saps" => Strategy::Saps,
+            other => bail!("unknown strategy {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::MarFl => "marfl",
+            Strategy::Rdfl => "rdfl",
+            Strategy::ArFl => "arfl",
+            Strategy::FedAvg => "fedavg",
+            Strategy::Bar => "bar",
+            Strategy::Gossip => "gossip",
+            Strategy::Saps => "saps",
+        }
+    }
+}
+
+/// Knowledge-distillation (Moshpit-KD) settings — paper §2.2 and A.1.
+#[derive(Clone, Debug)]
+pub struct KdConfig {
+    pub enabled: bool,
+    /// number of FL iterations K that use MKD
+    pub k_iterations: usize,
+    /// teacher selection ratio ρ_ℓ (paper: 0.4)
+    pub rho_ell: f64,
+    /// distillation epochs E per MKD round (paper: 1)
+    pub epochs: usize,
+}
+
+impl Default for KdConfig {
+    fn default() -> Self {
+        KdConfig { enabled: false, k_iterations: 8, rho_ell: 0.4, epochs: 1 }
+    }
+}
+
+/// Differential-privacy settings — paper Algorithm 4 / Andrew et al. 2021.
+#[derive(Clone, Debug)]
+pub struct DpConfig {
+    pub enabled: bool,
+    /// noise multiplier σ_mult
+    pub noise_multiplier: f64,
+    /// initial clipping bound C_0
+    pub clip_init: f64,
+    /// target clipping quantile γ (paper: 0.5)
+    pub gamma: f64,
+    /// clipping-bound learning rate η_C (paper: 0.2)
+    pub eta_c: f64,
+    /// server-style update stepsize η_u (paper: 0.1)
+    pub eta_u: f64,
+    /// delta smoothing factor β (paper: 0.9)
+    pub beta: f64,
+    /// δ for (ε, δ)-DP reporting
+    pub delta: f64,
+}
+
+impl Default for DpConfig {
+    fn default() -> Self {
+        DpConfig {
+            enabled: false,
+            noise_multiplier: 0.3,
+            clip_init: 0.5,
+            gamma: 0.5,
+            eta_c: 0.2,
+            eta_u: 0.1,
+            beta: 0.9,
+            delta: 1e-5,
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// model / task: "cnn" (MNIST-like) or "head" (20NG-like)
+    pub model: String,
+    pub strategy: Strategy,
+    /// total number of peers N (paper: 16 / 64 / 125)
+    pub peers: usize,
+    /// FL iterations T
+    pub iterations: usize,
+    /// MAR group size M (paper: 5 exact, 3 approximate)
+    pub group_size: usize,
+    /// MAR rounds G per iteration; 0 = auto ⌈log_M N⌉
+    pub mar_rounds: usize,
+    /// use Moshpit-SGD's chunked reduce-scatter within groups (ablation)
+    pub reduce_scatter: bool,
+    /// momentum-SGD stepsize η (paper: 0.1)
+    pub eta: f32,
+    /// momentum μ (paper: 0.9)
+    pub mu: f32,
+    /// local mini-batches per iteration (paper trains one batch per round)
+    pub local_batches: usize,
+    /// fraction of peers participating in an entire FL iteration
+    pub participation: f64,
+    /// probability a participating peer drops during aggregation
+    pub dropout: f64,
+    /// participation model: "bernoulli" (paper §3.1 default) or "markov"
+    /// (bursty Gilbert–Elliott wireless availability, net::trace)
+    pub churn_model: String,
+    /// markov churn: P(Up -> Down) per iteration
+    pub markov_p_down: f64,
+    /// markov churn: P(Down -> Up) per iteration
+    pub markov_p_up: f64,
+    /// evaluate every k-th iteration (paper: 5)
+    pub eval_every: usize,
+    /// LDA concentration α; ignored when `iid`
+    pub lda_alpha: f64,
+    pub iid: bool,
+    /// samples per peer (train shard target size)
+    pub samples_per_peer: usize,
+    /// shared test-set size
+    pub test_samples: usize,
+    pub seed: u64,
+    pub kd: KdConfig,
+    pub dp: DpConfig,
+    /// link bandwidth for the simulated-time model (bytes/s)
+    pub link_bandwidth: f64,
+    /// link latency (s)
+    pub link_latency: f64,
+    /// stop once this test accuracy is reached (0 disables)
+    pub target_accuracy: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: "cnn".into(),
+            strategy: Strategy::MarFl,
+            peers: 125,
+            iterations: 50,
+            group_size: 5,
+            mar_rounds: 0,
+            reduce_scatter: false,
+            eta: 0.1,
+            mu: 0.9,
+            local_batches: 1,
+            participation: 1.0,
+            dropout: 0.0,
+            churn_model: "bernoulli".into(),
+            markov_p_down: 0.1,
+            markov_p_up: 0.4,
+            eval_every: 5,
+            lda_alpha: 1.0,
+            iid: false,
+            samples_per_peer: 64,
+            test_samples: 2000,
+            seed: 42,
+            kd: KdConfig::default(),
+            dp: DpConfig::default(),
+            // 100 Mbit/s wireless-ish link, 20 ms latency
+            link_bandwidth: 12.5e6,
+            link_latency: 0.02,
+            target_accuracy: 0.0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Effective MAR rounds: explicit value or ⌈log_M N⌉ (smallest G with
+    /// M^G >= N — integer arithmetic, no float-log edge cases).
+    pub fn effective_mar_rounds(&self) -> usize {
+        if self.mar_rounds > 0 {
+            return self.mar_rounds;
+        }
+        let m = self.group_size.max(2);
+        let mut g = 1usize;
+        let mut cap = m;
+        while cap < self.peers {
+            cap = cap.saturating_mul(m);
+            g += 1;
+        }
+        g
+    }
+
+    /// Load a preset file and apply `key=value` overrides.
+    pub fn load(path: &Path, overrides: &[String]) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {path:?}"))?;
+        let mut cfg = ExperimentConfig::default();
+        for (k, v) in toml_lite::parse(&text)? {
+            cfg.set(&k, &v).with_context(|| format!("config key {k:?}"))?;
+        }
+        cfg.apply_overrides(overrides)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply `key=value` strings (CLI `--set`).
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<()> {
+        for o in overrides {
+            let Some(eq) = o.find('=') else {
+                bail!("override {o:?} is not key=value");
+            };
+            let key = o[..eq].trim();
+            let value = parse_value(o[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("override {o:?}: {e}"))?;
+            self.set(key, &value).with_context(|| format!("override {o:?}"))?;
+        }
+        Ok(())
+    }
+
+    fn set(&mut self, key: &str, v: &Value) -> Result<()> {
+        fn usize_of(v: &Value) -> Result<usize> {
+            v.as_usize().ok_or_else(|| anyhow::anyhow!("expected integer"))
+        }
+        fn f64_of(v: &Value) -> Result<f64> {
+            v.as_f64().ok_or_else(|| anyhow::anyhow!("expected number"))
+        }
+        fn bool_of(v: &Value) -> Result<bool> {
+            v.as_bool().ok_or_else(|| anyhow::anyhow!("expected bool"))
+        }
+        match key {
+            "model" => {
+                self.model = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("expected string"))?
+                    .to_string()
+            }
+            "strategy" => {
+                self.strategy = Strategy::parse(
+                    v.as_str().ok_or_else(|| anyhow::anyhow!("expected string"))?,
+                )?
+            }
+            "peers" => self.peers = usize_of(v)?,
+            "iterations" => self.iterations = usize_of(v)?,
+            "eta" => self.eta = f64_of(v)? as f32,
+            "mu" => self.mu = f64_of(v)? as f32,
+            "local_batches" => self.local_batches = usize_of(v)?,
+            "participation" => self.participation = f64_of(v)?,
+            "dropout" => self.dropout = f64_of(v)?,
+            "churn.model" | "churn_model" => {
+                self.churn_model = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("expected string"))?
+                    .to_string()
+            }
+            "churn.p_down" | "markov_p_down" => self.markov_p_down = f64_of(v)?,
+            "churn.p_up" | "markov_p_up" => self.markov_p_up = f64_of(v)?,
+            "eval_every" => self.eval_every = usize_of(v)?,
+            "lda_alpha" => self.lda_alpha = f64_of(v)?,
+            "iid" => self.iid = bool_of(v)?,
+            "samples_per_peer" => self.samples_per_peer = usize_of(v)?,
+            "test_samples" => self.test_samples = usize_of(v)?,
+            "seed" => self.seed = usize_of(v)? as u64,
+            "target_accuracy" => self.target_accuracy = f64_of(v)?,
+            "link_bandwidth" => self.link_bandwidth = f64_of(v)?,
+            "link_latency" => self.link_latency = f64_of(v)?,
+            "mar.group_size" | "group_size" => self.group_size = usize_of(v)?,
+            "mar.rounds" | "mar_rounds" => self.mar_rounds = usize_of(v)?,
+            "mar.reduce_scatter" | "reduce_scatter" => {
+                self.reduce_scatter = bool_of(v)?
+            }
+            "kd.enabled" => self.kd.enabled = bool_of(v)?,
+            "kd.k_iterations" => self.kd.k_iterations = usize_of(v)?,
+            "kd.rho_ell" => self.kd.rho_ell = f64_of(v)?,
+            "kd.epochs" => self.kd.epochs = usize_of(v)?,
+            "dp.enabled" => self.dp.enabled = bool_of(v)?,
+            "dp.noise_multiplier" => self.dp.noise_multiplier = f64_of(v)?,
+            "dp.clip_init" => self.dp.clip_init = f64_of(v)?,
+            "dp.gamma" => self.dp.gamma = f64_of(v)?,
+            "dp.eta_c" => self.dp.eta_c = f64_of(v)?,
+            "dp.eta_u" => self.dp.eta_u = f64_of(v)?,
+            "dp.beta" => self.dp.beta = f64_of(v)?,
+            "dp.delta" => self.dp.delta = f64_of(v)?,
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.model != "cnn" && self.model != "head" {
+            bail!("model must be cnn or head, got {:?}", self.model);
+        }
+        if self.peers < 2 {
+            bail!("need at least 2 peers");
+        }
+        if self.group_size < 2 {
+            bail!("MAR group size must be >= 2");
+        }
+        if !(0.0..=1.0).contains(&self.participation) || self.participation <= 0.0 {
+            bail!("participation must be in (0, 1]");
+        }
+        if !(0.0..=1.0).contains(&self.dropout) {
+            bail!("dropout must be in [0, 1]");
+        }
+        if self.eval_every == 0 {
+            bail!("eval_every must be >= 1");
+        }
+        if self.churn_model != "bernoulli" && self.churn_model != "markov" {
+            bail!("churn.model must be bernoulli or markov");
+        }
+        if self.churn_model == "markov" && self.markov_p_up <= 0.0 {
+            bail!("markov churn needs p_up > 0");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.peers, 125);
+        assert_eq!(c.group_size, 5);
+        assert_eq!(c.eta, 0.1);
+        assert_eq!(c.mu, 0.9);
+        assert_eq!(c.eval_every, 5);
+        assert_eq!(c.lda_alpha, 1.0);
+        assert_eq!(c.kd.rho_ell, 0.4);
+        assert_eq!(c.dp.gamma, 0.5);
+        assert_eq!(c.dp.eta_c, 0.2);
+        assert_eq!(c.dp.beta, 0.9);
+    }
+
+    #[test]
+    fn effective_rounds_perfect_grid() {
+        // 125 = 5^3 -> 3 rounds
+        let c = ExperimentConfig { peers: 125, group_size: 5, ..Default::default() };
+        assert_eq!(c.effective_mar_rounds(), 3);
+        // 16 = 4^2
+        let c = ExperimentConfig { peers: 16, group_size: 4, ..Default::default() };
+        assert_eq!(c.effective_mar_rounds(), 2);
+        // 64 = 4^3
+        let c = ExperimentConfig { peers: 64, group_size: 4, ..Default::default() };
+        assert_eq!(c.effective_mar_rounds(), 3);
+    }
+
+    #[test]
+    fn effective_rounds_imperfect_grid_rounds_up() {
+        // 125 peers with group size 3: 3^4 = 81 < 125 <= 3^5 -> 5 rounds
+        let c = ExperimentConfig {
+            peers: 125,
+            group_size: 3,
+            ..Default::default()
+        };
+        assert_eq!(c.effective_mar_rounds(), 5);
+        // explicit value wins (paper's approximate mode uses 4)
+        let c = ExperimentConfig { mar_rounds: 4, ..c };
+        assert_eq!(c.effective_mar_rounds(), 4);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = ExperimentConfig::default();
+        c.apply_overrides(&[
+            "strategy=rdfl".into(),
+            "peers=16".into(),
+            "dp.enabled=true".into(),
+            "kd.rho_ell=0.5".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.strategy, Strategy::Rdfl);
+        assert_eq!(c.peers, 16);
+        assert!(c.dp.enabled);
+        assert_eq!(c.kd.rho_ell, 0.5);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.apply_overrides(&["bogus=1".into()]).is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = ExperimentConfig::default();
+        c.participation = 0.0;
+        assert!(c.validate().is_err());
+        c.participation = 0.5;
+        c.model = "resnet".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn repo_presets_load() {
+        // every shipped preset must parse and validate; overrides stack
+        for preset in [
+            "configs/paper_default.toml",
+            "configs/fig11_approx.toml",
+            "configs/dp_20ng.toml",
+            "configs/mkd_20ng.toml",
+        ] {
+            let cfg = ExperimentConfig::load(
+                Path::new(preset),
+                &["seed=1".into()],
+            )
+            .unwrap_or_else(|e| panic!("{preset}: {e:#}"));
+            assert_eq!(cfg.seed, 1, "{preset}: override not applied");
+        }
+        let dp = ExperimentConfig::load(
+            Path::new("configs/dp_20ng.toml"),
+            &[],
+        )
+        .unwrap();
+        assert!(dp.dp.enabled);
+        assert_eq!(dp.dp.gamma, 0.5);
+        let kd = ExperimentConfig::load(
+            Path::new("configs/mkd_20ng.toml"),
+            &[],
+        )
+        .unwrap();
+        assert!(kd.kd.enabled);
+        assert_eq!(kd.kd.k_iterations, 6);
+    }
+
+    #[test]
+    fn strategy_parsing() {
+        assert_eq!(Strategy::parse("MAR-FL").unwrap(), Strategy::MarFl);
+        assert_eq!(Strategy::parse("ring").unwrap(), Strategy::Rdfl);
+        assert_eq!(Strategy::parse("fedavg").unwrap(), Strategy::FedAvg);
+        assert_eq!(Strategy::parse("braintorrent").unwrap(), Strategy::Gossip);
+        assert_eq!(Strategy::parse("saps").unwrap(), Strategy::Saps);
+        assert_eq!(Strategy::parse("butterfly").unwrap(), Strategy::Bar);
+        assert!(Strategy::parse("telepathy").is_err());
+    }
+}

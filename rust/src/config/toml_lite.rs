@@ -1,0 +1,203 @@
+//! TOML-subset parser (offline environment: no `toml` crate).
+//!
+//! Supports what experiment presets need: `[section]` headers, `key = value`
+//! with string / integer / float / boolean / flat-array values, `#` comments.
+//! Keys are exposed flattened as `section.key`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a TOML-subset document into flattened `section.key -> Value`.
+pub fn parse(input: &str) -> Result<BTreeMap<String, Value>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected key = value", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.insert(full, value);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive: '#' inside strings unsupported (not needed by presets)
+    match line.find('#') {
+        Some(i) if !line[..i].contains('"') => &line[..i],
+        Some(i) => {
+            // check the '#' is not inside a quoted string
+            let quotes = line[..i].matches('"').count();
+            if quotes % 2 == 0 {
+                &line[..i]
+            } else {
+                line
+            }
+        }
+        None => line,
+    }
+}
+
+/// Parse a single scalar or flat array.
+pub fn parse_value(text: &str) -> Result<Value, String> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = t.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            return Err("unterminated array".into());
+        };
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Some(s) = t.strip_prefix('"') {
+        let Some(s) = s.strip_suffix('"') else {
+            return Err("unterminated string".into());
+        };
+        return Ok(Value::Str(s.to_string()));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare word: treat as string (lets CLI overrides skip quotes)
+    Ok(Value::Str(t.to_string()))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    // arrays are flat; just split on commas
+    s.split(',').collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = r#"
+            # preset for figure 1
+            model = "cnn"
+            peers = 125
+
+            [mar]
+            group_size = 5
+            rounds = 3
+            exact = true
+
+            [dp]
+            noise_multiplier = 0.5
+        "#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["model"], Value::Str("cnn".into()));
+        assert_eq!(m["peers"], Value::Int(125));
+        assert_eq!(m["mar.group_size"], Value::Int(5));
+        assert_eq!(m["mar.exact"], Value::Bool(true));
+        assert_eq!(m["dp.noise_multiplier"], Value::Float(0.5));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let m = parse("sizes = [16, 64, 125]").unwrap();
+        assert_eq!(
+            m["sizes"],
+            Value::Arr(vec![Value::Int(16), Value::Int(64), Value::Int(125)])
+        );
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let m = parse("a = 1 # trailing\n# whole line\nb = 2").unwrap();
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn hash_inside_string_preserved() {
+        let m = parse(r##"tag = "exp#7""##).unwrap();
+        assert_eq!(m["tag"], Value::Str("exp#7".into()));
+    }
+
+    #[test]
+    fn rejects_missing_equals() {
+        assert!(parse("justakey").is_err());
+    }
+
+    #[test]
+    fn bare_words_are_strings() {
+        assert_eq!(parse_value("marfl").unwrap(), Value::Str("marfl".into()));
+    }
+}

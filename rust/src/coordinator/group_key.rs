@@ -1,0 +1,173 @@
+//! Moshpit group keys (Ryabinin et al. 2021, adopted by MAR-FL §2.2).
+//!
+//! Each aggregating peer holds a d-dimensional index vector
+//! `C_i ∈ [M]^d`. In MAR round `g`, peers whose keys agree on every
+//! coordinate *except* position `g` form a group; after the group
+//! averages, each member overwrites coordinate `g` with its chunk index
+//! (its rank inside the group). Two consequences:
+//!
+//! * **no-revisit** — members of a round-`g` group get pairwise-distinct
+//!   `c_g`, so they can never share a group again this iteration;
+//! * **exactness** — when `|A_t| = M^d` and keys are initialized as the
+//!   base-M digits of each peer's rank, the G = d rounds realize a
+//!   d-dimensional hypercube/torus all-reduce: every peer ends with the
+//!   exact global average (paper: 125 = 5³ ⇒ 3 rounds).
+//!
+//! For general `|A_t|` keys are drawn uniformly from `[M]^d`; groups that
+//! collide beyond size M are split, averaging becomes approximate and
+//! converges across iterations per Eq. 1 (see `mixing.rs`).
+
+use crate::rng::Rng;
+
+/// One peer's d-dimensional group key.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GroupKey {
+    coords: Vec<u16>,
+    m: usize,
+}
+
+impl GroupKey {
+    pub fn new(coords: Vec<u16>, m: usize) -> Self {
+        assert!(coords.iter().all(|&c| (c as usize) < m));
+        GroupKey { coords, m }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.coords.len()
+    }
+
+    pub fn coord(&self, i: usize) -> u16 {
+        self.coords[i]
+    }
+
+    /// The matchmaking key for `round`: every coordinate except position
+    /// `round mod d`, rendered as a stable string for DHT content
+    /// addressing.
+    pub fn reduced(&self, round: usize) -> String {
+        let skip = round % self.dims();
+        let mut s = String::with_capacity(self.dims() * 3);
+        for (i, c) in self.coords.iter().enumerate() {
+            if i == skip {
+                s.push_str("*.");
+            } else {
+                s.push_str(&format!("{c}."));
+            }
+        }
+        s
+    }
+
+    /// Post-averaging update: coordinate `round mod d` becomes the peer's
+    /// chunk index within its group.
+    pub fn set_chunk(&mut self, round: usize, chunk: usize) {
+        assert!(chunk < self.m, "chunk {chunk} out of range (M={})", self.m);
+        let d = self.dims();
+        self.coords[round % d] = chunk as u16;
+    }
+}
+
+/// Exact-grid key assignment: peer `rank`'s key is the base-M digit
+/// expansion of `rank` (least significant digit first). Valid whenever
+/// `count <= M^d`.
+pub fn grid_keys(count: usize, m: usize, d: usize) -> Vec<GroupKey> {
+    assert!(m >= 2 && d >= 1);
+    assert!(
+        count <= m.pow(d as u32),
+        "{count} peers do not fit an {m}^{d} grid"
+    );
+    (0..count)
+        .map(|rank| {
+            let mut coords = Vec::with_capacity(d);
+            let mut r = rank;
+            for _ in 0..d {
+                coords.push((r % m) as u16);
+                r /= m;
+            }
+            GroupKey::new(coords, m)
+        })
+        .collect()
+}
+
+/// Uniform random key assignment for imperfect peer counts.
+pub fn random_keys(count: usize, m: usize, d: usize, rng: &mut Rng) -> Vec<GroupKey> {
+    (0..count)
+        .map(|_| {
+            GroupKey::new((0..d).map(|_| rng.below(m) as u16).collect(), m)
+        })
+        .collect()
+}
+
+/// Is an exact M^d grid available for this aggregator count?
+pub fn perfect_grid(count: usize, m: usize, d: usize) -> bool {
+    m.checked_pow(d as u32).map_or(false, |c| c == count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_keys_enumerate_digits() {
+        let keys = grid_keys(8, 2, 3);
+        assert_eq!(keys[0].coords, vec![0, 0, 0]);
+        assert_eq!(keys[1].coords, vec![1, 0, 0]);
+        assert_eq!(keys[5].coords, vec![1, 0, 1]);
+        assert_eq!(keys[7].coords, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn grid_round_g_groups_have_m_members() {
+        // group peers by reduced key for each round; every group must have
+        // exactly M members on a perfect grid
+        let m = 3;
+        let d = 3;
+        let keys = grid_keys(27, m, d);
+        for round in 0..d {
+            let mut by_key = std::collections::BTreeMap::<String, usize>::new();
+            for k in &keys {
+                *by_key.entry(k.reduced(round)).or_default() += 1;
+            }
+            assert_eq!(by_key.len(), 9);
+            assert!(by_key.values().all(|&c| c == m));
+        }
+    }
+
+    #[test]
+    fn reduced_key_masks_exactly_one_coordinate() {
+        let k = GroupKey::new(vec![1, 2, 3], 5);
+        assert_eq!(k.reduced(0), "*.2.3.");
+        assert_eq!(k.reduced(1), "1.*.3.");
+        assert_eq!(k.reduced(2), "1.2.*.");
+        assert_eq!(k.reduced(3), "*.2.3."); // wraps mod d
+    }
+
+    #[test]
+    fn set_chunk_changes_only_target_round() {
+        let mut k = GroupKey::new(vec![4, 0, 2], 5);
+        k.set_chunk(1, 3);
+        assert_eq!(k.coords, vec![4, 3, 2]);
+    }
+
+    #[test]
+    fn perfect_grid_detection() {
+        assert!(perfect_grid(125, 5, 3));
+        assert!(perfect_grid(16, 4, 2));
+        assert!(!perfect_grid(125, 3, 4));
+        assert!(!perfect_grid(124, 5, 3));
+    }
+
+    #[test]
+    fn random_keys_in_range() {
+        let mut rng = Rng::new(1);
+        let keys = random_keys(100, 3, 4, &mut rng);
+        for k in keys {
+            assert_eq!(k.dims(), 4);
+            assert!(k.coords.iter().all(|&c| c < 3));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "do not fit")]
+    fn grid_overflow_rejected() {
+        grid_keys(9, 2, 3);
+    }
+}

@@ -1,0 +1,416 @@
+//! Moshpit All-Reduce aggregator — the paper's system contribution.
+//!
+//! Per FL iteration, `aggregate` runs G MAR rounds. Each round:
+//!
+//! 1. **Matchmaking** — every aggregator announces itself on the Kademlia
+//!    DHT under its reduced group key (`store`), then collects its group
+//!    (`get`). Only lightweight metadata crosses the DHT; model weights
+//!    never do (control plane, O(N log N) small messages per round).
+//! 2. **Group exchange** — each group performs a full-gather of member
+//!    states ((k−1) state transfers per member, data plane) and averages
+//!    via the Pallas `group_mean` artifact (native fallback otherwise).
+//! 3. **Key update** — each member's round-g coordinate becomes its chunk
+//!    index within its group (no-revisit; see `group_key`).
+//!
+//! With `|A_t| = M^d` the schedule is the exact hypercube all-reduce; any
+//! other count runs the approximate mode that converges across iterations
+//! (Eq. 1 / `mixing.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::group_key::{grid_keys, perfect_grid, random_keys, GroupKey};
+use crate::aggregation::{
+    average_group, book_group_exchange_mode, payload_bytes, AggCtx, AggReport,
+    Aggregate, GroupExchange, PeerState,
+};
+use crate::dht::{decode_peer, encode_peer, Key, SimDht};
+use crate::metrics::CommLedger;
+use crate::rng::Rng;
+
+/// MAR-FL's aggregator: owns the DHT control plane and the group-key
+/// schedule.
+pub struct MarAggregator {
+    /// group size M
+    pub group_size: usize,
+    /// MAR rounds G per FL iteration
+    pub rounds: usize,
+    /// within-group wire protocol (full-gather default; reduce-scatter
+    /// is the Moshpit-SGD chunked mode, `mar.reduce_scatter` ablation)
+    pub exchange: GroupExchange,
+    dht: SimDht,
+    /// peer index -> DHT node id
+    node_ids: Vec<Key>,
+    /// FL-iteration counter (scopes DHT announcement keys)
+    iteration: usize,
+}
+
+impl MarAggregator {
+    /// Build the control plane: every peer joins the DHT once at startup.
+    pub fn new(
+        n_peers: usize,
+        group_size: usize,
+        rounds: usize,
+        ledger: Arc<CommLedger>,
+        seed: u64,
+    ) -> Self {
+        assert!(group_size >= 2);
+        assert!(rounds >= 1);
+        let mut dht = SimDht::new(ledger);
+        let mut rng = Rng::new(seed ^ 0xD47);
+        let node_ids: Vec<Key> =
+            (0..n_peers).map(|_| Key::random(&mut rng)).collect();
+        for id in &node_ids {
+            dht.join(*id);
+        }
+        MarAggregator {
+            group_size,
+            rounds,
+            exchange: GroupExchange::FullGather,
+            dht,
+            node_ids,
+            iteration: 0,
+        }
+    }
+
+    /// Switch the within-group wire protocol.
+    pub fn with_exchange(mut self, exchange: GroupExchange) -> Self {
+        self.exchange = exchange;
+        self
+    }
+
+    /// DHT-mediated matchmaking for one round. `positions[i]` announces
+    /// under `keys[i].reduced(round)`; groups are peers sharing a reduced
+    /// key, split into chunks of at most M (sorted by peer id for
+    /// determinism). Returns groups as lists of *positions* into `agg`.
+    fn matchmake(
+        &mut self,
+        agg: &[usize],
+        keys: &[GroupKey],
+        round: usize,
+        scope: &str,
+    ) -> Vec<Vec<usize>> {
+        // announce: one DHT store per aggregator
+        let mut content_keys: Vec<Key> = Vec::with_capacity(agg.len());
+        for (pos, &peer) in agg.iter().enumerate() {
+            let content =
+                Key::hash_of(&format!("{scope}:r{round}:{}", keys[pos].reduced(round)));
+            content_keys.push(content);
+            self.dht.store(self.node_ids[peer], content, encode_peer(pos));
+        }
+        // collect: every aggregator issues its own get (the paper's
+        // dispatcher scans peer announcements — O(N) lookups per round);
+        // all members of a group see the same set, which doubles as the
+        // paper's "group symmetry" cross-check
+        let mut by_key: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (pos, &peer) in agg.iter().enumerate() {
+            let got = self.dht.get(self.node_ids[peer], content_keys[pos]);
+            let mut members: Vec<usize> =
+                got.iter().filter_map(|v| decode_peer(v)).collect();
+            members.sort_unstable();
+            members.dedup();
+            debug_assert!(members.contains(&pos), "announcer missing from own group");
+            let reduced = keys[pos].reduced(round);
+            match by_key.get(&reduced) {
+                Some(existing) => debug_assert_eq!(
+                    existing, &members,
+                    "group symmetry violated for key {reduced}"
+                ),
+                None => {
+                    by_key.insert(reduced, members);
+                }
+            }
+        }
+        // clear ephemeral announcements (dispatcher stale-entry sweep)
+        for ck in content_keys {
+            self.dht.clear(ck);
+        }
+        // split oversize collections into chunks of at most M
+        let mut groups = Vec::new();
+        for (_, members) in by_key {
+            for chunk in members.chunks(self.group_size) {
+                groups.push(chunk.to_vec());
+            }
+        }
+        groups
+    }
+
+    /// Cumulative DHT lookup hops (diagnostics / control-plane model).
+    pub fn dht_hops(&self) -> u64 {
+        self.dht.hops_total()
+    }
+
+    /// One standalone DHT-matchmade grouping round over `agg` with fresh
+    /// uniform keys — Moshpit-KD collects candidate teachers "using the
+    /// same procedure MAR uses for global model averaging" (paper §2.2).
+    /// `tag` must be unique per call (it scopes the DHT announcements).
+    /// Returns groups of *positions into `agg`*.
+    pub fn form_groups_once(
+        &mut self,
+        agg: &[usize],
+        rng: &mut Rng,
+        tag: &str,
+    ) -> Vec<Vec<usize>> {
+        let keys = random_keys(agg.len(), self.group_size, 1, rng);
+        self.matchmake(agg, &keys, 0, tag)
+    }
+}
+
+impl Aggregate for MarAggregator {
+    fn name(&self) -> &'static str {
+        "marfl"
+    }
+
+    fn aggregate(
+        &mut self,
+        states: &mut [PeerState],
+        agg: &[usize],
+        ctx: &mut AggCtx<'_>,
+    ) -> Result<AggReport> {
+        let n = agg.len();
+        if n < 2 {
+            return Ok(AggReport::default());
+        }
+        self.iteration += 1;
+        let m = self.group_size;
+        let d = self.rounds;
+        // exact grid when possible (paper's default configuration),
+        // otherwise uniform random keys (approximate mode)
+        let mut keys = if perfect_grid(n, m, d) {
+            grid_keys(n, m, d)
+        } else {
+            random_keys(n, m, d, ctx.rng)
+        };
+
+        let bytes = payload_bytes(states, agg);
+        let scope = format!("agg{}", self.iteration);
+        let mut groups_formed = 0;
+        for g in 0..d {
+            let hops_before = self.dht.hops_total();
+            let groups = self.matchmake(agg, &keys, g, &scope);
+            // control-plane latency: announcements and collects run in
+            // parallel across peers; charge the per-peer average lookup
+            // depth (2 RTTs per hop: request+response)
+            let hops = self.dht.hops_total() - hops_before;
+            let avg_hops = hops as f64 / n as f64;
+            ctx.clock.advance(2.0 * ctx.fabric.latency * (1.0 + avg_hops));
+
+            let mut lane_times = Vec::with_capacity(groups.len());
+            for group in &groups {
+                let members: Vec<usize> =
+                    group.iter().map(|&pos| agg[pos]).collect();
+                lane_times.push(book_group_exchange_mode(
+                    members.len(),
+                    bytes,
+                    self.exchange,
+                    ctx,
+                ));
+                average_group(states, &members, ctx)?;
+                for (chunk, &pos) in group.iter().enumerate() {
+                    keys[pos].set_chunk(g, chunk);
+                }
+                if group.len() >= 2 {
+                    groups_formed += 1;
+                }
+            }
+            // groups communicate concurrently
+            ctx.clock.parallel(lane_times);
+        }
+        Ok(AggReport { rounds: d, groups: groups_formed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::test_support::*;
+    use crate::aggregation::mean_of;
+    use crate::metrics::CommLedger;
+
+    /// Build a MarAggregator sharing the TestCtx ledger (as the Trainer
+    /// does), so control and data traffic land on the same counters.
+    fn mar_on(tc: &TestCtx, n: usize, m: usize, g: usize) -> MarAggregator {
+        MarAggregator::new(n, m, g, tc.ledger.clone(), 7)
+    }
+
+    fn mar(n: usize, m: usize, g: usize) -> (MarAggregator, Arc<CommLedger>) {
+        let ledger = Arc::new(CommLedger::new());
+        (MarAggregator::new(n, m, g, ledger.clone(), 7), ledger)
+    }
+
+    #[test]
+    fn perfect_grid_gives_exact_global_average() {
+        // 8 = 2^3
+        let n = 8;
+        let mut states = random_states(n, 64, 20);
+        let agg: Vec<usize> = (0..n).collect();
+        let (want_t, want_m) = mean_of(&states, &agg);
+        let (mut mar, _) = mar(n, 2, 3);
+        let mut tc = TestCtx::new(64);
+        let mut ctx = tc.ctx();
+        let rep = mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        assert_eq!(rep.rounds, 3);
+        for s in &states {
+            crate::testing::assert_allclose(&s.theta, &want_t, 1e-5, 1e-6);
+            crate::testing::assert_allclose(&s.momentum, &want_m, 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn perfect_grid_27_peers() {
+        let n = 27;
+        let mut states = random_states(n, 16, 21);
+        let agg: Vec<usize> = (0..n).collect();
+        let (want_t, _) = mean_of(&states, &agg);
+        let (mut mar, _) = mar(n, 3, 3);
+        let mut tc = TestCtx::new(16);
+        let mut ctx = tc.ctx();
+        mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        for s in &states {
+            crate::testing::assert_allclose(&s.theta, &want_t, 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn transfer_count_is_n_g_m_minus_one_on_grid() {
+        let n = 27;
+        let mut states = random_states(n, 8, 22);
+        let agg: Vec<usize> = (0..n).collect();
+        let mut tc = TestCtx::new(8);
+        let mut mar = mar_on(&tc, n, 3, 3);
+        let before = tc.ledger.snapshot();
+        let mut ctx = tc.ctx();
+        mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        // exact grid: every round has n/m groups of m; per group m(m-1)
+        // transfers -> total n*g*(m-1)
+        let delta = tc.ledger.snapshot().since(&before);
+        assert_eq!(delta.data_msgs as usize, n * 3 * 2);
+    }
+
+    #[test]
+    fn approximate_mode_reduces_distortion() {
+        // 20 peers, M=3, G=3: no perfect grid; one aggregate call must
+        // strictly shrink the average distance to the global mean
+        let n = 20;
+        let mut states = random_states(n, 32, 23);
+        let agg: Vec<usize> = (0..n).collect();
+        let (want_t, _) = mean_of(&states, &agg);
+        let before: f64 = states
+            .iter()
+            .map(|s| crate::util::mse(&s.theta, &want_t))
+            .sum::<f64>();
+        let (mut mar, _) = mar(n, 3, 3);
+        let mut tc = TestCtx::new(32);
+        let mut ctx = tc.ctx();
+        mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        let after: f64 = states
+            .iter()
+            .map(|s| crate::util::mse(&s.theta, &want_t))
+            .sum::<f64>();
+        assert!(
+            after < before * 0.2,
+            "distortion barely reduced: {before} -> {after}"
+        );
+        // mean must be preserved by averaging (up to fp noise)
+        let (new_mean, _) = mean_of(&states, &agg);
+        crate::testing::assert_allclose(&new_mean, &want_t, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn aggregates_only_the_aggregator_subset() {
+        let n = 10;
+        let mut states = random_states(n, 8, 24);
+        let before9 = states[9].theta.clone();
+        let agg: Vec<usize> = (0..8).collect(); // 8 = 2^3 grid
+        let (mut mar, _) = mar(n, 2, 3);
+        let mut tc = TestCtx::new(8);
+        let mut ctx = tc.ctx();
+        mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        assert_eq!(states[9].theta, before9);
+    }
+
+    #[test]
+    fn no_revisit_within_iteration() {
+        // on a perfect grid, track groupmates across rounds: no pair may
+        // meet twice within one aggregate() call
+        let n = 16;
+        let m = 4;
+        let d = 2;
+        let keys = grid_keys(n, m, d);
+        let mut met = std::collections::HashSet::new();
+        let mut keys = keys;
+        for g in 0..d {
+            let mut by_key: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+            for (pos, k) in keys.iter().enumerate() {
+                by_key.entry(k.reduced(g)).or_default().push(pos);
+            }
+            for (_, group) in by_key {
+                for i in 0..group.len() {
+                    for j in i + 1..group.len() {
+                        let pair = (group[i], group[j]);
+                        assert!(
+                            met.insert(pair),
+                            "pair {pair:?} met twice (round {g})"
+                        );
+                    }
+                }
+                for (chunk, &pos) in group.iter().enumerate() {
+                    keys[pos].set_chunk(g, chunk);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_cuts_group_traffic() {
+        let n = 27;
+        let mut tc = TestCtx::new(1024);
+        let run = |exchange, tc: &mut TestCtx| {
+            let mut states = random_states(n, 1024, 26);
+            let agg: Vec<usize> = (0..n).collect();
+            let mut mar = MarAggregator::new(n, 3, 3, tc.ledger.clone(), 7)
+                .with_exchange(exchange);
+            tc.ledger.reset();
+            let mut ctx = tc.ctx();
+            mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+            // exactness must be identical in both modes
+            let (mean, _) = mean_of(&states, &agg);
+            for s in &states {
+                crate::testing::assert_allclose(&s.theta, &mean, 1e-4, 1e-5);
+            }
+            tc.ledger.snapshot().data_bytes
+        };
+        let full = run(crate::aggregation::GroupExchange::FullGather, &mut tc);
+        let rs = run(crate::aggregation::GroupExchange::ReduceScatter, &mut tc);
+        // M=3: reduce-scatter moves 2(k-1)/k = 4/3 chunks vs (k-1) = 2
+        // full states per member -> ratio 2/(4/3) = 1.5
+        let ratio = full as f64 / rs as f64;
+        assert!((1.3..1.7).contains(&ratio), "RS saving ratio {ratio}");
+    }
+
+    #[test]
+    fn control_plane_books_bytes_but_far_less_than_data() {
+        // realistic model size (the cnn task's P_pad): control traffic is
+        // size-independent, so the paper's "negligible" claim is about
+        // real models, not toy vectors
+        let n = 27;
+        let p = 18432;
+        let mut states = random_states(n, p, 25);
+        let agg: Vec<usize> = (0..n).collect();
+        let mut tc = TestCtx::new(p);
+        let mut mar = mar_on(&tc, n, 3, 3);
+        tc.ledger.reset(); // drop DHT join traffic; measure one iteration
+        let mut ctx = tc.ctx();
+        mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        let s = tc.ledger.snapshot();
+        assert!(s.control_bytes > 0, "no control traffic booked");
+        assert!(
+            s.control_bytes * 10 < s.data_bytes,
+            "control plane ({}) not negligible vs data ({})",
+            s.control_bytes,
+            s.data_bytes
+        );
+    }
+}

@@ -1,0 +1,177 @@
+//! Mixing dynamics of MAR (paper §2.3, Eq. 1; Ryabinin et al. 2021).
+//!
+//! For random partitioning of N peers into r groups that average locally,
+//! the expected average squared distance to the global mean contracts by
+//!
+//! ```text
+//! factor(N, r) = (r - 1)/N + r/N²
+//! ```
+//!
+//! per averaging iteration — independent of the communication graph's
+//! spectral properties. The deterministic key schedule MAR actually uses
+//! mixes at least this fast (exactly 0 after d rounds on a perfect grid);
+//! the property tests validate both statements against simulation.
+
+/// One-iteration contraction factor of Eq. 1.
+pub fn distortion_factor(n: usize, r: usize) -> f64 {
+    assert!(n >= 1 && r >= 1);
+    let (n, r) = (n as f64, r as f64);
+    (r - 1.0) / n + r / (n * n)
+}
+
+/// Expected distortion after `t` iterations from initial distortion `d0`.
+pub fn expected_distortion(d0: f64, n: usize, r: usize, t: usize) -> f64 {
+    d0 * distortion_factor(n, r).powi(t as i32)
+}
+
+/// Measured average squared distance to the global mean:
+/// (1/N) Σ_i ‖θ_i − θ̄‖².
+pub fn avg_distortion(values: &[Vec<f32>]) -> f64 {
+    let n = values.len();
+    assert!(n > 0);
+    let p = values[0].len();
+    let mut mean = vec![0.0f64; p];
+    for v in values {
+        for (a, &x) in mean.iter_mut().zip(v) {
+            *a += x as f64;
+        }
+    }
+    for a in &mut mean {
+        *a /= n as f64;
+    }
+    values
+        .iter()
+        .map(|v| {
+            v.iter()
+                .zip(&mean)
+                .map(|(&x, &m)| (x as f64 - m) * (x as f64 - m))
+                .sum::<f64>()
+        })
+        .sum::<f64>()
+        / n as f64
+}
+
+/// One random-grouping averaging iteration (the Eq. 1 model): partition
+/// `values` uniformly into `r` groups, replace members by the group mean.
+pub fn random_grouping_round(
+    values: &mut [Vec<f32>],
+    r: usize,
+    rng: &mut crate::rng::Rng,
+) {
+    let n = values.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    // deal peers into r groups round-robin over a random order — a
+    // uniform random partition into r cells (sizes as equal as possible)
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); r];
+    for (i, peer) in order.into_iter().enumerate() {
+        groups[i % r].push(peer);
+    }
+    let p = values[0].len();
+    for group in groups {
+        if group.len() < 2 {
+            continue;
+        }
+        let mut mean = vec![0.0f64; p];
+        for &i in &group {
+            for (a, &x) in mean.iter_mut().zip(&values[i]) {
+                *a += x as f64;
+            }
+        }
+        for a in &mut mean {
+            *a /= group.len() as f64;
+        }
+        for &i in &group {
+            for (dst, &m) in values[i].iter_mut().zip(&mean) {
+                *dst = m as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::check;
+
+    #[test]
+    fn factor_matches_paper_examples() {
+        // N = 125, r = 25 groups (size 5): (24/125) + (25/15625)
+        let f = distortion_factor(125, 25);
+        assert!((f - (24.0 / 125.0 + 25.0 / 15625.0)).abs() < 1e-12);
+        // r = 1 (one global group): factor = 1/N² -> near-exact in one shot
+        assert!(distortion_factor(100, 1) < 1e-3);
+    }
+
+    #[test]
+    fn expected_distortion_decays_geometrically() {
+        let d0 = 4.0;
+        let one = expected_distortion(d0, 50, 10, 1);
+        let two = expected_distortion(d0, 50, 10, 2);
+        assert!((two / one - distortion_factor(50, 10)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn avg_distortion_zero_iff_consensus() {
+        let consensus = vec![vec![1.0f32, 2.0]; 5];
+        assert!(avg_distortion(&consensus) < 1e-15);
+        let spread = vec![vec![0.0f32], vec![2.0f32]];
+        assert!((avg_distortion(&spread) - 1.0).abs() < 1e-12);
+    }
+
+    /// Monte-Carlo validation of Eq. 1: measured contraction of random
+    /// grouping matches the analytic factor within statistical tolerance.
+    #[test]
+    fn eq1_contraction_measured() {
+        let n = 60;
+        let r = 12; // groups of 5
+        let trials = 400;
+        let mut rng = Rng::new(0xE91);
+        let mut measured_sum = 0.0;
+        for _ in 0..trials {
+            let mut values: Vec<Vec<f32>> = (0..n)
+                .map(|_| vec![rng.normal() as f32])
+                .collect();
+            let before = avg_distortion(&values);
+            random_grouping_round(&mut values, r, &mut rng);
+            measured_sum += avg_distortion(&values) / before;
+        }
+        let measured = measured_sum / trials as f64;
+        let analytic = distortion_factor(n, r);
+        // Eq. 1 is derived for an idealized partition model; round-robin
+        // dealing (equal-size groups) mixes slightly *faster*, so accept
+        // [0.5x, 1.1x] of the analytic factor
+        assert!(
+            measured < analytic * 1.1 && measured > analytic * 0.5,
+            "measured {measured:.4} vs analytic {analytic:.4}"
+        );
+    }
+
+    /// Property: repeated random-grouping rounds drive distortion to ~0
+    /// at at least the Eq. 1 rate, for random sizes.
+    #[test]
+    fn property_mixing_bound() {
+        check("mixing_bound", 12, 40, |rng, size| {
+            let n = (size.0 + 10).min(50);
+            let r = (n / 4).max(2);
+            let mut values: Vec<Vec<f32>> =
+                (0..n).map(|_| vec![rng.normal() as f32 * 2.0]).collect();
+            let d0 = avg_distortion(&values);
+            let t = 6;
+            for _ in 0..t {
+                random_grouping_round(&mut values, r, rng);
+            }
+            let measured = avg_distortion(&values);
+            // generous slack (single sample path): 50x the expectation
+            // still separates geometric decay from stagnation
+            let bound = expected_distortion(d0, n, r, t) * 50.0 + 1e-12;
+            if measured > bound {
+                return Err(format!(
+                    "distortion {measured:.3e} exceeds 50x Eq.1 bound {bound:.3e} (n={n}, r={r})"
+                ));
+            }
+            Ok(())
+        });
+    }
+}

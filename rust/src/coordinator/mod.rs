@@ -1,0 +1,14 @@
+//! MAR coordination — the paper's system contribution.
+//!
+//! * [`group_key`] — the Moshpit d-dimensional key schedule (exact grid /
+//!   random init, reduced keys, chunk-index updates, no-revisit).
+//! * [`mar`] — the [`mar::MarAggregator`]: DHT matchmaking + iterative
+//!   group averaging implementing `aggregation::Aggregate`.
+//! * [`mixing`] — Eq. 1 mixing model and its Monte-Carlo validation.
+
+pub mod group_key;
+pub mod mar;
+pub mod mixing;
+
+pub use group_key::{grid_keys, perfect_grid, random_keys, GroupKey};
+pub use mar::MarAggregator;

@@ -1,0 +1,175 @@
+//! Latent-Dirichlet-Allocation partitioner (paper §3.1: α = 1.0).
+//!
+//! Standard FL heterogeneity protocol: for every class, draw peer
+//! proportions from Dirichlet(α·1_N) and deal that class's examples to
+//! peers accordingly. Small α ⇒ each class concentrates on few peers
+//! (strong non-iid); large α ⇒ approaches iid.
+
+use super::Dataset;
+use crate::rng::Rng;
+
+/// Non-iid split: one index list per peer.
+pub fn partition_lda(
+    data: &Dataset,
+    peers: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(peers > 0);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); data.classes];
+    for i in 0..data.len() {
+        by_class[data.y[i] as usize].push(i);
+    }
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); peers];
+    for idxs in by_class.iter_mut() {
+        rng.shuffle(idxs);
+        let props = rng.dirichlet(alpha, peers);
+        // convert proportions to cumulative example counts
+        let n = idxs.len();
+        let mut cuts = Vec::with_capacity(peers);
+        let mut acc = 0.0;
+        for p in &props {
+            acc += p;
+            cuts.push(((acc * n as f64).round() as usize).min(n));
+        }
+        let mut start = 0;
+        for (peer, &cut) in cuts.iter().enumerate() {
+            if cut > start {
+                shards[peer].extend_from_slice(&idxs[start..cut]);
+                start = cut;
+            }
+        }
+        // rounding remainder to the last peer
+        if start < n {
+            shards[peers - 1].extend_from_slice(&idxs[start..]);
+        }
+    }
+    rebalance_empty(&mut shards, rng);
+    shards
+}
+
+/// iid split: random equal-size deal.
+pub fn partition_iid(data: &Dataset, peers: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut idxs: Vec<usize> = (0..data.len()).collect();
+    rng.shuffle(&mut idxs);
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); peers];
+    for (i, idx) in idxs.into_iter().enumerate() {
+        shards[i % peers].push(idx);
+    }
+    shards
+}
+
+/// No peer may end up with an empty shard (it could not run a local
+/// update); steal one example from the largest shard if needed.
+fn rebalance_empty(shards: &mut [Vec<usize>], _rng: &mut Rng) {
+    loop {
+        let Some(empty) = shards.iter().position(|s| s.is_empty()) else {
+            return;
+        };
+        let donor = shards
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, s)| s.len())
+            .map(|(i, _)| i)
+            .unwrap();
+        if shards[donor].len() <= 1 {
+            return; // nothing to steal; degenerate input
+        }
+        let moved = shards[donor].pop().unwrap();
+        shards[empty].push(moved);
+    }
+}
+
+/// Heterogeneity diagnostic: mean total-variation distance between each
+/// peer's class distribution and the global one (0 = iid).
+pub fn heterogeneity(data: &Dataset, shards: &[Vec<usize>]) -> f64 {
+    let global = class_dist(data, &(0..data.len()).collect::<Vec<_>>());
+    let mut tv = 0.0;
+    let mut counted = 0;
+    for s in shards {
+        if s.is_empty() {
+            continue;
+        }
+        let local = class_dist(data, s);
+        tv += global
+            .iter()
+            .zip(&local)
+            .map(|(g, l)| (g - l).abs())
+            .sum::<f64>()
+            / 2.0;
+        counted += 1;
+    }
+    tv / counted.max(1) as f64
+}
+
+fn class_dist(data: &Dataset, idxs: &[usize]) -> Vec<f64> {
+    let mut counts = vec![0.0f64; data.classes];
+    for &i in idxs {
+        counts[data.y[i] as usize] += 1.0;
+    }
+    let n: f64 = counts.iter().sum();
+    if n > 0.0 {
+        for c in &mut counts {
+            *c /= n;
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn dataset(n: usize, seed: u64) -> Dataset {
+        synth::newsgroups_like(n, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn lda_partition_is_exact_cover() {
+        let d = dataset(1000, 1);
+        let shards = partition_lda(&d, 16, 1.0, &mut Rng::new(2));
+        assert_eq!(shards.len(), 16);
+        let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn no_empty_shards() {
+        let d = dataset(500, 3);
+        // very non-iid: alpha = 0.05 would naturally starve peers
+        let shards = partition_lda(&d, 25, 0.05, &mut Rng::new(4));
+        assert!(shards.iter().all(|s| !s.is_empty()));
+    }
+
+    #[test]
+    fn iid_partition_balanced() {
+        let d = dataset(1000, 5);
+        let shards = partition_iid(&d, 8, &mut Rng::new(6));
+        for s in &shards {
+            assert_eq!(s.len(), 125);
+        }
+    }
+
+    #[test]
+    fn smaller_alpha_more_heterogeneous() {
+        let d = dataset(4000, 7);
+        let iid = partition_iid(&d, 20, &mut Rng::new(8));
+        let mild = partition_lda(&d, 20, 1.0, &mut Rng::new(8));
+        let harsh = partition_lda(&d, 20, 0.1, &mut Rng::new(8));
+        let h_iid = heterogeneity(&d, &iid);
+        let h_mild = heterogeneity(&d, &mild);
+        let h_harsh = heterogeneity(&d, &harsh);
+        assert!(h_iid < h_mild, "iid {h_iid} vs lda(1.0) {h_mild}");
+        assert!(h_mild < h_harsh, "lda(1.0) {h_mild} vs lda(0.1) {h_harsh}");
+    }
+
+    #[test]
+    fn partition_deterministic_for_seed() {
+        let d = dataset(300, 9);
+        let a = partition_lda(&d, 10, 1.0, &mut Rng::new(10));
+        let b = partition_lda(&d, 10, 1.0, &mut Rng::new(10));
+        assert_eq!(a, b);
+    }
+}

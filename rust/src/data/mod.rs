@@ -1,0 +1,180 @@
+//! Data substrate: synthetic datasets + non-iid partitioning.
+//!
+//! The environment is offline, so the paper's MNIST and 20 Newsgroups are
+//! substituted with synthetic equivalents that exercise the same code
+//! paths and difficulty axes (DESIGN.md §Substitutions):
+//!
+//! * [`synth::mnist_like`]  — 10-class 16×16×1 images built from per-class
+//!   stroke/blob templates with jitter and noise (stands in for MNIST).
+//! * [`synth::newsgroups_like`] — 20-class 64-d embeddings from overlapping
+//!   anisotropic Gaussian clusters (stands in for frozen-DistilBERT CLS
+//!   embeddings of 20NG; the paper trains only the head on top of these).
+//!
+//! [`lda`] implements the Latent-Dirichlet-Allocation partitioner the paper
+//! uses (α = 1.0) to create heterogeneous per-peer shards.
+
+pub mod lda;
+pub mod synth;
+
+use crate::rng::Rng;
+
+/// A flat dataset: `x` row-major `[n, elems]`, integer labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    /// per-example feature element count (e.g. 16*16*1 = 256 or 64)
+    pub elems: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn example(&self, i: usize) -> (&[f32], i32) {
+        (&self.x[i * self.elems..(i + 1) * self.elems], self.y[i])
+    }
+
+    /// Gather examples by index into a contiguous batch (x, y).
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(idx.len() * self.elems);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(&self.x[i * self.elems..(i + 1) * self.elems]);
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+
+    /// Class histogram (used by heterogeneity tests/benches).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.classes];
+        for &c in &self.y {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// A peer's local shard: indices into a shared dataset plus a cursor so
+/// sequential mini-batches wrap deterministically (the paper's KD epoch
+/// accounting assumes no shuffling between batches).
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub indices: Vec<usize>,
+    cursor: usize,
+}
+
+impl Shard {
+    pub fn new(indices: Vec<usize>) -> Self {
+        Shard { indices, cursor: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Next mini-batch of `b` dataset indices, wrapping around.
+    pub fn next_batch(&mut self, b: usize) -> Vec<usize> {
+        assert!(!self.indices.is_empty(), "empty shard");
+        let mut out = Vec::with_capacity(b);
+        for _ in 0..b {
+            out.push(self.indices[self.cursor]);
+            self.cursor = (self.cursor + 1) % self.indices.len();
+        }
+        out
+    }
+
+    /// Fraction of the local data seen so far (for KD epoch accounting).
+    pub fn epochs_seen(&self, batches_taken: usize, batch_size: usize) -> f64 {
+        (batches_taken * batch_size) as f64 / self.len().max(1) as f64
+    }
+}
+
+/// Train/test bundle for one task, pre-partitioned across peers.
+pub struct FlData {
+    pub train: Dataset,
+    pub test: Dataset,
+    pub shards: Vec<Shard>,
+}
+
+/// Build the full data environment for a config-described experiment.
+pub fn build(
+    model: &str,
+    peers: usize,
+    samples_per_peer: usize,
+    test_samples: usize,
+    iid: bool,
+    lda_alpha: f64,
+    rng: &mut Rng,
+) -> FlData {
+    let train_n = peers * samples_per_peer;
+    let (train, test) = match model {
+        "cnn" => (
+            synth::mnist_like(train_n, rng),
+            synth::mnist_like(test_samples, rng),
+        ),
+        "head" => (
+            synth::newsgroups_like(train_n, rng),
+            synth::newsgroups_like(test_samples, rng),
+        ),
+        other => panic!("unknown model {other:?}"),
+    };
+    let shards = if iid {
+        lda::partition_iid(&train, peers, rng)
+    } else {
+        lda::partition_lda(&train, peers, lda_alpha, rng)
+    };
+    FlData { train, test, shards: shards.into_iter().map(Shard::new).collect() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_builds_contiguous_batch() {
+        let mut rng = Rng::new(1);
+        let d = synth::newsgroups_like(50, &mut rng);
+        let (x, y) = d.gather(&[0, 5, 7]);
+        assert_eq!(x.len(), 3 * d.elems);
+        assert_eq!(y.len(), 3);
+        assert_eq!(&x[..d.elems], d.example(0).0);
+        assert_eq!(y[1], d.example(5).1);
+    }
+
+    #[test]
+    fn shard_batches_wrap_deterministically() {
+        let mut s = Shard::new(vec![10, 11, 12]);
+        assert_eq!(s.next_batch(2), vec![10, 11]);
+        assert_eq!(s.next_batch(2), vec![12, 10]);
+        assert_eq!(s.next_batch(2), vec![11, 12]);
+    }
+
+    #[test]
+    fn build_creates_one_shard_per_peer() {
+        let mut rng = Rng::new(2);
+        let fl = build("head", 8, 16, 100, false, 1.0, &mut rng);
+        assert_eq!(fl.shards.len(), 8);
+        let total: usize = fl.shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, fl.train.len());
+        assert_eq!(fl.test.len(), 100);
+    }
+
+    #[test]
+    fn epochs_seen_accounting() {
+        let s = Shard::new((0..64).collect());
+        assert!((s.epochs_seen(2, 64) - 2.0).abs() < 1e-12);
+        assert!((s.epochs_seen(1, 32) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,134 @@
+//! 160-bit Kademlia keyspace: node ids, content keys, XOR metric.
+
+use crate::rng::Rng;
+
+pub const KEY_BYTES: usize = 20;
+pub const KEY_BITS: usize = KEY_BYTES * 8;
+
+/// A 160-bit identifier (node id or content key).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Key(pub [u8; KEY_BYTES]);
+
+impl std::fmt::Debug for Key {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for b in &self.0[..4] {
+            write!(f, "{b:02x}")?;
+        }
+        write!(f, "…")
+    }
+}
+
+impl Key {
+    pub fn random(rng: &mut Rng) -> Key {
+        let mut k = [0u8; KEY_BYTES];
+        for chunk in k.chunks_mut(8) {
+            let v = rng.next_u64().to_le_bytes();
+            let n = chunk.len();
+            chunk.copy_from_slice(&v[..n]);
+        }
+        Key(k)
+    }
+
+    /// Deterministic key for a string (content addressing for group keys,
+    /// barriers, announcements). FNV-1a folded to 160 bits.
+    pub fn hash_of(s: &str) -> Key {
+        let mut k = [0u8; KEY_BYTES];
+        let mut h = 0xcbf29ce484222325u64;
+        for (i, b) in s.bytes().chain(0u8..5).enumerate() {
+            h ^= b as u64 ^ (i as u64) << 1;
+            h = h.wrapping_mul(0x100000001b3);
+            k[i % KEY_BYTES] ^= (h >> 24) as u8;
+        }
+        // extra mixing round so short strings fill all bytes
+        for i in 0..KEY_BYTES {
+            h ^= k[i] as u64;
+            h = h.wrapping_mul(0x100000001b3);
+            k[i] ^= (h >> 32) as u8;
+        }
+        Key(k)
+    }
+
+    /// XOR distance to another key.
+    pub fn distance(&self, other: &Key) -> Distance {
+        let mut d = [0u8; KEY_BYTES];
+        for i in 0..KEY_BYTES {
+            d[i] = self.0[i] ^ other.0[i];
+        }
+        Distance(d)
+    }
+
+    /// Index of the k-bucket `other` falls into from `self`'s perspective:
+    /// the bit position of the highest differing bit (0..160), or None for
+    /// self.
+    pub fn bucket_index(&self, other: &Key) -> Option<usize> {
+        let d = self.distance(other);
+        d.leading_zeros().map(|lz| KEY_BITS - 1 - lz)
+    }
+}
+
+/// XOR distance, ordered big-endian (larger = farther).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Distance(pub [u8; KEY_BYTES]);
+
+impl Distance {
+    /// Number of leading zero bits; None when distance is zero (same key).
+    pub fn leading_zeros(&self) -> Option<usize> {
+        let mut lz = 0;
+        for b in &self.0 {
+            if *b == 0 {
+                lz += 8;
+            } else {
+                return Some(lz + b.leading_zeros() as usize);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_is_metric_like() {
+        let mut rng = Rng::new(1);
+        let a = Key::random(&mut rng);
+        let b = Key::random(&mut rng);
+        assert_eq!(a.distance(&b), b.distance(&a));
+        assert_eq!(a.distance(&a).leading_zeros(), None);
+        assert!(a.distance(&b) > a.distance(&a));
+    }
+
+    #[test]
+    fn hash_of_is_deterministic_and_spread() {
+        let a = Key::hash_of("group:1:0:0");
+        let b = Key::hash_of("group:1:0:0");
+        let c = Key::hash_of("group:1:0:1");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // all bytes populated for a short input
+        assert!(a.0.iter().filter(|&&b| b != 0).count() > 10);
+    }
+
+    #[test]
+    fn bucket_index_range() {
+        let mut rng = Rng::new(2);
+        let me = Key::random(&mut rng);
+        for _ in 0..100 {
+            let other = Key::random(&mut rng);
+            let idx = me.bucket_index(&other).unwrap();
+            assert!(idx < KEY_BITS);
+        }
+        assert_eq!(me.bucket_index(&me), None);
+    }
+
+    #[test]
+    fn ordering_matches_bigendian_magnitude() {
+        let zero = Key([0; KEY_BYTES]);
+        let mut one = [0u8; KEY_BYTES];
+        one[KEY_BYTES - 1] = 1;
+        let mut big = [0u8; KEY_BYTES];
+        big[0] = 1;
+        assert!(zero.distance(&Key(one)) < zero.distance(&Key(big)));
+    }
+}

@@ -1,0 +1,358 @@
+//! Simulated Kademlia DHT — the MAR-FL control plane.
+//!
+//! The paper coordinates group formation through a Hivemind Kademlia DHT:
+//! barriers and group-key announcements travel the DHT, model weights never
+//! do. This module reproduces that substrate in-process with byte-accurate
+//! message accounting so the control-plane O(N log N) claim is measurable:
+//! each iterative lookup costs O(log N) query round-trips, and a round's
+//! matchmaking issues O(N) get/store operations.
+//!
+//! Realism choices: α-parallel iterative lookup (α = 3), k = 8 buckets with
+//! LRU eviction, store-to-k-closest replication, per-message byte sizes
+//! modelled on Kademlia RPC framing. Liveness pings and UDP loss are out of
+//! scope (the paper's churn acts at the aggregation layer, which injects
+//! dropouts explicitly — see `net::churn`).
+
+pub mod id;
+pub mod routing;
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+pub use id::Key;
+pub use routing::RoutingTable;
+
+use crate::metrics::{CommLedger, Plane};
+
+/// α: lookup parallelism.
+const ALPHA: usize = 3;
+/// Replication factor for STOREs (= bucket k).
+const REPLICATE: usize = routing::K;
+
+/// Approximate wire sizes (bytes) per RPC, modelled on Kademlia framing:
+/// header + 160-bit ids.
+const FIND_NODE_REQ: u64 = 72;
+const FIND_NODE_RESP_PER_CONTACT: u64 = 26;
+const FIND_NODE_RESP_BASE: u64 = 48;
+const STORE_BASE: u64 = 92;
+const GET_REQ: u64 = 72;
+const GET_RESP_BASE: u64 = 48;
+
+/// One node's storage: content key -> list of small byte payloads.
+#[derive(Clone, Debug, Default)]
+struct NodeStore {
+    items: BTreeMap<Key, Vec<Vec<u8>>>,
+}
+
+struct NodeState {
+    routing: RoutingTable,
+    store: NodeStore,
+}
+
+/// Outcome of an iterative lookup.
+#[derive(Clone, Debug)]
+pub struct LookupResult {
+    pub closest: Vec<Key>,
+    /// query round-trips issued (the paper's "hops")
+    pub hops: usize,
+}
+
+/// The in-process Kademlia network. Node storage is a HashMap — node
+/// lookups by 160-bit key happen on every routing refresh, and hashing
+/// beats the BTreeMap's memcmp walk (EXPERIMENTS.md §Perf).
+pub struct SimDht {
+    nodes: HashMap<Key, NodeState>,
+    ledger: Arc<CommLedger>,
+    /// cumulative lookup query rounds (the coordinator converts hop deltas
+    /// into simulated control-plane latency)
+    hops_total: u64,
+}
+
+impl SimDht {
+    pub fn new(ledger: Arc<CommLedger>) -> Self {
+        SimDht { nodes: HashMap::new(), ledger, hops_total: 0 }
+    }
+
+    /// Cumulative lookup hops across all operations so far.
+    pub fn hops_total(&self) -> u64 {
+        self.hops_total
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node_ids(&self) -> Vec<Key> {
+        self.nodes.keys().copied().collect()
+    }
+
+    /// Join `id` to the network, bootstrapping its routing table via a
+    /// self-lookup through any existing node (Kademlia join protocol).
+    pub fn join(&mut self, id: Key) {
+        let bootstrap = self.nodes.keys().next().copied();
+        self.nodes.insert(id, NodeState {
+            routing: RoutingTable::new(id),
+            store: NodeStore::default(),
+        });
+        if let Some(seed) = bootstrap {
+            self.nodes.get_mut(&id).unwrap().routing.insert(seed);
+            self.nodes.get_mut(&seed).unwrap().routing.insert(id);
+            // self-lookup populates buckets along the path
+            self.lookup(id, id);
+        }
+    }
+
+    /// Iterative FIND_NODE from `from` toward `target`. Returns the k
+    /// closest nodes found and the number of query rounds. Books every
+    /// request/response on the control plane.
+    pub fn lookup(&mut self, from: Key, target: Key) -> LookupResult {
+        let mut shortlist: Vec<Key> = self
+            .nodes
+            .get(&from)
+            .expect("lookup from unknown node")
+            .routing
+            .closest(&target, REPLICATE);
+        let mut queried: Vec<Key> = Vec::new();
+        let mut hops = 0;
+        loop {
+            // α closest unqueried candidates
+            let mut candidates: Vec<Key> = shortlist
+                .iter()
+                .filter(|c| !queried.contains(c) && **c != from)
+                .copied()
+                .collect();
+            candidates.sort_by_key(|c| c.distance(&target));
+            candidates.truncate(ALPHA);
+            if candidates.is_empty() {
+                break;
+            }
+            hops += 1;
+            // query phase: immutable reads + ledger booking
+            let mut gathered: Vec<(Key, Vec<Key>)> =
+                Vec::with_capacity(candidates.len());
+            for c in candidates {
+                queried.push(c);
+                // request
+                self.ledger.record(Plane::Control, FIND_NODE_REQ);
+                let contacts = match self.nodes.get(&c) {
+                    Some(node) => node.routing.closest(&target, REPLICATE),
+                    None => Vec::new(),
+                };
+                // response
+                self.ledger.record(
+                    Plane::Control,
+                    FIND_NODE_RESP_BASE
+                        + FIND_NODE_RESP_PER_CONTACT * contacts.len() as u64,
+                );
+                gathered.push((c, contacts));
+            }
+            // refresh phase: bilateral routing updates (every Kademlia
+            // message is a liveness signal). Batched so `from`'s node is
+            // located once per hop instead of once per contact — see
+            // EXPERIMENTS.md §Perf.
+            for (c, _) in &gathered {
+                if let Some(n) = self.nodes.get_mut(c) {
+                    n.routing.insert(from);
+                }
+            }
+            if let Some(n) = self.nodes.get_mut(&from) {
+                for (c, contacts) in &gathered {
+                    n.routing.insert(*c);
+                    for contact in contacts {
+                        if *contact != from {
+                            n.routing.insert(*contact);
+                        }
+                    }
+                }
+            }
+            for (_, contacts) in gathered {
+                for contact in contacts {
+                    if !shortlist.contains(&contact) && contact != from {
+                        shortlist.push(contact);
+                    }
+                }
+            }
+            shortlist.sort_by_key(|c| c.distance(&target));
+            shortlist.truncate(REPLICATE);
+            // converged when all of the k closest have been queried
+            if shortlist.iter().all(|c| queried.contains(c) || *c == from) {
+                break;
+            }
+        }
+        self.hops_total += hops as u64;
+        LookupResult { closest: shortlist, hops }
+    }
+
+    /// STORE `payload` under `key`, replicated to the k closest nodes.
+    pub fn store(&mut self, from: Key, key: Key, payload: Vec<u8>) -> usize {
+        let res = self.lookup(from, key);
+        let targets = if res.closest.is_empty() { vec![from] } else { res.closest.clone() };
+        let n = targets.len();
+        for t in targets {
+            self.ledger
+                .record(Plane::Control, STORE_BASE + payload.len() as u64);
+            if let Some(node) = self.nodes.get_mut(&t) {
+                node.store.items.entry(key).or_default().push(payload.clone());
+            }
+        }
+        n
+    }
+
+    /// GET all payloads stored under `key` (union over the k closest).
+    pub fn get(&mut self, from: Key, key: Key) -> Vec<Vec<u8>> {
+        let res = self.lookup(from, key);
+        let mut out: Vec<Vec<u8>> = Vec::new();
+        for t in &res.closest {
+            self.ledger.record(Plane::Control, GET_REQ);
+            let values: Vec<Vec<u8>> = self
+                .nodes
+                .get(t)
+                .map(|n| n.store.items.get(&key).cloned().unwrap_or_default())
+                .unwrap_or_default();
+            let resp_bytes: u64 =
+                values.iter().map(|v| v.len() as u64).sum::<u64>() + GET_RESP_BASE;
+            self.ledger.record(Plane::Control, resp_bytes);
+            for v in values {
+                if !out.contains(&v) {
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Remove every stored value under `key` network-wide (the paper's
+    /// dispatcher "periodically clears stale entries from the shared
+    /// dictionary"; here keys are iteration-scoped and cleared after use).
+    pub fn clear(&mut self, key: Key) {
+        for node in self.nodes.values_mut() {
+            node.store.items.remove(&key);
+        }
+    }
+
+    /// Drop a node from the network (churn).
+    pub fn leave(&mut self, id: Key) {
+        self.nodes.remove(&id);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Announcement helpers (group-formation metadata)
+// ---------------------------------------------------------------------
+
+/// Encode a peer announcement (peer index as 8-byte LE).
+pub fn encode_peer(peer: usize) -> Vec<u8> {
+    (peer as u64).to_le_bytes().to_vec()
+}
+
+pub fn decode_peer(bytes: &[u8]) -> Option<usize> {
+    bytes.try_into().ok().map(|b: [u8; 8]| u64::from_le_bytes(b) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn network(n: usize, seed: u64) -> (SimDht, Vec<Key>) {
+        let ledger = Arc::new(CommLedger::new());
+        let mut dht = SimDht::new(ledger);
+        let mut rng = Rng::new(seed);
+        let ids: Vec<Key> = (0..n).map(|_| Key::random(&mut rng)).collect();
+        for id in &ids {
+            dht.join(*id);
+        }
+        (dht, ids)
+    }
+
+    #[test]
+    fn store_then_get_round_trips() {
+        let (mut dht, ids) = network(30, 1);
+        let key = Key::hash_of("group:0:1");
+        dht.store(ids[3], key, encode_peer(3));
+        dht.store(ids[7], key, encode_peer(7));
+        let got = dht.get(ids[12], key);
+        let mut peers: Vec<usize> =
+            got.iter().filter_map(|v| decode_peer(v)).collect();
+        peers.sort_unstable();
+        assert_eq!(peers, vec![3, 7]);
+    }
+
+    #[test]
+    fn lookup_hops_scale_logarithmically() {
+        // hops for N=256 should stay near log2(256)/log2(k)-ish, certainly
+        // far below linear probing
+        let (mut dht, ids) = network(256, 2);
+        let mut rng = Rng::new(3);
+        let mut total_hops = 0;
+        let trials = 40;
+        for _ in 0..trials {
+            let from = ids[rng.below(ids.len())];
+            let target = Key::random(&mut rng);
+            total_hops += dht.lookup(from, target).hops;
+        }
+        let avg = total_hops as f64 / trials as f64;
+        assert!(avg <= 8.0, "average hops {avg} too high for 256 nodes");
+        assert!(avg >= 1.0);
+    }
+
+    #[test]
+    fn lookup_finds_globally_closest_nodes() {
+        let (mut dht, ids) = network(64, 4);
+        let target = Key::hash_of("needle");
+        let res = dht.lookup(ids[0], target);
+        // ground truth: sort all ids by distance
+        let mut truth = ids.clone();
+        truth.sort_by_key(|p| p.distance(&target));
+        // the true closest node must be discovered
+        assert!(
+            res.closest.contains(&truth[0]) || truth[0] == ids[0],
+            "lookup missed the globally closest node"
+        );
+    }
+
+    #[test]
+    fn control_bytes_booked() {
+        let ledger = Arc::new(CommLedger::new());
+        let mut dht = SimDht::new(ledger.clone());
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            dht.join(Key::random(&mut rng));
+        }
+        let before = ledger.snapshot();
+        let ids = dht.node_ids();
+        dht.store(ids[0], Key::hash_of("x"), encode_peer(0));
+        let after = ledger.snapshot();
+        assert!(after.control_bytes > before.control_bytes);
+        assert_eq!(after.data_bytes, before.data_bytes);
+    }
+
+    #[test]
+    fn clear_removes_all_replicas() {
+        let (mut dht, ids) = network(25, 6);
+        let key = Key::hash_of("ephemeral");
+        dht.store(ids[1], key, encode_peer(1));
+        assert!(!dht.get(ids[2], key).is_empty());
+        dht.clear(key);
+        assert!(dht.get(ids[2], key).is_empty());
+    }
+
+    #[test]
+    fn leave_then_lookup_still_works() {
+        let (mut dht, ids) = network(40, 7);
+        for id in &ids[..10] {
+            dht.leave(*id);
+        }
+        // lookups from surviving nodes must not panic and still converge
+        let res = dht.lookup(ids[20], Key::hash_of("after-churn"));
+        assert!(!res.closest.is_empty());
+    }
+
+    #[test]
+    fn peer_encoding_round_trip() {
+        for p in [0usize, 1, 124, 1 << 40] {
+            assert_eq!(decode_peer(&encode_peer(p)), Some(p));
+        }
+        assert_eq!(decode_peer(&[1, 2, 3]), None);
+    }
+}

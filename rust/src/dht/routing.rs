@@ -1,0 +1,159 @@
+//! Kademlia routing table: 160 k-buckets with LRU eviction.
+
+use super::id::{Key, KEY_BITS};
+
+/// Default bucket capacity (Kademlia's k).
+pub const K: usize = 8;
+
+/// One k-bucket: most-recently-seen last.
+#[derive(Clone, Debug, Default)]
+pub struct KBucket {
+    entries: Vec<Key>,
+}
+
+impl KBucket {
+    fn touch(&mut self, peer: Key, k: usize) {
+        if let Some(pos) = self.entries.iter().position(|e| *e == peer) {
+            let e = self.entries.remove(pos);
+            self.entries.push(e);
+        } else if self.entries.len() < k {
+            self.entries.push(peer);
+        } else {
+            // full: drop least-recently-seen (head) — simulation has no
+            // liveness pings, so LRU eviction stands in for stale eviction
+            self.entries.remove(0);
+            self.entries.push(peer);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Key> {
+        self.entries.iter()
+    }
+}
+
+/// Per-node routing state.
+#[derive(Clone, Debug)]
+pub struct RoutingTable {
+    pub own: Key,
+    buckets: Vec<KBucket>,
+    /// occupancy bitmap: bit i set ⇔ bucket i non-empty. With ~N=125
+    /// nodes only ~⌈log₂N⌉ buckets are populated; `closest` walks set
+    /// bits instead of all 160 bucket headers (EXPERIMENTS.md §Perf).
+    occupied: [u64; 3],
+    k: usize,
+}
+
+impl RoutingTable {
+    pub fn new(own: Key) -> Self {
+        RoutingTable {
+            own,
+            buckets: vec![KBucket::default(); KEY_BITS],
+            occupied: [0; 3],
+            k: K,
+        }
+    }
+
+    /// Record contact with `peer`.
+    pub fn insert(&mut self, peer: Key) {
+        if let Some(idx) = self.own.bucket_index(&peer) {
+            self.buckets[idx].touch(peer, self.k);
+            self.occupied[idx / 64] |= 1u64 << (idx % 64);
+        }
+    }
+
+    /// The `n` known peers closest to `target` (XOR metric).
+    ///
+    /// Hot path of every DHT lookup (matchmaking issues O(N·G·α·hops) of
+    /// these per FL iteration): only occupied buckets are visited,
+    /// distances are computed once per contact (not per comparison) and
+    /// selection uses `select_nth_unstable` instead of a full sort — see
+    /// EXPERIMENTS.md §Perf.
+    pub fn closest(&self, target: &Key, n: usize) -> Vec<Key> {
+        let mut all: Vec<(crate::dht::id::Distance, Key)> =
+            Vec::with_capacity(n * 2);
+        for (word_idx, &word) in self.occupied.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let bit = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let bucket = &self.buckets[word_idx * 64 + bit];
+                all.extend(bucket.iter().map(|p| (p.distance(target), *p)));
+            }
+        }
+        if all.len() > n {
+            all.select_nth_unstable(n - 1);
+            all.truncate(n);
+        }
+        all.sort_unstable();
+        all.into_iter().map(|(_, p)| p).collect()
+    }
+
+    pub fn contact_count(&self) -> usize {
+        self.buckets.iter().map(|b| b.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn insert_and_closest_ordering() {
+        let mut rng = Rng::new(3);
+        let me = Key::random(&mut rng);
+        let mut rt = RoutingTable::new(me);
+        let peers: Vec<Key> = (0..50).map(|_| Key::random(&mut rng)).collect();
+        for p in &peers {
+            rt.insert(*p);
+        }
+        let target = Key::random(&mut rng);
+        let closest = rt.closest(&target, 5);
+        assert_eq!(closest.len(), 5);
+        for w in closest.windows(2) {
+            assert!(w[0].distance(&target) <= w[1].distance(&target));
+        }
+    }
+
+    #[test]
+    fn self_never_inserted() {
+        let mut rng = Rng::new(4);
+        let me = Key::random(&mut rng);
+        let mut rt = RoutingTable::new(me);
+        rt.insert(me);
+        assert_eq!(rt.contact_count(), 0);
+    }
+
+    #[test]
+    fn bucket_eviction_bounds_size() {
+        let mut rng = Rng::new(5);
+        let me = Key([0; 20]);
+        let mut rt = RoutingTable::new(me);
+        // flood with far peers (mostly land in the top bucket)
+        for _ in 0..1000 {
+            rt.insert(Key::random(&mut rng));
+        }
+        for b in &rt.buckets {
+            assert!(b.len() <= K);
+        }
+    }
+
+    #[test]
+    fn reinsert_moves_to_tail_not_grows() {
+        let mut rng = Rng::new(6);
+        let me = Key::random(&mut rng);
+        let mut rt = RoutingTable::new(me);
+        let p = Key::random(&mut rng);
+        rt.insert(p);
+        rt.insert(p);
+        assert_eq!(rt.contact_count(), 1);
+    }
+}

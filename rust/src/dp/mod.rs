@@ -1,0 +1,331 @@
+//! Fully decentralized differential privacy (paper Algorithm 4).
+//!
+//! Adapts DP-FedAvg with adaptive clipping (Andrew et al. 2021) to the
+//! serverless setting: each peer clips and noises its own model delta
+//! *locally* before MAR; aggregation then merely averages privatized
+//! quantities, so the privacy loss accrues entirely from local
+//! computation. Four quantities ride through MAR: the DP-safe model θ̂,
+//! the momentum m, the clip indicator b, and the smoothed delta Δ̄ — the
+//! engine packs (Δ̄ ‖ b) onto the momentum vector so any `Aggregate`
+//! implementation averages them with byte-exact accounting, then unpacks
+//! after aggregation and updates the adaptive clipping bound
+//! C_{t+1} = C_t · exp(−η_C (b̃ − γ)).
+
+pub mod accountant;
+
+pub use accountant::RdpAccountant;
+
+use crate::aggregation::PeerState;
+use crate::config::DpConfig;
+use crate::rng::Rng;
+use crate::util::l2_norm;
+
+/// Per-experiment DP engine: adaptive clip bound + per-peer DP state.
+pub struct DpEngine {
+    pub cfg: DpConfig,
+    /// current clipping bound C_t
+    pub clip_bound: f64,
+    /// θ̄_i^{t-1}: the last global model each peer obtained (peers that
+    /// missed aggregations hold stale entries — the paper's Algorithm 4
+    /// explicitly allows this)
+    last_global: Vec<Option<Vec<f32>>>,
+    /// Δ̄_i^{t-1}: the last smoothed delta each peer obtained
+    smoothed_delta: Vec<Option<Vec<f32>>>,
+    accountant: RdpAccountant,
+}
+
+impl DpEngine {
+    pub fn new(cfg: DpConfig, n_peers: usize) -> Self {
+        let clip_bound = cfg.clip_init;
+        DpEngine {
+            cfg,
+            clip_bound,
+            last_global: vec![None; n_peers],
+            smoothed_delta: vec![None; n_peers],
+            accountant: RdpAccountant::new(),
+        }
+    }
+
+    /// Noise calibration (Algorithm 4 lines 1–3). Returns
+    /// (σ_b, σ_Δ): indicator noise std and delta noise std.
+    pub fn calibrate(&self, n_t: usize) -> (f64, f64) {
+        let sigma_b = n_t as f64 / 20.0;
+        let inv = self.cfg.noise_multiplier.powi(-2) - (2.0 * sigma_b).powi(-2);
+        assert!(
+            inv > 0.0,
+            "noise multiplier {} too large for n_t={n_t} (needs σ_mult < n_t/10)",
+            self.cfg.noise_multiplier
+        );
+        let z_delta = inv.powf(-0.5);
+        (sigma_b, z_delta * self.clip_bound)
+    }
+
+    /// Pre-aggregation privatization (Algorithm 4 lines 4–9) for every
+    /// aggregator. Replaces each θ with the DP-safe θ̂ and extends the
+    /// momentum vector with (Δ̄_i ‖ b_i) so they are averaged by MAR.
+    pub fn prepare(
+        &mut self,
+        states: &mut [PeerState],
+        agg: &[usize],
+        rng: &mut Rng,
+    ) {
+        let n_t = agg.len();
+        if n_t == 0 {
+            return;
+        }
+        let (_, sigma_delta) = self.calibrate(n_t);
+        let per_coord_std = (sigma_delta * sigma_delta / n_t as f64).sqrt();
+        for &i in agg {
+            let p = states[i].theta.len();
+            let reference: Vec<f32> = self.last_global[i]
+                .clone()
+                .unwrap_or_else(|| vec![0.0; p]);
+            // Δ_i = θ_i^t − θ̄_i^{t-1}
+            let delta: Vec<f32> = states[i]
+                .theta
+                .iter()
+                .zip(&reference)
+                .map(|(&t, &g)| t - g)
+                .collect();
+            let norm = l2_norm(&delta);
+            let clipped_flag = if norm <= self.clip_bound { 1.0f32 } else { 0.0f32 };
+            let scale = (self.clip_bound / norm.max(1e-12)).min(1.0) as f32;
+            // Δ̃_i = clip(Δ_i) + N(0, σ_Δ²/n_t · I)
+            let noisy: Vec<f32> = delta
+                .iter()
+                .map(|&d| d * scale + rng.normal_scaled(0.0, per_coord_std) as f32)
+                .collect();
+            // Δ̄_i^{t,0} = β Δ̄_i^{t-1} + Δ̃_i   (or Δ̃_i if ⊥)
+            let smoothed: Vec<f32> = match &self.smoothed_delta[i] {
+                Some(prev) => prev
+                    .iter()
+                    .zip(&noisy)
+                    .map(|(&s, &d)| (self.cfg.beta as f32) * s + d)
+                    .collect(),
+                None => noisy,
+            };
+            // θ̂_i^{t,0} = θ̄_i^{t-1} + η_u Δ̄_i^{t,0}
+            for ((t, &g), &s) in states[i]
+                .theta
+                .iter_mut()
+                .zip(&reference)
+                .zip(&smoothed)
+            {
+                *t = g + (self.cfg.eta_u as f32) * s;
+            }
+            // pack (Δ̄ ‖ b) onto the momentum payload for aggregation
+            states[i].momentum.reserve(p + 1);
+            states[i].momentum.extend_from_slice(&smoothed);
+            states[i].momentum.push(clipped_flag);
+        }
+    }
+
+    /// Post-aggregation unpack + adaptive bound update (lines 16–17).
+    /// Returns the noised global clip fraction b̃.
+    pub fn finalize(
+        &mut self,
+        states: &mut [PeerState],
+        agg: &[usize],
+        rng: &mut Rng,
+    ) -> f64 {
+        let n_t = agg.len();
+        let (sigma_b, _) = self.calibrate(n_t.max(1));
+        let mut b_bar = 0.0f64;
+        for &i in agg {
+            let p = states[i].theta.len();
+            let mom_len = states[i].momentum.len();
+            debug_assert_eq!(mom_len, 2 * p + 1, "momentum not in DP-packed form");
+            let b = states[i].momentum[mom_len - 1] as f64;
+            let smoothed = states[i].momentum[p..mom_len - 1].to_vec();
+            states[i].momentum.truncate(p);
+            self.last_global[i] = Some(states[i].theta.clone());
+            self.smoothed_delta[i] = Some(smoothed);
+            b_bar += b;
+        }
+        b_bar /= n_t.max(1) as f64;
+        // b̃ = b̄ + N(0, σ_b²)/n_t  (noise rescaled: we average, not sum)
+        let b_tilde = b_bar + rng.normal_scaled(0.0, sigma_b) / n_t.max(1) as f64;
+        // C_{t+1} = C_t · exp(−η_C (b̃ − γ))
+        self.clip_bound *= (-self.cfg.eta_c * (b_tilde - self.cfg.gamma)).exp();
+        self.accountant.step(self.cfg.noise_multiplier);
+        b_tilde
+    }
+
+    /// Current (ε, δ)-DP guarantee after the iterations accounted so far.
+    pub fn epsilon(&self) -> f64 {
+        self.accountant.epsilon(self.cfg.delta)
+    }
+
+    pub fn iterations_accounted(&self) -> usize {
+        self.accountant.steps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(noise: f64) -> DpEngine {
+        DpEngine::new(
+            DpConfig { enabled: true, noise_multiplier: noise, ..Default::default() },
+            8,
+        )
+    }
+
+    fn states(n: usize, p: usize, seed: u64) -> Vec<PeerState> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| PeerState {
+                theta: (0..p).map(|_| rng.normal() as f32).collect(),
+                momentum: vec![0.0; p],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn calibration_matches_algorithm4() {
+        let e = engine(0.3);
+        let (sigma_b, sigma_delta) = e.calibrate(125);
+        assert!((sigma_b - 6.25).abs() < 1e-12);
+        let z = (0.3f64.powi(-2) - (12.5f64).powi(-2)).powf(-0.5);
+        assert!((sigma_delta - z * e.clip_bound).abs() < 1e-12);
+        // z ≈ σ_mult when σ_b large
+        assert!((z - 0.3).abs() < 0.01);
+    }
+
+    #[test]
+    #[should_panic(expected = "too large")]
+    fn oversized_noise_multiplier_panics() {
+        engine(10.0).calibrate(20);
+    }
+
+    #[test]
+    fn prepare_packs_and_finalize_unpacks() {
+        let mut e = engine(0.3);
+        let mut s = states(4, 16, 1);
+        let agg = vec![0, 1, 2, 3];
+        let mut rng = Rng::new(2);
+        e.prepare(&mut s, &agg, &mut rng);
+        for &i in &agg {
+            assert_eq!(s[i].momentum.len(), 2 * 16 + 1);
+            let b = *s[i].momentum.last().unwrap();
+            assert!(b == 0.0 || b == 1.0);
+        }
+        e.finalize(&mut s, &agg, &mut rng);
+        for &i in &agg {
+            assert_eq!(s[i].momentum.len(), 16);
+            assert!(e.last_global[i].is_some());
+            assert!(e.smoothed_delta[i].is_some());
+        }
+        assert_eq!(e.iterations_accounted(), 1);
+    }
+
+    #[test]
+    fn large_update_is_clipped_small_passes() {
+        let mut e = engine(0.1);
+        e.clip_bound = 1.0;
+        let mut s = states(2, 8, 3);
+        // peer 0: huge delta (norm >> 1); peer 1: tiny delta
+        for v in &mut s[0].theta {
+            *v = 100.0;
+        }
+        for v in &mut s[1].theta {
+            *v = 0.001;
+        }
+        let mut rng = Rng::new(4);
+        e.prepare(&mut s, &[0, 1], &mut rng);
+        let b0 = *s[0].momentum.last().unwrap();
+        let b1 = *s[1].momentum.last().unwrap();
+        assert_eq!(b0, 0.0, "huge delta must register as clipped");
+        assert_eq!(b1, 1.0, "tiny delta must not clip");
+        // clipped+noised model change is bounded: ‖θ̂ − θ̄‖ ≈ η_u(C + noise)
+        let norm = l2_norm(&s[0].theta);
+        assert!(norm < 5.0, "clipping failed: ‖θ̂‖ = {norm}");
+    }
+
+    #[test]
+    fn clip_bound_adapts_toward_quantile() {
+        // everyone unclipped (b̃ ≈ 1 > γ=0.5) -> bound must shrink
+        let mut e = engine(0.1);
+        let start = e.clip_bound;
+        let mut s = states(8, 8, 5);
+        for st in &mut s {
+            for v in &mut st.theta {
+                *v *= 1e-3; // tiny deltas => all below the clip bound
+            }
+        }
+        let agg: Vec<usize> = (0..8).collect();
+        let mut rng = Rng::new(6);
+        e.prepare(&mut s, &agg, &mut rng);
+        e.finalize(&mut s, &agg, &mut rng);
+        assert!(
+            e.clip_bound < start,
+            "bound should shrink when nothing clips: {} -> {}",
+            start,
+            e.clip_bound
+        );
+        // and the opposite direction: huge deltas => all clipped => grow
+        let mut e2 = engine(0.1);
+        let start2 = e2.clip_bound;
+        let mut s2 = states(8, 8, 15);
+        for st in &mut s2 {
+            for v in &mut st.theta {
+                *v *= 100.0;
+            }
+        }
+        let mut rng2 = Rng::new(16);
+        e2.prepare(&mut s2, &agg, &mut rng2);
+        e2.finalize(&mut s2, &agg, &mut rng2);
+        assert!(
+            e2.clip_bound > start2,
+            "bound should grow when everything clips: {} -> {}",
+            start2,
+            e2.clip_bound
+        );
+    }
+
+    #[test]
+    fn noise_magnitude_matches_calibration() {
+        // zero delta => θ̂ − θ̄ = η_u · (noise only); verify empirical std
+        let mut e = engine(0.5);
+        e.clip_bound = 1.0;
+        let p = 4096;
+        let n = 8;
+        let mut s: Vec<PeerState> = (0..n)
+            .map(|_| PeerState { theta: vec![0.0; p], momentum: vec![0.0; p] })
+            .collect();
+        let agg: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(7);
+        let (_, sigma_delta) = e.calibrate(n);
+        let want_std = (sigma_delta * sigma_delta / n as f64).sqrt();
+        e.prepare(&mut s, &agg, &mut rng);
+        // smoothed delta (== noisy delta here) sits in momentum[p..2p]
+        let sample = &s[0].momentum[p..2 * p];
+        let mean: f64 = sample.iter().map(|&v| v as f64).sum::<f64>() / p as f64;
+        let var: f64 = sample
+            .iter()
+            .map(|&v| (v as f64 - mean).powi(2))
+            .sum::<f64>()
+            / p as f64;
+        let std = var.sqrt();
+        assert!(
+            (std - want_std).abs() < 0.15 * want_std,
+            "noise std {std:.4} vs calibrated {want_std:.4}"
+        );
+    }
+
+    #[test]
+    fn epsilon_grows_with_iterations() {
+        let mut e = engine(0.5);
+        let mut s = states(8, 8, 8);
+        let agg: Vec<usize> = (0..8).collect();
+        let mut rng = Rng::new(9);
+        e.prepare(&mut s, &agg, &mut rng);
+        e.finalize(&mut s, &agg, &mut rng);
+        let eps1 = e.epsilon();
+        e.prepare(&mut s, &agg, &mut rng);
+        e.finalize(&mut s, &agg, &mut rng);
+        let eps2 = e.epsilon();
+        assert!(eps2 > eps1, "ε must grow: {eps1} -> {eps2}");
+    }
+}

@@ -1,0 +1,329 @@
+//! The FL training loop — the paper's "dispatcher" (§B.2), serial-simulated
+//! but modelling a parallel deployment: per iteration it samples
+//! participants, dispatches local momentum-SGD updates through PJRT, runs
+//! Moshpit-KD when active, privatizes when DP is on, aggregates with the
+//! configured technique, evaluates every `eval_every` iterations, and books
+//! every byte, hop and simulated second.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::aggregation::{baseline_for, AggCtx, Aggregate, PeerState};
+use crate::config::{ExperimentConfig, Strategy};
+use crate::coordinator::MarAggregator;
+use crate::data::{build as build_data, FlData};
+use crate::dp::DpEngine;
+use crate::kd::KdEngine;
+use crate::metrics::{CommLedger, CommSnapshot, TrainCurve};
+use crate::models::ModelMeta;
+use crate::net::{ChurnModel, Fabric, MarkovChurn};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::sim::SimClock;
+
+/// Simulated local-compute time per mini-batch (seconds). The paper's
+/// claims are about communication; compute merely anchors the simulated
+/// clock so comm/compute ratios are plausible for edge devices.
+pub const LOCAL_BATCH_COMPUTE_S: f64 = 0.05;
+
+/// Which aggregator the trainer drives.
+enum Agg {
+    Mar(MarAggregator),
+    Baseline(Box<dyn Aggregate>),
+}
+
+impl Agg {
+    fn as_dyn(&mut self) -> &mut dyn Aggregate {
+        match self {
+            Agg::Mar(m) => m,
+            Agg::Baseline(b) => b.as_mut(),
+        }
+    }
+}
+
+/// Outcome of a full training run.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub curve: TrainCurve,
+    pub comm: CommSnapshot,
+    pub sim_time_s: f64,
+    pub iterations_run: usize,
+    /// (ε, δ) guarantee when DP was active
+    pub epsilon: Option<f64>,
+    /// cumulative DHT hops (MAR only)
+    pub dht_hops: Option<u64>,
+    pub final_accuracy: f64,
+    pub final_loss: f64,
+}
+
+/// End-to-end MAR-FL trainer.
+pub struct Trainer<'rt> {
+    pub cfg: ExperimentConfig,
+    rt: &'rt Runtime,
+    model: ModelMeta,
+    data: FlData,
+    states: Vec<PeerState>,
+    agg: Agg,
+    churn: ChurnModel,
+    markov: Option<MarkovChurn>,
+    ledger: Arc<CommLedger>,
+    fabric: Fabric,
+    clock: SimClock,
+    rng: Rng,
+    kd: Option<KdEngine>,
+    dp: Option<DpEngine>,
+    /// label used for the curve (strategy name by default)
+    pub label: String,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(cfg: ExperimentConfig, rt: &'rt Runtime) -> Result<Self> {
+        cfg.validate()?;
+        let model = rt.meta.model(&cfg.model)?.clone();
+        let mut rng = Rng::new(cfg.seed);
+        let data = build_data(
+            &cfg.model,
+            cfg.peers,
+            cfg.samples_per_peer,
+            cfg.test_samples,
+            cfg.iid,
+            cfg.lda_alpha,
+            &mut rng.fork(1),
+        );
+        anyhow::ensure!(
+            cfg.test_samples % model.eval_chunk == 0,
+            "test_samples {} must be a multiple of the eval chunk {}",
+            cfg.test_samples,
+            model.eval_chunk
+        );
+        // every peer starts from the same θ⁰ (paper §2.2)
+        let theta0 = rt.init_params(&cfg.model)?;
+        let states = vec![PeerState::new(theta0); cfg.peers];
+        let ledger = Arc::new(CommLedger::new());
+        let fabric =
+            Fabric::new(ledger.clone(), cfg.link_bandwidth, cfg.link_latency);
+        let agg = match cfg.strategy {
+            Strategy::MarFl => {
+                let mut mar = MarAggregator::new(
+                    cfg.peers,
+                    cfg.group_size,
+                    cfg.effective_mar_rounds(),
+                    ledger.clone(),
+                    cfg.seed,
+                );
+                if cfg.reduce_scatter {
+                    mar = mar.with_exchange(
+                        crate::aggregation::GroupExchange::ReduceScatter,
+                    );
+                }
+                Agg::Mar(mar)
+            }
+            s => Agg::Baseline(
+                baseline_for(s).context("baseline construction")?,
+            ),
+        };
+        let kd = if cfg.kd.enabled && cfg.strategy == Strategy::MarFl {
+            Some(KdEngine::new(
+                cfg.kd.clone(),
+                rt.meta.kd_tau,
+                cfg.eta,
+                cfg.mu,
+            ))
+        } else {
+            None
+        };
+        let dp = if cfg.dp.enabled {
+            Some(DpEngine::new(cfg.dp.clone(), cfg.peers))
+        } else {
+            None
+        };
+        let churn = ChurnModel::new(cfg.participation, cfg.dropout);
+        let markov = (cfg.churn_model == "markov").then(|| {
+            MarkovChurn::new(
+                cfg.peers,
+                cfg.markov_p_down,
+                cfg.markov_p_up,
+                &mut rng.fork(2),
+            )
+        });
+        let label = cfg.strategy.name().to_string();
+        Ok(Trainer {
+            cfg,
+            rt,
+            model,
+            data,
+            states,
+            agg,
+            churn,
+            markov,
+            ledger,
+            fabric,
+            clock: SimClock::new(),
+            rng,
+            kd,
+            dp,
+            label,
+        })
+    }
+
+    /// Run T iterations (or until `target_accuracy`); returns the curve
+    /// and the final accounting.
+    pub fn run(&mut self) -> Result<RunSummary> {
+        let mut curve = TrainCurve::new(self.label.clone());
+        let mut iterations_run = 0;
+        let mut last = (f64::NAN, 0.0);
+        for t in 1..=self.cfg.iterations {
+            self.iteration(t)?;
+            iterations_run = t;
+            if t % self.cfg.eval_every == 0 || t == self.cfg.iterations {
+                let (loss, acc) = self.evaluate()?;
+                last = (loss, acc);
+                curve.push(t, self.ledger.snapshot(), loss, acc, self.clock.now());
+                log::info!(
+                    "[{}] iter {t}: loss {loss:.4} acc {acc:.4} data {} MiB",
+                    self.label,
+                    self.ledger.snapshot().data_bytes / (1 << 20),
+                );
+                if self.cfg.target_accuracy > 0.0 && acc >= self.cfg.target_accuracy
+                {
+                    break;
+                }
+            }
+        }
+        Ok(RunSummary {
+            comm: self.ledger.snapshot(),
+            sim_time_s: self.clock.now(),
+            iterations_run,
+            epsilon: self.dp.as_ref().map(|d| d.epsilon()),
+            dht_hops: match &self.agg {
+                Agg::Mar(m) => Some(m.dht_hops()),
+                _ => None,
+            },
+            final_loss: last.0,
+            final_accuracy: last.1,
+            curve,
+        })
+    }
+
+    /// One FL iteration (Algorithm 1 body).
+    fn iteration(&mut self, t: usize) -> Result<()> {
+        // U_t: participants for the entire iteration. Bernoulli sampling
+        // (paper §3.1) or the bursty Markov availability trace.
+        let mut churn_rng = self.rng.fork(t as u64 * 31 + 1);
+        let participants = match &mut self.markov {
+            Some(chain) => chain.step(&mut churn_rng),
+            None => self.churn.sample_participants(self.cfg.peers, &mut churn_rng),
+        };
+
+        // local momentum-SGD updates (parallel across peers in the
+        // modelled deployment)
+        let mut batches_done = 0usize;
+        for &i in &participants {
+            for _ in 0..self.cfg.local_batches {
+                let idx = self.data.shards[i].next_batch(self.model.batch);
+                let (x, y) = self.data.train.gather(&idx);
+                let out = self.rt.train_step(
+                    &self.model,
+                    &self.states[i].theta,
+                    &self.states[i].momentum,
+                    &x,
+                    &y,
+                    self.cfg.eta,
+                    self.cfg.mu,
+                )?;
+                self.states[i].theta = out.theta;
+                self.states[i].momentum = out.momentum;
+                batches_done += 1;
+            }
+        }
+        let _ = batches_done;
+        self.clock
+            .advance(self.cfg.local_batches as f64 * LOCAL_BATCH_COMPUTE_S);
+
+        // A_t: aggregators (participants that survive dropout)
+        let aggers = self.churn.sample_aggregators(&participants, &mut churn_rng);
+        if aggers.len() < 2 {
+            return Ok(());
+        }
+
+        // Moshpit-KD (first K iterations, MAR only)
+        if let (Some(kd), Agg::Mar(mar)) = (&self.kd, &mut self.agg) {
+            if kd.active(t) {
+                let mut rng = self.rng.fork(t as u64 * 31 + 2);
+                let mut ctx = AggCtx {
+                    fabric: &self.fabric,
+                    clock: &mut self.clock,
+                    rng: &mut rng,
+                    runtime: Some(self.rt),
+                    model: &self.model,
+                };
+                kd.run_mkd(
+                    t,
+                    self.rt,
+                    &self.model,
+                    &self.data.train,
+                    &mut self.data.shards,
+                    &mut self.states,
+                    &aggers,
+                    mar,
+                    &mut ctx,
+                )?;
+            }
+        }
+
+        // DP privatization before aggregation (Algorithm 4)
+        let mut dp_rng = self.rng.fork(t as u64 * 31 + 3);
+        if let Some(dp) = &mut self.dp {
+            dp.prepare(&mut self.states, &aggers, &mut dp_rng);
+        }
+
+        // global aggregation
+        let mut agg_rng = self.rng.fork(t as u64 * 31 + 4);
+        let mut ctx = AggCtx {
+            fabric: &self.fabric,
+            clock: &mut self.clock,
+            rng: &mut agg_rng,
+            runtime: Some(self.rt),
+            model: &self.model,
+        };
+        self.agg.as_dyn().aggregate(&mut self.states, &aggers, &mut ctx)?;
+
+        if let Some(dp) = &mut self.dp {
+            dp.finalize(&mut self.states, &aggers, &mut dp_rng);
+        }
+        Ok(())
+    }
+
+    /// Evaluate the consensus model (mean of all peer parameters — under
+    /// exact aggregation every peer already holds it) on the shared test
+    /// set. Diagnostic only: books no communication.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let all: Vec<usize> = (0..self.cfg.peers).collect();
+        let (theta, _) = crate::aggregation::mean_of(&self.states, &all);
+        self.rt
+            .evaluate(&self.model, &theta, &self.data.test.x, &self.data.test.y)
+    }
+
+    /// Accuracy of a single peer's local model (divergence diagnostics).
+    pub fn evaluate_peer(&self, i: usize) -> Result<(f64, f64)> {
+        self.rt.evaluate(
+            &self.model,
+            &self.states[i].theta,
+            &self.data.test.x,
+            &self.data.test.y,
+        )
+    }
+
+    pub fn ledger(&self) -> &Arc<CommLedger> {
+        &self.ledger
+    }
+
+    pub fn states(&self) -> &[PeerState] {
+        &self.states
+    }
+
+    pub fn model(&self) -> &ModelMeta {
+        &self.model
+    }
+}

@@ -1,0 +1,282 @@
+//! Moshpit-KD (paper §2.2, Algorithms 2 & 3).
+//!
+//! During the first K FL iterations, each MKD round `g`:
+//!
+//! 1. forms candidate-teacher groups with the same DHT matchmaking MAR
+//!    uses (`MarAggregator::form_groups_once`), exchanging *models* within
+//!    each group (θ only — the extra per-iteration load Figure 2 charges);
+//! 2. each student rates every candidate teacher by the KL divergence
+//!    between their softened output distributions on the student's own
+//!    local batch (Algorithm 3) and keeps the top-ℓ (ρ_ℓ = 0.4) — the
+//!    selective-sharing defence against non-iid teacher noise (Shao et
+//!    al. 2024);
+//! 3. the student distills from the averaged top-ℓ ensemble logits over E
+//!    local epochs with loss L = (1−λ)·CE + λ·τ²·KL, λ = max(0, 1−(t−1)/K)
+//!    decaying linearly so MKD hands over to plain MAR training.
+
+use anyhow::Result;
+
+use crate::aggregation::{AggCtx, PeerState};
+use crate::config::KdConfig;
+use crate::coordinator::MarAggregator;
+use crate::data::{Dataset, Shard};
+use crate::metrics::Plane;
+use crate::models::ModelMeta;
+use crate::runtime::Runtime;
+
+/// What one MKD pass did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KdReport {
+    pub rounds: usize,
+    /// teacher-model transfers booked on the data plane
+    pub teacher_transfers: u64,
+    /// distillation steps executed
+    pub kd_steps: u64,
+    /// mean student loss over the last round (diagnostic)
+    pub mean_loss: f64,
+}
+
+/// Moshpit-KD engine.
+pub struct KdEngine {
+    pub cfg: KdConfig,
+    tau: f32,
+    eta: f32,
+    mu: f32,
+}
+
+impl KdEngine {
+    pub fn new(cfg: KdConfig, tau: f64, eta: f32, mu: f32) -> Self {
+        KdEngine { cfg, tau: tau as f32, eta, mu }
+    }
+
+    /// Is MKD active in FL iteration `t` (1-based)?
+    pub fn active(&self, t: usize) -> bool {
+        self.cfg.enabled && t <= self.cfg.k_iterations
+    }
+
+    /// KL weight λ_t = max(0, 1 − (t−1)/K) (paper Eq. 4 with
+    /// α = λ).
+    pub fn lambda(&self, t: usize) -> f32 {
+        let k = self.cfg.k_iterations.max(1) as f32;
+        (1.0 - (t.saturating_sub(1)) as f32 / k).max(0.0)
+    }
+
+    /// Top-ℓ teacher count for `candidates` candidates (at least 1).
+    pub fn top_ell(&self, candidates: usize) -> usize {
+        ((candidates as f64 * self.cfg.rho_ell).round() as usize)
+            .clamp(1, candidates)
+    }
+
+    /// Run the full MKD pass for FL iteration `t` (Algorithm 2 over all
+    /// MKD rounds). Teacher exchange is booked on the data plane; the DHT
+    /// matchmaking books its own control traffic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_mkd(
+        &self,
+        t: usize,
+        rt: &Runtime,
+        model: &ModelMeta,
+        data: &Dataset,
+        shards: &mut [Shard],
+        states: &mut [PeerState],
+        agg: &[usize],
+        mar: &mut MarAggregator,
+        ctx: &mut AggCtx<'_>,
+    ) -> Result<KdReport> {
+        let mut report = KdReport { rounds: mar.rounds, ..Default::default() };
+        let lam = self.lambda(t);
+        let model_bytes = model.model_bytes();
+        for g in 0..mar.rounds {
+            let groups =
+                mar.form_groups_once(agg, ctx.rng, &format!("kd:{t}:{g}"));
+            let mut lane_times = Vec::with_capacity(groups.len());
+            let mut loss_acc = 0.0f64;
+            let mut loss_n = 0u64;
+            for group in &groups {
+                if group.len() < 2 {
+                    lane_times.push(0.0);
+                    continue;
+                }
+                let members: Vec<usize> =
+                    group.iter().map(|&pos| agg[pos]).collect();
+                // teacher-model full-gather: θ only, k(k-1) transfers
+                let mut lane = 0.0f64;
+                for _ in &members {
+                    lane = ctx
+                        .fabric
+                        .sequential(members.len() - 1, model_bytes, Plane::Data)
+                        .max(lane);
+                }
+                lane_times.push(lane);
+                report.teacher_transfers +=
+                    (members.len() * (members.len() - 1)) as u64;
+                // snapshot round-start models (all students distill from
+                // the same teacher parameters θ_c^{g-1})
+                let snapshot: Vec<Vec<f32>> =
+                    members.iter().map(|&p| states[p].theta.clone()).collect();
+                for (si, &student) in members.iter().enumerate() {
+                    let batch_idx = shards[student].next_batch(model.batch);
+                    let (x, y) = data.gather(&batch_idx);
+                    let s_logits = rt.logits(model, &snapshot[si], &x)?;
+                    // rate candidate teachers by softened KL on this batch
+                    // (logits cached for the ensemble average below)
+                    let mut rated: Vec<(f64, Vec<f32>)> = Vec::new();
+                    for (ci, _c) in members.iter().enumerate() {
+                        if ci == si {
+                            continue;
+                        }
+                        let z = rt.logits(model, &snapshot[ci], &x)?;
+                        let kl = mean_softened_kl(
+                            &z,
+                            &s_logits,
+                            model.classes,
+                            self.tau,
+                        );
+                        rated.push((kl, z));
+                    }
+                    rated.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    let ell = self.top_ell(rated.len());
+                    rated.truncate(ell);
+                    // z̄_b = mean of selected teacher logits
+                    let mut zbar = vec![0.0f32; model.batch * model.classes];
+                    for (_, z) in &rated {
+                        for (a, &v) in zbar.iter_mut().zip(z) {
+                            *a += v;
+                        }
+                    }
+                    let inv = 1.0 / rated.len().max(1) as f32;
+                    for a in &mut zbar {
+                        *a *= inv;
+                    }
+                    // E local distillation epochs
+                    for _ in 0..self.cfg.epochs {
+                        let out = rt.kd_step(
+                            model,
+                            &states[student].theta,
+                            &states[student].momentum,
+                            &x,
+                            &y,
+                            &zbar,
+                            lam,
+                            self.eta,
+                            self.mu,
+                        )?;
+                        states[student].theta = out.theta;
+                        states[student].momentum = out.momentum;
+                        loss_acc += out.loss as f64;
+                        loss_n += 1;
+                        report.kd_steps += 1;
+                    }
+                }
+            }
+            ctx.clock.parallel(lane_times);
+            if loss_n > 0 {
+                report.mean_loss = loss_acc / loss_n as f64;
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// Mean over the batch of KL(softmax(z/τ) ‖ softmax(s/τ)) — Algorithm 3's
+/// teacher rating. Computed natively: logits are tiny ([B, C]) and this
+/// runs inside the per-student selection loop.
+pub fn mean_softened_kl(
+    teacher: &[f32],
+    student: &[f32],
+    classes: usize,
+    tau: f32,
+) -> f64 {
+    assert_eq!(teacher.len(), student.len());
+    assert!(classes > 0 && teacher.len() % classes == 0);
+    let rows = teacher.len() / classes;
+    let mut total = 0.0f64;
+    for r in 0..rows {
+        let zt = &teacher[r * classes..(r + 1) * classes];
+        let zs = &student[r * classes..(r + 1) * classes];
+        let lt = log_softmax(zt, tau);
+        let ls = log_softmax(zs, tau);
+        let mut kl = 0.0f64;
+        for c in 0..classes {
+            let pt = lt[c].exp();
+            kl += pt * (lt[c] - ls[c]);
+        }
+        total += kl;
+    }
+    total / rows as f64
+}
+
+fn log_softmax(z: &[f32], tau: f32) -> Vec<f64> {
+    let scaled: Vec<f64> = z.iter().map(|&v| (v / tau) as f64).collect();
+    let max = scaled.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let lse = scaled.iter().map(|&v| (v - max).exp()).sum::<f64>().ln() + max;
+    scaled.iter().map(|&v| v - lse).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(k: usize, rho: f64) -> KdEngine {
+        KdEngine::new(
+            KdConfig { enabled: true, k_iterations: k, rho_ell: rho, epochs: 1 },
+            3.0,
+            0.1,
+            0.9,
+        )
+    }
+
+    #[test]
+    fn lambda_decays_linearly_to_zero() {
+        let e = engine(8, 0.4);
+        assert_eq!(e.lambda(1), 1.0);
+        assert!((e.lambda(5) - 0.5).abs() < 1e-6);
+        assert_eq!(e.lambda(9), 0.0);
+        assert_eq!(e.lambda(100), 0.0);
+    }
+
+    #[test]
+    fn active_window_is_first_k_iterations() {
+        let e = engine(6, 0.4);
+        assert!(e.active(1));
+        assert!(e.active(6));
+        assert!(!e.active(7));
+        let disabled = KdEngine::new(KdConfig::default(), 3.0, 0.1, 0.9);
+        assert!(!disabled.active(1));
+    }
+
+    #[test]
+    fn top_ell_matches_paper_ratio() {
+        let e = engine(8, 0.4);
+        assert_eq!(e.top_ell(4), 2); // 40% of 4 candidates
+        assert_eq!(e.top_ell(5), 2);
+        assert_eq!(e.top_ell(1), 1); // never zero teachers
+        assert_eq!(e.top_ell(10), 4);
+    }
+
+    #[test]
+    fn kl_zero_for_identical_logits() {
+        let z = vec![1.0f32, -2.0, 0.5, 3.0, 0.0, 1.0];
+        assert!(mean_softened_kl(&z, &z, 3, 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_positive_and_orders_similarity() {
+        let student = vec![2.0f32, 0.0, 0.0];
+        let close = vec![1.8f32, 0.1, 0.0];
+        let far = vec![-3.0f32, 4.0, 0.0];
+        let kl_close = mean_softened_kl(&close, &student, 3, 3.0);
+        let kl_far = mean_softened_kl(&far, &student, 3, 3.0);
+        assert!(kl_close > 0.0);
+        assert!(kl_far > kl_close, "{kl_far} vs {kl_close}");
+    }
+
+    #[test]
+    fn higher_temperature_softens_divergence() {
+        let a = vec![5.0f32, 0.0];
+        let b = vec![0.0f32, 5.0];
+        let kl_t1 = mean_softened_kl(&a, &b, 2, 1.0);
+        let kl_t5 = mean_softened_kl(&a, &b, 2, 5.0);
+        assert!(kl_t5 < kl_t1, "τ=5 {kl_t5} should soften vs τ=1 {kl_t1}");
+    }
+}

@@ -1,0 +1,40 @@
+//! # MAR-FL — Moshpit All-Reduce Federated Learning
+//!
+//! A communication-efficient peer-to-peer federated learning system,
+//! reproducing Mulitze, Woisetschläger & Jacobsen, *"MAR-FL: A Communication
+//! Efficient Peer-to-Peer Federated Learning System"* (NeurIPS 2025 AI4NextG).
+//!
+//! The crate is the Layer-3 **coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (fused softmax-XENT, damped-momentum update,
+//!   group-mean aggregation) authored in `python/compile/kernels/`.
+//! * **L2** — JAX model definitions (`python/compile/model.py`) lowered
+//!   once, ahead of time, to HLO text in `artifacts/`.
+//! * **L3** — this crate: the simulated P2P fabric (Kademlia DHT +
+//!   bandwidth-accounted network), the MAR group-formation coordinator,
+//!   the aggregation strategies (Moshpit, Ring/RDFL, All-to-All/AR-FL,
+//!   client-server FedAvg), Moshpit-KD, decentralized DP, and the
+//!   experiment/bench harnesses. Python never runs on the training path;
+//!   local peer compute executes through PJRT (`runtime`).
+//!
+//! Start with [`fl::Trainer`] (end-to-end loop) or the `marfl` CLI.
+
+pub mod aggregation;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dht;
+pub mod dp;
+pub mod fl;
+pub mod kd;
+pub mod metrics;
+pub mod models;
+pub mod net;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,290 @@
+//! `marfl` — MAR-FL launcher.
+//!
+//! Subcommands:
+//!   train   run one experiment (preset file + key=value overrides)
+//!   info    inspect the artifact registry
+//!
+//! CLI parsing is hand-rolled (offline environment: no clap); see
+//! `marfl train --help`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use marfl::config::ExperimentConfig;
+use marfl::fl::Trainer;
+use marfl::metrics::{write_csv, write_json};
+use marfl::models::default_artifact_dir;
+use marfl::runtime::Runtime;
+use marfl::util::json::{arr, num, obj, s, Json};
+
+const TRAIN_HELP: &str = "\
+marfl — MAR-FL launcher
+
+USAGE:
+  marfl train [--config <preset.toml>] [--set key=value]... \\
+              [--artifacts <dir>] [--csv <out.csv>] [--json <out.json>]
+  marfl sweep --strategies marfl,rdfl,arfl,fedavg [--set key=value]... \\
+              [--csv <out.csv>]
+  marfl info  [--artifacts <dir>]
+
+Common keys for --set:
+  strategy=marfl|rdfl|arfl|fedavg|bar|gossip|saps   model=cnn|head
+  peers=125  iterations=50  group_size=5  mar_rounds=0  reduce_scatter=true
+  participation=1.0  dropout=0.0  churn.model=markov
+  kd.enabled=true  dp.enabled=true  dp.noise_multiplier=0.3
+";
+
+fn main() -> ExitCode {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    init_logging();
+    if args.is_empty() {
+        eprintln!("usage: marfl <train|info> [options]\n\n{TRAIN_HELP}");
+        return ExitCode::from(2);
+    }
+    let cmd = args.remove(0);
+    let result = match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "info" => cmd_info(&args),
+        "--help" | "-h" | "help" => {
+            println!("{TRAIN_HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{TRAIN_HELP}");
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn init_logging() {
+    struct StderrLog;
+    impl log::Log for StderrLog {
+        fn enabled(&self, md: &log::Metadata) -> bool {
+            md.level() <= log::Level::Info
+        }
+        fn log(&self, rec: &log::Record) {
+            if self.enabled(rec.metadata()) {
+                eprintln!("[{}] {}", rec.level(), rec.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: StderrLog = StderrLog;
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(if std::env::var_os("MARFL_QUIET").is_some() {
+        log::LevelFilter::Warn
+    } else {
+        log::LevelFilter::Info
+    });
+}
+
+struct Flags {
+    config: Option<PathBuf>,
+    sets: Vec<String>,
+    artifacts: PathBuf,
+    csv: Option<PathBuf>,
+    json: Option<PathBuf>,
+    strategies: Vec<String>,
+}
+
+fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
+    let mut f = Flags {
+        config: None,
+        sets: Vec::new(),
+        artifacts: default_artifact_dir(),
+        csv: None,
+        json: None,
+        strategies: Vec::new(),
+    };
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut value = |name: &str| -> anyhow::Result<String> {
+            it.next()
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("{name} requires a value"))
+        };
+        match a.as_str() {
+            "--config" => f.config = Some(PathBuf::from(value("--config")?)),
+            "--set" => f.sets.push(value("--set")?),
+            "--artifacts" => f.artifacts = PathBuf::from(value("--artifacts")?),
+            "--csv" => f.csv = Some(PathBuf::from(value("--csv")?)),
+            "--json" => f.json = Some(PathBuf::from(value("--json")?)),
+            "--strategies" => {
+                f.strategies = value("--strategies")?
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            }
+            "--help" | "-h" => {
+                println!("{TRAIN_HELP}");
+                std::process::exit(0);
+            }
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+    }
+    Ok(f)
+}
+
+fn cmd_train(args: &[String]) -> anyhow::Result<()> {
+    let flags = parse_flags(args)?;
+    let cfg = match &flags.config {
+        Some(path) => ExperimentConfig::load(path, &flags.sets)?,
+        None => {
+            let mut c = ExperimentConfig::default();
+            c.apply_overrides(&flags.sets)?;
+            c.validate()?;
+            c
+        }
+    };
+    log::info!(
+        "training: strategy={} model={} peers={} T={} M={} G={}",
+        cfg.strategy.name(),
+        cfg.model,
+        cfg.peers,
+        cfg.iterations,
+        cfg.group_size,
+        cfg.effective_mar_rounds(),
+    );
+    let rt = Runtime::new(&flags.artifacts)?;
+    let mut trainer = Trainer::new(cfg, &rt)?;
+    let summary = trainer.run()?;
+
+    println!(
+        "final: acc={:.4} loss={:.4} iterations={} data={:.2} MiB control={:.2} MiB sim_time={:.1}s{}",
+        summary.final_accuracy,
+        summary.final_loss,
+        summary.iterations_run,
+        summary.comm.data_bytes as f64 / (1 << 20) as f64,
+        summary.comm.control_bytes as f64 / (1 << 20) as f64,
+        summary.sim_time_s,
+        summary
+            .epsilon
+            .map(|e| format!(" epsilon={e:.2}"))
+            .unwrap_or_default(),
+    );
+    if let Some(path) = &flags.csv {
+        write_csv(path, &summary.curve.csv_rows())?;
+        log::info!("curve written to {path:?}");
+    }
+    if let Some(path) = &flags.json {
+        let points: Vec<Json> = summary
+            .curve
+            .points
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("iteration", num(p.iteration as f64)),
+                    ("data_bytes", num(p.data_bytes as f64)),
+                    ("control_bytes", num(p.control_bytes as f64)),
+                    ("loss", num(p.loss)),
+                    ("accuracy", num(p.accuracy)),
+                    ("sim_time_s", num(p.sim_time_s)),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![
+            ("label", s(&summary.curve.label)),
+            ("final_accuracy", num(summary.final_accuracy)),
+            ("data_bytes", num(summary.comm.data_bytes as f64)),
+            ("control_bytes", num(summary.comm.control_bytes as f64)),
+            ("sim_time_s", num(summary.sim_time_s)),
+            ("epsilon", summary.epsilon.map(num).unwrap_or(Json::Null)),
+            ("curve", arr(points)),
+        ]);
+        write_json(path, &doc)?;
+        log::info!("summary written to {path:?}");
+    }
+    Ok(())
+}
+
+/// Run the same configuration under several aggregation strategies and
+/// print a comparison table (the paper's core experimental move).
+fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
+    let flags = parse_flags(args)?;
+    let strategies = if flags.strategies.is_empty() {
+        vec!["marfl".into(), "fedavg".into(), "rdfl".into(), "arfl".into()]
+    } else {
+        flags.strategies.clone()
+    };
+    let rt = Runtime::new(&flags.artifacts)?;
+    let mut rows = vec![vec![
+        "strategy".into(),
+        "final_accuracy".into(),
+        "data_bytes".into(),
+        "control_bytes".into(),
+        "sim_time_s".into(),
+        "epsilon".into(),
+    ]];
+    println!(
+        "{:<8} {:>10} {:>12} {:>12} {:>10} {:>8}",
+        "strategy", "accuracy", "data(MiB)", "ctrl(MiB)", "sim(s)", "epsilon"
+    );
+    for name in &strategies {
+        let mut cfg = match &flags.config {
+            Some(path) => ExperimentConfig::load(path, &flags.sets)?,
+            None => {
+                let mut c = ExperimentConfig::default();
+                c.apply_overrides(&flags.sets)?;
+                c
+            }
+        };
+        cfg.strategy = marfl::config::Strategy::parse(name)?;
+        cfg.validate()?;
+        let mut trainer = Trainer::new(cfg, &rt)?;
+        let s = trainer.run()?;
+        println!(
+            "{:<8} {:>10.4} {:>12.1} {:>12.2} {:>10.1} {:>8}",
+            name,
+            s.final_accuracy,
+            s.comm.data_bytes as f64 / (1 << 20) as f64,
+            s.comm.control_bytes as f64 / (1 << 20) as f64,
+            s.sim_time_s,
+            s.epsilon.map(|e| format!("{e:.1}")).unwrap_or_else(|| "-".into()),
+        );
+        rows.push(vec![
+            name.clone(),
+            format!("{:.4}", s.final_accuracy),
+            s.comm.data_bytes.to_string(),
+            s.comm.control_bytes.to_string(),
+            format!("{:.2}", s.sim_time_s),
+            s.epsilon.map(|e| format!("{e:.3}")).unwrap_or_default(),
+        ]);
+    }
+    if let Some(path) = &flags.csv {
+        write_csv(path, &rows)?;
+        log::info!("sweep written to {path:?}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> anyhow::Result<()> {
+    let flags = parse_flags(args)?;
+    let meta = marfl::models::ArtifactMeta::load(&flags.artifacts)?;
+    println!("artifacts: {:?}", meta.dir);
+    println!(
+        "strip={} kd_tau={} group_sizes={:?}",
+        meta.strip, meta.kd_tau, meta.group_sizes
+    );
+    for (name, m) in &meta.models {
+        println!(
+            "  model {name}: P={} P_pad={} input={:?} classes={} batch={} eval_chunk={} ({} artifacts)",
+            m.param_count,
+            m.padded_len,
+            m.input_shape,
+            m.classes,
+            m.batch,
+            m.eval_chunk,
+            m.artifacts.len()
+        );
+    }
+    Ok(())
+}

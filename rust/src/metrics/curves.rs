@@ -1,0 +1,152 @@
+//! Training curves: (iteration, cumulative communication, loss, accuracy)
+//! series — the x/y data of every figure in the paper.
+
+use super::ledger::CommSnapshot;
+
+/// One evaluation point (the paper evaluates every 5th FL iteration).
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub iteration: usize,
+    /// cumulative data-plane bytes when this point was taken
+    pub data_bytes: u64,
+    /// cumulative control-plane bytes
+    pub control_bytes: u64,
+    pub loss: f64,
+    pub accuracy: f64,
+    /// simulated wall-clock seconds (net::SimClock)
+    pub sim_time_s: f64,
+}
+
+/// A labelled training curve for one technique/configuration.
+#[derive(Clone, Debug, Default)]
+pub struct TrainCurve {
+    pub label: String,
+    pub points: Vec<CurvePoint>,
+}
+
+impl TrainCurve {
+    pub fn new(label: impl Into<String>) -> Self {
+        TrainCurve { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(
+        &mut self,
+        iteration: usize,
+        comm: CommSnapshot,
+        loss: f64,
+        accuracy: f64,
+        sim_time_s: f64,
+    ) {
+        self.points.push(CurvePoint {
+            iteration,
+            data_bytes: comm.data_bytes,
+            control_bytes: comm.control_bytes,
+            loss,
+            accuracy,
+            sim_time_s,
+        });
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.points.last().map(|p| p.accuracy)
+    }
+
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.points.iter().map(|p| p.accuracy).fold(None, |acc, a| {
+            Some(acc.map_or(a, |b: f64| b.max(a)))
+        })
+    }
+
+    /// Cumulative data-plane bytes at the first point reaching `target`
+    /// accuracy — the paper's "communication to reach X% accuracy" metric
+    /// (Figures 2 and 9). `None` if the curve never reaches the target.
+    pub fn bytes_to_accuracy(&self, target: f64) -> Option<u64> {
+        self.points
+            .iter()
+            .find(|p| p.accuracy >= target)
+            .map(|p| p.data_bytes)
+    }
+
+    /// Iterations to reach `target` accuracy.
+    pub fn iterations_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.points
+            .iter()
+            .find(|p| p.accuracy >= target)
+            .map(|p| p.iteration)
+    }
+
+    /// CSV rows (header + data) for this curve.
+    pub fn csv_rows(&self) -> Vec<Vec<String>> {
+        let mut rows = vec![vec![
+            "label".into(),
+            "iteration".into(),
+            "data_bytes".into(),
+            "control_bytes".into(),
+            "loss".into(),
+            "accuracy".into(),
+            "sim_time_s".into(),
+        ]];
+        for p in &self.points {
+            rows.push(vec![
+                self.label.clone(),
+                p.iteration.to_string(),
+                p.data_bytes.to_string(),
+                p.control_bytes.to_string(),
+                format!("{:.6}", p.loss),
+                format!("{:.6}", p.accuracy),
+                format!("{:.3}", p.sim_time_s),
+            ]);
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve() -> TrainCurve {
+        let mut c = TrainCurve::new("marfl");
+        for (i, (bytes, acc)) in
+            [(100u64, 0.2), (200, 0.5), (300, 0.8), (400, 0.85)].iter().enumerate()
+        {
+            c.push(
+                i * 5,
+                CommSnapshot { data_bytes: *bytes, ..Default::default() },
+                1.0 - acc,
+                *acc,
+                i as f64,
+            );
+        }
+        c
+    }
+
+    #[test]
+    fn bytes_to_accuracy_finds_first_crossing() {
+        let c = curve();
+        assert_eq!(c.bytes_to_accuracy(0.5), Some(200));
+        assert_eq!(c.bytes_to_accuracy(0.79), Some(300));
+        assert_eq!(c.bytes_to_accuracy(0.99), None);
+    }
+
+    #[test]
+    fn iterations_to_accuracy() {
+        let c = curve();
+        assert_eq!(c.iterations_to_accuracy(0.5), Some(5));
+    }
+
+    #[test]
+    fn best_and_final() {
+        let c = curve();
+        assert_eq!(c.final_accuracy(), Some(0.85));
+        assert_eq!(c.best_accuracy(), Some(0.85));
+    }
+
+    #[test]
+    fn csv_has_header_plus_rows() {
+        let rows = curve().csv_rows();
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0][0], "label");
+        assert_eq!(rows[1][0], "marfl");
+    }
+}

@@ -1,0 +1,149 @@
+//! Communication ledger: the paper's primary measurement instrument.
+//!
+//! Counters are atomic so the ledger can be shared (`Arc`) between the
+//! coordinator, the DHT and the fabric without locks on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Which plane a message belongs to. The paper's claim is that control
+/// traffic (DHT barriers/announcements, O(N log N) small messages) is
+/// negligible next to data traffic (model exchange).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Plane {
+    /// DHT lookups, stores, barrier metadata.
+    Control,
+    /// Model / momentum / logits payloads.
+    Data,
+}
+
+/// Lock-free byte/message accounting.
+#[derive(Debug, Default)]
+pub struct CommLedger {
+    data_bytes: AtomicU64,
+    data_msgs: AtomicU64,
+    control_bytes: AtomicU64,
+    control_msgs: AtomicU64,
+}
+
+/// A point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommSnapshot {
+    pub data_bytes: u64,
+    pub data_msgs: u64,
+    pub control_bytes: u64,
+    pub control_msgs: u64,
+}
+
+impl CommLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Book one message of `bytes` on `plane`.
+    pub fn record(&self, plane: Plane, bytes: u64) {
+        match plane {
+            Plane::Data => {
+                self.data_bytes.fetch_add(bytes, Ordering::Relaxed);
+                self.data_msgs.fetch_add(1, Ordering::Relaxed);
+            }
+            Plane::Control => {
+                self.control_bytes.fetch_add(bytes, Ordering::Relaxed);
+                self.control_msgs.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> CommSnapshot {
+        CommSnapshot {
+            data_bytes: self.data_bytes.load(Ordering::Relaxed),
+            data_msgs: self.data_msgs.load(Ordering::Relaxed),
+            control_bytes: self.control_bytes.load(Ordering::Relaxed),
+            control_msgs: self.control_msgs.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.data_bytes.store(0, Ordering::Relaxed);
+        self.data_msgs.store(0, Ordering::Relaxed);
+        self.control_bytes.store(0, Ordering::Relaxed);
+        self.control_msgs.store(0, Ordering::Relaxed);
+    }
+}
+
+impl CommSnapshot {
+    pub fn total_bytes(&self) -> u64 {
+        self.data_bytes + self.control_bytes
+    }
+
+    /// Delta between two snapshots (e.g. one FL iteration).
+    pub fn since(&self, earlier: &CommSnapshot) -> CommSnapshot {
+        CommSnapshot {
+            data_bytes: self.data_bytes - earlier.data_bytes,
+            data_msgs: self.data_msgs - earlier.data_msgs,
+            control_bytes: self.control_bytes - earlier.control_bytes,
+            control_msgs: self.control_msgs - earlier.control_msgs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn records_per_plane() {
+        let l = CommLedger::new();
+        l.record(Plane::Data, 100);
+        l.record(Plane::Data, 50);
+        l.record(Plane::Control, 8);
+        let s = l.snapshot();
+        assert_eq!(s.data_bytes, 150);
+        assert_eq!(s.data_msgs, 2);
+        assert_eq!(s.control_bytes, 8);
+        assert_eq!(s.control_msgs, 1);
+        assert_eq!(s.total_bytes(), 158);
+    }
+
+    #[test]
+    fn since_computes_deltas() {
+        let l = CommLedger::new();
+        l.record(Plane::Data, 10);
+        let a = l.snapshot();
+        l.record(Plane::Data, 32);
+        l.record(Plane::Control, 4);
+        let d = l.snapshot().since(&a);
+        assert_eq!(d.data_bytes, 32);
+        assert_eq!(d.data_msgs, 1);
+        assert_eq!(d.control_bytes, 4);
+    }
+
+    #[test]
+    fn concurrent_recording_is_consistent() {
+        let l = Arc::new(CommLedger::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        l.record(Plane::Data, 3);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = l.snapshot();
+        assert_eq!(s.data_bytes, 12_000);
+        assert_eq!(s.data_msgs, 4_000);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let l = CommLedger::new();
+        l.record(Plane::Control, 9);
+        l.reset();
+        assert_eq!(l.snapshot(), CommSnapshot::default());
+    }
+}

@@ -1,0 +1,12 @@
+//! Metrics substrate: communication ledger, training curves, CSV/JSON
+//! emission. Every byte that crosses the simulated network is booked here,
+//! split into control plane (DHT coordination) and data plane (model
+//! exchange) — the paper's headline numbers are exactly these counters.
+
+pub mod curves;
+pub mod ledger;
+pub mod writer;
+
+pub use curves::{CurvePoint, TrainCurve};
+pub use ledger::{CommLedger, CommSnapshot, Plane};
+pub use writer::{write_csv, write_json};

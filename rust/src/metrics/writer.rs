@@ -1,0 +1,82 @@
+//! CSV / JSON result emission (results/ directory convention).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Write rows (first row = header) as CSV. Fields containing commas or
+/// quotes are quoted per RFC 4180.
+pub fn write_csv(path: &Path, rows: &[Vec<String>]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut out = String::new();
+    for row in rows {
+        let encoded: Vec<String> = row.iter().map(|f| escape_field(f)).collect();
+        out.push_str(&encoded.join(","));
+        out.push('\n');
+    }
+    fs::write(path, out).with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+fn escape_field(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
+    }
+}
+
+/// Write a JSON document.
+pub fn write_json(path: &Path, value: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    fs::write(path, value.to_string()).with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj, parse};
+
+    #[test]
+    fn csv_round_trip_simple() {
+        let dir = tempdir();
+        let path = dir.join("t.csv");
+        write_csv(
+            &path,
+            &[
+                vec!["a".into(), "b".into()],
+                vec!["1".into(), "x,y".into()],
+            ],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n");
+    }
+
+    #[test]
+    fn json_writes_parseable_document() {
+        let dir = tempdir();
+        let path = dir.join("t.json");
+        let v = obj(vec![("n", num(5.0))]);
+        write_json(&path, &v).unwrap();
+        let back = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back, v);
+    }
+
+    fn tempdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "marfl_writer_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+}

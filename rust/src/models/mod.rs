@@ -1,0 +1,190 @@
+//! Artifact metadata registry: the Rust-side view of the flat-parameter
+//! ABI contract (DESIGN.md). Parses `artifacts/meta.json` emitted by
+//! `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Static description of one lowered model.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    /// true parameter count P
+    pub param_count: usize,
+    /// padded flat length P_pad (multiple of the kernel STRIP)
+    pub padded_len: usize,
+    /// per-example input shape (e.g. [16,16,1] or [64])
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    /// local-update minibatch size
+    pub batch: usize,
+    /// eval chunk size (test set must be a multiple)
+    pub eval_chunk: usize,
+    pub init_file: String,
+    /// entry-point name -> artifact file name
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl ModelMeta {
+    /// Feature elements per example.
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Size of one model transfer on the wire (f32 payload of the padded
+    /// flat vector) — the unit of the paper's communication accounting.
+    pub fn model_bytes(&self) -> u64 {
+        (self.padded_len * 4) as u64
+    }
+
+    /// Bytes of a logits payload for one training batch (KD teacher
+    /// exchange).
+    pub fn logits_bytes(&self) -> u64 {
+        (self.batch * self.classes * 4) as u64
+    }
+}
+
+/// Registry over every model in the artifact directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub dir: PathBuf,
+    pub strip: usize,
+    pub kd_tau: f64,
+    pub group_sizes: Vec<usize>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl ArtifactMeta {
+    /// Load `dir/meta.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {meta_path:?} — run `make artifacts`"))?;
+        let j = parse(&text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+
+        let strip = req_usize(&j, "strip")?;
+        let kd_tau = j
+            .get("kd_tau")
+            .and_then(Json::as_f64)
+            .context("meta.json: kd_tau")?;
+        let group_sizes = j
+            .get("group_sizes")
+            .and_then(Json::as_arr)
+            .context("meta.json: group_sizes")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+
+        let mut models = BTreeMap::new();
+        let model_obj = j
+            .get("models")
+            .and_then(Json::as_obj)
+            .context("meta.json: models")?;
+        for (name, m) in model_obj {
+            let artifacts = m
+                .get("artifacts")
+                .and_then(Json::as_obj)
+                .context("model artifacts")?
+                .iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    param_count: req_usize(m, "param_count")?,
+                    padded_len: req_usize(m, "padded_len")?,
+                    input_shape: m
+                        .get("input_shape")
+                        .and_then(Json::as_arr)
+                        .context("input_shape")?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                    classes: req_usize(m, "classes")?,
+                    batch: req_usize(m, "batch")?,
+                    eval_chunk: req_usize(m, "eval_chunk")?,
+                    init_file: m
+                        .get("init")
+                        .and_then(Json::as_str)
+                        .context("init")?
+                        .to_string(),
+                    artifacts,
+                },
+            );
+        }
+        Ok(ArtifactMeta { dir: dir.to_path_buf(), strip, kd_tau, group_sizes, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in artifacts"))
+    }
+
+    /// Path of one artifact file.
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("meta.json: missing/invalid {key:?}"))
+}
+
+/// Default artifact directory: `$MARFL_ARTIFACTS` or `artifacts/`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("MARFL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_meta(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{
+              "strip": 1024, "kd_tau": 3.0, "group_sizes": [2,3],
+              "models": {
+                "cnn": {
+                  "param_count": 18346, "padded_len": 18432,
+                  "input_shape": [16,16,1], "classes": 10,
+                  "batch": 64, "eval_chunk": 250, "init": "cnn_init.bin",
+                  "artifacts": {"cnn_eval": "cnn_eval.hlo.txt"}
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_meta_document() {
+        let dir = std::env::temp_dir().join("marfl_models_test");
+        write_meta(&dir);
+        let meta = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(meta.strip, 1024);
+        let cnn = meta.model("cnn").unwrap();
+        assert_eq!(cnn.param_count, 18346);
+        assert_eq!(cnn.input_elems(), 256);
+        assert_eq!(cnn.model_bytes(), 18432 * 4);
+        assert_eq!(cnn.logits_bytes(), 64 * 10 * 4);
+        assert!(meta.model("vit").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_actionable_error() {
+        let err = ArtifactMeta::load(Path::new("/nonexistent_xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

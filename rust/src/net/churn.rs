@@ -1,0 +1,112 @@
+//! Participation sampling and dropout injection (paper §3.1).
+
+use crate::rng::Rng;
+
+/// The paper's two disturbance knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnModel {
+    /// fraction of peers participating in an entire FL iteration
+    pub participation: f64,
+    /// probability a participant drops before aggregation (has done its
+    /// local update, does not join `A_t`)
+    pub dropout: f64,
+}
+
+impl ChurnModel {
+    pub fn new(participation: f64, dropout: f64) -> Self {
+        assert!(participation > 0.0 && participation <= 1.0);
+        assert!((0.0..=1.0).contains(&dropout));
+        ChurnModel { participation, dropout }
+    }
+
+    pub fn full() -> Self {
+        ChurnModel { participation: 1.0, dropout: 0.0 }
+    }
+
+    /// Sample the participant set `U_t` ⊆ [N] for one FL iteration.
+    /// Guarantees at least one participant.
+    pub fn sample_participants(&self, n: usize, rng: &mut Rng) -> Vec<usize> {
+        let k = ((n as f64 * self.participation).round() as usize).clamp(1, n);
+        let mut idx = rng.sample_indices(n, k);
+        idx.sort_unstable();
+        idx
+    }
+
+    /// Thin `U_t` into the aggregation set `A_t`: each participant
+    /// independently drops with probability `dropout`. Guarantees at least
+    /// two aggregators when at least two participants exist (a single peer
+    /// cannot form a group; the paper's dispatcher skips aggregation then).
+    pub fn sample_aggregators(
+        &self,
+        participants: &[usize],
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let mut agg: Vec<usize> = participants
+            .iter()
+            .copied()
+            .filter(|_| !rng.chance(self.dropout))
+            .collect();
+        if agg.len() < 2 && participants.len() >= 2 {
+            // keep the system alive under pathological dropout draws
+            agg = participants.to_vec();
+            while agg.len() > 2 {
+                let i = rng.below(agg.len());
+                agg.remove(i);
+            }
+        }
+        agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_participation_returns_everyone() {
+        let mut rng = Rng::new(1);
+        let c = ChurnModel::full();
+        assert_eq!(c.sample_participants(10, &mut rng), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn participation_rate_respected() {
+        let mut rng = Rng::new(2);
+        let c = ChurnModel::new(0.5, 0.0);
+        let p = c.sample_participants(100, &mut rng);
+        assert_eq!(p.len(), 50);
+        // distinct & in range
+        let mut q = p.clone();
+        q.dedup();
+        assert_eq!(q.len(), 50);
+        assert!(p.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn dropout_thins_aggregators_statistically() {
+        let mut rng = Rng::new(3);
+        let c = ChurnModel::new(1.0, 0.2);
+        let participants: Vec<usize> = (0..1000).collect();
+        let agg = c.sample_aggregators(&participants, &mut rng);
+        let frac = agg.len() as f64 / 1000.0;
+        assert!((frac - 0.8).abs() < 0.05, "survivor fraction {frac}");
+    }
+
+    #[test]
+    fn never_fewer_than_two_aggregators() {
+        let mut rng = Rng::new(4);
+        let c = ChurnModel::new(1.0, 0.99);
+        for _ in 0..50 {
+            let agg = c.sample_aggregators(&[3, 9, 12], &mut rng);
+            assert!(agg.len() >= 2, "{agg:?}");
+        }
+    }
+
+    #[test]
+    fn zero_dropout_keeps_all() {
+        let mut rng = Rng::new(5);
+        let c = ChurnModel::new(1.0, 0.0);
+        let p: Vec<usize> = (0..20).collect();
+        assert_eq!(c.sample_aggregators(&p, &mut rng), p);
+    }
+}

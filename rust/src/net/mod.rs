@@ -1,0 +1,76 @@
+//! Simulated P2P transport fabric + churn injection.
+//!
+//! The paper evaluates under bandwidth-limited wireless links with peer
+//! churn. The fabric books every payload on the [`CommLedger`] and converts
+//! bytes into simulated transfer time (latency + bytes/bandwidth); the
+//! churn model reproduces the paper's two disturbance axes:
+//!
+//! * **participation rate** — how many peers take part in an entire FL
+//!   iteration (local update + aggregation), set `U_t`;
+//! * **dropout likelihood** — a participating peer completes its local
+//!   update but vanishes before/during aggregation, thinning `A_t`.
+
+pub mod churn;
+pub mod trace;
+
+pub use churn::ChurnModel;
+pub use trace::MarkovChurn;
+
+use std::sync::Arc;
+
+use crate::metrics::{CommLedger, Plane};
+
+/// Uniform-link transport model.
+#[derive(Clone)]
+pub struct Fabric {
+    ledger: Arc<CommLedger>,
+    /// bytes per second per link
+    pub bandwidth: f64,
+    /// seconds per message
+    pub latency: f64,
+}
+
+impl Fabric {
+    pub fn new(ledger: Arc<CommLedger>, bandwidth: f64, latency: f64) -> Self {
+        assert!(bandwidth > 0.0);
+        Fabric { ledger, bandwidth, latency }
+    }
+
+    /// Book one point-to-point message; returns its simulated duration.
+    pub fn send(&self, bytes: u64, plane: Plane) -> f64 {
+        self.ledger.record(plane, bytes);
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Duration of `k` messages of `bytes` sent sequentially over one link.
+    pub fn sequential(&self, k: usize, bytes: u64, plane: Plane) -> f64 {
+        (0..k).map(|_| self.send(bytes, plane)).sum()
+    }
+
+    pub fn ledger(&self) -> &Arc<CommLedger> {
+        &self.ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_books_bytes_and_returns_time() {
+        let ledger = Arc::new(CommLedger::new());
+        let f = Fabric::new(ledger.clone(), 1000.0, 0.01);
+        let t = f.send(500, Plane::Data);
+        assert!((t - 0.51).abs() < 1e-12);
+        assert_eq!(ledger.snapshot().data_bytes, 500);
+    }
+
+    #[test]
+    fn sequential_accumulates() {
+        let ledger = Arc::new(CommLedger::new());
+        let f = Fabric::new(ledger.clone(), 1000.0, 0.0);
+        let t = f.sequential(4, 250, Plane::Data);
+        assert!((t - 1.0).abs() < 1e-12);
+        assert_eq!(ledger.snapshot().data_msgs, 4);
+    }
+}

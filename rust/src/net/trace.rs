@@ -1,0 +1,143 @@
+//! Bursty wireless availability traces (Gilbert–Elliott model).
+//!
+//! The paper motivates MAR-FL with wireless deployments where "devices
+//! join and leave unpredictably" — availability is *bursty* (fading,
+//! mobility), not i.i.d. per iteration. This two-state Markov model gives
+//! each peer an Up/Down chain:
+//!
+//! ```text
+//!   P(Up -> Down) = p_down        mean Up sojourn  = 1/p_down iterations
+//!   P(Down -> Up) = p_up          mean Down sojourn = 1/p_up
+//!   stationary availability      = p_up / (p_up + p_down)
+//! ```
+//!
+//! Selected via `churn.model = "markov"`; the Bernoulli model
+//! (`net::churn`) remains the paper's §3.1 configuration.
+
+use crate::rng::Rng;
+
+/// Per-peer two-state availability chains.
+#[derive(Clone, Debug)]
+pub struct MarkovChurn {
+    up: Vec<bool>,
+    /// P(Up -> Down) per iteration
+    pub p_down: f64,
+    /// P(Down -> Up) per iteration
+    pub p_up: f64,
+}
+
+impl MarkovChurn {
+    /// Start every chain from its stationary distribution.
+    pub fn new(n: usize, p_down: f64, p_up: f64, rng: &mut Rng) -> Self {
+        assert!((0.0..=1.0).contains(&p_down) && (0.0..=1.0).contains(&p_up));
+        assert!(p_up > 0.0, "peers must be able to return");
+        let stationary = p_up / (p_up + p_down);
+        let up = (0..n).map(|_| rng.chance(stationary)).collect();
+        MarkovChurn { up, p_down, p_up }
+    }
+
+    /// Long-run fraction of available peers.
+    pub fn stationary_availability(&self) -> f64 {
+        self.p_up / (self.p_up + self.p_down)
+    }
+
+    /// Advance every chain one FL iteration; returns the available set
+    /// (sorted peer indices). Guarantees at least one peer (a fully-down
+    /// network would stall the dispatcher; the paper's simulator skips
+    /// such iterations, we resurrect a random peer instead).
+    pub fn step(&mut self, rng: &mut Rng) -> Vec<usize> {
+        for state in self.up.iter_mut() {
+            *state = if *state {
+                !rng.chance(self.p_down)
+            } else {
+                rng.chance(self.p_up)
+            };
+        }
+        let mut avail: Vec<usize> = self
+            .up
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &u)| u.then_some(i))
+            .collect();
+        if avail.is_empty() {
+            let lucky = rng.below(self.up.len());
+            self.up[lucky] = true;
+            avail.push(lucky);
+        }
+        avail
+    }
+
+    pub fn is_up(&self, peer: usize) -> bool {
+        self.up[peer]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stationary_fraction_matches_theory() {
+        let mut rng = Rng::new(70);
+        // availability = 0.8/(0.8+0.2) = 0.8
+        let mut chain = MarkovChurn::new(200, 0.2, 0.8, &mut rng);
+        let mut total = 0usize;
+        let iters = 500;
+        for _ in 0..iters {
+            total += chain.step(&mut rng).len();
+        }
+        let frac = total as f64 / (200.0 * iters as f64);
+        assert!(
+            (frac - 0.8).abs() < 0.03,
+            "measured availability {frac} vs stationary 0.8"
+        );
+    }
+
+    #[test]
+    fn sojourns_are_bursty_not_iid() {
+        // with p_down = 0.05, mean Up run length should be ~20 iterations
+        // — far longer than the ~1/(1-0.8)=5 of an i.i.d. 80% model
+        let mut rng = Rng::new(71);
+        // 10 chains so the never-empty resurrection guard (which would
+        // distort a single-peer trace) practically never fires for peer 0
+        let mut chain = MarkovChurn::new(10, 0.05, 0.2, &mut rng);
+        let mut runs = Vec::new();
+        let mut current = 0usize;
+        for _ in 0..20_000 {
+            chain.step(&mut rng);
+            let up = chain.is_up(0);
+            if up {
+                current += 1;
+            } else if current > 0 {
+                runs.push(current);
+                current = 0;
+            }
+        }
+        let mean_run = runs.iter().sum::<usize>() as f64 / runs.len() as f64;
+        assert!(
+            (mean_run - 20.0).abs() < 4.0,
+            "mean Up sojourn {mean_run} vs theoretical 20"
+        );
+    }
+
+    #[test]
+    fn never_returns_empty_set() {
+        let mut rng = Rng::new(72);
+        // pathological: peers almost never up
+        let mut chain = MarkovChurn::new(5, 0.99, 0.01, &mut rng);
+        for _ in 0..200 {
+            assert!(!chain.step(&mut rng).is_empty());
+        }
+    }
+
+    #[test]
+    fn available_sets_sorted_and_in_range() {
+        let mut rng = Rng::new(73);
+        let mut chain = MarkovChurn::new(50, 0.3, 0.5, &mut rng);
+        for _ in 0..50 {
+            let a = chain.step(&mut rng);
+            assert!(a.windows(2).all(|w| w[0] < w[1]));
+            assert!(a.iter().all(|&i| i < 50));
+        }
+    }
+}

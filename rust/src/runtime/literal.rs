@@ -1,0 +1,66 @@
+//! Literal marshalling helpers: Rust slices <-> XLA literals.
+
+use anyhow::{Context, Result};
+use xla::{ElementType, Literal};
+
+/// Build an f32 literal of `dims` from a host slice (bytes are copied by
+/// XLA; no lifetime coupling).
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let expected: usize = dims.iter().product();
+    anyhow::ensure!(
+        data.len() == expected,
+        "lit_f32: {} values for dims {dims:?} (want {expected})",
+        data.len()
+    );
+    // Safety: f32 slice reinterpreted as bytes; alignment of u8 is 1.
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)
+        .context("create f32 literal")
+}
+
+/// Build an i32 literal of `dims` from a host slice.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let expected: usize = dims.iter().product();
+    anyhow::ensure!(
+        data.len() == expected,
+        "lit_i32: {} values for dims {dims:?} (want {expected})",
+        data.len()
+    );
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)
+        .context("create s32 literal")
+}
+
+/// Copy a literal back to a host Vec<f32>.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_literal_round_trip() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0, 5.0, 6.5];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_literal_round_trip() {
+        let data = vec![1i32, -7, 300];
+        let lit = lit_i32(&data, &[3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1], &[2, 2]).is_err());
+    }
+}

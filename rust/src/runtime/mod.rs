@@ -1,0 +1,262 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them on the
+//! training path. This is the ONLY place model compute happens at run
+//! time — Python is never on the request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` (cached per entry
+//! point) → `execute`.
+
+pub mod literal;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::models::{ArtifactMeta, ModelMeta};
+use literal::{lit_f32, lit_i32, to_f32_vec};
+
+/// Compiled-executable cache keyed by entry-point name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub meta: ArtifactMeta,
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// executions per entry point (perf accounting)
+    calls: RefCell<HashMap<String, u64>>,
+}
+
+/// Result of one local training / KD step.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    pub theta: Vec<f32>,
+    pub momentum: Vec<f32>,
+    pub loss: f32,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let meta = ArtifactMeta::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            meta,
+            exes: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load the shared initial parameters for `model` (paper: every peer
+    /// starts from the same randomly initialized θ⁰).
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let m = self.meta.model(model)?;
+        let path = self.meta.artifact_path(&m.init_file);
+        let theta = crate::util::read_f32_le(&path)?;
+        anyhow::ensure!(
+            theta.len() == m.padded_len,
+            "{path:?}: expected {} f32, got {}",
+            m.padded_len,
+            theta.len()
+        );
+        Ok(theta)
+    }
+
+    fn execute(
+        &self,
+        entry: &str,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(entry)?;
+        *self.calls.borrow_mut().entry(entry.to_string()).or_insert(0) += 1;
+        let exes = self.exes.borrow();
+        let exe = exes.get(entry).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("execute {entry}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("sync {entry}"))?;
+        // every entry point returns a tuple (aot.py lowers return_tuple=True)
+        out.to_tuple().with_context(|| format!("untuple {entry}"))
+    }
+
+    fn ensure_compiled(&self, entry: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(entry) {
+            return Ok(());
+        }
+        let path = self.meta.artifact_path(&format!("{entry}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse {path:?} — run `make artifacts`"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {entry}"))?;
+        self.exes.borrow_mut().insert(entry.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of entry points (avoids first-use jitter in
+    /// benches).
+    pub fn warmup(&self, entries: &[String]) -> Result<()> {
+        for e in entries {
+            self.ensure_compiled(e)?;
+        }
+        Ok(())
+    }
+
+    /// Per-entry execution counts (perf diagnostics).
+    pub fn call_counts(&self) -> HashMap<String, u64> {
+        self.calls.borrow().clone()
+    }
+
+    // -----------------------------------------------------------------
+    // Typed entry points (flat-parameter ABI)
+    // -----------------------------------------------------------------
+
+    /// One local momentum-SGD step over a batch.
+    pub fn train_step(
+        &self,
+        m: &ModelMeta,
+        theta: &[f32],
+        momentum: &[f32],
+        x: &[f32],
+        y: &[i32],
+        eta: f32,
+        mu: f32,
+    ) -> Result<StepOut> {
+        debug_assert_eq!(theta.len(), m.padded_len);
+        debug_assert_eq!(x.len(), m.batch * m.input_elems());
+        debug_assert_eq!(y.len(), m.batch);
+        let mut dims = vec![m.batch];
+        dims.extend(&m.input_shape);
+        let args = [
+            lit_f32(theta, &[m.padded_len])?,
+            lit_f32(momentum, &[m.padded_len])?,
+            lit_f32(x, &dims)?,
+            lit_i32(y, &[m.batch])?,
+            lit_f32(&[eta], &[1])?,
+            lit_f32(&[mu], &[1])?,
+        ];
+        let out = self.execute(&format!("{}_train_step", m.name), &args)?;
+        anyhow::ensure!(out.len() == 3, "train_step returned {} leaves", out.len());
+        Ok(StepOut {
+            theta: to_f32_vec(&out[0])?,
+            momentum: to_f32_vec(&out[1])?,
+            loss: out[2].to_vec::<f32>()?[0],
+        })
+    }
+
+    /// One Moshpit-KD student step (Algorithm 2).
+    #[allow(clippy::too_many_arguments)]
+    pub fn kd_step(
+        &self,
+        m: &ModelMeta,
+        theta: &[f32],
+        momentum: &[f32],
+        x: &[f32],
+        y: &[i32],
+        zbar: &[f32],
+        lambda: f32,
+        eta: f32,
+        mu: f32,
+    ) -> Result<StepOut> {
+        debug_assert_eq!(zbar.len(), m.batch * m.classes);
+        let mut dims = vec![m.batch];
+        dims.extend(&m.input_shape);
+        let args = [
+            lit_f32(theta, &[m.padded_len])?,
+            lit_f32(momentum, &[m.padded_len])?,
+            lit_f32(x, &dims)?,
+            lit_i32(y, &[m.batch])?,
+            lit_f32(zbar, &[m.batch, m.classes])?,
+            lit_f32(&[lambda], &[1])?,
+            lit_f32(&[eta], &[1])?,
+            lit_f32(&[mu], &[1])?,
+        ];
+        let out = self.execute(&format!("{}_kd_step", m.name), &args)?;
+        anyhow::ensure!(out.len() == 3, "kd_step returned {} leaves", out.len());
+        Ok(StepOut {
+            theta: to_f32_vec(&out[0])?,
+            momentum: to_f32_vec(&out[1])?,
+            loss: out[2].to_vec::<f32>()?[0],
+        })
+    }
+
+    /// Teacher forward pass: logits for one training batch.
+    pub fn logits(&self, m: &ModelMeta, theta: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let mut dims = vec![m.batch];
+        dims.extend(&m.input_shape);
+        let args = [lit_f32(theta, &[m.padded_len])?, lit_f32(x, &dims)?];
+        let out = self.execute(&format!("{}_logits", m.name), &args)?;
+        to_f32_vec(&out[0])
+    }
+
+    /// Evaluate over a full test set (x row-major, len multiple of the
+    /// eval chunk). Returns (mean loss, accuracy).
+    pub fn evaluate(
+        &self,
+        m: &ModelMeta,
+        theta: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f64, f64)> {
+        let n = y.len();
+        let elems = m.input_elems();
+        anyhow::ensure!(
+            n % m.eval_chunk == 0,
+            "test set size {n} not a multiple of eval chunk {}",
+            m.eval_chunk
+        );
+        let mut dims = vec![m.eval_chunk];
+        dims.extend(&m.input_shape);
+        let theta_lit = lit_f32(theta, &[m.padded_len])?;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for c in 0..n / m.eval_chunk {
+            let xs = &x[c * m.eval_chunk * elems..(c + 1) * m.eval_chunk * elems];
+            let ys = &y[c * m.eval_chunk..(c + 1) * m.eval_chunk];
+            let args = [
+                theta_lit.clone(),
+                lit_f32(xs, &dims)?,
+                lit_i32(ys, &[m.eval_chunk])?,
+            ];
+            let out = self.execute(&format!("{}_eval", m.name), &args)?;
+            loss_sum += out[0].to_vec::<f32>()?[0] as f64;
+            correct += out[1].to_vec::<f32>()?[0] as f64;
+        }
+        Ok((loss_sum / n as f64, correct / n as f64))
+    }
+
+    /// Average `k` stacked flat vectors through the Pallas group-mean
+    /// artifact. `stack` is row-major `[k, padded_len]`.
+    pub fn group_mean(&self, m: &ModelMeta, stack: &[f32], k: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            self.meta.group_sizes.contains(&k),
+            "no group_mean artifact for k={k} (have {:?})",
+            self.meta.group_sizes
+        );
+        debug_assert_eq!(stack.len(), k * m.padded_len);
+        let args = [lit_f32(stack, &[k, m.padded_len])?];
+        let out = self.execute(&format!("group_mean_{}_{k}", m.name), &args)?;
+        to_f32_vec(&out[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime execution tests live in rust/tests/runtime_integration.rs —
+    // they require artifacts (`make artifacts`) and a PJRT client. Unit
+    // tests here cover only client-free logic.
+    use super::*;
+
+    #[test]
+    fn step_out_is_cloneable_value_type() {
+        let s = StepOut { theta: vec![1.0], momentum: vec![0.0], loss: 0.5 };
+        let t = s.clone();
+        assert_eq!(t.loss, 0.5);
+    }
+}

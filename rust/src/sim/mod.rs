@@ -1,0 +1,63 @@
+//! Simulated wall clock.
+//!
+//! The simulation executes serially on one core, but the system it models
+//! is parallel: within one round every peer (or group) communicates
+//! concurrently. The clock therefore advances by the *maximum* over
+//! parallel lanes, and by the sum across sequential phases — giving the
+//! simulated round/iteration times reported in EXPERIMENTS.md.
+
+/// Accumulating simulated clock.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    time_s: f64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock::default()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.time_s
+    }
+
+    /// A sequential phase of duration `dt`.
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0, "negative phase duration {dt}");
+        self.time_s += dt;
+    }
+
+    /// A parallel phase: lanes run concurrently, the phase lasts as long
+    /// as the slowest lane.
+    pub fn parallel(&mut self, lane_times: impl IntoIterator<Item = f64>) {
+        let max = lane_times.into_iter().fold(0.0f64, f64::max);
+        self.time_s += max;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_sum_sequentially() {
+        let mut c = SimClock::new();
+        c.advance(1.5);
+        c.advance(0.5);
+        assert!((c.now() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_takes_max() {
+        let mut c = SimClock::new();
+        c.parallel([0.2, 0.9, 0.4]);
+        assert!((c.now() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_parallel_is_free() {
+        let mut c = SimClock::new();
+        c.parallel([]);
+        assert_eq!(c.now(), 0.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! In-repo property-testing harness (offline environment: no proptest).
+//!
+//! `check` runs a property over `cases` randomly generated inputs from a
+//! seeded [`crate::rng::Rng`]; on failure it retries with progressively
+//! "smaller" regenerated inputs (shrink-by-regeneration: the generator is
+//! re-run with a shrinking size hint), then reports the failing seed so the
+//! case is reproducible. Used by the coordinator/aggregation invariant
+//! tests (routing, exactness, no-revisit, mixing bound).
+
+use crate::rng::Rng;
+
+/// Size hint passed to generators; properties shrink by lowering it.
+#[derive(Clone, Copy, Debug)]
+pub struct Size(pub usize);
+
+/// Run `property(rng, size)` for `cases` random cases. The property returns
+/// `Err(description)` on violation. Panics with a reproducible report on
+/// the first failure that survives shrinking.
+pub fn check<F>(name: &str, cases: usize, max_size: usize, mut property: F)
+where
+    F: FnMut(&mut Rng, Size) -> Result<(), String>,
+{
+    let base_seed = 0xC0FFEE ^ fxhash(name);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64 * 0x9E37);
+        // ramp the size up over the run: early cases are small
+        let size = 1 + (case * max_size) / cases.max(1);
+        let mut rng = Rng::new(seed);
+        if let Err(err) = property(&mut rng, Size(size)) {
+            // shrink by regenerating at smaller sizes with the same seed
+            let mut minimal = (size, err);
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut rng = Rng::new(seed);
+                match property(&mut rng, Size(s)) {
+                    Err(e) => minimal = (s, e),
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed:#x}, \
+                 size {}): {}",
+                minimal.0, minimal.1
+            );
+        }
+    }
+}
+
+/// FNV-style string hash for stable per-property seeds.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "element {i}: {x} vs {y} (|diff|={} > tol={tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+/// Relative-error helper for scalar comparisons in experiment assertions.
+pub fn rel_err(measured: f64, expected: f64) -> f64 {
+    if expected == 0.0 {
+        measured.abs()
+    } else {
+        ((measured - expected) / expected).abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always_ok", 50, 10, |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_report() {
+        check("always_fails", 10, 10, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_seen = 0;
+        check("sizes", 20, 100, |_, sz| {
+            max_seen = max_seen.max(sz.0);
+            Ok(())
+        });
+        assert!(max_seen > 50, "max size seen {max_seen}");
+    }
+
+    #[test]
+    fn allclose_accepts_close_vectors() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0 - 1e-7], 1e-5, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "element")]
+    fn allclose_rejects_distant_vectors() {
+        assert_allclose(&[1.0], &[2.0], 1e-5, 1e-6);
+    }
+}

@@ -1,0 +1,89 @@
+//! Small shared substrates: JSON (parse/emit), binary I/O helpers.
+//!
+//! This environment is fully offline (only the `xla` closure is vendored),
+//! so serde/serde_json are reimplemented at the scale this project needs.
+
+pub mod json;
+
+use std::fs::File;
+use std::io::{BufReader, Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Read a little-endian f32 binary file (e.g. `artifacts/{m}_init.bin`).
+pub fn read_f32_le(path: &Path) -> Result<Vec<f32>> {
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut bytes = Vec::new();
+    r.read_to_end(&mut bytes)?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "{path:?}: length {} not a multiple of 4",
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a little-endian f32 binary file.
+pub fn write_f32_le(path: &Path, data: &[f32]) -> Result<()> {
+    let mut f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Euclidean (L2) norm of a vector — used by DP clipping and tests.
+pub fn l2_norm(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Mean squared distance between two vectors.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_le_round_trip() {
+        let dir = std::env::temp_dir().join("marfl_util_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.bin");
+        let data = vec![0.0f32, -1.5, 3.25, f32::MIN_POSITIVE];
+        write_f32_le(&path, &data).unwrap();
+        assert_eq!(read_f32_le(&path).unwrap(), data);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn l2_norm_matches_hand_computation() {
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(l2_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let v = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(mse(&v, &v), 0.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Integration tests: AOT artifacts × PJRT runtime.
+//!
+//! Require `make artifacts` (the Makefile `test-rust` target guarantees
+//! it). These verify the flat-parameter ABI end to end: HLO text loads,
+//! compiles, executes, and the numerics behave like training.
+
+use std::path::PathBuf;
+
+use marfl::data::synth;
+use marfl::models::default_artifact_dir;
+use marfl::rng::Rng;
+use marfl::runtime::Runtime;
+use marfl::testing::assert_allclose;
+
+fn artifact_dir() -> PathBuf {
+    let dir = default_artifact_dir();
+    assert!(
+        dir.join("meta.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    dir
+}
+
+fn runtime() -> Runtime {
+    Runtime::new(&artifact_dir()).expect("runtime")
+}
+
+#[test]
+fn meta_lists_both_models() {
+    let rt = runtime();
+    assert!(rt.meta.models.contains_key("cnn"));
+    assert!(rt.meta.models.contains_key("head"));
+    for m in rt.meta.models.values() {
+        assert_eq!(m.padded_len % rt.meta.strip, 0);
+        assert!(m.param_count <= m.padded_len);
+    }
+}
+
+#[test]
+fn init_params_match_padded_len_and_zero_tail() {
+    let rt = runtime();
+    for name in ["cnn", "head"] {
+        let m = rt.meta.model(name).unwrap();
+        let theta = rt.init_params(name).unwrap();
+        assert_eq!(theta.len(), m.padded_len);
+        assert!(theta[m.param_count..].iter().all(|&v| v == 0.0));
+        // not all zeros overall
+        assert!(theta.iter().any(|&v| v != 0.0));
+    }
+}
+
+#[test]
+fn train_step_learns_on_head_task() {
+    let rt = runtime();
+    let m = rt.meta.model("head").unwrap().clone();
+    let mut rng = Rng::new(11);
+    let data = synth::newsgroups_like(m.batch * 4, &mut rng);
+    let mut theta = rt.init_params("head").unwrap();
+    let mut mom = vec![0.0; theta.len()];
+    let idx: Vec<usize> = (0..m.batch).collect();
+    let (x, y) = data.gather(&idx);
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let out = rt.train_step(&m, &theta, &mom, &x, &y, 0.1, 0.9).unwrap();
+        theta = out.theta;
+        mom = out.momentum;
+        losses.push(out.loss);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.5),
+        "loss did not halve: {losses:?}"
+    );
+    // padding invariant survives execution
+    assert!(theta[m.param_count..].iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn train_step_learns_on_cnn_task() {
+    let rt = runtime();
+    let m = rt.meta.model("cnn").unwrap().clone();
+    let mut rng = Rng::new(13);
+    let data = synth::mnist_like(m.batch, &mut rng);
+    let mut theta = rt.init_params("cnn").unwrap();
+    let mut mom = vec![0.0; theta.len()];
+    let idx: Vec<usize> = (0..m.batch).collect();
+    let (x, y) = data.gather(&idx);
+    let mut losses = Vec::new();
+    for _ in 0..20 {
+        let out = rt.train_step(&m, &theta, &mom, &x, &y, 0.1, 0.9).unwrap();
+        theta = out.theta;
+        mom = out.momentum;
+        losses.push(out.loss);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.6),
+        "cnn loss did not drop: first {} last {}",
+        losses[0],
+        losses.last().unwrap()
+    );
+}
+
+#[test]
+fn evaluate_returns_sane_untrained_metrics() {
+    let rt = runtime();
+    let m = rt.meta.model("head").unwrap().clone();
+    let mut rng = Rng::new(17);
+    let test = synth::newsgroups_like(m.eval_chunk * 2, &mut rng);
+    let theta = rt.init_params("head").unwrap();
+    let (loss, acc) = rt.evaluate(&m, &theta, &test.x, &test.y).unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    // untrained 20-class model ~ 5% accuracy, generously below 30%
+    assert!((0.0..0.3).contains(&acc), "untrained acc {acc}");
+}
+
+#[test]
+fn evaluate_rejects_non_chunk_multiple() {
+    let rt = runtime();
+    let m = rt.meta.model("head").unwrap().clone();
+    let mut rng = Rng::new(19);
+    let test = synth::newsgroups_like(m.eval_chunk + 1, &mut rng);
+    let theta = rt.init_params("head").unwrap();
+    assert!(rt.evaluate(&m, &theta, &test.x, &test.y).is_err());
+}
+
+#[test]
+fn logits_shape_and_determinism() {
+    let rt = runtime();
+    let m = rt.meta.model("head").unwrap().clone();
+    let mut rng = Rng::new(23);
+    let data = synth::newsgroups_like(m.batch, &mut rng);
+    let theta = rt.init_params("head").unwrap();
+    let idx: Vec<usize> = (0..m.batch).collect();
+    let (x, _) = data.gather(&idx);
+    let z1 = rt.logits(&m, &theta, &x).unwrap();
+    let z2 = rt.logits(&m, &theta, &x).unwrap();
+    assert_eq!(z1.len(), m.batch * m.classes);
+    assert_eq!(z1, z2, "PJRT execution must be deterministic");
+}
+
+#[test]
+fn kd_step_with_lambda_zero_matches_train_step() {
+    let rt = runtime();
+    let m = rt.meta.model("head").unwrap().clone();
+    let mut rng = Rng::new(29);
+    let data = synth::newsgroups_like(m.batch, &mut rng);
+    let theta = rt.init_params("head").unwrap();
+    let mom = vec![0.0; theta.len()];
+    let idx: Vec<usize> = (0..m.batch).collect();
+    let (x, y) = data.gather(&idx);
+    let zbar = vec![0.0f32; m.batch * m.classes];
+    let a = rt.train_step(&m, &theta, &mom, &x, &y, 0.1, 0.9).unwrap();
+    let b = rt
+        .kd_step(&m, &theta, &mom, &x, &y, &zbar, 0.0, 0.1, 0.9)
+        .unwrap();
+    assert_allclose(&a.theta, &b.theta, 1e-5, 1e-6);
+    assert!((a.loss - b.loss).abs() < 1e-5);
+}
+
+#[test]
+fn group_mean_artifact_matches_native_mean() {
+    let rt = runtime();
+    let m = rt.meta.model("head").unwrap().clone();
+    let mut rng = Rng::new(31);
+    for &k in &[2usize, 5, 8] {
+        let stack: Vec<f32> =
+            (0..k * m.padded_len).map(|_| rng.normal() as f32).collect();
+        let got = rt.group_mean(&m, &stack, k).unwrap();
+        let mut want = vec![0.0f64; m.padded_len];
+        for row in 0..k {
+            for (w, &v) in want
+                .iter_mut()
+                .zip(&stack[row * m.padded_len..(row + 1) * m.padded_len])
+            {
+                *w += v as f64;
+            }
+        }
+        let want: Vec<f32> =
+            want.iter().map(|&v| (v / k as f64) as f32).collect();
+        assert_allclose(&got, &want, 1e-5, 1e-6);
+    }
+}
+
+#[test]
+fn group_mean_rejects_unlowered_size() {
+    let rt = runtime();
+    let m = rt.meta.model("head").unwrap().clone();
+    let stack = vec![0.0f32; 9 * m.padded_len];
+    assert!(rt.group_mean(&m, &stack, 9).is_err());
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let rt = runtime();
+    let m = rt.meta.model("head").unwrap().clone();
+    let theta = rt.init_params("head").unwrap();
+    let mut rng = Rng::new(37);
+    let data = synth::newsgroups_like(m.batch, &mut rng);
+    let idx: Vec<usize> = (0..m.batch).collect();
+    let (x, _) = data.gather(&idx);
+    for _ in 0..3 {
+        rt.logits(&m, &theta, &x).unwrap();
+    }
+    assert_eq!(rt.call_counts()["head_logits"], 3);
+}

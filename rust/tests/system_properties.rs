@@ -1,0 +1,237 @@
+//! System-level property tests (in-repo harness, no PJRT needed):
+//! coordinator routing/batching/state invariants under random
+//! configurations — the "proptest on coordinator invariants" suite.
+
+use std::sync::Arc;
+
+use marfl::aggregation::{mean_of, AggCtx, Aggregate, PeerState};
+use marfl::aggregation::{AllToAll, FedAvgServer, RingRdfl};
+use marfl::coordinator::mixing::avg_distortion;
+use marfl::coordinator::MarAggregator;
+use marfl::metrics::CommLedger;
+use marfl::net::{ChurnModel, Fabric};
+use marfl::rng::Rng;
+use marfl::sim::SimClock;
+use marfl::testing::{check, Size};
+
+struct Bundle {
+    ledger: Arc<CommLedger>,
+    fabric: Fabric,
+    clock: SimClock,
+    model: marfl::models::ModelMeta,
+}
+
+fn bundle(p: usize) -> Bundle {
+    let ledger = Arc::new(CommLedger::new());
+    Bundle {
+        fabric: Fabric::new(ledger.clone(), 1e7, 0.001),
+        ledger,
+        clock: SimClock::new(),
+        model: marfl::models::ModelMeta {
+            name: "toy".into(),
+            param_count: p,
+            padded_len: p,
+            input_shape: vec![4],
+            classes: 3,
+            batch: 8,
+            eval_chunk: 8,
+            init_file: String::new(),
+            artifacts: Default::default(),
+        },
+    }
+}
+
+fn random_states(n: usize, p: usize, rng: &mut Rng) -> Vec<PeerState> {
+    (0..n)
+        .map(|_| PeerState {
+            theta: (0..p).map(|_| rng.normal() as f32).collect(),
+            momentum: (0..p).map(|_| rng.normal() as f32 * 0.1).collect(),
+        })
+        .collect()
+}
+
+/// Every aggregation strategy preserves the global mean over A_t (averaging
+/// is mean-preserving regardless of topology), for random sizes/subsets.
+#[test]
+fn property_all_strategies_preserve_subset_mean() {
+    check("mean_preservation", 24, 30, |rng, Size(sz)| {
+        let n = (sz + 4).min(34);
+        let p = 16;
+        let k = 2 + rng.below(n - 2).min(n - 2);
+        let agg_idx = rng.sample_indices(n, k.max(2));
+        let strategies: Vec<Box<dyn Aggregate>> = vec![
+            Box::new(FedAvgServer),
+            Box::new(RingRdfl),
+            Box::new(AllToAll),
+        ];
+        for mut s in strategies {
+            let mut states = random_states(n, p, &mut rng.fork(1));
+            let (want, _) = mean_of(&states, &agg_idx);
+            let mut b = bundle(p);
+            let mut ctx = AggCtx {
+                fabric: &b.fabric,
+                clock: &mut b.clock,
+                rng,
+                runtime: None,
+                model: &b.model,
+            };
+            s.aggregate(&mut states, &agg_idx, &mut ctx).unwrap();
+            let (got, _) = mean_of(&states, &agg_idx);
+            for (g, w) in got.iter().zip(&want) {
+                if (g - w).abs() > 1e-4 {
+                    return Err(format!(
+                        "{}: mean moved by {}",
+                        s.name(),
+                        (g - w).abs()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// MAR preserves the subset mean and strictly contracts distortion, for
+/// random N, M, G (approximate mode included).
+#[test]
+fn property_mar_contracts_distortion_and_preserves_mean() {
+    check("mar_contraction", 16, 40, |rng, Size(sz)| {
+        let n = (sz + 6).min(46);
+        let m = 2 + rng.below(3); // M in 2..=4
+        let g = 2 + rng.below(3); // G in 2..=4
+        let p = 8;
+        let mut states = random_states(n, p, &mut rng.fork(2));
+        let agg: Vec<usize> = (0..n).collect();
+        let (want, _) = mean_of(&states, &agg);
+        let before = avg_distortion(
+            &states.iter().map(|s| s.theta.clone()).collect::<Vec<_>>(),
+        );
+        let ledger = Arc::new(CommLedger::new());
+        let mut mar = MarAggregator::new(n, m, g, ledger.clone(), rng.next_u64());
+        let mut b = bundle(p);
+        let mut ctx = AggCtx {
+            fabric: &b.fabric,
+            clock: &mut b.clock,
+            rng,
+            runtime: None,
+            model: &b.model,
+        };
+        mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        let after = avg_distortion(
+            &states.iter().map(|s| s.theta.clone()).collect::<Vec<_>>(),
+        );
+        let (got, _) = mean_of(&states, &agg);
+        for (gv, wv) in got.iter().zip(&want) {
+            if (gv - wv).abs() > 1e-4 {
+                return Err(format!("mean moved by {}", (gv - wv).abs()));
+            }
+        }
+        if before > 1e-9 && after > before * 0.9 {
+            return Err(format!(
+                "no contraction: {before:.4} -> {after:.4} (n={n} m={m} g={g})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// MAR transfer count stays within the O(N·G·(M−1)) envelope for random
+/// configurations — the routing invariant behind Figure 1.
+#[test]
+fn property_mar_transfer_count_bounded() {
+    check("mar_transfer_bound", 16, 40, |rng, Size(sz)| {
+        let n = (sz + 6).min(46);
+        let m = 2 + rng.below(4);
+        let g = 1 + rng.below(4);
+        let p = 4;
+        let mut states = random_states(n, p, &mut rng.fork(3));
+        let agg: Vec<usize> = (0..n).collect();
+        let ledger = Arc::new(CommLedger::new());
+        let mut mar = MarAggregator::new(n, m, g, ledger, rng.next_u64());
+        let b2 = bundle(p);
+        let mut clock = SimClock::new();
+        let mut ctx = AggCtx {
+            fabric: &b2.fabric,
+            clock: &mut clock,
+            rng,
+            runtime: None,
+            model: &b2.model,
+        };
+        mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        let msgs = b2.ledger.snapshot().data_msgs as usize;
+        let bound = n * g * (m - 1);
+        if msgs > bound {
+            return Err(format!(
+                "transfers {msgs} exceed N·G·(M−1) = {bound} (n={n} m={m} g={g})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Churn sampling invariants: participant sets are distinct, within
+/// range, and aggregator sets are subsets of participants.
+#[test]
+fn property_churn_sets_well_formed() {
+    check("churn_sets", 40, 60, |rng, Size(sz)| {
+        let n = sz.max(3);
+        let participation = 0.2 + rng.f64() * 0.8;
+        let dropout = rng.f64() * 0.9;
+        let churn = ChurnModel::new(participation, dropout);
+        let u = churn.sample_participants(n, rng);
+        if u.is_empty() || u.len() > n {
+            return Err(format!("bad participant count {}", u.len()));
+        }
+        let mut sorted = u.clone();
+        sorted.dedup();
+        if sorted.len() != u.len() {
+            return Err("duplicate participants".into());
+        }
+        let a = churn.sample_aggregators(&u, rng);
+        if !a.iter().all(|x| u.contains(x)) {
+            return Err("aggregator not a participant".into());
+        }
+        if u.len() >= 2 && a.len() < 2 {
+            return Err("fewer than 2 aggregators despite 2+ participants".into());
+        }
+        Ok(())
+    });
+}
+
+/// The ledger's data-byte count for MAR scales ~N·log(N) while AR-FL
+/// scales ~N²: check the growth *ratio* between two sizes.
+#[test]
+fn property_scaling_shape() {
+    let transfers = |n: usize, m: usize, g: usize, seed: u64| {
+        let p = 4;
+        let mut rng = Rng::new(seed);
+        let mut states = random_states(n, p, &mut rng);
+        let agg: Vec<usize> = (0..n).collect();
+        let ledger = Arc::new(CommLedger::new());
+        let mut mar = MarAggregator::new(n, m, g, ledger, seed);
+        let b = bundle(p);
+        let mut clock = SimClock::new();
+        let mut ctx = AggCtx {
+            fabric: &b.fabric,
+            clock: &mut clock,
+            rng: &mut rng,
+            runtime: None,
+            model: &b.model,
+        };
+        mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        b.ledger.snapshot().data_msgs as f64
+    };
+    // 16 = 4^2 -> G=2 ; 64 = 4^3 -> G=3
+    let small = transfers(16, 4, 2, 1);
+    let large = transfers(64, 4, 3, 2);
+    let mar_growth = large / small;
+    // MAR: 16·2·3 = 96 -> 64·3·3 = 576: growth 6×. AR-FL would grow
+    // 16·15=240 -> 64·63=4032: 16.8×. Assert MAR's growth is far below
+    // quadratic growth.
+    assert!(
+        mar_growth < 8.0,
+        "MAR growth {mar_growth} looks superlinear"
+    );
+    let quadratic_growth = (64.0 * 63.0) / (16.0 * 15.0);
+    assert!(mar_growth < quadratic_growth / 2.0);
+}

@@ -1,0 +1,352 @@
+//! End-to-end trainer integration: the paper's qualitative claims at
+//! miniature scale (head task, 8–16 peers, a few iterations).
+
+use marfl::config::{ExperimentConfig, Strategy};
+use marfl::fl::Trainer;
+use marfl::models::default_artifact_dir;
+use marfl::runtime::Runtime;
+use marfl::testing::assert_allclose;
+
+fn runtime() -> Runtime {
+    let dir = default_artifact_dir();
+    assert!(
+        dir.join("meta.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    Runtime::new(&dir).expect("runtime")
+}
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        model: "head".into(),
+        peers: 8,
+        iterations: 4,
+        group_size: 2,
+        mar_rounds: 0, // auto: 2^3 = 8 -> 3 rounds
+        samples_per_peer: 32,
+        test_samples: 250,
+        eval_every: 2,
+        seed: 99,
+        ..Default::default()
+    }
+}
+
+/// Figure 5 in miniature: with full participation and exact-grid MAR, all
+/// four techniques yield identical global averages, hence identical
+/// consensus models given identical local updates.
+#[test]
+fn all_strategies_identical_under_exact_aggregation() {
+    let rt = runtime();
+    let mut finals: Vec<(String, Vec<f32>)> = Vec::new();
+    for strategy in [
+        Strategy::MarFl,
+        Strategy::FedAvg,
+        Strategy::Rdfl,
+        Strategy::ArFl,
+    ] {
+        let cfg = ExperimentConfig { strategy, ..base_cfg() };
+        let mut trainer = Trainer::new(cfg, &rt).unwrap();
+        trainer.run().unwrap();
+        let consensus = {
+            let states = trainer.states();
+            let all: Vec<usize> = (0..states.len()).collect();
+            marfl::aggregation::mean_of(states, &all).0
+        };
+        finals.push((strategy.name().to_string(), consensus));
+    }
+    let (ref_name, ref_theta) = &finals[0];
+    for (name, theta) in &finals[1..] {
+        assert_allclose(theta, ref_theta, 1e-3, 1e-4);
+        eprintln!("{name} matches {ref_name}");
+    }
+}
+
+/// Figure 1 in miniature: per-iteration data bytes obey
+/// FedAvg < MAR-FL << RDFL ≈ AR-FL.
+#[test]
+fn communication_ordering_matches_paper() {
+    let rt = runtime();
+    let mut bytes = std::collections::BTreeMap::new();
+    for strategy in [
+        Strategy::MarFl,
+        Strategy::FedAvg,
+        Strategy::Rdfl,
+        Strategy::ArFl,
+    ] {
+        let cfg = ExperimentConfig {
+            strategy,
+            peers: 16,
+            group_size: 4, // 16 = 4^2
+            iterations: 2,
+            ..base_cfg()
+        };
+        let mut trainer = Trainer::new(cfg, &rt).unwrap();
+        let summary = trainer.run().unwrap();
+        bytes.insert(strategy.name(), summary.comm.data_bytes);
+    }
+    assert!(bytes["fedavg"] < bytes["marfl"], "{bytes:?}");
+    assert!(bytes["marfl"] < bytes["rdfl"], "{bytes:?}");
+    assert!(bytes["marfl"] < bytes["arfl"], "{bytes:?}");
+    // N=16, M=4, G=2: MAR = N·G·(M−1) = 96 transfers vs N(N−1) = 240
+    let ratio = bytes["rdfl"] as f64 / bytes["marfl"] as f64;
+    assert!(
+        (1.5..6.0).contains(&ratio),
+        "RDFL/MAR ratio {ratio} out of range (expect ~2.5 at N=16)"
+    );
+}
+
+/// Training makes progress: accuracy well above chance after a few
+/// iterations on the head task.
+#[test]
+fn marfl_training_beats_chance() {
+    let rt = runtime();
+    let cfg = ExperimentConfig {
+        iterations: 10,
+        samples_per_peer: 64,
+        ..base_cfg()
+    };
+    let mut trainer = Trainer::new(cfg, &rt).unwrap();
+    let summary = trainer.run().unwrap();
+    // 20 classes -> chance 5%
+    assert!(
+        summary.final_accuracy > 0.25,
+        "accuracy {} barely above chance",
+        summary.final_accuracy
+    );
+    // loss decreased along the curve
+    let first = summary.curve.points.first().unwrap().loss;
+    let last = summary.curve.points.last().unwrap().loss;
+    assert!(last < first, "loss {first} -> {last}");
+}
+
+/// Dropout resilience (Figure 3): 20% dropout must not collapse accuracy
+/// relative to the no-churn run.
+#[test]
+fn dropout_does_not_collapse_training() {
+    let rt = runtime();
+    let clean = {
+        let cfg = ExperimentConfig { iterations: 8, ..base_cfg() };
+        Trainer::new(cfg, &rt).unwrap().run().unwrap()
+    };
+    let churned = {
+        let cfg = ExperimentConfig { iterations: 8, dropout: 0.2, ..base_cfg() };
+        Trainer::new(cfg, &rt).unwrap().run().unwrap()
+    };
+    assert!(
+        churned.final_accuracy > clean.final_accuracy - 0.15,
+        "dropout collapsed training: {} vs {}",
+        churned.final_accuracy,
+        clean.final_accuracy
+    );
+}
+
+/// Moshpit-KD runs and the trainer still learns (Figure 2 machinery).
+#[test]
+fn kd_enabled_trains_and_books_extra_comm() {
+    let rt = runtime();
+    let mut plain_cfg = ExperimentConfig { iterations: 4, ..base_cfg() };
+    plain_cfg.kd.enabled = false;
+    let plain = Trainer::new(plain_cfg, &rt).unwrap().run().unwrap();
+
+    let mut kd_cfg = ExperimentConfig { iterations: 4, ..base_cfg() };
+    kd_cfg.kd.enabled = true;
+    kd_cfg.kd.k_iterations = 2;
+    let kd = Trainer::new(kd_cfg, &rt).unwrap().run().unwrap();
+
+    assert!(
+        kd.comm.data_bytes > plain.comm.data_bytes,
+        "MKD must increase per-iteration load: {} vs {}",
+        kd.comm.data_bytes,
+        plain.comm.data_bytes
+    );
+    assert!(kd.final_accuracy > 0.10, "KD run failed to learn");
+}
+
+/// DP runs end to end: ε accounted, training degrades gracefully rather
+/// than diverging (Figure 4 machinery).
+#[test]
+fn dp_training_accounts_epsilon() {
+    let rt = runtime();
+    let mut cfg = ExperimentConfig { iterations: 6, ..base_cfg() };
+    cfg.dp.enabled = true;
+    cfg.dp.noise_multiplier = 0.3;
+    let mut trainer = Trainer::new(cfg, &rt).unwrap();
+    let summary = trainer.run().unwrap();
+    let eps = summary.epsilon.expect("epsilon must be reported");
+    assert!(eps > 0.0 && eps.is_finite());
+    assert!(summary.final_loss.is_finite());
+    // same T, more noise -> smaller ε
+    let mut cfg2 = ExperimentConfig { iterations: 6, ..base_cfg() };
+    cfg2.dp.enabled = true;
+    cfg2.dp.noise_multiplier = 0.6;
+    let summary2 = Trainer::new(cfg2, &rt).unwrap().run().unwrap();
+    assert!(
+        summary2.epsilon.unwrap() < eps,
+        "more noise must mean less privacy loss"
+    );
+}
+
+/// Partial participation degrades utility but the system keeps working
+/// (Figure 3's main axis).
+#[test]
+fn partial_participation_trains_with_less_comm() {
+    let rt = runtime();
+    let full = {
+        let cfg = ExperimentConfig { iterations: 6, ..base_cfg() };
+        Trainer::new(cfg, &rt).unwrap().run().unwrap()
+    };
+    let half = {
+        let cfg = ExperimentConfig {
+            iterations: 6,
+            participation: 0.5,
+            ..base_cfg()
+        };
+        Trainer::new(cfg, &rt).unwrap().run().unwrap()
+    };
+    assert!(
+        half.comm.data_bytes < full.comm.data_bytes,
+        "fewer participants must mean less traffic"
+    );
+    assert!(half.final_loss.is_finite());
+}
+
+/// MAR control plane exists and stays far below the data plane.
+#[test]
+fn control_plane_negligible_in_real_run() {
+    let rt = runtime();
+    let cfg = ExperimentConfig { iterations: 4, model: "cnn".into(), ..base_cfg() };
+    let mut trainer = Trainer::new(cfg, &rt).unwrap();
+    let summary = trainer.run().unwrap();
+    assert!(summary.comm.control_bytes > 0);
+    assert!(summary.dht_hops.unwrap() > 0);
+    assert!(
+        summary.comm.control_bytes * 5 < summary.comm.data_bytes,
+        "control {} vs data {}",
+        summary.comm.control_bytes,
+        summary.comm.data_bytes
+    );
+}
+
+/// BAR (Appendix B.3): byte-optimal but leaves the non-power-of-two
+/// remainder of A_t stale — measurably less traffic than MAR-FL, and
+/// with 12 peers only 8 aggregate.
+#[test]
+fn bar_cheap_but_excludes_stragglers() {
+    let rt = runtime();
+    let run = |strategy| {
+        let cfg = ExperimentConfig {
+            strategy,
+            peers: 12, // not a power of two: butterfly covers 8
+            group_size: 2,
+            mar_rounds: 4,
+            iterations: 3,
+            ..base_cfg()
+        };
+        let mut t = Trainer::new(cfg, &rt).unwrap();
+        let s = t.run().unwrap();
+        // spread of per-peer states: BAR leaves 4 peers un-aggregated
+        let states = t.states();
+        let all: Vec<usize> = (0..states.len()).collect();
+        let thetas: Vec<Vec<f32>> =
+            states.iter().map(|st| st.theta.clone()).collect();
+        let _ = all;
+        (s, marfl::coordinator::mixing::avg_distortion(&thetas))
+    };
+    let (bar, bar_spread) = run(Strategy::Bar);
+    let (mar, mar_spread) = run(Strategy::MarFl);
+    assert!(
+        bar.comm.data_bytes < mar.comm.data_bytes,
+        "BAR must be cheaper on the wire: {} vs {}",
+        bar.comm.data_bytes,
+        mar.comm.data_bytes
+    );
+    // MAR reaches (near-)consensus across ALL peers; BAR leaves the
+    // stragglers far from it
+    assert!(
+        bar_spread > mar_spread * 5.0,
+        "BAR should leave stragglers dispersed: {bar_spread:.2e} vs {mar_spread:.2e}"
+    );
+}
+
+/// Kitchen sink: KD + DP + partial participation + dropout + approximate
+/// aggregation all composed in one run — everything stays finite and the
+/// books balance.
+#[test]
+fn kitchen_sink_composition() {
+    let rt = runtime();
+    let mut cfg = ExperimentConfig {
+        peers: 20, // no perfect grid -> approximate mode
+        group_size: 3,
+        mar_rounds: 3,
+        iterations: 6,
+        participation: 0.8,
+        dropout: 0.1,
+        ..base_cfg()
+    };
+    cfg.kd.enabled = true;
+    cfg.kd.k_iterations = 2;
+    cfg.dp.enabled = true;
+    cfg.dp.noise_multiplier = 0.3;
+    let mut trainer = Trainer::new(cfg, &rt).unwrap();
+    let summary = trainer.run().unwrap();
+    assert!(summary.final_loss.is_finite());
+    assert!(summary.epsilon.unwrap().is_finite());
+    assert!(summary.comm.data_bytes > 0);
+    assert!(summary.comm.control_bytes > 0);
+    assert!(summary.sim_time_s > 0.0);
+    // every peer state stayed finite and correctly shaped
+    for st in trainer.states() {
+        assert_eq!(st.theta.len(), trainer.model().padded_len);
+        assert_eq!(st.momentum.len(), trainer.model().padded_len);
+        assert!(st.theta.iter().all(|v| v.is_finite()));
+    }
+}
+
+/// Reduce-scatter ablation: same exactness, ~M/2 x less group traffic.
+#[test]
+fn reduce_scatter_mode_trains_identically() {
+    let rt = runtime();
+    // M=4 groups: RS moves 2(k−1)/k = 1.5 state-equivalents per member
+    // vs full-gather's k−1 = 3 (M=2 would be the degenerate break-even)
+    let cfg16 = ExperimentConfig {
+        peers: 16,
+        group_size: 4,
+        mar_rounds: 2,
+        iterations: 4,
+        ..base_cfg()
+    };
+    let full = {
+        let cfg = cfg16.clone();
+        Trainer::new(cfg, &rt).unwrap().run().unwrap()
+    };
+    let rs = {
+        let cfg = ExperimentConfig { reduce_scatter: true, ..cfg16 };
+        Trainer::new(cfg, &rt).unwrap().run().unwrap()
+    };
+    assert!(
+        rs.comm.data_bytes < full.comm.data_bytes,
+        "reduce-scatter must cut traffic"
+    );
+    // exact aggregation either way -> same learning trajectory
+    assert!((rs.final_accuracy - full.final_accuracy).abs() < 1e-6);
+}
+
+/// Deterministic reproducibility: same seed, same run.
+#[test]
+fn runs_are_reproducible() {
+    let rt = runtime();
+    let run = |seed: u64| {
+        let cfg = ExperimentConfig { iterations: 4, seed, ..base_cfg() };
+        Trainer::new(cfg, &rt).unwrap().run().unwrap()
+    };
+    let a = run(7);
+    let b = run(7);
+    let c = run(8);
+    assert_eq!(a.comm.data_bytes, b.comm.data_bytes);
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    // a different seed changes the data -> different outcome
+    assert!(
+        (a.final_accuracy - c.final_accuracy).abs() > 1e-9
+            || a.final_loss != c.final_loss
+    );
+}
