@@ -1,0 +1,40 @@
+# MAR-FL build orchestration.
+#
+# Tier-1 verify: `make verify` (== cargo build --release && cargo test -q).
+# Artifacts (AOT-lowered HLO for the optional PJRT backend) are built by
+# `make artifacts`; the default cargo build needs neither Python nor XLA —
+# it runs the pure-Rust native backend (see EXPERIMENTS.md §Perf).
+
+CARGO ?= cargo
+PYTHON ?= python3
+ARTIFACTS ?= artifacts
+
+.PHONY: build test verify bench bench-micro artifacts fmt clippy clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+verify: build test
+
+bench:
+	$(CARGO) bench
+
+# Hot-path micro benchmark; writes rust/results/BENCH_micro.json
+# (machine-readable perf trajectory, tracked across PRs).
+bench-micro:
+	$(CARGO) bench --bench micro_hotpath
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
+
+fmt:
+	$(CARGO) fmt --all --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+clean:
+	$(CARGO) clean

@@ -24,12 +24,10 @@ pub fn results_dir() -> PathBuf {
 }
 
 pub fn runtime() -> Runtime {
-    let dir = default_artifact_dir();
-    assert!(
-        dir.join("meta.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    Runtime::new(&dir).expect("PJRT runtime")
+    // artifacts + PJRT when available, native backend otherwise
+    let rt = Runtime::new(&default_artifact_dir()).expect("runtime");
+    println!("[bench] compute backend: {}", rt.backend_name());
+    rt
 }
 
 pub fn mib(bytes: u64) -> f64 {

@@ -1,24 +1,47 @@
 //! Micro benchmarks of the hot paths (perf instrument for EXPERIMENTS.md
 //! §Perf):
 //!
-//! * PJRT step latencies (train / logits / kd / eval) — the compute floor.
-//! * Within-group averaging: Pallas `group_mean` artifact vs the native
+//! * runtime step latencies (train / logits / kd / eval) — the compute
+//!   floor of whichever backend the build selects (native or PJRT).
+//! * Within-group averaging: group-mean kernel vs the strip-mined native
 //!   f64 path (ablation: which should `average_group` prefer?).
-//! * Full 125-peer MAR aggregation (native) — the coordinator's own cost.
-//! * DHT matchmaking round — the control-plane cost.
+//! * Full 125-peer MAR aggregation — the coordinator's own cost.
+//! * Serial vs parallel round engine at N = 125 / 343 / 1000 — the
+//!   scaling sweep behind the parallel-engine acceptance numbers.
+//!
+//! Emits `results/BENCH_micro.json` (machine-readable, one row per bench)
+//! so the perf trajectory is tracked across PRs.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{bench_ns, runtime, SynthBundle};
+use common::{bench_ns, emit_csv, runtime, SynthBundle};
 use marfl::aggregation::{average_group, Aggregate};
 use marfl::coordinator::MarAggregator;
 use marfl::data::synth;
+use marfl::exec;
+use marfl::metrics::write_json;
 use marfl::rng::Rng;
+use marfl::util::json::{arr, num, obj, s, Json};
+
+/// Collected (name, µs/op) rows for BENCH_micro.json.
+struct Rows(Vec<(String, f64)>);
+
+impl Rows {
+    fn bench(&mut self, label: &str, warmup: usize, reps: usize, f: impl FnMut()) {
+        let ns = bench_ns(label, warmup, reps, f);
+        self.0.push((label.to_string(), ns / 1e3));
+    }
+}
 
 fn main() {
     let rt = runtime();
-    println!("micro_hotpath — PJRT entry points\n");
+    let mut rows = Rows(Vec::new());
+    println!(
+        "micro_hotpath — backend: {}, MARFL_THREADS={}\n",
+        rt.backend_name(),
+        exec::threads()
+    );
     let m = rt.meta.model("cnn").unwrap().clone();
     let h = rt.meta.model("head").unwrap().clone();
     let mut rng = Rng::new(42);
@@ -37,20 +60,20 @@ fn main() {
     let (xe, ye) = data_h.gather(&idx_e);
     let zbar = vec![0.0f32; h.batch * h.classes];
 
-    bench_ns("cnn train_step (B=64)", 3, 20, || {
+    rows.bench("cnn train_step (B=64)", 3, 20, || {
         rt.train_step(&m, &theta, &mom, &x, &y, 0.1, 0.9).unwrap();
     });
-    bench_ns("head train_step (B=16)", 3, 30, || {
+    rows.bench("head train_step (B=16)", 3, 30, || {
         rt.train_step(&h, &theta_h, &mom_h, &xh, &yh, 0.1, 0.9).unwrap();
     });
-    bench_ns("head logits (KD teacher fwd)", 3, 30, || {
+    rows.bench("head logits (KD teacher fwd)", 3, 30, || {
         rt.logits(&h, &theta_h, &xh).unwrap();
     });
-    bench_ns("head kd_step", 3, 30, || {
+    rows.bench("head kd_step", 3, 30, || {
         rt.kd_step(&h, &theta_h, &mom_h, &xh, &yh, &zbar, 0.5, 0.1, 0.9)
             .unwrap();
     });
-    bench_ns("head eval chunk (E=250)", 3, 20, || {
+    rows.bench("head eval chunk (E=250)", 3, 20, || {
         rt.evaluate(&h, &theta_h, &xe, &ye).unwrap();
     });
 
@@ -58,14 +81,14 @@ fn main() {
     let k = 5usize;
     let stack: Vec<f32> =
         (0..k * m.padded_len).map(|_| rng.normal() as f32).collect();
-    bench_ns("group_mean via Pallas artifact (PJRT)", 3, 30, || {
+    rows.bench("group_mean via runtime kernel", 3, 30, || {
         rt.group_mean(&m, &stack, k).unwrap();
     });
     {
         let mut b = SynthBundle::new(m.padded_len);
         let mut states = b.states(k);
         let members: Vec<usize> = (0..k).collect();
-        bench_ns("group average native (f64 accumulate)", 3, 30, || {
+        rows.bench("group average native (f64 accumulate)", 3, 30, || {
             let mut ctx = b.ctx();
             average_group(&mut states, &members, &mut ctx).unwrap();
         });
@@ -77,7 +100,7 @@ fn main() {
         let mut states = b.states(125);
         let agg: Vec<usize> = (0..125).collect();
         let mut mar = MarAggregator::new(125, 5, 3, b.ledger.clone(), 5);
-        bench_ns("MAR aggregate 125 peers (native, M=5 G=3)", 1, 5, || {
+        rows.bench("MAR aggregate 125 peers (native, M=5 G=3)", 1, 5, || {
             let mut ctx = b.ctx();
             mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
         });
@@ -87,9 +110,86 @@ fn main() {
         let mut states = b.states(125);
         let agg: Vec<usize> = (0..125).collect();
         let mut mar = MarAggregator::new(125, 5, 3, b.ledger.clone(), 6);
-        bench_ns("MAR matchmaking+avg 125 peers (tiny vectors)", 1, 5, || {
+        rows.bench("MAR matchmaking+avg 125 peers (tiny vectors)", 1, 5, || {
             let mut ctx = b.ctx();
             mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
         });
     }
+
+    println!("\nserial vs parallel round engine (perfect grids, G=3)\n");
+    let mut scaling_csv = vec![vec![
+        "peers".into(),
+        "padded_len".into(),
+        "serial_us".into(),
+        "parallel_us".into(),
+        "speedup".into(),
+    ]];
+    // (N, M, padded_len): 125 = 5³ at full cnn size; the larger sweeps use
+    // a reduced vector so the bench stays RAM-friendly at N=1000
+    for &(n, m_sz, p) in &[(125usize, 5usize, 18432usize), (343, 7, 4096), (1000, 10, 4096)]
+    {
+        let reps = if n >= 1000 { 3 } else { 5 };
+        let serial_us = {
+            let mut b = SynthBundle::new(p);
+            let mut states = b.states(n);
+            let agg: Vec<usize> = (0..n).collect();
+            let mut mar = MarAggregator::new(n, m_sz, 3, b.ledger.clone(), 5)
+                .with_parallel(false);
+            let ns = bench_ns(
+                &format!("MAR aggregate N={n} P={p} serial"),
+                1,
+                reps,
+                || {
+                    let mut ctx = b.ctx();
+                    mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+                },
+            );
+            ns / 1e3
+        };
+        let parallel_us = {
+            let mut b = SynthBundle::new(p);
+            let mut states = b.states(n);
+            let agg: Vec<usize> = (0..n).collect();
+            let mut mar = MarAggregator::new(n, m_sz, 3, b.ledger.clone(), 5);
+            let ns = bench_ns(
+                &format!("MAR aggregate N={n} P={p} parallel"),
+                1,
+                reps,
+                || {
+                    let mut ctx = b.ctx();
+                    mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+                },
+            );
+            ns / 1e3
+        };
+        let speedup = serial_us / parallel_us;
+        println!("  N={n:<5} speedup {speedup:.2}x");
+        rows.0.push((format!("MAR aggregate N={n} P={p} serial"), serial_us));
+        rows.0
+            .push((format!("MAR aggregate N={n} P={p} parallel"), parallel_us));
+        scaling_csv.push(vec![
+            n.to_string(),
+            p.to_string(),
+            format!("{serial_us:.1}"),
+            format!("{parallel_us:.1}"),
+            format!("{speedup:.2}"),
+        ]);
+    }
+    emit_csv("micro_scaling.csv", &scaling_csv);
+
+    // machine-readable perf trajectory (BENCH_micro.json)
+    let results: Vec<Json> = rows
+        .0
+        .iter()
+        .map(|(name, us)| obj(vec![("name", s(name)), ("us_per_op", num(*us))]))
+        .collect();
+    let doc = obj(vec![
+        ("bench", s("micro_hotpath")),
+        ("backend", s(rt.backend_name())),
+        ("threads", num(exec::threads() as f64)),
+        ("results", arr(results)),
+    ]);
+    let path = common::results_dir().join("BENCH_micro.json");
+    write_json(&path, &doc).expect("write BENCH_micro.json");
+    println!("\n  -> {}", path.display());
 }

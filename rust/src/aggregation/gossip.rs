@@ -45,29 +45,39 @@ impl Aggregate for Gossip {
             return Ok(AggReport::default());
         }
         let bytes = payload_bytes(states, agg);
+        // pull targets are drawn serially (deterministic rng schedule),
+        // then the per-peer merges fan out: each lane mutates only its
+        // own peer and reads the shared round-start snapshot
+        let pulls: Vec<Vec<usize>> = (0..n)
+            .map(|slot| {
+                (0..self.fanout)
+                    // pull from a uniformly random *other* peer
+                    .map(|_| (slot + 1 + ctx.rng.below(n - 1)) % n)
+                    .collect()
+            })
+            .collect();
         // snapshot: pulls within one round all see round-start models
         let snapshot: Vec<(Vec<f32>, Vec<f32>)> = agg
             .iter()
             .map(|&i| (states[i].theta.clone(), states[i].momentum.clone()))
             .collect();
-        let mut lane_times = Vec::with_capacity(n);
-        for (slot, &peer) in agg.iter().enumerate() {
-            let mut lane = 0.0;
-            for _ in 0..self.fanout {
-                // pull from a uniformly random *other* peer
-                let other = (slot + 1 + ctx.rng.below(n - 1)) % n;
-                lane += ctx.fabric.send(bytes, Plane::Data);
-                let (ot, om) = &snapshot[other];
-                // merge: equal-weight average of own and pulled state
-                for (dst, &v) in states[peer].theta.iter_mut().zip(ot) {
-                    *dst = 0.5 * (*dst + v);
+        let fabric = ctx.fabric;
+        let lane_times =
+            crate::exec::par_map_at(states, agg, |slot, st| {
+                let mut lane = 0.0;
+                for &other in &pulls[slot] {
+                    lane += fabric.send(bytes, Plane::Data);
+                    let (ot, om) = &snapshot[other];
+                    // merge: equal-weight average of own and pulled state
+                    for (dst, &v) in st.theta.iter_mut().zip(ot) {
+                        *dst = 0.5 * (*dst + v);
+                    }
+                    for (dst, &v) in st.momentum.iter_mut().zip(om) {
+                        *dst = 0.5 * (*dst + v);
+                    }
                 }
-                for (dst, &v) in states[peer].momentum.iter_mut().zip(om) {
-                    *dst = 0.5 * (*dst + v);
-                }
-            }
-            lane_times.push(lane);
-        }
+                lane
+            })?;
         ctx.clock.parallel(lane_times);
         Ok(AggReport { rounds: 1, groups: n })
     }

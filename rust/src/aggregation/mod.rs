@@ -105,8 +105,81 @@ pub trait Aggregate {
 }
 
 // ---------------------------------------------------------------------
-// Shared vector math
+// Shared vector math — the averaging hot path
 // ---------------------------------------------------------------------
+//
+// All strategies reduce to element-wise means over selected peer vectors.
+// The kernel below strip-mines the output into cache-resident chunks and
+// accumulates each chunk in a reusable per-thread f64 scratch buffer, so
+// the steady state performs zero heap allocations and the inner loop is a
+// plain `f64 += f32 as f64` stream the compiler auto-vectorizes. Because
+// every output element still sums its inputs in member order, the result
+// is bit-identical to the naive full-vector accumulation regardless of
+// strip width or thread count — the property the parallel round engine's
+// determinism tests pin down.
+
+/// Output strip width (f32 elements). The f64 scratch for one strip is
+/// 32 KiB — resident in L1/L2 while every member's strip streams through.
+const MEAN_STRIPE: usize = 4096;
+
+thread_local! {
+    /// Per-thread f64 accumulator, reused across calls (allocation-free
+    /// steady state).
+    static MEAN_ACC: std::cell::RefCell<Vec<f64>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+    /// Per-thread canonical result buffers for in-place group averaging.
+    static GROUP_BUF: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Mean one output strip: `out` is the strip at offset `off` of the full
+/// result; `row(k)` yields the k-th full input vector.
+fn stripe_mean_into<'a>(
+    rows: usize,
+    row: impl Fn(usize) -> &'a [f32],
+    off: usize,
+    out: &mut [f32],
+    inv: f64,
+) {
+    MEAN_ACC.with(|acc| {
+        let mut acc = acc.borrow_mut();
+        acc.clear();
+        acc.resize(out.len(), 0.0);
+        for r in 0..rows {
+            let src = &row(r)[off..off + out.len()];
+            for (a, &v) in acc.iter_mut().zip(src) {
+                *a += v as f64;
+            }
+        }
+        for (dst, &a) in out.iter_mut().zip(acc.iter()) {
+            *dst = (a * inv) as f32;
+        }
+    });
+}
+
+/// Write the element-wise mean of `rows` vectors into `out` (all length
+/// `out.len()`), f64 strip accumulation. With `parallel`, large outputs
+/// are split across the `exec` pool (bit-identical: strips are
+/// independent and each element keeps its member-order sum).
+pub fn mean_indexed_into<'a, F>(rows: usize, row: F, out: &mut [f32], parallel: bool)
+where
+    F: Fn(usize) -> &'a [f32] + Sync,
+{
+    assert!(rows > 0, "mean of zero rows");
+    let inv = 1.0 / rows as f64;
+    if parallel && out.len() >= 2 * MEAN_STRIPE && crate::exec::threads() > 1 {
+        use rayon::prelude::*;
+        crate::exec::pool().install(|| {
+            out.par_chunks_mut(MEAN_STRIPE).enumerate().for_each(|(ci, chunk)| {
+                stripe_mean_into(rows, &row, ci * MEAN_STRIPE, chunk, inv);
+            });
+        });
+    } else {
+        for (ci, chunk) in out.chunks_mut(MEAN_STRIPE).enumerate() {
+            stripe_mean_into(rows, &row, ci * MEAN_STRIPE, chunk, inv);
+        }
+    }
+}
 
 /// Native mean of the selected peers' (θ, m), f64 accumulation. The
 /// momentum vector may be longer than θ (DP packs extra averaged
@@ -115,23 +188,125 @@ pub fn mean_of(states: &[PeerState], members: &[usize]) -> (Vec<f32>, Vec<f32>) 
     assert!(!members.is_empty());
     let p = states[members[0]].theta.len();
     let q = states[members[0]].momentum.len();
-    let mut theta = vec![0.0f64; p];
-    let mut mom = vec![0.0f64; q];
     for &i in members {
         assert_eq!(states[i].theta.len(), p, "ragged theta lengths");
         assert_eq!(states[i].momentum.len(), q, "ragged momentum lengths");
-        for (a, &v) in theta.iter_mut().zip(&states[i].theta) {
-            *a += v as f64;
-        }
-        for (a, &v) in mom.iter_mut().zip(&states[i].momentum) {
-            *a += v as f64;
+    }
+    let mut theta = vec![0.0f32; p];
+    let mut mom = vec![0.0f32; q];
+    mean_indexed_into(
+        members.len(),
+        |k| states[members[k]].theta.as_slice(),
+        &mut theta,
+        true,
+    );
+    mean_indexed_into(
+        members.len(),
+        |k| states[members[k]].momentum.as_slice(),
+        &mut mom,
+        true,
+    );
+    (theta, mom)
+}
+
+/// How a group's member states are accessed during in-place averaging —
+/// one body ([`average_rows`]) serves both the slice+indices shape
+/// (serial engine) and the exclusive-views shape handed out by
+/// `exec::par_disjoint_map` (parallel lanes). `Sync` because the mean
+/// kernel's row accessor closure must be shareable.
+trait GroupRows: Sync {
+    fn rows(&self) -> usize;
+    fn theta(&self, k: usize) -> &[f32];
+    fn momentum(&self, k: usize) -> &[f32];
+    /// Broadcast the canonical mean back into every member.
+    fn write_all(&mut self, theta: &[f32], mom: &[f32]);
+}
+
+struct SliceRows<'a> {
+    states: &'a mut [PeerState],
+    members: &'a [usize],
+}
+
+impl GroupRows for SliceRows<'_> {
+    fn rows(&self) -> usize {
+        self.members.len()
+    }
+    fn theta(&self, k: usize) -> &[f32] {
+        &self.states[self.members[k]].theta
+    }
+    fn momentum(&self, k: usize) -> &[f32] {
+        &self.states[self.members[k]].momentum
+    }
+    fn write_all(&mut self, theta: &[f32], mom: &[f32]) {
+        for &i in self.members {
+            self.states[i].theta.copy_from_slice(theta);
+            self.states[i].momentum.copy_from_slice(mom);
         }
     }
-    let inv = 1.0 / members.len() as f64;
-    (
-        theta.iter().map(|&v| (v * inv) as f32).collect(),
-        mom.iter().map(|&v| (v * inv) as f32).collect(),
-    )
+}
+
+struct ViewRows<'a, 'b> {
+    views: &'a mut [&'b mut PeerState],
+}
+
+impl GroupRows for ViewRows<'_, '_> {
+    fn rows(&self) -> usize {
+        self.views.len()
+    }
+    fn theta(&self, k: usize) -> &[f32] {
+        &self.views[k].theta
+    }
+    fn momentum(&self, k: usize) -> &[f32] {
+        &self.views[k].momentum
+    }
+    fn write_all(&mut self, theta: &[f32], mom: &[f32]) {
+        for v in self.views.iter_mut() {
+            v.theta.copy_from_slice(theta);
+            v.momentum.copy_from_slice(mom);
+        }
+    }
+}
+
+/// In-place group average: the mean lands in one canonical per-thread
+/// buffer and is broadcast to every member. No heap allocation after
+/// thread warmup. Serial striping (used inside group-parallel lanes,
+/// where the outer fan-out owns the cores).
+fn average_rows<R: GroupRows>(rows: &mut R) {
+    let n = rows.rows();
+    if n < 2 {
+        return;
+    }
+    let p = rows.theta(0).len();
+    let q = rows.momentum(0).len();
+    for k in 0..n {
+        assert_eq!(rows.theta(k).len(), p, "ragged theta lengths");
+        assert_eq!(rows.momentum(k).len(), q, "ragged momentum lengths");
+    }
+    GROUP_BUF.with(|cell| {
+        let mut guard = cell.borrow_mut();
+        let (tbuf, mbuf) = &mut *guard;
+        tbuf.clear();
+        tbuf.resize(p, 0.0);
+        mbuf.clear();
+        mbuf.resize(q, 0.0);
+        {
+            let shared = &*rows;
+            mean_indexed_into(n, |k| shared.theta(k), tbuf.as_mut_slice(), false);
+            mean_indexed_into(n, |k| shared.momentum(k), mbuf.as_mut_slice(), false);
+        }
+        rows.write_all(tbuf, mbuf);
+    });
+}
+
+/// [`average_rows`] over `states[members]` (serial reference engine).
+pub fn average_group_native(states: &mut [PeerState], members: &[usize]) {
+    average_rows(&mut SliceRows { states, members });
+}
+
+/// [`average_rows`] over the exclusive member views handed out by
+/// `exec::par_disjoint_map` — the group-parallel averaging lane body.
+pub fn average_views(views: &mut [&mut PeerState]) {
+    average_rows(&mut ViewRows { views });
 }
 
 /// Use the Pallas `group_mean` artifact for within-group averaging?
@@ -140,7 +315,7 @@ pub fn mean_of(states: &[PeerState], members: &[usize]) -> (Vec<f32>, Vec<f32>) 
 /// kernel win, so the native f64 path is the default; set
 /// `MARFL_PJRT_GROUP_MEAN=1` to flip (and on a real TPU backend the
 /// artifact path is the one that scales). See EXPERIMENTS.md §Perf.
-fn prefer_pjrt_group_mean() -> bool {
+pub(crate) fn pjrt_group_mean_enabled() -> bool {
     static FLAG: once_cell::sync::Lazy<bool> = once_cell::sync::Lazy::new(|| {
         std::env::var_os("MARFL_PJRT_GROUP_MEAN").is_some()
     });
@@ -150,7 +325,7 @@ fn prefer_pjrt_group_mean() -> bool {
 /// Average the states of `members` and write the result back to each of
 /// them. Default: native f64 accumulation; the Pallas group-mean artifact
 /// is used when `MARFL_PJRT_GROUP_MEAN=1` and the shapes/group size match
-/// (see `prefer_pjrt_group_mean`).
+/// (see `pjrt_group_mean_enabled`).
 pub fn average_group(
     states: &mut [PeerState],
     members: &[usize],
@@ -161,9 +336,9 @@ pub fn average_group(
     }
     let plain_shape = states[members[0]].theta.len() == ctx.model.padded_len
         && states[members[0]].momentum.len() == ctx.model.padded_len;
-    let (theta, mom) = match ctx.runtime {
+    match ctx.runtime {
         Some(rt)
-            if prefer_pjrt_group_mean()
+            if pjrt_group_mean_enabled()
                 && plain_shape
                 && rt.meta.group_sizes.contains(&members.len()) =>
         {
@@ -178,13 +353,12 @@ pub fn average_group(
                 stack.extend_from_slice(&states[i].momentum);
             }
             let mom = rt.group_mean(ctx.model, &stack, members.len())?;
-            (theta, mom)
+            for &i in members {
+                states[i].theta.copy_from_slice(&theta);
+                states[i].momentum.copy_from_slice(&mom);
+            }
         }
-        _ => mean_of(states, members),
-    };
-    for &i in members {
-        states[i].theta.copy_from_slice(&theta);
-        states[i].momentum.copy_from_slice(&mom);
+        _ => average_group_native(states, members),
     }
     Ok(())
 }
@@ -203,13 +377,15 @@ pub enum GroupExchange {
     ReduceScatter,
 }
 
-/// Book one group's exchange; returns the group's simulated duration
-/// (each member's sends are sequential; members operate in parallel).
-pub fn book_group_exchange_mode(
+/// Book one group's exchange on the fabric; returns the group's simulated
+/// duration (each member's sends are sequential; members operate in
+/// parallel). Takes `&Fabric` directly so group-parallel lanes can book
+/// concurrently — the ledger is contention-free and booking commutes.
+pub fn book_group_exchange_fabric(
     group_len: usize,
     bytes: u64,
     mode: GroupExchange,
-    ctx: &mut AggCtx<'_>,
+    fabric: &Fabric,
 ) -> f64 {
     if group_len < 2 {
         return 0.0;
@@ -219,8 +395,7 @@ pub fn book_group_exchange_mode(
         GroupExchange::FullGather => {
             let mut per_member = 0.0f64;
             for _ in 0..group_len {
-                per_member = ctx
-                    .fabric
+                per_member = fabric
                     .sequential(group_len - 1, bytes, Plane::Data)
                     .max(per_member);
             }
@@ -231,14 +406,23 @@ pub fn book_group_exchange_mode(
             let chunk = bytes.div_ceil(k);
             let mut per_member = 0.0f64;
             for _ in 0..group_len {
-                per_member = ctx
-                    .fabric
+                per_member = fabric
                     .sequential(2 * (group_len - 1), chunk, Plane::Data)
                     .max(per_member);
             }
             per_member
         }
     }
+}
+
+/// Ctx-threaded wrapper around [`book_group_exchange_fabric`].
+pub fn book_group_exchange_mode(
+    group_len: usize,
+    bytes: u64,
+    mode: GroupExchange,
+    ctx: &mut AggCtx<'_>,
+) -> f64 {
+    book_group_exchange_fabric(group_len, bytes, mode, ctx.fabric)
 }
 
 /// Back-compat: full-gather exchange.
@@ -355,6 +539,74 @@ mod tests {
         let fresh = random_states(5, 16, 1);
         assert_eq!(states[0].theta, fresh[0].theta);
         assert_eq!(states[2].theta, fresh[2].theta);
+    }
+
+    #[test]
+    fn striped_mean_bit_identical_to_naive_accumulation() {
+        // reference: the pre-refactor full-vector f64 accumulation
+        fn naive_mean(states: &[PeerState], members: &[usize]) -> Vec<f32> {
+            let p = states[members[0]].theta.len();
+            let mut acc = vec![0.0f64; p];
+            for &i in members {
+                for (a, &v) in acc.iter_mut().zip(&states[i].theta) {
+                    *a += v as f64;
+                }
+            }
+            let inv = 1.0 / members.len() as f64;
+            acc.iter().map(|&v| (v * inv) as f32).collect()
+        }
+        // length crosses several strips and a ragged tail
+        let p = 3 * 4096 + 37;
+        let states = random_states(7, p, 91);
+        let members = vec![0, 2, 3, 6];
+        let want = naive_mean(&states, &members);
+        let (got, _) = mean_of(&states, &members);
+        assert_eq!(got, want, "striped mean must be bit-identical");
+    }
+
+    #[test]
+    fn average_group_native_matches_mean_of_bitwise() {
+        let mut states = random_states(6, 4096 + 11, 92);
+        let members = vec![1, 2, 5];
+        let (want_t, want_m) = mean_of(&states, &members);
+        average_group_native(&mut states, &members);
+        for &i in &members {
+            assert_eq!(states[i].theta, want_t);
+            assert_eq!(states[i].momentum, want_m);
+        }
+    }
+
+    #[test]
+    fn average_views_matches_average_group_native_bitwise() {
+        let mut a = random_states(5, 513, 93);
+        let mut b = a.clone();
+        let members = vec![0, 3, 4];
+        average_group_native(&mut a, &members);
+        let groups = vec![members.clone()];
+        crate::exec::par_disjoint_map(&mut b, &groups, |_, views| {
+            average_views(views);
+        })
+        .unwrap();
+        for i in 0..a.len() {
+            assert_eq!(a[i].theta, b[i].theta);
+            assert_eq!(a[i].momentum, b[i].momentum);
+        }
+    }
+
+    #[test]
+    fn mean_handles_extended_momentum_lengths() {
+        // DP iterations extend momentum beyond theta; each vector averages
+        // at its own length
+        let mut states = random_states(3, 16, 94);
+        for s in &mut states {
+            s.momentum.extend_from_slice(&[1.0, 2.0, 3.0]);
+        }
+        let (t, m) = mean_of(&states, &[0, 1, 2]);
+        assert_eq!(t.len(), 16);
+        assert_eq!(m.len(), 19);
+        assert_eq!(&m[16..], &[1.0, 2.0, 3.0]);
+        average_group_native(&mut states, &[0, 1, 2]);
+        assert_eq!(states[0].momentum.len(), 19);
     }
 
     #[test]

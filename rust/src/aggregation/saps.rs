@@ -84,23 +84,32 @@ impl Aggregate for Saps {
         // sparse payload: kept values + their indices (4 B value + 4 B idx)
         let kept = ((p as f64 * self.ratio).ceil() as usize).min(p);
         let bytes = (kept * 8) as u64 * 2; // theta + momentum planes
-        let mut lane_times = Vec::with_capacity(pairs.len());
-        for &(a, b) in &pairs {
-            // bidirectional sparsified exchange
-            let t = ctx.fabric.send(bytes, Plane::Data)
-                + ctx.fabric.send(bytes, Plane::Data);
-            lane_times.push(t);
-            let (sa_t, _) = top_k_sparsify(&states[a].theta, self.ratio);
-            let (sb_t, _) = top_k_sparsify(&states[b].theta, self.ratio);
-            let (sa_m, _) = top_k_sparsify(&states[a].momentum, self.ratio);
-            let (sb_m, _) = top_k_sparsify(&states[b].momentum, self.ratio);
-            // merge: average own dense state with partner's sparse one at
-            // the transmitted coordinates (SAPS-style partial merge)
-            merge_sparse(&mut states[a].theta, &sb_t);
-            merge_sparse(&mut states[b].theta, &sa_t);
-            merge_sparse(&mut states[a].momentum, &sb_m);
-            merge_sparse(&mut states[b].momentum, &sa_m);
-        }
+        // pairs are disjoint, so every sparsify+merge lane runs
+        // concurrently on the exec pool
+        let groups: Vec<Vec<usize>> =
+            pairs.iter().map(|&(a, b)| vec![a, b]).collect();
+        let ratio = self.ratio;
+        let fabric = ctx.fabric;
+        let lane_times =
+            crate::exec::par_disjoint_map(states, &groups, |_, views| {
+                // bidirectional sparsified exchange
+                let t = fabric.send(bytes, Plane::Data)
+                    + fabric.send(bytes, Plane::Data);
+                let (va, vb) = views.split_at_mut(1);
+                let a = &mut *va[0];
+                let b = &mut *vb[0];
+                let (sa_t, _) = top_k_sparsify(&a.theta, ratio);
+                let (sb_t, _) = top_k_sparsify(&b.theta, ratio);
+                let (sa_m, _) = top_k_sparsify(&a.momentum, ratio);
+                let (sb_m, _) = top_k_sparsify(&b.momentum, ratio);
+                // merge: average own dense state with partner's sparse one
+                // at the transmitted coordinates (SAPS-style partial merge)
+                merge_sparse(&mut a.theta, &sb_t);
+                merge_sparse(&mut b.theta, &sa_t);
+                merge_sparse(&mut a.momentum, &sb_m);
+                merge_sparse(&mut b.momentum, &sa_m);
+                t
+            })?;
         ctx.clock.parallel(lane_times);
         Ok(AggReport { rounds: 1, groups: pairs.len() })
     }

@@ -23,9 +23,11 @@ use anyhow::Result;
 
 use super::group_key::{grid_keys, perfect_grid, random_keys, GroupKey};
 use crate::aggregation::{
-    average_group, book_group_exchange_mode, payload_bytes, AggCtx, AggReport,
-    Aggregate, GroupExchange, PeerState,
+    average_group, average_views, book_group_exchange_fabric,
+    book_group_exchange_mode, payload_bytes, AggCtx, AggReport, Aggregate,
+    GroupExchange, PeerState,
 };
+use crate::exec;
 use crate::dht::{decode_peer, encode_peer, Key, SimDht};
 use crate::metrics::CommLedger;
 use crate::rng::Rng;
@@ -40,6 +42,10 @@ pub struct MarAggregator {
     /// within-group wire protocol (full-gather default; reduce-scatter
     /// is the Moshpit-SGD chunked mode, `mar.reduce_scatter` ablation)
     pub exchange: GroupExchange,
+    /// run each round's groups concurrently on the `exec` pool (default).
+    /// The serial path is kept as the bit-identical reference for the
+    /// determinism tests and the serial-vs-parallel scaling bench.
+    pub parallel: bool,
     dht: SimDht,
     /// peer index -> DHT node id
     node_ids: Vec<Key>,
@@ -69,6 +75,7 @@ impl MarAggregator {
             group_size,
             rounds,
             exchange: GroupExchange::FullGather,
+            parallel: true,
             dht,
             node_ids,
             iteration: 0,
@@ -78,6 +85,12 @@ impl MarAggregator {
     /// Switch the within-group wire protocol.
     pub fn with_exchange(mut self, exchange: GroupExchange) -> Self {
         self.exchange = exchange;
+        self
+    }
+
+    /// Force the serial reference engine (benchmark/verification aid).
+    pub fn with_parallel(mut self, parallel: bool) -> Self {
+        self.parallel = parallel;
         self
     }
 
@@ -187,6 +200,11 @@ impl Aggregate for MarAggregator {
         let bytes = payload_bytes(states, agg);
         let scope = format!("agg{}", self.iteration);
         let mut groups_formed = 0;
+        // the Pallas artifact path runs through the (non-Sync-friendly)
+        // runtime dispatch; keep it on the serial reference engine
+        let run_parallel = self.parallel
+            && !(ctx.runtime.is_some()
+                && crate::aggregation::pjrt_group_mean_enabled());
         for g in 0..d {
             let hops_before = self.dht.hops_total();
             let groups = self.matchmake(agg, &keys, g, &scope);
@@ -197,17 +215,42 @@ impl Aggregate for MarAggregator {
             let avg_hops = hops as f64 / n as f64;
             ctx.clock.advance(2.0 * ctx.fabric.latency * (1.0 + avg_hops));
 
-            let mut lane_times = Vec::with_capacity(groups.len());
+            // positions -> peer indices; groups within a round are
+            // disjoint index sets over `states` by construction
+            let member_groups: Vec<Vec<usize>> = groups
+                .iter()
+                .map(|grp| grp.iter().map(|&pos| agg[pos]).collect())
+                .collect();
+            let lane_times: Vec<f64> = if run_parallel {
+                // every group books its exchange and averages
+                // concurrently; lane order (and thus the clock) matches
+                // the serial path because results come back in group order
+                let exchange = self.exchange;
+                let fabric = ctx.fabric;
+                exec::par_disjoint_map(states, &member_groups, |_, views| {
+                    let t = book_group_exchange_fabric(
+                        views.len(),
+                        bytes,
+                        exchange,
+                        fabric,
+                    );
+                    average_views(views);
+                    t
+                })?
+            } else {
+                let mut lane_times = Vec::with_capacity(member_groups.len());
+                for members in &member_groups {
+                    lane_times.push(book_group_exchange_mode(
+                        members.len(),
+                        bytes,
+                        self.exchange,
+                        ctx,
+                    ));
+                    average_group(states, members, ctx)?;
+                }
+                lane_times
+            };
             for group in &groups {
-                let members: Vec<usize> =
-                    group.iter().map(|&pos| agg[pos]).collect();
-                lane_times.push(book_group_exchange_mode(
-                    members.len(),
-                    bytes,
-                    self.exchange,
-                    ctx,
-                ));
-                average_group(states, &members, ctx)?;
                 for (chunk, &pos) in group.iter().enumerate() {
                     keys[pos].set_chunk(g, chunk);
                 }

@@ -1,0 +1,256 @@
+//! Parallel execution engine for the round loop.
+//!
+//! The simulation models a *parallel* P2P deployment — within one MAR
+//! round every group averages concurrently, and every participant runs its
+//! local SGD step concurrently — but the seed reproduction executed all of
+//! it serially on one core. This module gives the simulator the same
+//! parallelism it models:
+//!
+//! * a process-wide [`rayon`] thread pool sized by the `MARFL_THREADS`
+//!   environment knob (default: all available cores), shared by every
+//!   parallel phase so nested fan-out cannot oversubscribe the host;
+//! * [`par_disjoint_map`] — safe concurrent mutation of *disjoint* index
+//!   groups over one `&mut [T]` (the shape of a MAR round: groups are
+//!   disjoint subsets of `states`). Overlapping or out-of-bounds groups
+//!   are rejected before any thread is spawned;
+//! * [`par_map_at`] — the singleton special case (one element per lane),
+//!   used for peer-parallel local training.
+//!
+//! Determinism: callers draw all randomness and schedule-order-sensitive
+//! state (batch cursors, DHT matchmaking, group membership) *serially*
+//! before fanning out, so lane bodies are pure functions of disjoint data
+//! and results are bit-identical to serial execution regardless of thread
+//! count or interleaving. `tests/parallel_engine.rs` asserts this.
+
+use anyhow::{ensure, Result};
+use once_cell::sync::Lazy;
+use rayon::prelude::*;
+
+/// Worker count for the engine pool: `MARFL_THREADS` if set (>= 1),
+/// otherwise the machine's available parallelism.
+pub fn threads() -> usize {
+    static N: Lazy<usize> = Lazy::new(|| {
+        if let Some(v) = std::env::var_os("MARFL_THREADS") {
+            if let Some(n) = v.to_str().and_then(|s| s.trim().parse::<usize>().ok())
+            {
+                if n >= 1 {
+                    return n;
+                }
+            }
+            log::warn!("ignoring invalid MARFL_THREADS={v:?}");
+        }
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    });
+    *N
+}
+
+/// The process-wide engine pool (built lazily on first parallel phase).
+pub fn pool() -> &'static rayon::ThreadPool {
+    static POOL: Lazy<rayon::ThreadPool> = Lazy::new(|| {
+        rayon::ThreadPoolBuilder::new()
+            .num_threads(threads())
+            .thread_name(|i| format!("marfl-exec-{i}"))
+            .build()
+            .expect("build exec thread pool")
+    });
+    &POOL
+}
+
+/// Stable small per-thread index in `[0, buckets)` — the striping
+/// primitive behind the contention-free counters (`CommLedger` shards,
+/// the runtime's call accounting). Threads are assigned round-robin at
+/// first use, so up to `buckets` workers touch distinct stripes.
+pub fn thread_stripe(buckets: usize) -> usize {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static IDX: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+    }
+    IDX.with(|c| {
+        let mut v = c.get();
+        if v == usize::MAX {
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            c.set(v);
+        }
+        v % buckets
+    })
+}
+
+/// Raw-pointer wrapper so disjoint `&mut` views can cross thread
+/// boundaries. Safety rests on the disjointness validation below.
+struct SendPtr<T>(*mut T);
+
+impl<T> SendPtr<T> {
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Validate that `groups` index into a slice of length `len` without any
+/// index appearing twice (within a group or across groups). This is the
+/// precondition that makes concurrent `&mut` views sound; callers get a
+/// hard error — not UB — on overlap.
+pub fn validate_disjoint(len: usize, groups: &[Vec<usize>]) -> Result<()> {
+    let mut seen = vec![false; len];
+    for (gi, group) in groups.iter().enumerate() {
+        for &i in group {
+            ensure!(
+                i < len,
+                "group {gi}: index {i} out of bounds (slice len {len})"
+            );
+            ensure!(
+                !std::mem::replace(&mut seen[i], true),
+                "group {gi}: index {i} appears in more than one group slot"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Run `f` once per group, concurrently, each invocation receiving
+/// exclusive `&mut` views of that group's elements of `data` (in the
+/// group's own index order). Results are returned in group order, so the
+/// output is independent of scheduling. Rejects overlapping groups.
+pub fn par_disjoint_map<T, R, F>(
+    data: &mut [T],
+    groups: &[Vec<usize>],
+    f: F,
+) -> Result<Vec<R>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut [&mut T]) -> R + Sync,
+{
+    validate_disjoint(data.len(), groups)?;
+    let base = SendPtr(data.as_mut_ptr());
+    let out = pool().install(|| {
+        groups
+            .par_iter()
+            .enumerate()
+            .map(|(gi, group)| {
+                // SAFETY: validate_disjoint guarantees every index is in
+                // bounds and owned by exactly one group, so these &mut
+                // views never alias across (or within) lanes.
+                let mut views: Vec<&mut T> = group
+                    .iter()
+                    .map(|&i| unsafe { &mut *base.get().add(i) })
+                    .collect();
+                f(gi, &mut views)
+            })
+            .collect()
+    });
+    Ok(out)
+}
+
+/// Run `f` once per index, concurrently, each invocation receiving the
+/// lane position and an exclusive `&mut` view of `data[indices[pos]]`.
+/// Rejects duplicate or out-of-bounds indices. Results are in lane order.
+pub fn par_map_at<T, R, F>(data: &mut [T], indices: &[usize], f: F) -> Result<Vec<R>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let mut seen = vec![false; data.len()];
+    for &i in indices {
+        ensure!(i < data.len(), "index {i} out of bounds (len {})", data.len());
+        ensure!(
+            !std::mem::replace(&mut seen[i], true),
+            "index {i} appears more than once"
+        );
+    }
+    let base = SendPtr(data.as_mut_ptr());
+    let out = pool().install(|| {
+        indices
+            .par_iter()
+            .enumerate()
+            .map(|(pos, &i)| {
+                // SAFETY: indices validated distinct and in bounds above.
+                let elem = unsafe { &mut *base.get().add(i) };
+                f(pos, elem)
+            })
+            .collect()
+    });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_map_mutates_and_preserves_order() {
+        let mut data: Vec<u64> = (0..10).collect();
+        let groups = vec![vec![0, 1], vec![4], vec![9, 3]];
+        let sums = par_disjoint_map(&mut data, &groups, |gi, views| {
+            let mut s = 0u64;
+            for v in views.iter_mut() {
+                **v += 100;
+                s += **v;
+            }
+            (gi, s)
+        })
+        .unwrap();
+        assert_eq!(sums, vec![(0, 201), (1, 104), (2, 212)]);
+        assert_eq!(data, vec![100, 101, 2, 103, 104, 5, 6, 7, 8, 109]);
+    }
+
+    #[test]
+    fn overlapping_groups_rejected() {
+        let mut data = vec![0u8; 4];
+        let overlapping = vec![vec![0, 1], vec![1, 2]];
+        let err = par_disjoint_map(&mut data, &overlapping, |_, _| ()).unwrap_err();
+        assert!(format!("{err:#}").contains("more than one group"));
+        // nothing executed
+        assert_eq!(data, vec![0; 4]);
+    }
+
+    #[test]
+    fn duplicate_within_one_group_rejected() {
+        let mut data = vec![0u8; 4];
+        assert!(par_disjoint_map(&mut data, &[vec![2, 2]], |_, _| ()).is_err());
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let mut data = vec![0u8; 4];
+        assert!(par_disjoint_map(&mut data, &[vec![4]], |_, _| ()).is_err());
+        assert!(par_map_at(&mut data, &[4], |_, _| ()).is_err());
+    }
+
+    #[test]
+    fn map_at_runs_each_lane_once() {
+        let mut data: Vec<u64> = vec![10, 20, 30, 40];
+        let got = par_map_at(&mut data, &[3, 0], |pos, v| {
+            *v += 1;
+            (pos, *v)
+        })
+        .unwrap();
+        assert_eq!(got, vec![(0, 41), (1, 11)]);
+        assert_eq!(data, vec![11, 20, 30, 41]);
+    }
+
+    #[test]
+    fn map_at_rejects_duplicates() {
+        let mut data = vec![0u8; 3];
+        assert!(par_map_at(&mut data, &[1, 1], |_, _| ()).is_err());
+    }
+
+    #[test]
+    fn empty_groups_are_fine() {
+        let mut data = vec![0u8; 2];
+        let out: Vec<()> = par_disjoint_map(&mut data, &[], |_, _| ()).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn threads_is_at_least_one() {
+        assert!(threads() >= 1);
+        // pool builds and runs
+        let n: usize = pool().install(|| (0..100).into_par_iter().sum());
+        assert_eq!(n, 4950);
+    }
+}

@@ -1,9 +1,12 @@
-//! The FL training loop — the paper's "dispatcher" (§B.2), serial-simulated
-//! but modelling a parallel deployment: per iteration it samples
-//! participants, dispatches local momentum-SGD updates through PJRT, runs
-//! Moshpit-KD when active, privatizes when DP is on, aggregates with the
-//! configured technique, evaluates every `eval_every` iterations, and books
-//! every byte, hop and simulated second.
+//! The FL training loop — the paper's "dispatcher" (§B.2), modelling a
+//! parallel deployment and, since the parallel round engine (`exec`),
+//! executing it in parallel too: per iteration it samples participants,
+//! dispatches local momentum-SGD updates across the thread pool (batch
+//! schedules drawn serially, so results are bit-identical to the serial
+//! path), runs Moshpit-KD when active, privatizes when DP is on,
+//! aggregates with the configured technique (groups averaged
+//! concurrently), evaluates every `eval_every` iterations, and books every
+//! byte, hop and simulated second.
 
 use std::sync::Arc;
 
@@ -216,30 +219,58 @@ impl<'rt> Trainer<'rt> {
             None => self.churn.sample_participants(self.cfg.peers, &mut churn_rng),
         };
 
-        // local momentum-SGD updates (parallel across peers in the
-        // modelled deployment)
-        let mut batches_done = 0usize;
-        for &i in &participants {
-            for _ in 0..self.cfg.local_batches {
-                let idx = self.data.shards[i].next_batch(self.model.batch);
-                let (x, y) = self.data.train.gather(&idx);
-                let out = self.rt.train_step(
-                    &self.model,
-                    &self.states[i].theta,
-                    &self.states[i].momentum,
-                    &x,
-                    &y,
-                    self.cfg.eta,
-                    self.cfg.mu,
-                )?;
-                self.states[i].theta = out.theta;
-                self.states[i].momentum = out.momentum;
-                batches_done += 1;
+        // local momentum-SGD updates — run truly in parallel across peers
+        // on the exec pool, matching the parallel deployment the clock
+        // models. Batch indices are drawn serially first (the shard
+        // cursors are schedule state), so every peer consumes exactly the
+        // batches it would under serial execution and results are
+        // bit-identical regardless of thread interleaving.
+        let batch_plans: Vec<Vec<Vec<usize>>> = participants
+            .iter()
+            .map(|&i| {
+                (0..self.cfg.local_batches)
+                    .map(|_| self.data.shards[i].next_batch(self.model.batch))
+                    .collect()
+            })
+            .collect();
+        {
+            let rt = self.rt;
+            let model = &self.model;
+            let train = &self.data.train;
+            let (eta, mu) = (self.cfg.eta, self.cfg.mu);
+            let plans = &batch_plans;
+            let results = crate::exec::par_map_at(
+                &mut self.states,
+                &participants,
+                |pos, st| -> Result<()> {
+                    for idx in &plans[pos] {
+                        let (x, y) = train.gather(idx);
+                        let out = rt.train_step(
+                            model,
+                            &st.theta,
+                            &st.momentum,
+                            &x,
+                            &y,
+                            eta,
+                            mu,
+                        )?;
+                        st.theta = out.theta;
+                        st.momentum = out.momentum;
+                    }
+                    Ok(())
+                },
+            )?;
+            for r in results {
+                r?;
             }
         }
-        let _ = batches_done;
-        self.clock
-            .advance(self.cfg.local_batches as f64 * LOCAL_BATCH_COMPUTE_S);
+        // simulated local-compute time: peers run concurrently in the
+        // modelled deployment, so an iteration costs one peer's batches —
+        // and nothing at all when nobody participated
+        if !participants.is_empty() {
+            self.clock
+                .advance(self.cfg.local_batches as f64 * LOCAL_BATCH_COMPUTE_S);
+        }
 
         // A_t: aggregators (participants that survive dropout)
         let aggers = self.churn.sample_aggregators(&participants, &mut churn_rng);

@@ -25,6 +25,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dht;
 pub mod dp;
+pub mod exec;
 pub mod fl;
 pub mod kd;
 pub mod metrics;

@@ -1,8 +1,14 @@
 //! Communication ledger: the paper's primary measurement instrument.
 //!
-//! Counters are atomic so the ledger can be shared (`Arc`) between the
-//! coordinator, the DHT and the fabric without locks on the hot path.
+//! Counters are sharded per thread (cache-line-padded atomic stripes,
+//! merged at snapshot) so the ledger can be shared (`Arc`) between the
+//! coordinator, the DHT, the fabric and — since the parallel round engine
+//! (`exec`) — many worker threads booking concurrently, without the hot
+//! path ever bouncing one contended cache line between cores. Totals are
+//! exact: booking is commutative addition, so parallel and serial
+//! executions of the same schedule produce identical snapshots.
 
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Which plane a message belongs to. The paper's claim is that control
@@ -16,16 +22,28 @@ pub enum Plane {
     Data,
 }
 
-/// Lock-free byte/message accounting.
-#[derive(Debug, Default)]
-pub struct CommLedger {
+/// Number of counter stripes. Power of two, sized a little above typical
+/// core counts; threads hash onto stripes, so two workers only share a
+/// stripe (never a problem for correctness) when the pool outgrows it.
+const LEDGER_SHARDS: usize = 16;
+
+/// One cache-line-aligned stripe of counters (all four live on the same
+/// line so a booking thread touches exactly one line).
+#[derive(Default)]
+#[repr(align(64))]
+struct LedgerShard {
     data_bytes: AtomicU64,
     data_msgs: AtomicU64,
     control_bytes: AtomicU64,
     control_msgs: AtomicU64,
 }
 
-/// A point-in-time copy of the counters.
+/// Contention-free byte/message accounting.
+pub struct CommLedger {
+    shards: [LedgerShard; LEDGER_SHARDS],
+}
+
+/// A point-in-time merge of the counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommSnapshot {
     pub data_bytes: u64,
@@ -34,39 +52,68 @@ pub struct CommSnapshot {
     pub control_msgs: u64,
 }
 
+/// Stable per-thread stripe assignment (round-robin at first use).
+fn shard_index() -> usize {
+    crate::exec::thread_stripe(LEDGER_SHARDS)
+}
+
 impl CommLedger {
     pub fn new() -> Self {
-        Self::default()
+        CommLedger { shards: std::array::from_fn(|_| LedgerShard::default()) }
     }
 
     /// Book one message of `bytes` on `plane`.
     pub fn record(&self, plane: Plane, bytes: u64) {
+        self.record_many(plane, 1, bytes);
+    }
+
+    /// Book `msgs` messages totalling `bytes` on `plane` in one shot —
+    /// the batched form the fabric uses for sequential sends (2 atomic
+    /// adds instead of 2·k).
+    pub fn record_many(&self, plane: Plane, msgs: u64, bytes: u64) {
+        let shard = &self.shards[shard_index()];
         match plane {
             Plane::Data => {
-                self.data_bytes.fetch_add(bytes, Ordering::Relaxed);
-                self.data_msgs.fetch_add(1, Ordering::Relaxed);
+                shard.data_bytes.fetch_add(bytes, Ordering::Relaxed);
+                shard.data_msgs.fetch_add(msgs, Ordering::Relaxed);
             }
             Plane::Control => {
-                self.control_bytes.fetch_add(bytes, Ordering::Relaxed);
-                self.control_msgs.fetch_add(1, Ordering::Relaxed);
+                shard.control_bytes.fetch_add(bytes, Ordering::Relaxed);
+                shard.control_msgs.fetch_add(msgs, Ordering::Relaxed);
             }
         }
     }
 
     pub fn snapshot(&self) -> CommSnapshot {
-        CommSnapshot {
-            data_bytes: self.data_bytes.load(Ordering::Relaxed),
-            data_msgs: self.data_msgs.load(Ordering::Relaxed),
-            control_bytes: self.control_bytes.load(Ordering::Relaxed),
-            control_msgs: self.control_msgs.load(Ordering::Relaxed),
+        let mut s = CommSnapshot::default();
+        for shard in &self.shards {
+            s.data_bytes += shard.data_bytes.load(Ordering::Relaxed);
+            s.data_msgs += shard.data_msgs.load(Ordering::Relaxed);
+            s.control_bytes += shard.control_bytes.load(Ordering::Relaxed);
+            s.control_msgs += shard.control_msgs.load(Ordering::Relaxed);
         }
+        s
     }
 
     pub fn reset(&self) {
-        self.data_bytes.store(0, Ordering::Relaxed);
-        self.data_msgs.store(0, Ordering::Relaxed);
-        self.control_bytes.store(0, Ordering::Relaxed);
-        self.control_msgs.store(0, Ordering::Relaxed);
+        for shard in &self.shards {
+            shard.data_bytes.store(0, Ordering::Relaxed);
+            shard.data_msgs.store(0, Ordering::Relaxed);
+            shard.control_bytes.store(0, Ordering::Relaxed);
+            shard.control_msgs.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Default for CommLedger {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl fmt::Debug for CommLedger {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CommLedger").field("snapshot", &self.snapshot()).finish()
     }
 }
 
@@ -106,6 +153,17 @@ mod tests {
     }
 
     #[test]
+    fn record_many_matches_repeated_record() {
+        let a = CommLedger::new();
+        for _ in 0..7 {
+            a.record(Plane::Data, 33);
+        }
+        let b = CommLedger::new();
+        b.record_many(Plane::Data, 7, 7 * 33);
+        assert_eq!(a.snapshot(), b.snapshot());
+    }
+
+    #[test]
     fn since_computes_deltas() {
         let l = CommLedger::new();
         l.record(Plane::Data, 10);
@@ -137,6 +195,20 @@ mod tests {
         let s = l.snapshot();
         assert_eq!(s.data_bytes, 12_000);
         assert_eq!(s.data_msgs, 4_000);
+    }
+
+    #[test]
+    fn pool_parallel_recording_is_exact() {
+        use rayon::prelude::*;
+        let l = CommLedger::new();
+        crate::exec::pool().install(|| {
+            (0..1000u64).into_par_iter().for_each(|i| {
+                l.record(Plane::Control, i);
+            });
+        });
+        let s = l.snapshot();
+        assert_eq!(s.control_msgs, 1000);
+        assert_eq!(s.control_bytes, 999 * 1000 / 2);
     }
 
     #[test]

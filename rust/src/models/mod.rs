@@ -120,6 +120,54 @@ impl ArtifactMeta {
         Ok(ArtifactMeta { dir: dir.to_path_buf(), strip, kd_tau, group_sizes, models })
     }
 
+    /// Builtin registry mirroring `python/compile/model.py` — used with
+    /// the native runtime backend when no artifacts have been lowered
+    /// (pjrt-less builds and artifact-free machines). Parameter counts
+    /// and padded lengths match the JAX `ravel_pytree` layouts exactly
+    /// (see `runtime::native`), so artifact-backed and builtin runs share
+    /// one wire-accounting model.
+    pub fn builtin(dir: &Path) -> ArtifactMeta {
+        let strip = 1024;
+        let pad = |p: usize| p.div_ceil(strip) * strip;
+        let mut models = BTreeMap::new();
+        models.insert(
+            "cnn".to_string(),
+            ModelMeta {
+                name: "cnn".into(),
+                param_count: crate::runtime::native::CNN_PARAMS,
+                padded_len: pad(crate::runtime::native::CNN_PARAMS),
+                input_shape: vec![16, 16, 1],
+                classes: 10,
+                batch: 64,
+                eval_chunk: 250,
+                init_file: "cnn_init.bin".into(),
+                artifacts: BTreeMap::new(),
+            },
+        );
+        models.insert(
+            "head".to_string(),
+            ModelMeta {
+                name: "head".into(),
+                param_count: crate::runtime::native::HEAD_PARAMS,
+                padded_len: pad(crate::runtime::native::HEAD_PARAMS),
+                input_shape: vec![64],
+                classes: 20,
+                batch: 16,
+                eval_chunk: 250,
+                init_file: "head_init.bin".into(),
+                artifacts: BTreeMap::new(),
+            },
+        );
+        ArtifactMeta {
+            dir: dir.to_path_buf(),
+            strip,
+            kd_tau: 3.0,
+            // aot.py lowers group_mean for M in 2..=8
+            group_sizes: (2..=8).collect(),
+            models,
+        }
+    }
+
     pub fn model(&self, name: &str) -> Result<&ModelMeta> {
         self.models
             .get(name)
@@ -186,5 +234,26 @@ mod tests {
     fn missing_dir_is_actionable_error() {
         let err = ArtifactMeta::load(Path::new("/nonexistent_xyz")).unwrap_err();
         assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn builtin_registry_matches_python_model_zoo() {
+        let meta = ArtifactMeta::builtin(Path::new("/nowhere"));
+        assert_eq!(meta.strip, 1024);
+        assert_eq!(meta.kd_tau, 3.0);
+        assert_eq!(meta.group_sizes, vec![2, 3, 4, 5, 6, 7, 8]);
+        let cnn = meta.model("cnn").unwrap();
+        assert_eq!(cnn.param_count, 18_346);
+        assert_eq!(cnn.padded_len, 18_432);
+        assert_eq!(cnn.input_elems(), 256);
+        assert_eq!(cnn.batch, 64);
+        let head = meta.model("head").unwrap();
+        assert_eq!(head.param_count, 10_900);
+        assert_eq!(head.padded_len, 11_264);
+        assert_eq!(head.classes, 20);
+        assert_eq!(head.batch, 16);
+        for m in meta.models.values() {
+            assert_eq!(m.padded_len % meta.strip, 0);
+        }
     }
 }

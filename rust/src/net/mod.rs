@@ -36,15 +36,30 @@ impl Fabric {
         Fabric { ledger, bandwidth, latency }
     }
 
-    /// Book one point-to-point message; returns its simulated duration.
-    pub fn send(&self, bytes: u64, plane: Plane) -> f64 {
-        self.ledger.record(plane, bytes);
+    /// Simulated duration of one message — the single source of the link
+    /// cost model (`send` and `sequential` must agree exactly).
+    fn duration(&self, bytes: u64) -> f64 {
         self.latency + bytes as f64 / self.bandwidth
     }
 
-    /// Duration of `k` messages of `bytes` sent sequentially over one link.
+    /// Book one point-to-point message; returns its simulated duration.
+    pub fn send(&self, bytes: u64, plane: Plane) -> f64 {
+        self.ledger.record(plane, bytes);
+        self.duration(bytes)
+    }
+
+    /// Duration of `k` messages of `bytes` sent sequentially over one
+    /// link. Booked in one batched ledger update (2 atomic adds instead
+    /// of 2·k); the duration is still the *summed* per-message time, so
+    /// both ledger totals and simulated clocks are bit-identical to `k`
+    /// separate `send`s — the parallel-engine determinism tests rely on
+    /// this.
     pub fn sequential(&self, k: usize, bytes: u64, plane: Plane) -> f64 {
-        (0..k).map(|_| self.send(bytes, plane)).sum()
+        if k == 0 {
+            return 0.0;
+        }
+        self.ledger.record_many(plane, k as u64, k as u64 * bytes);
+        (0..k).map(|_| self.duration(bytes)).sum()
     }
 
     pub fn ledger(&self) -> &Arc<CommLedger> {

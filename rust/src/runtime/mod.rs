@@ -1,29 +1,56 @@
-//! PJRT runtime: loads AOT HLO-text artifacts and executes them on the
-//! training path. This is the ONLY place model compute happens at run
-//! time — Python is never on the request path.
+//! Model-compute runtime. This is the ONLY place model compute happens at
+//! run time — Python is never on the request path.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
-//! → `XlaComputation::from_proto` → `client.compile` (cached per entry
-//! point) → `execute`.
+//! Two interchangeable backends sit behind one facade:
+//!
+//! * **native** (default build) — a pure-Rust reference implementation of
+//!   the model zoo (`native.rs`): the same forward/backward/damped-momentum
+//!   semantics `python/compile/model.py` lowers, over the same
+//!   flat-parameter ABI. Needs no artifacts and no XLA closure, so
+//!   `cargo build && cargo test` work on any machine.
+//! * **pjrt** (`--features pjrt`) — loads the AOT HLO-text artifacts and
+//!   executes them through a PJRT CPU client (`pjrt.rs`), following
+//!   /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//!   `XlaComputation::from_proto` → `client.compile` (cached per entry
+//!   point) → `execute`. Selected automatically when the feature is on and
+//!   `meta.json` exists; `MARFL_BACKEND=native` forces the fallback.
+//!
+//! The facade is `Sync`: the peer-parallel trainer (`fl`) drives
+//! `train_step` from many `exec` pool workers at once. Native compute is
+//! trivially thread-safe; the PJRT executable cache is behind locks and
+//! XLA's client/executables support concurrent execution.
 
+#[cfg(feature = "pjrt")]
 pub mod literal;
+pub mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::models::{ArtifactMeta, ModelMeta};
-use literal::{lit_f32, lit_i32, to_f32_vec};
 
-/// Compiled-executable cache keyed by entry-point name.
+/// Stripes for the call-accounting maps: enough that pool workers on the
+/// peer-parallel training path effectively never contend on a lock.
+const CALL_STRIPES: usize = 8;
+
+/// Backend dispatch + per-entry-point execution accounting.
 pub struct Runtime {
-    client: xla::PjRtClient,
     pub meta: ArtifactMeta,
-    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-    /// executions per entry point (perf accounting)
-    calls: RefCell<HashMap<String, u64>>,
+    backend: Backend,
+    /// executions per entry point (perf accounting), striped per thread
+    /// and merged at read so counting stays off the hot path's locks
+    calls: [Mutex<HashMap<String, u64>>; CALL_STRIPES],
+}
+
+enum Backend {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtBackend),
 }
 
 /// Result of one local training / KD step.
@@ -35,82 +62,102 @@ pub struct StepOut {
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client over an artifact directory.
+    /// Open a runtime over an artifact directory. When no artifacts have
+    /// been lowered there, the builtin model registry + native backend
+    /// are used so the full system runs artifact-free. A *present but
+    /// unreadable* `meta.json` is still a hard error — silently swapping
+    /// in the builtin registry under real artifacts would execute lowered
+    /// HLO against mismatched metadata.
     pub fn new(artifact_dir: &Path) -> Result<Self> {
-        let meta = ArtifactMeta::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let meta = if artifact_dir.join("meta.json").exists() {
+            ArtifactMeta::load(artifact_dir)?
+        } else {
+            log::info!(
+                "no artifacts at {artifact_dir:?}; \
+                 using builtin model registry + native backend"
+            );
+            ArtifactMeta::builtin(artifact_dir)
+        };
+        let backend = Self::pick_backend(&meta)?;
         Ok(Runtime {
-            client,
             meta,
-            exes: RefCell::new(HashMap::new()),
-            calls: RefCell::new(HashMap::new()),
+            backend,
+            calls: std::array::from_fn(|_| Mutex::new(HashMap::new())),
         })
     }
 
+    #[cfg(feature = "pjrt")]
+    fn pick_backend(meta: &ArtifactMeta) -> Result<Backend> {
+        let forced_native = std::env::var_os("MARFL_BACKEND")
+            .is_some_and(|v| v.to_str() == Some("native"));
+        if !forced_native && meta.dir.join("meta.json").exists() {
+            return Ok(Backend::Pjrt(pjrt::PjrtBackend::new(&meta.dir)?));
+        }
+        Ok(Backend::Native)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn pick_backend(_meta: &ArtifactMeta) -> Result<Backend> {
+        Ok(Backend::Native)
+    }
+
+    /// Which backend executes compute ("native" or "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Native => "native",
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
     /// Load the shared initial parameters for `model` (paper: every peer
-    /// starts from the same randomly initialized θ⁰).
+    /// starts from the same randomly initialized θ⁰). With real artifacts
+    /// (`meta.json` present) the lowered `{m}_init.bin` is REQUIRED — a
+    /// missing file is a hard error, not a silent swap to different
+    /// initial weights. Only the builtin artifact-free registry uses the
+    /// native backend's deterministic He initialization.
     pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
         let m = self.meta.model(model)?;
-        let path = self.meta.artifact_path(&m.init_file);
-        let theta = crate::util::read_f32_le(&path)?;
-        anyhow::ensure!(
-            theta.len() == m.padded_len,
-            "{path:?}: expected {} f32, got {}",
-            m.padded_len,
-            theta.len()
-        );
-        Ok(theta)
-    }
-
-    fn execute(
-        &self,
-        entry: &str,
-        args: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        self.ensure_compiled(entry)?;
-        *self.calls.borrow_mut().entry(entry.to_string()).or_insert(0) += 1;
-        let exes = self.exes.borrow();
-        let exe = exes.get(entry).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(args)
-            .with_context(|| format!("execute {entry}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("sync {entry}"))?;
-        // every entry point returns a tuple (aot.py lowers return_tuple=True)
-        out.to_tuple().with_context(|| format!("untuple {entry}"))
-    }
-
-    fn ensure_compiled(&self, entry: &str) -> Result<()> {
-        if self.exes.borrow().contains_key(entry) {
-            return Ok(());
+        if self.meta.dir.join("meta.json").exists() {
+            let path = self.meta.artifact_path(&m.init_file);
+            let theta = crate::util::read_f32_le(&path)?;
+            anyhow::ensure!(
+                theta.len() == m.padded_len,
+                "{path:?}: expected {} f32, got {}",
+                m.padded_len,
+                theta.len()
+            );
+            Ok(theta)
+        } else {
+            native::init_params(m)
         }
-        let path = self.meta.artifact_path(&format!("{entry}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parse {path:?} — run `make artifacts`"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {entry}"))?;
-        self.exes.borrow_mut().insert(entry.to_string(), exe);
-        Ok(())
     }
 
     /// Pre-compile a set of entry points (avoids first-use jitter in
-    /// benches).
+    /// benches). No-op on the native backend.
     pub fn warmup(&self, entries: &[String]) -> Result<()> {
-        for e in entries {
-            self.ensure_compiled(e)?;
+        match &self.backend {
+            Backend::Native => Ok(()),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.warmup(entries),
         }
-        Ok(())
     }
 
-    /// Per-entry execution counts (perf diagnostics).
+    /// Per-entry execution counts (perf diagnostics), merged across the
+    /// per-thread stripes.
     pub fn call_counts(&self) -> HashMap<String, u64> {
-        self.calls.borrow().clone()
+        let mut merged = HashMap::new();
+        for stripe in &self.calls {
+            for (entry, n) in stripe.lock().expect("calls lock").iter() {
+                *merged.entry(entry.clone()).or_insert(0) += n;
+            }
+        }
+        merged
+    }
+
+    fn count(&self, entry: String) {
+        let stripe = &self.calls[crate::exec::thread_stripe(CALL_STRIPES)];
+        *stripe.lock().expect("calls lock").entry(entry).or_insert(0) += 1;
     }
 
     // -----------------------------------------------------------------
@@ -131,23 +178,12 @@ impl Runtime {
         debug_assert_eq!(theta.len(), m.padded_len);
         debug_assert_eq!(x.len(), m.batch * m.input_elems());
         debug_assert_eq!(y.len(), m.batch);
-        let mut dims = vec![m.batch];
-        dims.extend(&m.input_shape);
-        let args = [
-            lit_f32(theta, &[m.padded_len])?,
-            lit_f32(momentum, &[m.padded_len])?,
-            lit_f32(x, &dims)?,
-            lit_i32(y, &[m.batch])?,
-            lit_f32(&[eta], &[1])?,
-            lit_f32(&[mu], &[1])?,
-        ];
-        let out = self.execute(&format!("{}_train_step", m.name), &args)?;
-        anyhow::ensure!(out.len() == 3, "train_step returned {} leaves", out.len());
-        Ok(StepOut {
-            theta: to_f32_vec(&out[0])?,
-            momentum: to_f32_vec(&out[1])?,
-            loss: out[2].to_vec::<f32>()?[0],
-        })
+        self.count(format!("{}_train_step", m.name));
+        match &self.backend {
+            Backend::Native => native::train_step(m, theta, momentum, x, y, eta, mu),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.train_step(m, theta, momentum, x, y, eta, mu),
+        }
     }
 
     /// One Moshpit-KD student step (Algorithm 2).
@@ -165,34 +201,29 @@ impl Runtime {
         mu: f32,
     ) -> Result<StepOut> {
         debug_assert_eq!(zbar.len(), m.batch * m.classes);
-        let mut dims = vec![m.batch];
-        dims.extend(&m.input_shape);
-        let args = [
-            lit_f32(theta, &[m.padded_len])?,
-            lit_f32(momentum, &[m.padded_len])?,
-            lit_f32(x, &dims)?,
-            lit_i32(y, &[m.batch])?,
-            lit_f32(zbar, &[m.batch, m.classes])?,
-            lit_f32(&[lambda], &[1])?,
-            lit_f32(&[eta], &[1])?,
-            lit_f32(&[mu], &[1])?,
-        ];
-        let out = self.execute(&format!("{}_kd_step", m.name), &args)?;
-        anyhow::ensure!(out.len() == 3, "kd_step returned {} leaves", out.len());
-        Ok(StepOut {
-            theta: to_f32_vec(&out[0])?,
-            momentum: to_f32_vec(&out[1])?,
-            loss: out[2].to_vec::<f32>()?[0],
-        })
+        self.count(format!("{}_kd_step", m.name));
+        match &self.backend {
+            Backend::Native => {
+                // τ is baked into the lowered artifact; the native path
+                // takes it from the registry
+                let tau = self.meta.kd_tau as f32;
+                native::kd_step(m, theta, momentum, x, y, zbar, lambda, tau, eta, mu)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => {
+                b.kd_step(m, theta, momentum, x, y, zbar, lambda, eta, mu)
+            }
+        }
     }
 
     /// Teacher forward pass: logits for one training batch.
     pub fn logits(&self, m: &ModelMeta, theta: &[f32], x: &[f32]) -> Result<Vec<f32>> {
-        let mut dims = vec![m.batch];
-        dims.extend(&m.input_shape);
-        let args = [lit_f32(theta, &[m.padded_len])?, lit_f32(x, &dims)?];
-        let out = self.execute(&format!("{}_logits", m.name), &args)?;
-        to_f32_vec(&out[0])
+        self.count(format!("{}_logits", m.name));
+        match &self.backend {
+            Backend::Native => native::logits(m, theta, x),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.logits(m, theta, x),
+        }
     }
 
     /// Evaluate over a full test set (x row-major, len multiple of the
@@ -211,28 +242,25 @@ impl Runtime {
             "test set size {n} not a multiple of eval chunk {}",
             m.eval_chunk
         );
-        let mut dims = vec![m.eval_chunk];
-        dims.extend(&m.input_shape);
-        let theta_lit = lit_f32(theta, &[m.padded_len])?;
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f64;
         for c in 0..n / m.eval_chunk {
             let xs = &x[c * m.eval_chunk * elems..(c + 1) * m.eval_chunk * elems];
             let ys = &y[c * m.eval_chunk..(c + 1) * m.eval_chunk];
-            let args = [
-                theta_lit.clone(),
-                lit_f32(xs, &dims)?,
-                lit_i32(ys, &[m.eval_chunk])?,
-            ];
-            let out = self.execute(&format!("{}_eval", m.name), &args)?;
-            loss_sum += out[0].to_vec::<f32>()?[0] as f64;
-            correct += out[1].to_vec::<f32>()?[0] as f64;
+            self.count(format!("{}_eval", m.name));
+            let (ls, cr) = match &self.backend {
+                Backend::Native => native::eval_chunk(m, theta, xs, ys)?,
+                #[cfg(feature = "pjrt")]
+                Backend::Pjrt(b) => b.eval_chunk(m, theta, xs, ys)?,
+            };
+            loss_sum += ls;
+            correct += cr;
         }
         Ok((loss_sum / n as f64, correct / n as f64))
     }
 
-    /// Average `k` stacked flat vectors through the Pallas group-mean
-    /// artifact. `stack` is row-major `[k, padded_len]`.
+    /// Average `k` stacked flat vectors through the group-mean kernel.
+    /// `stack` is row-major `[k, padded_len]`.
     pub fn group_mean(&self, m: &ModelMeta, stack: &[f32], k: usize) -> Result<Vec<f32>> {
         anyhow::ensure!(
             self.meta.group_sizes.contains(&k),
@@ -240,17 +268,25 @@ impl Runtime {
             self.meta.group_sizes
         );
         debug_assert_eq!(stack.len(), k * m.padded_len);
-        let args = [lit_f32(stack, &[k, m.padded_len])?];
-        let out = self.execute(&format!("group_mean_{}_{k}", m.name), &args)?;
-        to_f32_vec(&out[0])
+        self.count(format!("group_mean_{}_{k}", m.name));
+        match &self.backend {
+            Backend::Native => native::group_mean(m, stack, k),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.group_mean(m, stack, k),
+        }
     }
 }
 
+// Runtime's own Send/Sync derive automatically from its fields; on pjrt
+// builds that hinges on the scoped `unsafe impl Send/Sync for
+// PjrtBackend` in pjrt.rs (where the serialization invariant lives), so
+// the compiler keeps checking every other Runtime field.
+
 #[cfg(test)]
 mod tests {
-    // Runtime execution tests live in rust/tests/runtime_integration.rs —
-    // they require artifacts (`make artifacts`) and a PJRT client. Unit
-    // tests here cover only client-free logic.
+    // Full runtime execution tests live in rust/tests/runtime_integration.rs
+    // (they run against whichever backend the build selects). Unit tests
+    // here cover facade-only logic.
     use super::*;
 
     #[test]
@@ -258,5 +294,19 @@ mod tests {
         let s = StepOut { theta: vec![1.0], momentum: vec![0.0], loss: 0.5 };
         let t = s.clone();
         assert_eq!(t.loss, 0.5);
+    }
+
+    #[test]
+    fn artifact_free_runtime_uses_native_backend() {
+        let rt = Runtime::new(Path::new("/nonexistent_marfl_artifacts")).unwrap();
+        assert_eq!(rt.backend_name(), "native");
+        assert!(rt.meta.models.contains_key("cnn"));
+        assert!(rt.meta.models.contains_key("head"));
+    }
+
+    #[test]
+    fn runtime_is_sync() {
+        fn assert_sync<T: Sync + Send>() {}
+        assert_sync::<Runtime>();
     }
 }

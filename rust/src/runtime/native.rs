@@ -1,0 +1,900 @@
+//! Pure-Rust reference backend: the same model semantics
+//! `python/compile/model.py` lowers to HLO, implemented directly over the
+//! flat-parameter ABI so the whole system (trainer, KD, DP, benches) runs
+//! on machines without the XLA closure or lowered artifacts.
+//!
+//! Parameter layout matches JAX's `ravel_pytree` over the init dicts
+//! (alphabetical key order, row-major leaves):
+//!
+//! * `head` — MLP 64 → 128(ReLU) → 20:
+//!   `fc1_b[128] ‖ fc1_w[64,128] ‖ fc2_b[20] ‖ fc2_w[128,20]` (P = 10900)
+//! * `cnn` — conv3×3(1→8, SAME) + ReLU + maxpool2, conv3×3(8→16, SAME) +
+//!   ReLU + maxpool2, fc 256 → 64(ReLU) → 10, NHWC:
+//!   `conv1_b[8] ‖ conv1_w[3,3,1,8] ‖ conv2_b[16] ‖ conv2_w[3,3,8,16] ‖`
+//!   `fc1_b[64] ‖ fc1_w[256,64] ‖ fc2_b[10] ‖ fc2_w[64,10]` (P = 18346)
+//!
+//! Losses: mean softmax cross-entropy; KD adds Hinton-rescaled
+//! `λ·τ²·KL(softmax(z̄/τ) ‖ softmax(s/τ))`. Updates: the damped momentum
+//! rule `m' = μ·m + (1−μ)·g`, `θ' = θ − η·m'` over the padded flat vector
+//! (padding gradients are zero, so the tail invariant survives).
+//!
+//! Everything here is stateless and `Sync`; the peer-parallel trainer
+//! calls these functions from many `exec` workers at once.
+
+use anyhow::{bail, ensure, Result};
+
+use super::StepOut;
+use crate::models::ModelMeta;
+use crate::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Flat layouts (offsets into theta / the gradient vector)
+// ---------------------------------------------------------------------
+
+// head task (20NG-like embeddings)
+const H_IN: usize = 64;
+const H_HID: usize = 128;
+const H_CLS: usize = 20;
+const H_FC1_B: usize = 0;
+const H_FC1_W: usize = H_FC1_B + H_HID;
+const H_FC2_B: usize = H_FC1_W + H_IN * H_HID;
+const H_FC2_W: usize = H_FC2_B + H_CLS;
+/// head true parameter count (10 900)
+pub const HEAD_PARAMS: usize = H_FC2_W + H_HID * H_CLS;
+
+// cnn task (MNIST-like 16×16×1 images)
+const IMG: usize = 16;
+const C1: usize = 8;
+const C2: usize = 16;
+const FC_IN: usize = 4 * 4 * C2; // 256, post two maxpools
+const FC_HID: usize = 64;
+const C_CLS: usize = 10;
+const C_C1B: usize = 0;
+const C_C1W: usize = C_C1B + C1;
+const C_C2B: usize = C_C1W + 3 * 3 * C1;
+const C_C2W: usize = C_C2B + C2;
+const C_F1B: usize = C_C2W + 3 * 3 * C1 * C2;
+const C_F1W: usize = C_F1B + FC_HID;
+const C_F2B: usize = C_F1W + FC_IN * FC_HID;
+const C_F2W: usize = C_F2B + C_CLS;
+/// cnn true parameter count (18 346)
+pub const CNN_PARAMS: usize = C_F2W + FC_HID * C_CLS;
+
+fn sl(v: &[f32], off: usize, len: usize) -> &[f32] {
+    &v[off..off + len]
+}
+
+fn sl_mut(v: &mut [f32], off: usize, len: usize) -> &mut [f32] {
+    &mut v[off..off + len]
+}
+
+fn check_meta(m: &ModelMeta) -> Result<()> {
+    let (params, elems, classes) = match m.name.as_str() {
+        "head" => (HEAD_PARAMS, H_IN, H_CLS),
+        "cnn" => (CNN_PARAMS, IMG * IMG, C_CLS),
+        other => bail!("native backend has no model {other:?}"),
+    };
+    ensure!(
+        m.param_count == params,
+        "model {:?}: meta says {} params, native layout has {params}",
+        m.name,
+        m.param_count
+    );
+    ensure!(m.padded_len >= params, "padded_len below parameter count");
+    ensure!(m.input_elems() == elems, "unexpected input shape");
+    ensure!(m.classes == classes, "unexpected class count");
+    Ok(())
+}
+
+fn batch_of(m: &ModelMeta, x: &[f32], y: &[i32]) -> Result<usize> {
+    let elems = m.input_elems();
+    ensure!(!y.is_empty() && x.len() == y.len() * elems, "x/y shape mismatch");
+    for &yi in y {
+        ensure!((0..m.classes as i32).contains(&yi), "label {yi} out of range");
+    }
+    Ok(y.len())
+}
+
+// ---------------------------------------------------------------------
+// Dense / conv primitives (f32, matching the lowered kernels)
+// ---------------------------------------------------------------------
+
+/// out[b, o] = bias[o] + Σ_i x[b, i] · w[i, o]
+fn affine(x: &[f32], w: &[f32], bias: &[f32], b: usize, din: usize, dout: usize, out: &mut [f32]) {
+    for bi in 0..b {
+        let xrow = &x[bi * din..(bi + 1) * din];
+        let orow = &mut out[bi * dout..(bi + 1) * dout];
+        orow.copy_from_slice(bias);
+        for (i, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[i * dout..(i + 1) * dout];
+            for (ov, &wv) in orow.iter_mut().zip(wrow) {
+                *ov += xv * wv;
+            }
+        }
+    }
+}
+
+/// Accumulate dW/db (and optionally dx) for an affine layer given dout.
+#[allow(clippy::too_many_arguments)]
+fn affine_backward(
+    x: &[f32],
+    w: &[f32],
+    dout_grad: &[f32],
+    b: usize,
+    din: usize,
+    dout: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+    mut dx: Option<&mut [f32]>,
+) {
+    for bi in 0..b {
+        let xrow = &x[bi * din..(bi + 1) * din];
+        let grow = &dout_grad[bi * dout..(bi + 1) * dout];
+        for (dbv, &g) in db.iter_mut().zip(grow) {
+            *dbv += g;
+        }
+        for (i, &xv) in xrow.iter().enumerate() {
+            let dwrow = &mut dw[i * dout..(i + 1) * dout];
+            for (dwv, &g) in dwrow.iter_mut().zip(grow) {
+                *dwv += xv * g;
+            }
+        }
+        if let Some(dx) = dx.as_deref_mut() {
+            let dxrow = &mut dx[bi * din..(bi + 1) * din];
+            for (i, dxv) in dxrow.iter_mut().enumerate() {
+                let wrow = &w[i * dout..(i + 1) * dout];
+                let mut s = 0.0f32;
+                for (&wv, &g) in wrow.iter().zip(grow) {
+                    s += wv * g;
+                }
+                *dxv = s;
+            }
+        }
+    }
+}
+
+fn relu_inplace(v: &mut [f32]) {
+    for x in v {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+/// Zero grads where the (post-ReLU) activation is zero.
+fn relu_mask(grad: &mut [f32], act: &[f32]) {
+    for (g, &a) in grad.iter_mut().zip(act) {
+        if a <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// 3×3 SAME conv, NHWC, stride 1. `w` is `[3,3,cin,cout]` row-major.
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_same(
+    inp: &[f32],
+    b: usize,
+    hw: usize,
+    cin: usize,
+    w: &[f32],
+    bias: &[f32],
+    cout: usize,
+    out: &mut [f32],
+) {
+    for bi in 0..b {
+        let ibase = bi * hw * hw * cin;
+        let obase = bi * hw * hw * cout;
+        for y in 0..hw {
+            for x in 0..hw {
+                let ooff = obase + (y * hw + x) * cout;
+                let orow = &mut out[ooff..ooff + cout];
+                orow.copy_from_slice(bias);
+                for ky in 0..3usize {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= hw as isize {
+                        continue;
+                    }
+                    for kx in 0..3usize {
+                        let sx = x as isize + kx as isize - 1;
+                        if sx < 0 || sx >= hw as isize {
+                            continue;
+                        }
+                        let ioff = ibase + (sy as usize * hw + sx as usize) * cin;
+                        for i in 0..cin {
+                            let iv = inp[ioff + i];
+                            let woff = ((ky * 3 + kx) * cin + i) * cout;
+                            let wrow = &w[woff..woff + cout];
+                            for (ov, &wv) in orow.iter_mut().zip(wrow) {
+                                *ov += iv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Backward of [`conv3x3_same`]: accumulate dW/db and optionally dInp.
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_same_backward(
+    inp: &[f32],
+    b: usize,
+    hw: usize,
+    cin: usize,
+    w: &[f32],
+    cout: usize,
+    dout: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    mut dinp: Option<&mut [f32]>,
+) {
+    for bi in 0..b {
+        let ibase = bi * hw * hw * cin;
+        let obase = bi * hw * hw * cout;
+        for y in 0..hw {
+            for x in 0..hw {
+                let goff = obase + (y * hw + x) * cout;
+                let grow = &dout[goff..goff + cout];
+                for (dbv, &g) in db.iter_mut().zip(grow) {
+                    *dbv += g;
+                }
+                for ky in 0..3usize {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= hw as isize {
+                        continue;
+                    }
+                    for kx in 0..3usize {
+                        let sx = x as isize + kx as isize - 1;
+                        if sx < 0 || sx >= hw as isize {
+                            continue;
+                        }
+                        let ioff = ibase + (sy as usize * hw + sx as usize) * cin;
+                        for i in 0..cin {
+                            let iv = inp[ioff + i];
+                            let woff = ((ky * 3 + kx) * cin + i) * cout;
+                            let dwrow = &mut dw[woff..woff + cout];
+                            for (dwv, &g) in dwrow.iter_mut().zip(grow) {
+                                *dwv += iv * g;
+                            }
+                        }
+                        if let Some(dinp) = dinp.as_deref_mut() {
+                            for i in 0..cin {
+                                let woff = ((ky * 3 + kx) * cin + i) * cout;
+                                let wrow = &w[woff..woff + cout];
+                                let mut s = 0.0f32;
+                                for (&wv, &g) in wrow.iter().zip(grow) {
+                                    s += wv * g;
+                                }
+                                dinp[ioff + i] += s;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 2×2 stride-2 max pool, NHWC; records the argmax flat index per cell.
+fn maxpool2(inp: &[f32], b: usize, hw: usize, c: usize, out: &mut [f32], arg: &mut [u32]) {
+    let oh = hw / 2;
+    for bi in 0..b {
+        for y in 0..oh {
+            for x in 0..oh {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bidx = 0u32;
+                    for dy in 0..2usize {
+                        for dx in 0..2usize {
+                            let idx = ((bi * hw + (2 * y + dy)) * hw + (2 * x + dx)) * c
+                                + ch;
+                            let v = inp[idx];
+                            if v > best {
+                                best = v;
+                                bidx = idx as u32;
+                            }
+                        }
+                    }
+                    let oidx = ((bi * oh + y) * oh + x) * c + ch;
+                    out[oidx] = best;
+                    arg[oidx] = bidx;
+                }
+            }
+        }
+    }
+}
+
+fn maxpool2_backward(dout: &[f32], arg: &[u32], dinp: &mut [f32]) {
+    for (&g, &i) in dout.iter().zip(arg.iter()) {
+        dinp[i as usize] += g;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Forward caches
+// ---------------------------------------------------------------------
+
+struct HeadCache {
+    /// post-ReLU hidden activations [b, 128]
+    h: Vec<f32>,
+    /// logits [b, 20]
+    z: Vec<f32>,
+}
+
+fn head_forward(theta: &[f32], x: &[f32], b: usize) -> HeadCache {
+    let fc1_b = sl(theta, H_FC1_B, H_HID);
+    let fc1_w = sl(theta, H_FC1_W, H_IN * H_HID);
+    let fc2_b = sl(theta, H_FC2_B, H_CLS);
+    let fc2_w = sl(theta, H_FC2_W, H_HID * H_CLS);
+    let mut h = vec![0.0f32; b * H_HID];
+    affine(x, fc1_w, fc1_b, b, H_IN, H_HID, &mut h);
+    relu_inplace(&mut h);
+    let mut z = vec![0.0f32; b * H_CLS];
+    affine(&h, fc2_w, fc2_b, b, H_HID, H_CLS, &mut z);
+    HeadCache { h, z }
+}
+
+fn head_backward(theta: &[f32], x: &[f32], cache: &HeadCache, dz: &[f32], b: usize, g: &mut [f32]) {
+    let fc2_w = sl(theta, H_FC2_W, H_HID * H_CLS);
+    // decompose the flat gradient into its non-overlapping layer slices
+    let (gfc1b, rest) = g.split_at_mut(H_HID);
+    let (gfc1w, rest) = rest.split_at_mut(H_IN * H_HID);
+    let (gfc2b, rest) = rest.split_at_mut(H_CLS);
+    let (gfc2w, _pad) = rest.split_at_mut(H_HID * H_CLS);
+
+    let mut dh = vec![0.0f32; b * H_HID];
+    affine_backward(&cache.h, fc2_w, dz, b, H_HID, H_CLS, gfc2w, gfc2b, Some(&mut dh));
+    relu_mask(&mut dh, &cache.h);
+    affine_backward(x, &[], &dh, b, H_IN, H_HID, gfc1w, gfc1b, None);
+}
+
+struct CnnCache {
+    /// post-ReLU conv1 activations [b,16,16,8]
+    a1: Vec<f32>,
+    /// pooled [b,8,8,8]
+    p1: Vec<f32>,
+    arg1: Vec<u32>,
+    /// post-ReLU conv2 activations [b,8,8,16]
+    a2: Vec<f32>,
+    /// pooled = flat fc input [b,4,4,16] == [b,256]
+    p2: Vec<f32>,
+    arg2: Vec<u32>,
+    /// post-ReLU fc1 activations [b,64]
+    h: Vec<f32>,
+    /// logits [b,10]
+    z: Vec<f32>,
+}
+
+fn cnn_forward(theta: &[f32], x: &[f32], b: usize) -> CnnCache {
+    let c1b = sl(theta, C_C1B, C1);
+    let c1w = sl(theta, C_C1W, 3 * 3 * C1);
+    let c2b = sl(theta, C_C2B, C2);
+    let c2w = sl(theta, C_C2W, 3 * 3 * C1 * C2);
+    let f1b = sl(theta, C_F1B, FC_HID);
+    let f1w = sl(theta, C_F1W, FC_IN * FC_HID);
+    let f2b = sl(theta, C_F2B, C_CLS);
+    let f2w = sl(theta, C_F2W, FC_HID * C_CLS);
+
+    let mut a1 = vec![0.0f32; b * IMG * IMG * C1];
+    conv3x3_same(x, b, IMG, 1, c1w, c1b, C1, &mut a1);
+    relu_inplace(&mut a1);
+    let mut p1 = vec![0.0f32; b * 8 * 8 * C1];
+    let mut arg1 = vec![0u32; b * 8 * 8 * C1];
+    maxpool2(&a1, b, IMG, C1, &mut p1, &mut arg1);
+
+    let mut a2 = vec![0.0f32; b * 8 * 8 * C2];
+    conv3x3_same(&p1, b, 8, C1, c2w, c2b, C2, &mut a2);
+    relu_inplace(&mut a2);
+    let mut p2 = vec![0.0f32; b * 4 * 4 * C2];
+    let mut arg2 = vec![0u32; b * 4 * 4 * C2];
+    maxpool2(&a2, b, 8, C2, &mut p2, &mut arg2);
+
+    let mut h = vec![0.0f32; b * FC_HID];
+    affine(&p2, f1w, f1b, b, FC_IN, FC_HID, &mut h);
+    relu_inplace(&mut h);
+    let mut z = vec![0.0f32; b * C_CLS];
+    affine(&h, f2w, f2b, b, FC_HID, C_CLS, &mut z);
+    CnnCache { a1, p1, arg1, a2, p2, arg2, h, z }
+}
+
+fn cnn_backward(theta: &[f32], x: &[f32], cache: &CnnCache, dz: &[f32], b: usize, g: &mut [f32]) {
+    let c2w = sl(theta, C_C2W, 3 * 3 * C1 * C2);
+    let f1w = sl(theta, C_F1W, FC_IN * FC_HID);
+    let f2w = sl(theta, C_F2W, FC_HID * C_CLS);
+    // decompose the flat gradient into its non-overlapping layer slices
+    let (gc1b, rest) = g.split_at_mut(C1);
+    let (gc1w, rest) = rest.split_at_mut(3 * 3 * C1);
+    let (gc2b, rest) = rest.split_at_mut(C2);
+    let (gc2w, rest) = rest.split_at_mut(3 * 3 * C1 * C2);
+    let (gf1b, rest) = rest.split_at_mut(FC_HID);
+    let (gf1w, rest) = rest.split_at_mut(FC_IN * FC_HID);
+    let (gf2b, rest) = rest.split_at_mut(C_CLS);
+    let (gf2w, _pad) = rest.split_at_mut(FC_HID * C_CLS);
+
+    let mut dh = vec![0.0f32; b * FC_HID];
+    let mut dp2 = vec![0.0f32; b * FC_IN];
+    let mut da2 = vec![0.0f32; b * 8 * 8 * C2];
+    let mut dp1 = vec![0.0f32; b * 8 * 8 * C1];
+    let mut da1 = vec![0.0f32; b * IMG * IMG * C1];
+
+    // fc head
+    affine_backward(&cache.h, f2w, dz, b, FC_HID, C_CLS, gf2w, gf2b, Some(&mut dh));
+    relu_mask(&mut dh, &cache.h);
+    affine_backward(&cache.p2, f1w, &dh, b, FC_IN, FC_HID, gf1w, gf1b, Some(&mut dp2));
+
+    // conv block 2
+    maxpool2_backward(&dp2, &cache.arg2, &mut da2);
+    relu_mask(&mut da2, &cache.a2);
+    conv3x3_same_backward(
+        &cache.p1,
+        b,
+        8,
+        C1,
+        c2w,
+        C2,
+        &da2,
+        gc2w,
+        gc2b,
+        Some(&mut dp1),
+    );
+
+    // conv block 1
+    maxpool2_backward(&dp1, &cache.arg1, &mut da1);
+    relu_mask(&mut da1, &cache.a1);
+    conv3x3_same_backward(x, b, IMG, 1, &[], C1, &da1, gc1w, gc1b, None);
+}
+
+// ---------------------------------------------------------------------
+// Losses
+// ---------------------------------------------------------------------
+
+/// Mean softmax cross-entropy and its logit gradient `(p − onehot)/B`.
+fn ce_loss_grad(z: &[f32], y: &[i32], rows: usize, classes: usize) -> (f32, Vec<f32>) {
+    let mut dz = vec![0.0f32; rows * classes];
+    let invb = 1.0 / rows as f32;
+    let mut loss = 0.0f64;
+    for r in 0..rows {
+        let zr = &z[r * classes..(r + 1) * classes];
+        let dr = &mut dz[r * classes..(r + 1) * classes];
+        let max = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for (&zv, d) in zr.iter().zip(dr.iter_mut()) {
+            let e = (zv - max).exp();
+            *d = e;
+            denom += e;
+        }
+        let yi = y[r] as usize;
+        loss += (denom.ln() + max - zr[yi]) as f64;
+        for d in dr.iter_mut() {
+            *d = *d / denom * invb;
+        }
+        dr[yi] -= invb;
+    }
+    ((loss / rows as f64) as f32, dz)
+}
+
+/// Softened softmax probabilities of one logit row at temperature τ.
+fn softmax_tau(zr: &[f32], tau: f32, out: &mut [f32]) {
+    let max = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max) / tau;
+    let mut denom = 0.0f32;
+    for (&zv, o) in zr.iter().zip(out.iter_mut()) {
+        let e = (zv / tau - max).exp();
+        *o = e;
+        denom += e;
+    }
+    for o in out.iter_mut() {
+        *o /= denom;
+    }
+}
+
+/// KD loss `L = (1−λ)·CE + λ·τ²·KL(p_t ‖ p_s)` (Hinton rescaling) and its
+/// logit gradient `(1−λ)·dCE + (λ·τ/B)·(p_s − p_t)`. With λ = 0 this is
+/// exactly [`ce_loss_grad`].
+#[allow(clippy::too_many_arguments)]
+fn kd_loss_grad(
+    z: &[f32],
+    y: &[i32],
+    zbar: &[f32],
+    lam: f32,
+    tau: f32,
+    rows: usize,
+    classes: usize,
+) -> (f32, Vec<f32>) {
+    let (ce, mut dz) = ce_loss_grad(z, y, rows, classes);
+    for d in dz.iter_mut() {
+        *d *= 1.0 - lam;
+    }
+    let mut ps = vec![0.0f32; classes];
+    let mut pt = vec![0.0f32; classes];
+    let mut kl_mean = 0.0f64;
+    let scale = lam * tau / rows as f32;
+    for r in 0..rows {
+        let zr = &z[r * classes..(r + 1) * classes];
+        let tr = &zbar[r * classes..(r + 1) * classes];
+        softmax_tau(zr, tau, &mut ps);
+        softmax_tau(tr, tau, &mut pt);
+        let mut kl = 0.0f64;
+        for c in 0..classes {
+            if pt[c] > 0.0 {
+                kl += pt[c] as f64 * ((pt[c] as f64).ln() - (ps[c].max(1e-30) as f64).ln());
+            }
+        }
+        kl_mean += kl;
+        let dr = &mut dz[r * classes..(r + 1) * classes];
+        for c in 0..classes {
+            dr[c] += scale * (ps[c] - pt[c]);
+        }
+    }
+    kl_mean /= rows as f64;
+    let loss = (1.0 - lam) * ce + lam * tau * tau * (kl_mean as f32);
+    (loss, dz)
+}
+
+// ---------------------------------------------------------------------
+// Entry points (called by the Runtime facade)
+// ---------------------------------------------------------------------
+
+/// Forward + loss-grad + backward + damped momentum, generically over the
+/// loss's logit gradient.
+#[allow(clippy::too_many_arguments)]
+fn step_with<F>(
+    m: &ModelMeta,
+    theta: &[f32],
+    momentum: &[f32],
+    x: &[f32],
+    b: usize,
+    eta: f32,
+    mu: f32,
+    loss_grad: F,
+) -> Result<StepOut>
+where
+    F: FnOnce(&[f32]) -> (f32, Vec<f32>),
+{
+    ensure!(theta.len() == m.padded_len, "theta length mismatch");
+    ensure!(momentum.len() == m.padded_len, "momentum length mismatch");
+    let mut g = vec![0.0f32; m.padded_len];
+    let loss = match m.name.as_str() {
+        "head" => {
+            let cache = head_forward(theta, x, b);
+            let (loss, dz) = loss_grad(&cache.z);
+            head_backward(theta, x, &cache, &dz, b, &mut g);
+            loss
+        }
+        "cnn" => {
+            let cache = cnn_forward(theta, x, b);
+            let (loss, dz) = loss_grad(&cache.z);
+            cnn_backward(theta, x, &cache, &dz, b, &mut g);
+            loss
+        }
+        other => bail!("native backend has no model {other:?}"),
+    };
+    // fused damped-momentum update over the padded flat vector
+    let mut theta2 = Vec::with_capacity(theta.len());
+    let mut mom2 = Vec::with_capacity(momentum.len());
+    for ((&t, &mv), &gv) in theta.iter().zip(momentum).zip(&g) {
+        let mn = mu * mv + (1.0 - mu) * gv;
+        mom2.push(mn);
+        theta2.push(t - eta * mn);
+    }
+    Ok(StepOut { theta: theta2, momentum: mom2, loss })
+}
+
+/// One local momentum-SGD step over a batch.
+pub fn train_step(
+    m: &ModelMeta,
+    theta: &[f32],
+    momentum: &[f32],
+    x: &[f32],
+    y: &[i32],
+    eta: f32,
+    mu: f32,
+) -> Result<StepOut> {
+    check_meta(m)?;
+    let b = batch_of(m, x, y)?;
+    step_with(m, theta, momentum, x, b, eta, mu, |z| {
+        ce_loss_grad(z, y, b, m.classes)
+    })
+}
+
+/// One Moshpit-KD student step (Algorithm 2). τ is the lowering-time KD
+/// temperature (`meta.kd_tau`).
+#[allow(clippy::too_many_arguments)]
+pub fn kd_step(
+    m: &ModelMeta,
+    theta: &[f32],
+    momentum: &[f32],
+    x: &[f32],
+    y: &[i32],
+    zbar: &[f32],
+    lambda: f32,
+    tau: f32,
+    eta: f32,
+    mu: f32,
+) -> Result<StepOut> {
+    check_meta(m)?;
+    let b = batch_of(m, x, y)?;
+    ensure!(zbar.len() == b * m.classes, "zbar shape mismatch");
+    ensure!(tau > 0.0, "KD temperature must be positive");
+    step_with(m, theta, momentum, x, b, eta, mu, |z| {
+        kd_loss_grad(z, y, zbar, lambda, tau, b, m.classes)
+    })
+}
+
+/// Forward pass: logits for a batch.
+pub fn logits(m: &ModelMeta, theta: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+    check_meta(m)?;
+    let elems = m.input_elems();
+    ensure!(!x.is_empty() && x.len() % elems == 0, "x shape mismatch");
+    let b = x.len() / elems;
+    ensure!(theta.len() == m.padded_len, "theta length mismatch");
+    Ok(match m.name.as_str() {
+        "head" => head_forward(theta, x, b).z,
+        "cnn" => cnn_forward(theta, x, b).z,
+        other => bail!("native backend has no model {other:?}"),
+    })
+}
+
+/// One eval chunk: (summed NLL, correct count).
+pub fn eval_chunk(m: &ModelMeta, theta: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+    check_meta(m)?;
+    let rows = batch_of(m, x, y)?;
+    let z = logits(m, theta, x)?;
+    let c = m.classes;
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f64;
+    for r in 0..rows {
+        let zr = &z[r * c..(r + 1) * c];
+        let max = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let denom: f32 = zr.iter().map(|&v| (v - max).exp()).sum();
+        loss_sum += (denom.ln() + max - zr[y[r] as usize]) as f64;
+        let mut best = 0usize;
+        for (j, &v) in zr.iter().enumerate() {
+            if v > zr[best] {
+                best = j;
+            }
+        }
+        if best == y[r] as usize {
+            correct += 1.0;
+        }
+    }
+    Ok((loss_sum, correct))
+}
+
+/// Mean of `k` stacked flat vectors (`stack` row-major `[k, padded_len]`),
+/// through the same allocation-free f64 strip kernel the aggregators use.
+pub fn group_mean(m: &ModelMeta, stack: &[f32], k: usize) -> Result<Vec<f32>> {
+    let p = m.padded_len;
+    ensure!(k > 0 && stack.len() == k * p, "stack shape mismatch");
+    let mut out = vec![0.0f32; p];
+    crate::aggregation::mean_indexed_into(k, |r| &stack[r * p..(r + 1) * p], &mut out, true);
+    Ok(out)
+}
+
+/// Deterministic He initialization over the flat layout (weights
+/// `N(0, 2/fan_in)`, biases zero, zero tail padding) — the artifact-free
+/// stand-in for `{m}_init.bin`. Every call returns the same θ⁰, so all
+/// peers share it (paper §2.2).
+pub fn init_params(m: &ModelMeta) -> Result<Vec<f32>> {
+    check_meta(m)?;
+    let mut theta = vec![0.0f32; m.padded_len];
+    fn he_fill(slice: &mut [f32], fan_in: usize, rng: &mut Rng) {
+        let std = (2.0 / fan_in as f64).sqrt();
+        for v in slice {
+            *v = (rng.normal() * std) as f32;
+        }
+    }
+    match m.name.as_str() {
+        "head" => {
+            let mut rng = Rng::new(0x4EAD_5EED);
+            he_fill(sl_mut(&mut theta, H_FC1_W, H_IN * H_HID), H_IN, &mut rng);
+            he_fill(sl_mut(&mut theta, H_FC2_W, H_HID * H_CLS), H_HID, &mut rng);
+        }
+        "cnn" => {
+            let mut rng = Rng::new(0xC4_45EED);
+            he_fill(sl_mut(&mut theta, C_C1W, 3 * 3 * C1), 9, &mut rng);
+            he_fill(sl_mut(&mut theta, C_C2W, 3 * 3 * C1 * C2), 9 * C1, &mut rng);
+            he_fill(sl_mut(&mut theta, C_F1W, FC_IN * FC_HID), FC_IN, &mut rng);
+            he_fill(sl_mut(&mut theta, C_F2W, FC_HID * C_CLS), FC_HID, &mut rng);
+        }
+        other => bail!("native backend has no model {other:?}"),
+    }
+    Ok(theta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ArtifactMeta;
+
+    fn meta() -> ArtifactMeta {
+        ArtifactMeta::builtin(std::path::Path::new("/nonexistent"))
+    }
+
+    fn head_meta() -> ModelMeta {
+        meta().model("head").unwrap().clone()
+    }
+
+    fn cnn_meta() -> ModelMeta {
+        meta().model("cnn").unwrap().clone()
+    }
+
+    #[test]
+    fn layout_counts_match_registry() {
+        assert_eq!(HEAD_PARAMS, 10_900);
+        assert_eq!(CNN_PARAMS, 18_346);
+        assert_eq!(head_meta().param_count, HEAD_PARAMS);
+        assert_eq!(cnn_meta().param_count, CNN_PARAMS);
+    }
+
+    #[test]
+    fn init_is_deterministic_with_zero_bias_and_tail() {
+        for m in [head_meta(), cnn_meta()] {
+            let a = init_params(&m).unwrap();
+            let b = init_params(&m).unwrap();
+            assert_eq!(a, b);
+            assert_eq!(a.len(), m.padded_len);
+            assert!(a[m.param_count..].iter().all(|&v| v == 0.0));
+            assert!(a.iter().any(|&v| v != 0.0));
+        }
+        // head biases (layout prefix) are zero
+        let h = init_params(&head_meta()).unwrap();
+        assert!(h[..H_HID].iter().all(|&v| v == 0.0));
+    }
+
+    /// Central finite differences against the analytic gradient — the
+    /// correctness anchor for the whole backward implementation.
+    fn fd_check(m: &ModelMeta, probes: &[usize]) {
+        let mut rng = Rng::new(0xFD);
+        let theta = init_params(m).unwrap();
+        let b = 4;
+        let x: Vec<f32> =
+            (0..b * m.input_elems()).map(|_| rng.normal() as f32 * 0.5).collect();
+        let y: Vec<i32> = (0..b).map(|i| (i % m.classes) as i32).collect();
+
+        // analytic gradient via a (η=1, μ=0) step: θ' = θ − g
+        let mom = vec![0.0f32; theta.len()];
+        let out = train_step(m, &theta, &mom, &x, &y, 1.0, 0.0).unwrap();
+        let grad: Vec<f32> =
+            theta.iter().zip(&out.theta).map(|(&t, &t2)| t - t2).collect();
+
+        let loss_at = |th: &[f32]| -> f64 {
+            let o = train_step(m, th, &mom, &x, &y, 0.0, 0.0).unwrap();
+            o.loss as f64
+        };
+        let eps = 2e-2f64;
+        for &j in probes {
+            let mut tp = theta.clone();
+            tp[j] += eps as f32;
+            let lp = loss_at(&tp);
+            tp[j] = theta[j] - eps as f32;
+            let lm = loss_at(&tp);
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = grad[j] as f64;
+            assert!(
+                (fd - an).abs() <= 2e-3 + 0.08 * an.abs().max(fd.abs()),
+                "param {j}: fd {fd:.6} vs analytic {an:.6}"
+            );
+        }
+    }
+
+    #[test]
+    fn head_gradients_match_finite_differences() {
+        // probe biases and weights in both layers
+        fd_check(
+            &head_meta(),
+            &[0, 5, H_FC1_W + 3, H_FC1_W + 1000, H_FC2_B + 2, H_FC2_W + 7, H_FC2_W + 999],
+        );
+    }
+
+    #[test]
+    fn cnn_gradients_match_finite_differences() {
+        fd_check(
+            &cnn_meta(),
+            &[
+                C_C1B + 1,
+                C_C1W + 10,
+                C_C2B + 3,
+                C_C2W + 100,
+                C_F1B + 5,
+                C_F1W + 5000,
+                C_F2B + 4,
+                C_F2W + 123,
+            ],
+        );
+    }
+
+    #[test]
+    fn kd_step_lambda_zero_equals_train_step() {
+        let m = head_meta();
+        let mut rng = Rng::new(3);
+        let theta = init_params(&m).unwrap();
+        let mom = vec![0.0f32; theta.len()];
+        let b = m.batch;
+        let x: Vec<f32> =
+            (0..b * m.input_elems()).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..b).map(|i| (i % m.classes) as i32).collect();
+        let zbar = vec![0.0f32; b * m.classes];
+        let a = train_step(&m, &theta, &mom, &x, &y, 0.1, 0.9).unwrap();
+        let k = kd_step(&m, &theta, &mom, &x, &y, &zbar, 0.0, 3.0, 0.1, 0.9).unwrap();
+        assert_eq!(a.theta, k.theta, "λ=0 KD must equal plain CE training");
+        assert!((a.loss - k.loss).abs() < 1e-7);
+    }
+
+    #[test]
+    fn momentum_rule_matches_hand_computation() {
+        // single logit parameter view: check m' = μm + (1−μ)g, θ' = θ−ηm'
+        let m = head_meta();
+        let theta = init_params(&m).unwrap();
+        let mom = vec![0.25f32; theta.len()];
+        let mut rng = Rng::new(4);
+        let b = 2;
+        let x: Vec<f32> =
+            (0..b * m.input_elems()).map(|_| rng.normal() as f32).collect();
+        let y = vec![0i32, 1];
+        // g via η=1, μ=0 from zero momentum
+        let zero = vec![0.0f32; theta.len()];
+        let gstep = train_step(&m, &theta, &zero, &x, &y, 1.0, 0.0).unwrap();
+        let g: Vec<f32> =
+            theta.iter().zip(&gstep.theta).map(|(&t, &t2)| t - t2).collect();
+        let out = train_step(&m, &theta, &mom, &x, &y, 0.1, 0.9).unwrap();
+        for j in [0usize, H_FC1_W + 17, H_FC2_W + 40] {
+            let want_m = 0.9 * mom[j] + 0.1 * g[j];
+            assert!((out.momentum[j] - want_m).abs() < 1e-5);
+            let want_t = theta[j] - 0.1 * out.momentum[j];
+            assert!((out.theta[j] - want_t).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_fixed_batch() {
+        let m = head_meta();
+        let mut rng = Rng::new(5);
+        let data = crate::data::synth::newsgroups_like(m.batch, &mut rng);
+        let idx: Vec<usize> = (0..m.batch).collect();
+        let (x, y) = data.gather(&idx);
+        let mut theta = init_params(&m).unwrap();
+        let mut mom = vec![0.0f32; theta.len()];
+        let mut first = 0.0f32;
+        let mut last = 0.0f32;
+        for s in 0..25 {
+            let out = train_step(&m, &theta, &mom, &x, &y, 0.1, 0.9).unwrap();
+            theta = out.theta;
+            mom = out.momentum;
+            if s == 0 {
+                first = out.loss;
+            }
+            last = out.loss;
+        }
+        assert!(last < first * 0.6, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn eval_chunk_counts_and_losses_are_sane() {
+        let m = head_meta();
+        let mut rng = Rng::new(6);
+        let data = crate::data::synth::newsgroups_like(40, &mut rng);
+        let theta = init_params(&m).unwrap();
+        let (loss_sum, correct) =
+            eval_chunk(&m, &theta, &data.x, &data.y).unwrap();
+        assert!(loss_sum > 0.0 && loss_sum.is_finite());
+        assert!((0.0..=40.0).contains(&correct));
+    }
+
+    #[test]
+    fn group_mean_is_exact_mean() {
+        let m = head_meta();
+        let p = m.padded_len;
+        let mut rng = Rng::new(7);
+        let stack: Vec<f32> = (0..3 * p).map(|_| rng.normal() as f32).collect();
+        let got = group_mean(&m, &stack, 3).unwrap();
+        // same operation order as the strip kernel: f64 sum, then * (1/k)
+        let inv = 1.0f64 / 3.0;
+        for j in (0..p).step_by(997) {
+            let want = ((stack[j] as f64 + stack[p + j] as f64 + stack[2 * p + j] as f64)
+                * inv) as f32;
+            assert_eq!(got[j], want);
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! PJRT execution backend (`--features pjrt`): loads AOT HLO-text
+//! artifacts and executes them through a PJRT CPU client. Pattern follows
+//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` (cached per entry
+//! point) → `execute`.
+//!
+//! Until concurrent use of the xla binding is measured safe (see ROADMAP
+//! "Open items"), EVERY interaction with it — literal construction,
+//! compile, execute, literal conversion and drop — happens while holding
+//! the single backend lock: each public method acquires the lock first
+//! and releases it after all `xla::Literal` temporaries are dropped. The
+//! peer-parallel trainer still overlaps its native work (batch gather,
+//! state copies) across threads; only the XLA section is serial.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::literal::{lit_f32, lit_i32, to_f32_vec};
+use super::StepOut;
+use crate::models::ModelMeta;
+
+pub(super) struct PjrtBackend {
+    /// client + compiled-executable cache, one lock: conservative
+    /// serialization of all XLA calls (compile exactly once per entry,
+    /// no concurrent binding use)
+    inner: Mutex<PjrtInner>,
+    /// artifact directory the HLO text is loaded from
+    dir: std::path::PathBuf,
+}
+
+struct PjrtInner {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the xla binding types are raw-pointer wrappers without auto
+// Send/Sync. This backend serializes EVERY interaction with the binding
+// — literal construction, compile, execute, literal conversion and drop
+// — behind the single `inner` Mutex: each entry point locks before the
+// first `xla::Literal` is created and the guard outlives all xla
+// temporaries. Cross-thread use therefore reduces to moving pointers
+// between threads with externally-synchronized access; no concurrent
+// entry into the binding occurs. Revisit (per ROADMAP) once
+// shared-client concurrent Execute has been measured safe.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    pub(super) fn new(dir: &std::path::Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtBackend {
+            inner: Mutex::new(PjrtInner { client, exes: HashMap::new() }),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Compile + execute one entry point. Caller holds the backend lock.
+    fn execute_locked(
+        &self,
+        inner: &mut PjrtInner,
+        entry: &str,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.compile_locked(inner, entry)?;
+        let exe = inner.exes.get(entry).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("execute {entry}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("sync {entry}"))?;
+        // every entry point returns a tuple (aot.py lowers return_tuple=True)
+        out.to_tuple().with_context(|| format!("untuple {entry}"))
+    }
+
+    /// Compile `entry` into the cache if absent. Runs under the backend
+    /// lock, so each entry point compiles exactly once even when many
+    /// workers hit it simultaneously.
+    fn compile_locked(&self, inner: &mut PjrtInner, entry: &str) -> Result<()> {
+        if inner.exes.contains_key(entry) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{entry}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse {path:?} — run `make artifacts`"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = inner
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {entry}"))?;
+        inner.exes.insert(entry.to_string(), exe);
+        Ok(())
+    }
+
+    pub(super) fn warmup(&self, entries: &[String]) -> Result<()> {
+        let mut inner = self.inner.lock().expect("pjrt lock");
+        for e in entries {
+            self.compile_locked(&mut inner, e)?;
+        }
+        Ok(())
+    }
+
+    /// Run a `(theta', mom', loss)` entry point (train_step / kd_step)
+    /// over freshly-marshalled literals, entirely under the lock.
+    fn step_entry(&self, entry: &str, args: &[xla::Literal], inner: &mut PjrtInner) -> Result<StepOut> {
+        let out = self.execute_locked(inner, entry, args)?;
+        anyhow::ensure!(out.len() == 3, "{entry} returned {} leaves", out.len());
+        Ok(StepOut {
+            theta: to_f32_vec(&out[0])?,
+            momentum: to_f32_vec(&out[1])?,
+            loss: out[2].to_vec::<f32>()?[0],
+        })
+    }
+
+    pub(super) fn train_step(
+        &self,
+        m: &ModelMeta,
+        theta: &[f32],
+        momentum: &[f32],
+        x: &[f32],
+        y: &[i32],
+        eta: f32,
+        mu: f32,
+    ) -> Result<StepOut> {
+        // lock before any literal is created; every xla temporary below
+        // drops before the guard does
+        let mut inner = self.inner.lock().expect("pjrt lock");
+        let mut dims = vec![m.batch];
+        dims.extend(&m.input_shape);
+        let args = [
+            lit_f32(theta, &[m.padded_len])?,
+            lit_f32(momentum, &[m.padded_len])?,
+            lit_f32(x, &dims)?,
+            lit_i32(y, &[m.batch])?,
+            lit_f32(&[eta], &[1])?,
+            lit_f32(&[mu], &[1])?,
+        ];
+        self.step_entry(&format!("{}_train_step", m.name), &args, &mut inner)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn kd_step(
+        &self,
+        m: &ModelMeta,
+        theta: &[f32],
+        momentum: &[f32],
+        x: &[f32],
+        y: &[i32],
+        zbar: &[f32],
+        lambda: f32,
+        eta: f32,
+        mu: f32,
+    ) -> Result<StepOut> {
+        let mut inner = self.inner.lock().expect("pjrt lock");
+        let mut dims = vec![m.batch];
+        dims.extend(&m.input_shape);
+        let args = [
+            lit_f32(theta, &[m.padded_len])?,
+            lit_f32(momentum, &[m.padded_len])?,
+            lit_f32(x, &dims)?,
+            lit_i32(y, &[m.batch])?,
+            lit_f32(zbar, &[m.batch, m.classes])?,
+            lit_f32(&[lambda], &[1])?,
+            lit_f32(&[eta], &[1])?,
+            lit_f32(&[mu], &[1])?,
+        ];
+        self.step_entry(&format!("{}_kd_step", m.name), &args, &mut inner)
+    }
+
+    pub(super) fn logits(&self, m: &ModelMeta, theta: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let mut inner = self.inner.lock().expect("pjrt lock");
+        let b = x.len() / m.input_elems();
+        let mut dims = vec![b];
+        dims.extend(&m.input_shape);
+        let args = [lit_f32(theta, &[m.padded_len])?, lit_f32(x, &dims)?];
+        let out = self.execute_locked(&mut inner, &format!("{}_logits", m.name), &args)?;
+        to_f32_vec(&out[0])
+    }
+
+    /// One eval chunk: (summed NLL, correct count).
+    pub(super) fn eval_chunk(
+        &self,
+        m: &ModelMeta,
+        theta: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f64, f64)> {
+        let mut inner = self.inner.lock().expect("pjrt lock");
+        let mut dims = vec![m.eval_chunk];
+        dims.extend(&m.input_shape);
+        let args = [
+            lit_f32(theta, &[m.padded_len])?,
+            lit_f32(x, &dims)?,
+            lit_i32(y, &[m.eval_chunk])?,
+        ];
+        let out = self.execute_locked(&mut inner, &format!("{}_eval", m.name), &args)?;
+        Ok((
+            out[0].to_vec::<f32>()?[0] as f64,
+            out[1].to_vec::<f32>()?[0] as f64,
+        ))
+    }
+
+    pub(super) fn group_mean(&self, m: &ModelMeta, stack: &[f32], k: usize) -> Result<Vec<f32>> {
+        let mut inner = self.inner.lock().expect("pjrt lock");
+        let args = [lit_f32(stack, &[k, m.padded_len])?];
+        let out =
+            self.execute_locked(&mut inner, &format!("group_mean_{}_{k}", m.name), &args)?;
+        to_f32_vec(&out[0])
+    }
+}

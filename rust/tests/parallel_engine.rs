@@ -1,0 +1,231 @@
+//! Parallel round engine verification: the parallel execution paths must
+//! be *bit-identical* to the serial reference — same states, same ledger
+//! totals, same simulated clock — and the disjoint-partition utility must
+//! reject unsound inputs.
+
+use std::sync::Arc;
+
+use marfl::aggregation::{AggCtx, Aggregate, PeerState};
+use marfl::config::ExperimentConfig;
+use marfl::coordinator::MarAggregator;
+use marfl::exec;
+use marfl::fl::Trainer;
+use marfl::metrics::{CommLedger, Plane};
+use marfl::models::ModelMeta;
+use marfl::net::Fabric;
+use marfl::rng::Rng;
+use marfl::runtime::Runtime;
+use marfl::sim::SimClock;
+
+fn toy_model(p: usize) -> ModelMeta {
+    ModelMeta {
+        name: "toy".into(),
+        param_count: p,
+        padded_len: p,
+        input_shape: vec![4],
+        classes: 3,
+        batch: 8,
+        eval_chunk: 8,
+        init_file: String::new(),
+        artifacts: Default::default(),
+    }
+}
+
+fn random_states(n: usize, p: usize, seed: u64) -> Vec<PeerState> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| PeerState {
+            theta: (0..p).map(|_| rng.normal() as f32).collect(),
+            momentum: (0..p).map(|_| rng.normal() as f32 * 0.1).collect(),
+        })
+        .collect()
+}
+
+/// Run one MAR aggregate call and return (states, ledger snapshot, clock).
+fn run_mar(
+    n: usize,
+    m: usize,
+    g: usize,
+    p: usize,
+    parallel: bool,
+) -> (Vec<PeerState>, marfl::metrics::CommSnapshot, f64) {
+    let mut states = random_states(n, p, 0xBEEF ^ n as u64);
+    let agg: Vec<usize> = (0..n).collect();
+    let ledger = Arc::new(CommLedger::new());
+    let fabric = Fabric::new(ledger.clone(), 12.5e6, 0.02);
+    let mut clock = SimClock::new();
+    let mut rng = Rng::new(77);
+    let model = toy_model(p);
+    let mut mar =
+        MarAggregator::new(n, m, g, ledger.clone(), 7).with_parallel(parallel);
+    let mut ctx = AggCtx {
+        fabric: &fabric,
+        clock: &mut clock,
+        rng: &mut rng,
+        runtime: None,
+        model: &model,
+    };
+    mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+    (states, ledger.snapshot(), clock.now())
+}
+
+/// The headline determinism guarantee: group-parallel aggregation yields
+/// the exact same peer states, byte/message counts and simulated time as
+/// the serial reference — on perfect grids and in approximate mode.
+#[test]
+fn parallel_and_serial_mar_bit_identical() {
+    for &(n, m, g) in &[(27usize, 3usize, 3usize), (125, 5, 3), (20, 3, 2)] {
+        let (s_states, s_ledger, s_clock) = run_mar(n, m, g, 257, false);
+        let (p_states, p_ledger, p_clock) = run_mar(n, m, g, 257, true);
+        for (i, (a, b)) in s_states.iter().zip(&p_states).enumerate() {
+            assert_eq!(a.theta, b.theta, "peer {i} theta diverged (n={n})");
+            assert_eq!(a.momentum, b.momentum, "peer {i} momentum diverged");
+        }
+        assert_eq!(s_ledger, p_ledger, "ledger totals diverged (n={n})");
+        assert_eq!(
+            s_clock.to_bits(),
+            p_clock.to_bits(),
+            "simulated clock diverged (n={n})"
+        );
+    }
+}
+
+/// Same guarantee under the reduce-scatter wire protocol.
+#[test]
+fn parallel_reduce_scatter_matches_serial() {
+    let build = |parallel: bool| {
+        let n = 27;
+        let mut states = random_states(n, 129, 4);
+        let agg: Vec<usize> = (0..n).collect();
+        let ledger = Arc::new(CommLedger::new());
+        let fabric = Fabric::new(ledger.clone(), 1e6, 0.001);
+        let mut clock = SimClock::new();
+        let mut rng = Rng::new(5);
+        let model = toy_model(129);
+        let mut mar = MarAggregator::new(n, 3, 3, ledger.clone(), 7)
+            .with_exchange(marfl::aggregation::GroupExchange::ReduceScatter)
+            .with_parallel(parallel);
+        let mut ctx = AggCtx {
+            fabric: &fabric,
+            clock: &mut clock,
+            rng: &mut rng,
+            runtime: None,
+            model: &model,
+        };
+        mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        (states, ledger.snapshot())
+    };
+    let (s_states, s_ledger) = build(false);
+    let (p_states, p_ledger) = build(true);
+    assert_eq!(s_ledger, p_ledger);
+    for (a, b) in s_states.iter().zip(&p_states) {
+        assert_eq!(a.theta, b.theta);
+    }
+}
+
+/// Ledger booking from many engine workers loses nothing: concurrent
+/// sends sum to exactly the serial totals.
+#[test]
+fn concurrent_fabric_booking_is_exact() {
+    let ledger = Arc::new(CommLedger::new());
+    let fabric = Fabric::new(ledger.clone(), 1e6, 0.0);
+    let mut lanes = vec![0u8; 64];
+    let idx: Vec<usize> = (0..64).collect();
+    exec::par_map_at(&mut lanes, &idx, |pos, _| {
+        fabric.send(pos as u64 + 1, Plane::Data);
+        fabric.sequential(3, 10, Plane::Control);
+    })
+    .unwrap();
+    let snap = ledger.snapshot();
+    assert_eq!(snap.data_msgs, 64);
+    assert_eq!(snap.data_bytes, (1..=64).sum::<u64>());
+    assert_eq!(snap.control_msgs, 64 * 3);
+    assert_eq!(snap.control_bytes, 64 * 3 * 10);
+}
+
+/// The disjoint-partition utility is the engine's soundness gate: groups
+/// that overlap (or escape the slice) must be rejected up front.
+#[test]
+fn disjoint_partition_rejects_bad_groups() {
+    let mut states = random_states(6, 8, 9);
+    let overlap = vec![vec![0, 1], vec![2, 1]];
+    assert!(exec::par_disjoint_map(&mut states, &overlap, |_, _| ()).is_err());
+    let oob = vec![vec![0], vec![6]];
+    assert!(exec::par_disjoint_map(&mut states, &oob, |_, _| ()).is_err());
+    assert!(exec::validate_disjoint(6, &overlap).is_err());
+    assert!(exec::validate_disjoint(6, &[vec![0, 5], vec![3]]).is_ok());
+}
+
+/// Peer-parallel local training is reproducible end to end: two identical
+/// trainer runs (thread scheduling varies) end in bit-identical states.
+#[test]
+fn peer_parallel_training_bit_reproducible() {
+    let rt = Runtime::new(&marfl::models::default_artifact_dir()).unwrap();
+    let run = || {
+        let cfg = ExperimentConfig {
+            model: "head".into(),
+            peers: 9,
+            group_size: 3,
+            iterations: 3,
+            samples_per_peer: 32,
+            test_samples: 250,
+            eval_every: 3,
+            local_batches: 2,
+            seed: 1234,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(cfg, &rt).unwrap();
+        let summary = t.run().unwrap();
+        let states: Vec<PeerState> = t.states().to_vec();
+        (states, summary.comm, summary.sim_time_s)
+    };
+    let (a_states, a_comm, a_time) = run();
+    let (b_states, b_comm, b_time) = run();
+    assert_eq!(a_comm, b_comm);
+    assert_eq!(a_time.to_bits(), b_time.to_bits());
+    for (a, b) in a_states.iter().zip(&b_states) {
+        assert_eq!(a.theta, b.theta);
+        assert_eq!(a.momentum, b.momentum);
+    }
+}
+
+/// The baselines that now fan out (SAPS pairs, gossip pulls) remain
+/// deterministic for a fixed seed.
+#[test]
+fn parallel_baselines_reproducible() {
+    use marfl::aggregation::{Gossip, Saps};
+    fn mk_saps() -> Box<dyn Aggregate> {
+        Box::new(Saps::default())
+    }
+    fn mk_gossip() -> Box<dyn Aggregate> {
+        Box::new(Gossip::default())
+    }
+    let makers: [fn() -> Box<dyn Aggregate>; 2] = [mk_saps, mk_gossip];
+    for mk in makers {
+        let run = |mut agg_impl: Box<dyn Aggregate>| {
+            let n = 24;
+            let mut states = random_states(n, 65, 11);
+            let agg: Vec<usize> = (0..n).collect();
+            let ledger = Arc::new(CommLedger::new());
+            let fabric = Fabric::new(ledger.clone(), 1e6, 0.001);
+            let mut clock = SimClock::new();
+            let mut rng = Rng::new(13);
+            let model = toy_model(65);
+            let mut ctx = AggCtx {
+                fabric: &fabric,
+                clock: &mut clock,
+                rng: &mut rng,
+                runtime: None,
+                model: &model,
+            };
+            agg_impl.aggregate(&mut states, &agg, &mut ctx).unwrap();
+            (states, ledger.snapshot())
+        };
+        let (a_states, a_ledger) = run(mk());
+        let (b_states, b_ledger) = run(mk());
+        assert_eq!(a_ledger, b_ledger);
+        for (a, b) in a_states.iter().zip(&b_states) {
+            assert_eq!(a.theta, b.theta);
+        }
+    }
+}

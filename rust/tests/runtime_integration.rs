@@ -1,10 +1,8 @@
-//! Integration tests: AOT artifacts × PJRT runtime.
-//!
-//! Require `make artifacts` (the Makefile `test-rust` target guarantees
-//! it). These verify the flat-parameter ABI end to end: HLO text loads,
-//! compiles, executes, and the numerics behave like training.
-
-use std::path::PathBuf;
+//! Integration tests: the model-compute runtime end to end, against
+//! whichever backend the build selects — the AOT artifacts × PJRT when
+//! `--features pjrt` and `make artifacts` have run, the pure-Rust native
+//! backend otherwise. Both expose the same flat-parameter ABI, and the
+//! numerics must behave like training either way.
 
 use marfl::data::synth;
 use marfl::models::default_artifact_dir;
@@ -12,17 +10,8 @@ use marfl::rng::Rng;
 use marfl::runtime::Runtime;
 use marfl::testing::assert_allclose;
 
-fn artifact_dir() -> PathBuf {
-    let dir = default_artifact_dir();
-    assert!(
-        dir.join("meta.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    dir
-}
-
 fn runtime() -> Runtime {
-    Runtime::new(&artifact_dir()).expect("runtime")
+    Runtime::new(&default_artifact_dir()).expect("runtime")
 }
 
 #[test]

@@ -8,12 +8,9 @@ use marfl::runtime::Runtime;
 use marfl::testing::assert_allclose;
 
 fn runtime() -> Runtime {
-    let dir = default_artifact_dir();
-    assert!(
-        dir.join("meta.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    Runtime::new(&dir).expect("runtime")
+    // runs against the lowered artifacts when present, the native backend
+    // otherwise — trainer behaviour must hold for both
+    Runtime::new(&default_artifact_dir()).expect("runtime")
 }
 
 fn base_cfg() -> ExperimentConfig {
