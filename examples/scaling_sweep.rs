@@ -2,17 +2,24 @@
 //! per-iteration traffic grow with the federation size? Measures the
 //! ledger for N ∈ {8, 16, 27, 64, 125, 216} (no training needed: traffic
 //! is independent of parameter values) and prints the scaling table that
-//! motivates the paper (O(N log N) vs O(N²)).
+//! motivates the paper (O(N log N) vs O(N²)). A second sweep drives the
+//! parallel round engine against the serial reference (wall-clock per
+//! MAR aggregate, `MARFL_THREADS` sizes the pool) and the chunk-owned
+//! reduce-scatter wire protocol (per-phase ledger bytes vs full-gather).
 //!
 //! ```bash
 //! cargo run --release --example scaling_sweep
+//! MARFL_THREADS=4 cargo run --release --example scaling_sweep
 //! ```
 
 use std::sync::Arc;
+use std::time::Instant;
 
-use marfl::aggregation::{AggCtx, Aggregate, AllToAll, FedAvgServer, PeerState, RingRdfl};
+use marfl::aggregation::{
+    AggCtx, Aggregate, AllToAll, FedAvgServer, GroupExchange, PeerState, RingRdfl,
+};
 use marfl::coordinator::MarAggregator;
-use marfl::metrics::CommLedger;
+use marfl::metrics::{CommLedger, CommSnapshot};
 use marfl::net::Fabric;
 use marfl::rng::Rng;
 use marfl::sim::SimClock;
@@ -101,6 +108,84 @@ fn main() -> anyhow::Result<()> {
     }
     println!(
         "\nMAR-FL transfers ≈ N·G·(M−1) = O(N log_M N); ring/all-to-all = N(N−1) = O(N²)."
+    );
+
+    // ---- round engine + wire protocol sweep -------------------------
+    // serial vs parallel: wall-clock of one MAR aggregate on this host
+    // (record the columns in EXPERIMENTS.md §Reduce-scatter);
+    // full-gather vs reduce-scatter: ledger bytes, split by phase
+    println!(
+        "\nMAR round engine ({} threads) and wire protocol\n",
+        marfl::exec::threads()
+    );
+    println!(
+        "{:>5} {:>11} {:>13} {:>8} {:>9} {:>9} {:>7}",
+        "N", "serial(ms)", "parallel(ms)", "speedup", "RS(MiB)", "AG(MiB)", "FG/RS"
+    );
+    let mib = |b: u64| b as f64 / (1 << 20) as f64;
+    for &(n, m, g) in SWEEP {
+        let time_engine = |parallel: bool| -> f64 {
+            let ledger = Arc::new(CommLedger::new());
+            let fabric = Fabric::new(ledger.clone(), 12.5e6, 0.02);
+            let mut clock = SimClock::new();
+            let mut rng = Rng::new(9);
+            let mut st = states(n, &mut rng);
+            let agg: Vec<usize> = (0..n).collect();
+            let mdl = model();
+            let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 3)
+                .with_parallel(parallel);
+            let mut ctx = AggCtx {
+                fabric: &fabric,
+                clock: &mut clock,
+                rng: &mut rng,
+                runtime: None,
+                model: &mdl,
+            };
+            // warm the pool and the scratch buffers, then time one call
+            mar.aggregate(&mut st, &agg, &mut ctx).unwrap();
+            let t0 = Instant::now();
+            mar.aggregate(&mut st, &agg, &mut ctx).unwrap();
+            t0.elapsed().as_secs_f64() * 1e3
+        };
+        let serial_ms = time_engine(false);
+        let parallel_ms = time_engine(true);
+        let measure_mode = |exchange: GroupExchange| -> CommSnapshot {
+            let ledger = Arc::new(CommLedger::new());
+            let fabric = Fabric::new(ledger.clone(), 12.5e6, 0.02);
+            let mut clock = SimClock::new();
+            let mut rng = Rng::new(9);
+            let mut st = states(n, &mut rng);
+            let agg: Vec<usize> = (0..n).collect();
+            let mdl = model();
+            let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 3)
+                .with_exchange(exchange);
+            ledger.reset(); // exclude one-time join traffic
+            let mut ctx = AggCtx {
+                fabric: &fabric,
+                clock: &mut clock,
+                rng: &mut rng,
+                runtime: None,
+                model: &mdl,
+            };
+            mar.aggregate(&mut st, &agg, &mut ctx).unwrap();
+            ledger.snapshot()
+        };
+        let fg = measure_mode(GroupExchange::FullGather);
+        let rs = measure_mode(GroupExchange::ReduceScatter);
+        println!(
+            "{:>5} {:>11.1} {:>13.1} {:>7.2}x {:>9.1} {:>9.1} {:>6.2}x",
+            n,
+            serial_ms,
+            parallel_ms,
+            serial_ms / parallel_ms,
+            mib(rs.rs_bytes),
+            mib(rs.ag_bytes),
+            fg.data_bytes as f64 / rs.data_bytes as f64
+        );
+    }
+    println!(
+        "\nreduce-scatter moves 2(M−1)/M state transfers per member (M/2× less \
+         than full-gather) and cuts per-member averaging FLOPs ~M×."
     );
     Ok(())
 }

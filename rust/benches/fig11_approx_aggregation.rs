@@ -29,26 +29,37 @@ fn main() {
         ..Default::default()
     };
 
-    // (label, M, G): exact 5^3 grid vs the paper's approximate relaxation
-    let variants = [("exact M=5 G=3", 5usize, 3usize), ("approx M=3 G=4", 3, 4)];
+    // (label, M, G, reduce_scatter): exact 5^3 grid, the paper's
+    // approximate relaxation, and the chunk-owned wire protocol on the
+    // exact grid (both phases reported from the ledger sub-counters)
+    let variants = [
+        ("exact M=5 G=3", 5usize, 3usize, false),
+        ("approx M=3 G=4", 3, 4, false),
+        ("exact M=5 G=3 + reduce-scatter", 5, 3, true),
+    ];
     let mut rows = vec![vec![
         "variant".into(),
         "group_size".into(),
         "mar_rounds".into(),
         "data_bytes".into(),
+        "rs_bytes".into(),
+        "ag_bytes".into(),
         "final_accuracy".into(),
     ]];
     let mut out = Vec::new();
-    for (label, m, g) in variants {
+    for (label, m, g, reduce_scatter) in variants {
         let cfg = ExperimentConfig {
             group_size: m,
             mar_rounds: g,
+            reduce_scatter,
             ..base.clone()
         };
         let run = timed(label, || Trainer::new(cfg, &rt).unwrap().run().unwrap());
         println!(
-            "    data {:.0} MiB  acc {:.3}",
+            "    data {:.0} MiB (RS {:.0} + AG {:.0})  acc {:.3}",
             mib(run.comm.data_bytes),
+            mib(run.comm.rs_bytes),
+            mib(run.comm.ag_bytes),
             run.final_accuracy
         );
         rows.push(vec![
@@ -56,6 +67,8 @@ fn main() {
             m.to_string(),
             g.to_string(),
             run.comm.data_bytes.to_string(),
+            run.comm.rs_bytes.to_string(),
+            run.comm.ag_bytes.to_string(),
             format!("{:.4}", run.final_accuracy),
         ]);
         out.push((label, run));
@@ -80,5 +93,30 @@ fn main() {
     assert!(
         approx.final_accuracy > exact.final_accuracy - 0.08,
         "approximate aggregation must preserve model utility"
+    );
+
+    // chunk ownership: same exact grid, 2(M−1)/M instead of (M−1) state
+    // transfers per member, and bit-identical averaging
+    let rs = &out[2].1;
+    println!(
+        "reduce-scatter on the exact grid: {:.0} MiB vs {:.0} MiB full-gather \
+         ({:.2}x), acc {:.3}",
+        mib(rs.comm.data_bytes),
+        mib(exact.comm.data_bytes),
+        exact.comm.data_bytes as f64 / rs.comm.data_bytes as f64,
+        rs.final_accuracy
+    );
+    assert!(
+        rs.comm.data_bytes < exact.comm.data_bytes,
+        "chunk ownership must cut data bytes on the same schedule"
+    );
+    assert_eq!(
+        rs.comm.data_bytes,
+        rs.comm.rs_bytes + rs.comm.ag_bytes,
+        "RS-mode data traffic must be exactly the two phases"
+    );
+    assert!(
+        (rs.final_accuracy - exact.final_accuracy).abs() < 1e-12,
+        "chunk-owned averaging is bit-identical; accuracy must match"
     );
 }

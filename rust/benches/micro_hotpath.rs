@@ -16,7 +16,10 @@
 mod common;
 
 use common::{bench_ns, emit_csv, runtime, SynthBundle};
-use marfl::aggregation::{average_group, Aggregate};
+use marfl::aggregation::{
+    average_group, average_group_native, owner_stripe_mean, Aggregate,
+    GroupExchange,
+};
 use marfl::coordinator::MarAggregator;
 use marfl::data::synth;
 use marfl::exec;
@@ -94,6 +97,40 @@ fn main() {
         });
     }
 
+    println!("\nchunk-owned reduce-scatter kernel (M=5, cnn-size vectors)\n");
+    {
+        // full-vector averaging = what every member computes under
+        // full-gather; the owner stripe = what one member computes under
+        // chunk ownership (1/M of the elements). The ~M× gap is the
+        // per-peer compute saving the reduce-scatter mode models.
+        let mut b = SynthBundle::new(m.padded_len);
+        let states = b.states(k);
+        let members: Vec<usize> = (0..k).collect();
+        let mut full_states = states.clone();
+        rows.bench("group average full vector (M=5)", 3, 30, || {
+            average_group_native(&mut full_states, &members);
+        });
+        rows.bench("group average chunk-owned stripe (M=5)", 3, 30, || {
+            std::hint::black_box(owner_stripe_mean(&states, &members, 2));
+        });
+        let n_rows = rows.0.len();
+        let speedup = rows.0[n_rows - 2].1 / rows.0[n_rows - 1].1;
+        println!(
+            "  chunk ownership cuts per-member averaging {speedup:.1}x \
+             (M=5; acceptance bar: >=2x at M>=4)"
+        );
+        // acceptance gate; the expected gap is ~M× so the margin is wide,
+        // but MARFL_BENCH_NO_ASSERT=1 downgrades it to report-only for
+        // hosts too noisy to trust wall-clock ratios
+        assert!(
+            speedup >= 2.0
+                || std::env::var_os("MARFL_BENCH_NO_ASSERT").is_some(),
+            "chunk-owned stripe must be >=2x faster than full-vector \
+             averaging at M=5 (got {speedup:.2}x; set MARFL_BENCH_NO_ASSERT=1 \
+             to report without gating)"
+        );
+    }
+
     println!("\ncoordinator-scale operations\n");
     {
         let mut b = SynthBundle::new(m.padded_len);
@@ -101,6 +138,17 @@ fn main() {
         let agg: Vec<usize> = (0..125).collect();
         let mut mar = MarAggregator::new(125, 5, 3, b.ledger.clone(), 5);
         rows.bench("MAR aggregate 125 peers (native, M=5 G=3)", 1, 5, || {
+            let mut ctx = b.ctx();
+            mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        });
+    }
+    {
+        let mut b = SynthBundle::new(m.padded_len);
+        let mut states = b.states(125);
+        let agg: Vec<usize> = (0..125).collect();
+        let mut mar = MarAggregator::new(125, 5, 3, b.ledger.clone(), 5)
+            .with_exchange(GroupExchange::ReduceScatter);
+        rows.bench("MAR aggregate 125 peers (reduce-scatter, M=5 G=3)", 1, 5, || {
             let mut ctx = b.ctx();
             mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
         });

@@ -32,7 +32,7 @@ pub use saps::Saps;
 
 use anyhow::Result;
 
-use crate::metrics::Plane;
+use crate::metrics::{ExchangePhase, Plane};
 use crate::models::ModelMeta;
 use crate::net::Fabric;
 use crate::rng::Rng;
@@ -309,6 +309,136 @@ pub fn average_views(views: &mut [&mut PeerState]) {
     average_rows(&mut ViewRows { views });
 }
 
+// ---------------------------------------------------------------------
+// Chunk ownership (Moshpit-SGD's reduce-scatter wire protocol)
+// ---------------------------------------------------------------------
+//
+// Under `GroupExchange::ReduceScatter`, member `k` of a size-`n` group
+// owns the k-th balanced contiguous stripe of every exchanged vector
+// (`exec::stripe_range`; the rank doubles as the chunk index
+// `GroupKey::set_chunk` records). During reduce-scatter the owner
+// receives the other members' copies of its stripe and averages ONLY
+// that stripe — 1/n of the full-gather averaging FLOPs and scratch
+// traffic per member — and during all-gather it broadcasts the averaged
+// stripe back. Stripes partition the vector and every element still
+// accumulates its inputs in member order, so the assembled result is
+// bit-identical to full-gather averaging (the equivalence the
+// reduce-scatter tests pin down).
+
+/// In-place chunk-owned group average: owner `k` computes only its
+/// balanced stripe of the mean (the reduce-scatter compute model), the
+/// stripes assemble in one canonical buffer, and the all-gather
+/// broadcast writes it back to every member. Bit-identical to
+/// [`average_rows`]. With `stripe_parallel`, owner stripes fan out
+/// across the `exec` pool; the scratch buffers are *taken* from the
+/// thread-local cell (not borrowed across the fan-out), so a
+/// work-stealing re-entry on this thread cannot alias them.
+fn average_rows_chunked<R: GroupRows>(rows: &mut R, stripe_parallel: bool) {
+    let n = rows.rows();
+    if n < 2 {
+        return;
+    }
+    let p = rows.theta(0).len();
+    let q = rows.momentum(0).len();
+    for k in 0..n {
+        assert_eq!(rows.theta(k).len(), p, "ragged theta lengths");
+        assert_eq!(rows.momentum(k).len(), q, "ragged momentum lengths");
+    }
+    let (mut tbuf, mut mbuf) = GROUP_BUF.with(|cell| cell.take());
+    tbuf.clear();
+    tbuf.resize(p, 0.0);
+    mbuf.clear();
+    mbuf.resize(q, 0.0);
+    {
+        let shared = &*rows;
+        let par = stripe_parallel && crate::exec::threads() > 1;
+        crate::exec::map_ranges_mut(
+            tbuf.as_mut_slice(),
+            &crate::exec::stripe_ranges(p, n),
+            par,
+            |owner, stripe| {
+                let r = crate::exec::stripe_range(p, n, owner);
+                mean_indexed_into(
+                    n,
+                    |k| &shared.theta(k)[r.start..r.end],
+                    stripe,
+                    false,
+                );
+            },
+        )
+        .expect("owner stripes are disjoint by construction");
+        crate::exec::map_ranges_mut(
+            mbuf.as_mut_slice(),
+            &crate::exec::stripe_ranges(q, n),
+            par,
+            |owner, stripe| {
+                let r = crate::exec::stripe_range(q, n, owner);
+                mean_indexed_into(
+                    n,
+                    |k| &shared.momentum(k)[r.start..r.end],
+                    stripe,
+                    false,
+                );
+            },
+        )
+        .expect("owner stripes are disjoint by construction");
+    }
+    rows.write_all(&tbuf, &mbuf);
+    GROUP_BUF.with(|cell| cell.replace((tbuf, mbuf)));
+}
+
+/// [`average_rows_chunked`] over `states[members]` — the serial-engine
+/// reduce-scatter averaging path (stripes run in owner order).
+pub fn average_group_chunked(states: &mut [PeerState], members: &[usize]) {
+    average_rows_chunked(&mut SliceRows { states, members }, false);
+}
+
+/// [`average_rows_chunked`] over exclusive member views — the
+/// reduce-scatter group-parallel lane body. `stripe_parallel` lets a
+/// round whose group fan-out underfills the engine pool recover
+/// utilization by striping owners across it; results are bit-identical
+/// either way.
+pub fn average_views_chunked(views: &mut [&mut PeerState], stripe_parallel: bool) {
+    average_rows_chunked(&mut ViewRows { views }, stripe_parallel);
+}
+
+/// The compute one chunk owner performs during reduce-scatter: the mean
+/// of the selected peers' (θ, momentum) restricted to `owner`'s stripes
+/// (`owner` is the member's rank in the group — its chunk index). The
+/// micro bench compares this against full-vector averaging to pin the
+/// ~M× per-member kernel saving chunk ownership buys.
+pub fn owner_stripe_mean(
+    states: &[PeerState],
+    members: &[usize],
+    owner: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert!(!members.is_empty(), "owner stripe of an empty group");
+    assert!(owner < members.len(), "owner {owner} outside the group");
+    let p = states[members[0]].theta.len();
+    let q = states[members[0]].momentum.len();
+    for &i in members {
+        assert_eq!(states[i].theta.len(), p, "ragged theta lengths");
+        assert_eq!(states[i].momentum.len(), q, "ragged momentum lengths");
+    }
+    let rt = crate::exec::stripe_range(p, members.len(), owner);
+    let rq = crate::exec::stripe_range(q, members.len(), owner);
+    let mut theta = vec![0.0f32; rt.len()];
+    let mut mom = vec![0.0f32; rq.len()];
+    mean_indexed_into(
+        members.len(),
+        |k| &states[members[k]].theta[rt.start..rt.end],
+        &mut theta,
+        false,
+    );
+    mean_indexed_into(
+        members.len(),
+        |k| &states[members[k]].momentum[rq.start..rq.end],
+        &mut mom,
+        false,
+    );
+    (theta, mom)
+}
+
 /// Use the Pallas `group_mean` artifact for within-group averaging?
 /// Benchmarked ablation (`micro_hotpath`): at this model scale the PJRT
 /// call overhead (~0.7 ms literal marshalling + dispatch) outweighs the
@@ -370,11 +500,72 @@ pub enum GroupExchange {
     /// k(k−1) transfers of `bytes` per group. Matches the accounting the
     /// paper's headline ratios imply (≈10× vs RDFL at N=125).
     FullGather,
-    /// Moshpit-SGD's chunked protocol: each member owns 1/k of the
-    /// vector; reduce-scatter + all-gather moves 2·(k−1)/k·bytes per
-    /// member — a further (k/2)× reduction, exposed as the
-    /// `mar.reduce_scatter` ablation.
+    /// Moshpit-SGD's chunked protocol: each member owns a disjoint 1/k
+    /// stripe of the vector; reduce-scatter + all-gather moves exactly
+    /// 2·(k−1)/k·bytes per member — a further (k/2)× wire reduction —
+    /// and each member averages only its owned stripe (a ~k× compute
+    /// reduction). Exposed as the `mar.reduce_scatter` ablation.
     ReduceScatter,
+}
+
+/// Simulated duration of one group exchange, split by wire phase.
+/// Full-gather is a pure gather: its whole duration books as
+/// `all_gather_s`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ExchangeTiming {
+    pub reduce_scatter_s: f64,
+    pub all_gather_s: f64,
+}
+
+impl ExchangeTiming {
+    pub fn total(&self) -> f64 {
+        self.reduce_scatter_s + self.all_gather_s
+    }
+}
+
+/// Book one chunk-owned reduce-scatter + all-gather exchange for a group
+/// of `group_len` members moving `bytes` of state each. Owner `i`'s wire
+/// chunk is the balanced byte split of the payload, so the totals are
+/// exact: each phase moves `(k−1)·bytes` across the group — the
+/// `2(k−1)/k` state transfers per member that `coordinator/mar.rs`
+/// asserts in closed form. Both phases book on the ledger's per-phase
+/// sub-counters; the returned timing keeps them separate because the
+/// all-gather cannot start before the group's reduction completes.
+pub fn book_reduce_scatter_fabric(
+    group_len: usize,
+    bytes: u64,
+    fabric: &Fabric,
+) -> ExchangeTiming {
+    if group_len < 2 {
+        return ExchangeTiming::default();
+    }
+    let k = group_len as u64;
+    let chunk = |i: u64| bytes / k + u64::from(i < bytes % k);
+    // reduce-scatter: member j streams every other owner's chunk to its
+    // owner — (k−1) messages totalling bytes − chunk(j); members send in
+    // parallel, so the phase lasts as long as the slowest member
+    let mut rs = 0.0f64;
+    for j in 0..k {
+        rs = fabric
+            .sequential_phased(
+                group_len - 1,
+                bytes - chunk(j),
+                ExchangePhase::ReduceScatter,
+            )
+            .max(rs);
+    }
+    // all-gather: owner i broadcasts its averaged chunk to the others
+    let mut ag = 0.0f64;
+    for i in 0..k {
+        ag = fabric
+            .sequential_phased(
+                group_len - 1,
+                (k - 1) * chunk(i),
+                ExchangePhase::AllGather,
+            )
+            .max(ag);
+    }
+    ExchangeTiming { reduce_scatter_s: rs, all_gather_s: ag }
 }
 
 /// Book one group's exchange on the fabric; returns the group's simulated
@@ -390,7 +581,6 @@ pub fn book_group_exchange_fabric(
     if group_len < 2 {
         return 0.0;
     }
-    let k = group_len as u64;
     match mode {
         GroupExchange::FullGather => {
             let mut per_member = 0.0f64;
@@ -402,15 +592,7 @@ pub fn book_group_exchange_fabric(
             per_member
         }
         GroupExchange::ReduceScatter => {
-            // 2(k−1) chunk messages of bytes/k per member
-            let chunk = bytes.div_ceil(k);
-            let mut per_member = 0.0f64;
-            for _ in 0..group_len {
-                per_member = fabric
-                    .sequential(2 * (group_len - 1), chunk, Plane::Data)
-                    .max(per_member);
-            }
-            per_member
+            book_reduce_scatter_fabric(group_len, bytes, fabric).total()
         }
     }
 }
@@ -591,6 +773,100 @@ mod tests {
             assert_eq!(a[i].theta, b[i].theta);
             assert_eq!(a[i].momentum, b[i].momentum);
         }
+    }
+
+    #[test]
+    fn chunk_owned_average_bit_identical_to_full() {
+        // stripe boundaries cross several MEAN_STRIPE chunks and a ragged
+        // tail; every group size must assemble the exact full mean
+        let p = 2 * 4096 + 103;
+        for &n in &[2usize, 3, 5, 8] {
+            let mut a = random_states(n, p, 95);
+            let mut b = a.clone();
+            let members: Vec<usize> = (0..n).collect();
+            average_group_native(&mut a, &members);
+            average_group_chunked(&mut b, &members);
+            for i in 0..n {
+                assert_eq!(a[i].theta, b[i].theta, "theta diverged (M={n})");
+                assert_eq!(a[i].momentum, b[i].momentum, "momentum diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_owned_average_handles_extended_momentum() {
+        // DP iterations extend momentum beyond theta; stripes partition
+        // each vector at its own length
+        let mut a = random_states(3, 300, 98);
+        for s in &mut a {
+            s.momentum.extend_from_slice(&[1.0, 2.0, 3.0]);
+        }
+        let mut b = a.clone();
+        let members = vec![0, 1, 2];
+        average_group_native(&mut a, &members);
+        average_group_chunked(&mut b, &members);
+        for i in 0..3 {
+            assert_eq!(a[i].theta, b[i].theta);
+            assert_eq!(a[i].momentum, b[i].momentum);
+        }
+    }
+
+    #[test]
+    fn chunk_owned_views_with_stripe_parallel_bit_identical() {
+        let mut a = random_states(6, 3 * 4096 + 1, 96);
+        let mut b = a.clone();
+        let members = vec![0, 2, 3, 5];
+        average_group_chunked(&mut a, &members);
+        let groups = vec![members.clone()];
+        crate::exec::par_disjoint_map(&mut b, &groups, |_, views| {
+            average_views_chunked(views, true);
+        })
+        .unwrap();
+        for i in 0..6 {
+            assert_eq!(a[i].theta, b[i].theta);
+            assert_eq!(a[i].momentum, b[i].momentum);
+        }
+    }
+
+    #[test]
+    fn owner_stripes_assemble_into_the_full_mean() {
+        let p = 4096 + 77;
+        let states = random_states(7, p, 97);
+        let members = vec![0, 1, 3, 4, 6];
+        let (want_t, want_m) = mean_of(&states, &members);
+        let mut got_t = Vec::new();
+        let mut got_m = Vec::new();
+        for owner in 0..members.len() {
+            let (t, m) = owner_stripe_mean(&states, &members, owner);
+            got_t.extend_from_slice(&t);
+            got_m.extend_from_slice(&m);
+        }
+        assert_eq!(got_t, want_t);
+        assert_eq!(got_m, want_m);
+    }
+
+    #[test]
+    fn reduce_scatter_booking_is_exact_per_phase() {
+        let tc = TestCtx::new(32);
+        let bytes = 1003u64; // deliberately not divisible by k
+        let k = 4usize;
+        let tm = book_reduce_scatter_fabric(k, bytes, &tc.fabric);
+        assert!(tm.reduce_scatter_s > 0.0 && tm.all_gather_s > 0.0);
+        assert!(tm.total() > tm.all_gather_s);
+        let s = tc.ledger.snapshot();
+        // each phase moves exactly (k−1)·bytes in k(k−1) chunk messages
+        assert_eq!(s.rs_bytes, (k as u64 - 1) * bytes);
+        assert_eq!(s.ag_bytes, (k as u64 - 1) * bytes);
+        assert_eq!(s.rs_msgs, (k * (k - 1)) as u64);
+        assert_eq!(s.ag_msgs, (k * (k - 1)) as u64);
+        assert_eq!(s.data_bytes, 2 * (k as u64 - 1) * bytes);
+        // singleton groups book nothing
+        let tc2 = TestCtx::new(32);
+        assert_eq!(
+            book_reduce_scatter_fabric(1, bytes, &tc2.fabric),
+            ExchangeTiming::default()
+        );
+        assert_eq!(tc2.ledger.snapshot().data_bytes, 0);
     }
 
     #[test]

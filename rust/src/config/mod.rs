@@ -132,6 +132,10 @@ pub struct ExperimentConfig {
     pub mar_rounds: usize,
     /// use Moshpit-SGD's chunked reduce-scatter within groups (ablation)
     pub reduce_scatter: bool,
+    /// probability a reduce-scatter group loses a chunk owner
+    /// mid-exchange (the group falls back to a full gather among the
+    /// survivors; ignored under full-gather)
+    pub rs_drop: f64,
     /// momentum-SGD stepsize η (paper: 0.1)
     pub eta: f32,
     /// momentum μ (paper: 0.9)
@@ -179,6 +183,7 @@ impl Default for ExperimentConfig {
             group_size: 5,
             mar_rounds: 0,
             reduce_scatter: false,
+            rs_drop: 0.0,
             eta: 0.1,
             mu: 0.9,
             local_batches: 1,
@@ -298,6 +303,7 @@ impl ExperimentConfig {
             "mar.reduce_scatter" | "reduce_scatter" => {
                 self.reduce_scatter = bool_of(v)?
             }
+            "mar.rs_drop" | "rs_drop" => self.rs_drop = f64_of(v)?,
             "kd.enabled" => self.kd.enabled = bool_of(v)?,
             "kd.k_iterations" => self.kd.k_iterations = usize_of(v)?,
             "kd.rho_ell" => self.kd.rho_ell = f64_of(v)?,
@@ -330,6 +336,9 @@ impl ExperimentConfig {
         }
         if !(0.0..=1.0).contains(&self.dropout) {
             bail!("dropout must be in [0, 1]");
+        }
+        if !(0.0..=1.0).contains(&self.rs_drop) {
+            bail!("mar.rs_drop must be in [0, 1]");
         }
         if self.eval_every == 0 {
             bail!("eval_every must be >= 1");
@@ -404,6 +413,21 @@ mod tests {
         assert_eq!(c.peers, 16);
         assert!(c.dp.enabled);
         assert_eq!(c.kd.rho_ell, 0.5);
+    }
+
+    #[test]
+    fn reduce_scatter_knobs_apply_and_validate() {
+        let mut c = ExperimentConfig::default();
+        c.apply_overrides(&[
+            "mar.reduce_scatter=true".into(),
+            "mar.rs_drop=0.25".into(),
+        ])
+        .unwrap();
+        assert!(c.reduce_scatter);
+        assert_eq!(c.rs_drop, 0.25);
+        assert!(c.validate().is_ok());
+        c.rs_drop = 1.5;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -23,13 +23,15 @@ use anyhow::Result;
 
 use super::group_key::{grid_keys, perfect_grid, random_keys, GroupKey};
 use crate::aggregation::{
-    average_group, average_views, book_group_exchange_fabric,
-    book_group_exchange_mode, payload_bytes, AggCtx, AggReport, Aggregate,
-    GroupExchange, PeerState,
+    average_group, average_group_chunked, average_group_native, average_views,
+    average_views_chunked, book_group_exchange_fabric, book_group_exchange_mode,
+    book_reduce_scatter_fabric, payload_bytes, AggCtx, AggReport, Aggregate,
+    ExchangeTiming, GroupExchange, PeerState,
 };
 use crate::exec;
 use crate::dht::{decode_peer, encode_peer, Key, SimDht};
 use crate::metrics::CommLedger;
+use crate::net::Fabric;
 use crate::rng::Rng;
 
 /// MAR-FL's aggregator: owns the DHT control plane and the group-key
@@ -42,6 +44,14 @@ pub struct MarAggregator {
     /// within-group wire protocol (full-gather default; reduce-scatter
     /// is the Moshpit-SGD chunked mode, `mar.reduce_scatter` ablation)
     pub exchange: GroupExchange,
+    /// probability that a reduce-scatter group loses one member (a chunk
+    /// owner) mid-exchange. Chunk ownership makes every member
+    /// load-bearing — the missing stripe stalls the whole group (the
+    /// reliability limitation `butterfly.rs` documents for BAR) — so the
+    /// survivors time out and redo the exchange as a full gather among
+    /// themselves; the dropped peer goes stale and sits out the rest of
+    /// the iteration. No effect under full-gather.
+    pub rs_drop: f64,
     /// run each round's groups concurrently on the `exec` pool (default).
     /// The serial path is kept as the bit-identical reference for the
     /// determinism tests and the serial-vs-parallel scaling bench.
@@ -75,6 +85,7 @@ impl MarAggregator {
             group_size,
             rounds,
             exchange: GroupExchange::FullGather,
+            rs_drop: 0.0,
             parallel: true,
             dht,
             node_ids,
@@ -88,6 +99,14 @@ impl MarAggregator {
         self
     }
 
+    /// Set the per-group chunk-owner drop probability (see
+    /// [`Self::rs_drop`]).
+    pub fn with_rs_drop(mut self, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "rs_drop {p} outside [0, 1]");
+        self.rs_drop = p;
+        self
+    }
+
     /// Force the serial reference engine (benchmark/verification aid).
     pub fn with_parallel(mut self, parallel: bool) -> Self {
         self.parallel = parallel;
@@ -97,21 +116,27 @@ impl MarAggregator {
     /// DHT-mediated matchmaking for one round. `positions[i]` announces
     /// under `keys[i].reduced(round)`; groups are peers sharing a reduced
     /// key, split into chunks of at most M (sorted by peer id for
-    /// determinism). Returns groups as lists of *positions* into `agg`.
+    /// determinism). Positions with `alive[pos] == false` (chunk owners
+    /// that dropped in an earlier round of this iteration) neither
+    /// announce nor collect. Returns groups as lists of *positions* into
+    /// `agg`.
     fn matchmake(
         &mut self,
         agg: &[usize],
         keys: &[GroupKey],
+        alive: &[bool],
         round: usize,
         scope: &str,
     ) -> Vec<Vec<usize>> {
-        // announce: one DHT store per aggregator
+        // announce: one DHT store per live aggregator
         let mut content_keys: Vec<Key> = Vec::with_capacity(agg.len());
         for (pos, &peer) in agg.iter().enumerate() {
             let content =
                 Key::hash_of(&format!("{scope}:r{round}:{}", keys[pos].reduced(round)));
             content_keys.push(content);
-            self.dht.store(self.node_ids[peer], content, encode_peer(pos));
+            if alive[pos] {
+                self.dht.store(self.node_ids[peer], content, encode_peer(pos));
+            }
         }
         // collect: every aggregator issues its own get (the paper's
         // dispatcher scans peer announcements — O(N) lookups per round);
@@ -119,6 +144,9 @@ impl MarAggregator {
         // paper's "group symmetry" cross-check
         let mut by_key: BTreeMap<String, Vec<usize>> = BTreeMap::new();
         for (pos, &peer) in agg.iter().enumerate() {
+            if !alive[pos] {
+                continue;
+            }
             let got = self.dht.get(self.node_ids[peer], content_keys[pos]);
             let mut members: Vec<usize> =
                 got.iter().filter_map(|v| decode_peer(v)).collect();
@@ -167,8 +195,113 @@ impl MarAggregator {
         tag: &str,
     ) -> Vec<Vec<usize>> {
         let keys = random_keys(agg.len(), self.group_size, 1, rng);
-        self.matchmake(agg, &keys, 0, tag)
+        let alive = vec![true; agg.len()];
+        self.matchmake(agg, &keys, &alive, 0, tag)
     }
+}
+
+/// One group's exchange + averaging — the parallel lane body, over the
+/// exclusive member views `exec::par_disjoint_map` hands out. `drop`
+/// carries the pre-drawn victim for a reduce-scatter owner drop;
+/// `stripe_par` fans owner stripes across the pool when the round's
+/// group count underfills it.
+fn exchange_lane(
+    views: &mut [&mut PeerState],
+    drop: Option<usize>,
+    exchange: GroupExchange,
+    bytes: u64,
+    fabric: &Fabric,
+    stripe_par: bool,
+) -> ExchangeTiming {
+    match (exchange, drop) {
+        (GroupExchange::ReduceScatter, None) => {
+            let timing = book_reduce_scatter_fabric(views.len(), bytes, fabric);
+            average_views_chunked(views, stripe_par);
+            timing
+        }
+        (GroupExchange::ReduceScatter, Some(victim)) => {
+            // a chunk owner vanished: the survivors time out on the
+            // missing stripe (one link latency) and redo the exchange as
+            // a full gather among themselves; the victim goes stale
+            let mut survivors: Vec<&mut PeerState> = views
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| *i != victim)
+                .map(|(_, v)| &mut **v)
+                .collect();
+            let t = book_group_exchange_fabric(
+                survivors.len(),
+                bytes,
+                GroupExchange::FullGather,
+                fabric,
+            );
+            average_views(&mut survivors);
+            ExchangeTiming {
+                reduce_scatter_s: fabric.latency,
+                all_gather_s: t,
+            }
+        }
+        (GroupExchange::FullGather, _) => {
+            let t = book_group_exchange_fabric(
+                views.len(),
+                bytes,
+                GroupExchange::FullGather,
+                fabric,
+            );
+            average_views(views);
+            ExchangeTiming { reduce_scatter_s: 0.0, all_gather_s: t }
+        }
+    }
+}
+
+/// Serial-reference twin of [`exchange_lane`] (keeps the Pallas
+/// `group_mean` dispatch available on the full-gather path; chunk-owned
+/// averaging is native-only).
+fn exchange_lane_serial(
+    states: &mut [PeerState],
+    members: &[usize],
+    drop: Option<usize>,
+    exchange: GroupExchange,
+    bytes: u64,
+    ctx: &mut AggCtx<'_>,
+) -> Result<ExchangeTiming> {
+    Ok(match (exchange, drop) {
+        (GroupExchange::ReduceScatter, None) => {
+            let timing =
+                book_reduce_scatter_fabric(members.len(), bytes, ctx.fabric);
+            average_group_chunked(states, members);
+            timing
+        }
+        (GroupExchange::ReduceScatter, Some(victim)) => {
+            let survivors: Vec<usize> = members
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != victim)
+                .map(|(_, &peer)| peer)
+                .collect();
+            let t = book_group_exchange_fabric(
+                survivors.len(),
+                bytes,
+                GroupExchange::FullGather,
+                ctx.fabric,
+            );
+            average_group_native(states, &survivors);
+            ExchangeTiming {
+                reduce_scatter_s: ctx.fabric.latency,
+                all_gather_s: t,
+            }
+        }
+        (GroupExchange::FullGather, _) => {
+            let t = book_group_exchange_mode(
+                members.len(),
+                bytes,
+                GroupExchange::FullGather,
+                ctx,
+            );
+            average_group(states, members, ctx)?;
+            ExchangeTiming { reduce_scatter_s: 0.0, all_gather_s: t }
+        }
+    })
 }
 
 impl Aggregate for MarAggregator {
@@ -200,20 +333,47 @@ impl Aggregate for MarAggregator {
         let bytes = payload_bytes(states, agg);
         let scope = format!("agg{}", self.iteration);
         let mut groups_formed = 0;
+        // chunk owners that dropped this iteration: stale state, excluded
+        // from every subsequent round's matchmaking
+        let mut alive = vec![true; n];
         // the Pallas artifact path runs through the (non-Sync-friendly)
         // runtime dispatch; keep it on the serial reference engine
         let run_parallel = self.parallel
             && !(ctx.runtime.is_some()
                 && crate::aggregation::pjrt_group_mean_enabled());
+        // closed-form cross-check: chunk-owned phases must book exactly
+        // 2(k−1)·bytes per successful group (verified in debug builds)
+        let phase_base = ctx.fabric.ledger().snapshot();
+        let mut expected_phase_bytes = 0u64;
         for g in 0..d {
             let hops_before = self.dht.hops_total();
-            let groups = self.matchmake(agg, &keys, g, &scope);
+            let groups = self.matchmake(agg, &keys, &alive, g, &scope);
             // control-plane latency: announcements and collects run in
             // parallel across peers; charge the per-peer average lookup
             // depth (2 RTTs per hop: request+response)
             let hops = self.dht.hops_total() - hops_before;
-            let avg_hops = hops as f64 / n as f64;
+            let live = alive.iter().filter(|&&a| a).count().max(1);
+            let avg_hops = hops as f64 / live as f64;
             ctx.clock.advance(2.0 * ctx.fabric.latency * (1.0 + avg_hops));
+
+            // owner-drop plan: drawn serially before fanning out (it is
+            // schedule state, like batch cursors), so parallel lanes stay
+            // bit-identical to the serial reference. Nothing is drawn
+            // while the knob is off.
+            let drops: Vec<Option<usize>> = if self.exchange
+                == GroupExchange::ReduceScatter
+                && self.rs_drop > 0.0
+            {
+                groups
+                    .iter()
+                    .map(|grp| {
+                        (grp.len() >= 2 && ctx.rng.chance(self.rs_drop))
+                            .then(|| ctx.rng.below(grp.len()))
+                    })
+                    .collect()
+            } else {
+                vec![None; groups.len()]
+            };
 
             // positions -> peer indices; groups within a round are
             // disjoint index sets over `states` by construction
@@ -221,45 +381,78 @@ impl Aggregate for MarAggregator {
                 .iter()
                 .map(|grp| grp.iter().map(|&pos| agg[pos]).collect())
                 .collect();
-            let lane_times: Vec<f64> = if run_parallel {
+            // when a round forms fewer groups than the pool has workers,
+            // chunk-owned averaging recovers utilization by striping
+            // owners across the idle workers (bit-identical either way)
+            let stripe_par =
+                run_parallel && member_groups.len() * 2 <= exec::threads();
+            let exchange = self.exchange;
+            let lane_times: Vec<ExchangeTiming> = if run_parallel {
                 // every group books its exchange and averages
                 // concurrently; lane order (and thus the clock) matches
                 // the serial path because results come back in group order
-                let exchange = self.exchange;
                 let fabric = ctx.fabric;
-                exec::par_disjoint_map(states, &member_groups, |_, views| {
-                    let t = book_group_exchange_fabric(
-                        views.len(),
-                        bytes,
+                let drops_ref = &drops;
+                exec::par_disjoint_map(states, &member_groups, |gi, views| {
+                    exchange_lane(
+                        views,
+                        drops_ref[gi],
                         exchange,
+                        bytes,
                         fabric,
-                    );
-                    average_views(views);
-                    t
+                        stripe_par,
+                    )
                 })?
             } else {
                 let mut lane_times = Vec::with_capacity(member_groups.len());
-                for members in &member_groups {
-                    lane_times.push(book_group_exchange_mode(
-                        members.len(),
-                        bytes,
-                        self.exchange,
-                        ctx,
-                    ));
-                    average_group(states, members, ctx)?;
+                for (gi, members) in member_groups.iter().enumerate() {
+                    lane_times.push(exchange_lane_serial(
+                        states, members, drops[gi], exchange, bytes, ctx,
+                    )?);
                 }
                 lane_times
             };
-            for group in &groups {
+            for (gi, group) in groups.iter().enumerate() {
+                let victim = drops[gi];
                 for (chunk, &pos) in group.iter().enumerate() {
-                    keys[pos].set_chunk(g, chunk);
+                    if victim == Some(chunk) {
+                        // the dropped owner sits out the rest of the
+                        // iteration (stale key, no announcements)
+                        alive[pos] = false;
+                    } else {
+                        keys[pos].set_chunk(g, chunk);
+                    }
                 }
-                if group.len() >= 2 {
+                let averaged = group.len() - usize::from(victim.is_some());
+                if averaged >= 2 {
                     groups_formed += 1;
                 }
+                if exchange == GroupExchange::ReduceScatter
+                    && group.len() >= 2
+                    && victim.is_none()
+                {
+                    expected_phase_bytes +=
+                        2 * (group.len() as u64 - 1) * bytes;
+                }
             }
-            // groups communicate concurrently
-            ctx.clock.parallel(lane_times);
+            // groups communicate concurrently; within a group the
+            // all-gather starts only once its reduction is done
+            ctx.clock.parallel_two_phase(
+                lane_times
+                    .iter()
+                    .map(|t| (t.reduce_scatter_s, t.all_gather_s)),
+            );
+        }
+        // chunk-owned booking is exact: across the iteration the two wire
+        // phases together move 2(k−1)·bytes per successful group — the
+        // 2(M−1)/M state transfers per member the ablation advertises
+        if self.exchange == GroupExchange::ReduceScatter {
+            let delta = ctx.fabric.ledger().snapshot().since(&phase_base);
+            debug_assert_eq!(
+                delta.rs_bytes + delta.ag_bytes,
+                expected_phase_bytes,
+                "chunk-owned booking must match the closed form"
+            );
         }
         Ok(AggReport { rounds: d, groups: groups_formed })
     }
@@ -431,6 +624,56 @@ mod tests {
         // full states per member -> ratio 2/(4/3) = 1.5
         let ratio = full as f64 / rs as f64;
         assert!((1.3..1.7).contains(&ratio), "RS saving ratio {ratio}");
+    }
+
+    #[test]
+    fn reduce_scatter_books_closed_form_phase_bytes() {
+        // perfect 3^3 grid: every round forms 9 groups of M=3; each group
+        // books exactly (M−1)·bytes per phase
+        let n = 27;
+        let p = 1024;
+        let mut tc = TestCtx::new(p);
+        let mut states = random_states(n, p, 27);
+        let agg: Vec<usize> = (0..n).collect();
+        let mut mar = MarAggregator::new(n, 3, 3, tc.ledger.clone(), 7)
+            .with_exchange(crate::aggregation::GroupExchange::ReduceScatter);
+        tc.ledger.reset();
+        let mut ctx = tc.ctx();
+        mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        let s = tc.ledger.snapshot();
+        let bytes = 2 * p as u64 * 4;
+        let want = 3u64 * 9 * 2 * (3 - 1) * bytes;
+        assert_eq!(s.rs_bytes + s.ag_bytes, want);
+        assert_eq!(s.rs_bytes, s.ag_bytes, "phases move the same volume");
+        assert_eq!(
+            s.data_bytes, want,
+            "RS-mode data traffic is exactly the two phases"
+        );
+        // k(k−1) chunk messages per group per phase
+        assert_eq!(s.rs_msgs, 3 * 9 * 3 * 2);
+        assert_eq!(s.ag_msgs, 3 * 9 * 3 * 2);
+        // per-member closed form: G · 2(M−1)/M state transfers each
+        assert_eq!(s.rs_bytes + s.ag_bytes, n as u64 * 3 * 2 * 2 * bytes / 3);
+        // two-phase clock modeling attributed time to both phases
+        let (rs_t, ag_t) = tc.clock.phase_times();
+        assert!(rs_t > 0.0 && ag_t > 0.0);
+        assert!(rs_t + ag_t <= tc.clock.now());
+    }
+
+    #[test]
+    fn full_gather_books_no_phase_traffic() {
+        let n = 8;
+        let mut tc = TestCtx::new(64);
+        let mut states = random_states(n, 64, 28);
+        let agg: Vec<usize> = (0..n).collect();
+        let mut mar = mar_on(&tc, n, 2, 3);
+        tc.ledger.reset();
+        let mut ctx = tc.ctx();
+        mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        let s = tc.ledger.snapshot();
+        assert!(s.data_bytes > 0);
+        assert_eq!(s.rs_bytes, 0);
+        assert_eq!(s.ag_bytes, 0);
     }
 
     #[test]

@@ -145,6 +145,78 @@ where
     Ok(out)
 }
 
+/// The `idx`-th of `parts` balanced contiguous stripes of `[0, len)` —
+/// the partition behind reduce-scatter chunk ownership (member `idx` of a
+/// size-`parts` group owns exactly this stripe of every exchanged
+/// vector). The first `len % parts` stripes take one extra element, so
+/// stripes are disjoint, ordered, cover `[0, len)` and differ in length
+/// by at most one.
+pub fn stripe_range(len: usize, parts: usize, idx: usize) -> std::ops::Range<usize> {
+    assert!(parts > 0, "stripe_range: zero parts");
+    assert!(idx < parts, "stripe_range: stripe {idx} out of {parts}");
+    let base = len / parts;
+    let rem = len % parts;
+    let start = idx * base + idx.min(rem);
+    start..start + base + usize::from(idx < rem)
+}
+
+/// All `parts` stripes of [`stripe_range`], in order.
+pub fn stripe_ranges(len: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    (0..parts).map(|i| stripe_range(len, parts, i)).collect()
+}
+
+/// Run `f` once per range over disjoint subslices of `data` (`f(i, &mut
+/// data[ranges[i]])`). Ranges must be sorted, non-overlapping and in
+/// bounds — validated before any work starts. With `parallel`, ranges fan
+/// out across the engine pool; subslices are data-disjoint and every
+/// element's computation is independent of lane scheduling, so results
+/// match the serial order exactly. Callers inside group-parallel lanes
+/// pass `parallel = false` (the outer fan-out owns the pool) unless the
+/// lane count underfills it.
+pub fn map_ranges_mut<T, F>(
+    data: &mut [T],
+    ranges: &[std::ops::Range<usize>],
+    parallel: bool,
+    f: F,
+) -> Result<()>
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let mut prev_end = 0usize;
+    for (i, r) in ranges.iter().enumerate() {
+        ensure!(r.start <= r.end, "range {i} ({r:?}) is inverted");
+        ensure!(
+            r.end <= data.len(),
+            "range {i} ({r:?}) escapes the slice (len {})",
+            data.len()
+        );
+        ensure!(
+            r.start >= prev_end,
+            "range {i} ({r:?}) overlaps its predecessor or is out of order"
+        );
+        prev_end = r.end;
+    }
+    if parallel && threads() > 1 {
+        let base = SendPtr(data.as_mut_ptr());
+        pool().install(|| {
+            ranges.par_iter().enumerate().for_each(|(i, r)| {
+                // SAFETY: ranges validated sorted + disjoint + in bounds
+                // above, so these subslices never alias.
+                let sub = unsafe {
+                    std::slice::from_raw_parts_mut(base.get().add(r.start), r.len())
+                };
+                f(i, sub);
+            });
+        });
+    } else {
+        for (i, r) in ranges.iter().enumerate() {
+            f(i, &mut data[r.clone()]);
+        }
+    }
+    Ok(())
+}
+
 /// Run `f` once per index, concurrently, each invocation receiving the
 /// lane position and an exclusive `&mut` view of `data[indices[pos]]`.
 /// Rejects duplicate or out-of-bounds indices. Results are in lane order.
@@ -244,6 +316,55 @@ mod tests {
         let mut data = vec![0u8; 2];
         let out: Vec<()> = par_disjoint_map(&mut data, &[], |_, _| ()).unwrap();
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn stripe_ranges_partition_exactly() {
+        assert_eq!(stripe_ranges(10, 3), vec![0..4, 4..7, 7..10]);
+        let rs = stripe_ranges(4096, 4);
+        assert!(rs.iter().all(|r| r.len() == 1024));
+        // more parts than elements: trailing stripes are empty
+        let rs = stripe_ranges(3, 5);
+        assert_eq!(rs.iter().map(|r| r.len()).sum::<usize>(), 3);
+        assert_eq!(rs.iter().filter(|r| r.is_empty()).count(), 2);
+        // stripes always cover [0, len) in order
+        for (len, parts) in [(0usize, 1usize), (1, 1), (129, 7), (4096, 5)] {
+            let rs = stripe_ranges(len, parts);
+            assert_eq!(rs.len(), parts);
+            assert_eq!(rs.first().unwrap().start, 0);
+            assert_eq!(rs.last().unwrap().end, len);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            for (i, r) in rs.iter().enumerate() {
+                assert_eq!(*r, stripe_range(len, parts, i));
+            }
+        }
+    }
+
+    #[test]
+    fn map_ranges_parallel_matches_serial() {
+        let xform = |i: usize, s: &mut [u64]| {
+            for v in s.iter_mut() {
+                *v = *v * 3 + i as u64;
+            }
+        };
+        let mut a: Vec<u64> = (0..1000).collect();
+        let mut b = a.clone();
+        let ranges = stripe_ranges(1000, 7);
+        map_ranges_mut(&mut a, &ranges, false, xform).unwrap();
+        map_ranges_mut(&mut b, &ranges, true, xform).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn map_ranges_rejects_bad_ranges() {
+        let mut d = vec![0u8; 8];
+        assert!(map_ranges_mut(&mut d, &[0..4, 3..6], false, |_, _| ()).is_err());
+        assert!(map_ranges_mut(&mut d, &[0..4, 5..9], false, |_, _| ()).is_err());
+        assert!(map_ranges_mut(&mut d, &[4..2], false, |_, _| ()).is_err());
+        assert!(map_ranges_mut(&mut d, &[2..4, 0..2], false, |_, _| ()).is_err());
+        assert!(map_ranges_mut(&mut d, &[0..2, 2..4], false, |_, _| ()).is_ok());
     }
 
     #[test]

@@ -116,9 +116,11 @@ impl<'rt> Trainer<'rt> {
                     cfg.seed,
                 );
                 if cfg.reduce_scatter {
-                    mar = mar.with_exchange(
-                        crate::aggregation::GroupExchange::ReduceScatter,
-                    );
+                    mar = mar
+                        .with_exchange(
+                            crate::aggregation::GroupExchange::ReduceScatter,
+                        )
+                        .with_rs_drop(cfg.rs_drop);
                 }
                 Agg::Mar(mar)
             }

@@ -30,6 +30,7 @@ USAGE:
 Common keys for --set:
   strategy=marfl|rdfl|arfl|fedavg|bar|gossip|saps   model=cnn|head
   peers=125  iterations=50  group_size=5  mar_rounds=0  reduce_scatter=true
+  mar.rs_drop=0.0 (chunk-owner drop probability under reduce_scatter)
   participation=1.0  dropout=0.0  churn.model=markov
   kd.enabled=true  dp.enabled=true  dp.noise_multiplier=0.3
 ";

@@ -22,13 +22,27 @@ pub enum Plane {
     Data,
 }
 
+/// Phase of a chunk-owned group exchange (Moshpit-SGD's reduce-scatter
+/// wire protocol). Phase traffic **is** data-plane traffic:
+/// [`CommLedger::record_phase`] books it into the data counters *and*
+/// the per-phase sub-counters, so `data_bytes` stays the single source
+/// of truth for total data-plane volume while the ablation harnesses
+/// (`scaling_sweep`, `fig11_approx_aggregation`) can report both phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExchangePhase {
+    /// members stream each owner's stripe to that owner, who averages it
+    ReduceScatter,
+    /// owners broadcast their averaged stripe back to the group
+    AllGather,
+}
+
 /// Number of counter stripes. Power of two, sized a little above typical
 /// core counts; threads hash onto stripes, so two workers only share a
 /// stripe (never a problem for correctness) when the pool outgrows it.
 const LEDGER_SHARDS: usize = 16;
 
-/// One cache-line-aligned stripe of counters (all four live on the same
-/// line so a booking thread touches exactly one line).
+/// One cache-line-aligned stripe of counters (all eight live on the same
+/// 64-byte line so a booking thread touches exactly one line).
 #[derive(Default)]
 #[repr(align(64))]
 struct LedgerShard {
@@ -36,6 +50,10 @@ struct LedgerShard {
     data_msgs: AtomicU64,
     control_bytes: AtomicU64,
     control_msgs: AtomicU64,
+    rs_bytes: AtomicU64,
+    rs_msgs: AtomicU64,
+    ag_bytes: AtomicU64,
+    ag_msgs: AtomicU64,
 }
 
 /// Contention-free byte/message accounting.
@@ -43,13 +61,20 @@ pub struct CommLedger {
     shards: [LedgerShard; LEDGER_SHARDS],
 }
 
-/// A point-in-time merge of the counters.
+/// A point-in-time merge of the counters. The `rs_*` / `ag_*` fields are
+/// sub-accounts of the data plane (chunk-owned exchanges booked through
+/// [`CommLedger::record_phase`]); full-gather traffic books none, so
+/// `rs_bytes + ag_bytes <= data_bytes` always holds.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommSnapshot {
     pub data_bytes: u64,
     pub data_msgs: u64,
     pub control_bytes: u64,
     pub control_msgs: u64,
+    pub rs_bytes: u64,
+    pub rs_msgs: u64,
+    pub ag_bytes: u64,
+    pub ag_msgs: u64,
 }
 
 /// Stable per-thread stripe assignment (round-robin at first use).
@@ -84,6 +109,26 @@ impl CommLedger {
         }
     }
 
+    /// Book `msgs` phase messages totalling `bytes` of a chunk-owned
+    /// group exchange: the data-plane counters advance (phase traffic is
+    /// model payload) and the per-phase sub-counters record which wire
+    /// phase moved it.
+    pub fn record_phase(&self, phase: ExchangePhase, msgs: u64, bytes: u64) {
+        let shard = &self.shards[shard_index()];
+        shard.data_bytes.fetch_add(bytes, Ordering::Relaxed);
+        shard.data_msgs.fetch_add(msgs, Ordering::Relaxed);
+        match phase {
+            ExchangePhase::ReduceScatter => {
+                shard.rs_bytes.fetch_add(bytes, Ordering::Relaxed);
+                shard.rs_msgs.fetch_add(msgs, Ordering::Relaxed);
+            }
+            ExchangePhase::AllGather => {
+                shard.ag_bytes.fetch_add(bytes, Ordering::Relaxed);
+                shard.ag_msgs.fetch_add(msgs, Ordering::Relaxed);
+            }
+        }
+    }
+
     pub fn snapshot(&self) -> CommSnapshot {
         let mut s = CommSnapshot::default();
         for shard in &self.shards {
@@ -91,6 +136,10 @@ impl CommLedger {
             s.data_msgs += shard.data_msgs.load(Ordering::Relaxed);
             s.control_bytes += shard.control_bytes.load(Ordering::Relaxed);
             s.control_msgs += shard.control_msgs.load(Ordering::Relaxed);
+            s.rs_bytes += shard.rs_bytes.load(Ordering::Relaxed);
+            s.rs_msgs += shard.rs_msgs.load(Ordering::Relaxed);
+            s.ag_bytes += shard.ag_bytes.load(Ordering::Relaxed);
+            s.ag_msgs += shard.ag_msgs.load(Ordering::Relaxed);
         }
         s
     }
@@ -101,6 +150,10 @@ impl CommLedger {
             shard.data_msgs.store(0, Ordering::Relaxed);
             shard.control_bytes.store(0, Ordering::Relaxed);
             shard.control_msgs.store(0, Ordering::Relaxed);
+            shard.rs_bytes.store(0, Ordering::Relaxed);
+            shard.rs_msgs.store(0, Ordering::Relaxed);
+            shard.ag_bytes.store(0, Ordering::Relaxed);
+            shard.ag_msgs.store(0, Ordering::Relaxed);
         }
     }
 }
@@ -129,6 +182,10 @@ impl CommSnapshot {
             data_msgs: self.data_msgs - earlier.data_msgs,
             control_bytes: self.control_bytes - earlier.control_bytes,
             control_msgs: self.control_msgs - earlier.control_msgs,
+            rs_bytes: self.rs_bytes - earlier.rs_bytes,
+            rs_msgs: self.rs_msgs - earlier.rs_msgs,
+            ag_bytes: self.ag_bytes - earlier.ag_bytes,
+            ag_msgs: self.ag_msgs - earlier.ag_msgs,
         }
     }
 }
@@ -215,7 +272,38 @@ mod tests {
     fn reset_zeroes() {
         let l = CommLedger::new();
         l.record(Plane::Control, 9);
+        l.record_phase(ExchangePhase::AllGather, 1, 5);
         l.reset();
         assert_eq!(l.snapshot(), CommSnapshot::default());
+    }
+
+    #[test]
+    fn phase_booking_lands_on_data_plane_and_phase_counters() {
+        let l = CommLedger::new();
+        l.record_phase(ExchangePhase::ReduceScatter, 4, 400);
+        l.record_phase(ExchangePhase::AllGather, 2, 100);
+        l.record(Plane::Data, 50); // full-gather traffic: no phase
+        let s = l.snapshot();
+        assert_eq!(s.rs_bytes, 400);
+        assert_eq!(s.rs_msgs, 4);
+        assert_eq!(s.ag_bytes, 100);
+        assert_eq!(s.ag_msgs, 2);
+        assert_eq!(s.data_bytes, 550);
+        assert_eq!(s.data_msgs, 7);
+        assert!(s.rs_bytes + s.ag_bytes <= s.data_bytes);
+    }
+
+    #[test]
+    fn since_covers_phase_counters() {
+        let l = CommLedger::new();
+        l.record_phase(ExchangePhase::ReduceScatter, 1, 10);
+        let a = l.snapshot();
+        l.record_phase(ExchangePhase::ReduceScatter, 2, 30);
+        l.record_phase(ExchangePhase::AllGather, 1, 7);
+        let d = l.snapshot().since(&a);
+        assert_eq!(d.rs_bytes, 30);
+        assert_eq!(d.rs_msgs, 2);
+        assert_eq!(d.ag_bytes, 7);
+        assert_eq!(d.data_bytes, 37);
     }
 }

@@ -8,5 +8,5 @@ pub mod ledger;
 pub mod writer;
 
 pub use curves::{CurvePoint, TrainCurve};
-pub use ledger::{CommLedger, CommSnapshot, Plane};
+pub use ledger::{CommLedger, CommSnapshot, ExchangePhase, Plane};
 pub use writer::{write_csv, write_json};

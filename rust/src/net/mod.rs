@@ -18,7 +18,7 @@ pub use trace::MarkovChurn;
 
 use std::sync::Arc;
 
-use crate::metrics::{CommLedger, Plane};
+use crate::metrics::{CommLedger, ExchangePhase, Plane};
 
 /// Uniform-link transport model.
 #[derive(Clone)]
@@ -62,6 +62,25 @@ impl Fabric {
         (0..k).map(|_| self.duration(bytes)).sum()
     }
 
+    /// Duration of `k` messages totalling `total_bytes` sent sequentially
+    /// over one link, booked as one wire phase of a chunk-owned group
+    /// exchange (data-plane counters plus the reduce-scatter/all-gather
+    /// sub-counters). The per-message cost model is linear in bytes, so
+    /// the batched duration `k·latency + total/bandwidth` equals the
+    /// summed per-message durations exactly.
+    pub fn sequential_phased(
+        &self,
+        k: usize,
+        total_bytes: u64,
+        phase: ExchangePhase,
+    ) -> f64 {
+        if k == 0 {
+            return 0.0;
+        }
+        self.ledger.record_phase(phase, k as u64, total_bytes);
+        k as f64 * self.latency + total_bytes as f64 / self.bandwidth
+    }
+
     pub fn ledger(&self) -> &Arc<CommLedger> {
         &self.ledger
     }
@@ -87,5 +106,22 @@ mod tests {
         let t = f.sequential(4, 250, Plane::Data);
         assert!((t - 1.0).abs() < 1e-12);
         assert_eq!(ledger.snapshot().data_msgs, 4);
+    }
+
+    #[test]
+    fn sequential_phased_books_phase_and_data() {
+        let ledger = Arc::new(CommLedger::new());
+        let f = Fabric::new(ledger.clone(), 1000.0, 0.01);
+        let t = f.sequential_phased(4, 2000, ExchangePhase::ReduceScatter);
+        assert!((t - (0.04 + 2.0)).abs() < 1e-12);
+        let s = ledger.snapshot();
+        assert_eq!(s.rs_msgs, 4);
+        assert_eq!(s.rs_bytes, 2000);
+        assert_eq!(s.data_msgs, 4);
+        assert_eq!(s.data_bytes, 2000);
+        assert_eq!(s.ag_bytes, 0);
+        // zero messages book nothing
+        assert_eq!(f.sequential_phased(0, 999, ExchangePhase::AllGather), 0.0);
+        assert_eq!(ledger.snapshot().ag_bytes, 0);
     }
 }

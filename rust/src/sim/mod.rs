@@ -10,6 +10,10 @@
 #[derive(Clone, Debug, Default)]
 pub struct SimClock {
     time_s: f64,
+    /// cumulative time attributed to reduce-scatter phases
+    rs_time_s: f64,
+    /// cumulative time attributed to all-gather phases
+    ag_time_s: f64,
 }
 
 impl SimClock {
@@ -32,6 +36,39 @@ impl SimClock {
     pub fn parallel(&mut self, lane_times: impl IntoIterator<Item = f64>) {
         let max = lane_times.into_iter().fold(0.0f64, f64::max);
         self.time_s += max;
+    }
+
+    /// A two-phase parallel exchange — each lane is a `(first, second)`
+    /// pair (reduce-scatter, then all-gather): within a lane the second
+    /// phase starts only after the first completes; lanes are concurrent
+    /// with no cross-lane barrier, so the exchange lasts as long as the
+    /// slowest lane's phase *sum*. The advance is attributed to the
+    /// per-phase accumulators ([`Self::phase_times`]) with the slowest
+    /// single first phase as the reduce-scatter share — the breakdown the
+    /// reduce-scatter ablation reports. When either phase is all-zero the
+    /// advance degenerates to [`Self::parallel`] over the other phase,
+    /// bit-exactly (full-gather books its whole duration as the gather
+    /// phase this way).
+    pub fn parallel_two_phase(
+        &mut self,
+        lanes: impl IntoIterator<Item = (f64, f64)>,
+    ) {
+        let mut max_total = 0.0f64;
+        let mut max_first = 0.0f64;
+        for (first, second) in lanes {
+            max_total = max_total.max(first + second);
+            max_first = max_first.max(first);
+        }
+        let first_share = max_first.min(max_total);
+        self.rs_time_s += first_share;
+        self.ag_time_s += max_total - first_share;
+        self.time_s += max_total;
+    }
+
+    /// Cumulative `(reduce_scatter_s, all_gather_s)` attribution from
+    /// [`Self::parallel_two_phase`] exchanges.
+    pub fn phase_times(&self) -> (f64, f64) {
+        (self.rs_time_s, self.ag_time_s)
     }
 }
 
@@ -59,5 +96,35 @@ mod tests {
         let mut c = SimClock::new();
         c.parallel([]);
         assert_eq!(c.now(), 0.0);
+    }
+
+    #[test]
+    fn two_phase_advances_by_slowest_lane_sum() {
+        let mut c = SimClock::new();
+        // lane 1 has the slowest RS, lane 2 the slowest sum
+        c.parallel_two_phase([(0.5, 0.1), (0.2, 0.7)]);
+        assert!((c.now() - 0.9).abs() < 1e-12);
+        let (rs, ag) = c.phase_times();
+        assert!((rs - 0.5).abs() < 1e-12);
+        assert!((ag - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_phase_with_zero_first_matches_parallel_bitwise() {
+        let times = [0.25f64, 0.75, 0.5];
+        let mut a = SimClock::new();
+        a.parallel(times);
+        let mut b = SimClock::new();
+        b.parallel_two_phase(times.iter().map(|&t| (0.0, t)));
+        assert_eq!(a.now().to_bits(), b.now().to_bits());
+        assert_eq!(b.phase_times().0, 0.0);
+    }
+
+    #[test]
+    fn empty_two_phase_is_free() {
+        let mut c = SimClock::new();
+        c.parallel_two_phase([]);
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.phase_times(), (0.0, 0.0));
     }
 }

@@ -1,0 +1,198 @@
+//! Chunk-owned reduce-scatter verification: the assembled chunk-owned
+//! result must be bit-identical to full-gather averaging, the ledger's
+//! phase counters must match the closed form, and a dropped chunk owner
+//! must degrade gracefully (full-gather fallback among the survivors,
+//! stale victim) — deterministically, on both engines.
+
+use std::sync::Arc;
+
+use marfl::aggregation::{mean_of, AggCtx, Aggregate, GroupExchange, PeerState};
+use marfl::coordinator::MarAggregator;
+use marfl::metrics::{CommLedger, CommSnapshot};
+use marfl::models::ModelMeta;
+use marfl::net::Fabric;
+use marfl::rng::Rng;
+use marfl::sim::SimClock;
+
+fn toy_model(p: usize) -> ModelMeta {
+    ModelMeta {
+        name: "toy".into(),
+        param_count: p,
+        padded_len: p,
+        input_shape: vec![4],
+        classes: 3,
+        batch: 8,
+        eval_chunk: 8,
+        init_file: String::new(),
+        artifacts: Default::default(),
+    }
+}
+
+fn random_states(n: usize, p: usize, seed: u64) -> Vec<PeerState> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| PeerState {
+            theta: (0..p).map(|_| rng.normal() as f32).collect(),
+            momentum: (0..p).map(|_| rng.normal() as f32 * 0.1).collect(),
+        })
+        .collect()
+}
+
+/// One MAR aggregate call with fixed seeds; returns (states, ledger
+/// delta, simulated clock).
+fn run_mar(
+    n: usize,
+    m: usize,
+    g: usize,
+    p: usize,
+    exchange: GroupExchange,
+    rs_drop: f64,
+    parallel: bool,
+) -> (Vec<PeerState>, CommSnapshot, f64) {
+    let mut states = random_states(n, p, 0xC0FFEE ^ n as u64);
+    let agg: Vec<usize> = (0..n).collect();
+    let ledger = Arc::new(CommLedger::new());
+    let fabric = Fabric::new(ledger.clone(), 12.5e6, 0.02);
+    let mut clock = SimClock::new();
+    let mut rng = Rng::new(77);
+    let model = toy_model(p);
+    let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 7)
+        .with_exchange(exchange)
+        .with_rs_drop(rs_drop)
+        .with_parallel(parallel);
+    ledger.reset(); // drop DHT join traffic
+    let mut ctx = AggCtx {
+        fabric: &fabric,
+        clock: &mut clock,
+        rng: &mut rng,
+        runtime: None,
+        model: &model,
+    };
+    mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+    (states, ledger.snapshot(), clock.now())
+}
+
+/// The tentpole equivalence: chunk-owned reduce-scatter assembles the
+/// exact full-gather average, bit for bit — on perfect grids and in
+/// approximate mode — while moving 2/(M) of the bytes per phase pair.
+#[test]
+fn chunk_owned_result_bit_identical_to_full_gather() {
+    for &(n, m, g) in &[(27usize, 3usize, 3usize), (8, 2, 3), (20, 3, 2)] {
+        let (fg_states, fg_snap, _) =
+            run_mar(n, m, g, 257, GroupExchange::FullGather, 0.0, true);
+        let (rs_states, rs_snap, _) =
+            run_mar(n, m, g, 257, GroupExchange::ReduceScatter, 0.0, true);
+        for (i, (a, b)) in fg_states.iter().zip(&rs_states).enumerate() {
+            assert_eq!(a.theta, b.theta, "peer {i} theta diverged (n={n})");
+            assert_eq!(a.momentum, b.momentum, "peer {i} momentum diverged");
+        }
+        assert!(rs_snap.rs_bytes > 0, "no reduce-scatter traffic booked");
+        assert_eq!(rs_snap.rs_bytes, rs_snap.ag_bytes);
+        assert_eq!(rs_snap.data_bytes, rs_snap.rs_bytes + rs_snap.ag_bytes);
+        assert_eq!(fg_snap.rs_bytes, 0, "full gather must book no phases");
+        // 2(k−1)/k vs (k−1) state transfers per member: equal at M=2,
+        // strictly cheaper for every larger group
+        assert!(
+            rs_snap.data_bytes <= fg_snap.data_bytes,
+            "chunked exchange must not cost extra bytes (n={n})"
+        );
+        if m >= 3 {
+            assert!(
+                rs_snap.data_bytes < fg_snap.data_bytes,
+                "chunked exchange must cut data bytes (n={n}, m={m})"
+            );
+        }
+    }
+}
+
+/// A dropped chunk owner stalls its group's stripes; the survivors fall
+/// back to a full gather among themselves and the victim goes stale —
+/// the exchange still completes and the ledger shows plain (non-phase)
+/// data traffic for the recovery.
+#[test]
+fn dropped_chunk_owner_degrades_gracefully() {
+    // single group (3 = 3^1), drop probability 1: the fallback is certain
+    let n = 3;
+    let p = 129;
+    let before = random_states(n, p, 0xC0FFEE ^ n as u64);
+    let (states, snap, _) =
+        run_mar(n, 3, 1, p, GroupExchange::ReduceScatter, 1.0, true);
+    // exactly one peer (the victim) is bitwise stale
+    let stale: Vec<usize> = (0..n)
+        .filter(|&i| states[i].theta == before[i].theta)
+        .collect();
+    assert_eq!(stale.len(), 1, "exactly one dropped owner expected");
+    let victim = stale[0];
+    let survivors: Vec<usize> = (0..n).filter(|&i| i != victim).collect();
+    let (want_t, want_m) = mean_of(&before, &survivors);
+    for &i in &survivors {
+        assert_eq!(states[i].theta, want_t, "survivor must hold the mean");
+        assert_eq!(states[i].momentum, want_m);
+    }
+    // the aborted chunk exchange books nothing; the recovery books a
+    // survivors-only full gather: 2 members × 1 transfer each
+    assert_eq!(snap.rs_bytes, 0);
+    assert_eq!(snap.ag_bytes, 0);
+    let bytes = 2 * p as u64 * 4;
+    assert_eq!(snap.data_msgs, 2);
+    assert_eq!(snap.data_bytes, 2 * bytes);
+}
+
+/// Owner drops are schedule state drawn before the fan-out, so the
+/// group-parallel engine stays bit-identical to the serial reference —
+/// states, ledger totals and simulated clock — even mid-churn.
+#[test]
+fn rs_with_drops_parallel_matches_serial() {
+    for &rs_drop in &[0.0, 0.5, 1.0] {
+        let (s_states, s_snap, s_clock) =
+            run_mar(27, 3, 3, 129, GroupExchange::ReduceScatter, rs_drop, false);
+        let (p_states, p_snap, p_clock) =
+            run_mar(27, 3, 3, 129, GroupExchange::ReduceScatter, rs_drop, true);
+        for (a, b) in s_states.iter().zip(&p_states) {
+            assert_eq!(a.theta, b.theta, "states diverged (rs_drop={rs_drop})");
+            assert_eq!(a.momentum, b.momentum);
+        }
+        assert_eq!(s_snap, p_snap, "ledger diverged (rs_drop={rs_drop})");
+        assert_eq!(s_clock.to_bits(), p_clock.to_bits(), "clock diverged");
+    }
+}
+
+/// Off-grid (approximate) rounds form ragged groups; phase booking stays
+/// exact for every group size the scheduler produces.
+#[test]
+fn phase_bytes_stay_exact_off_grid() {
+    let (_, snap, _) = run_mar(20, 3, 2, 257, GroupExchange::ReduceScatter, 0.0, true);
+    assert!(snap.rs_bytes > 0);
+    assert_eq!(snap.rs_bytes, snap.ag_bytes);
+    assert_eq!(snap.data_bytes, snap.rs_bytes + snap.ag_bytes);
+    assert_eq!(snap.rs_msgs, snap.ag_msgs);
+}
+
+/// Churn under reduce-scatter still shrinks distortion toward the global
+/// mean: dropped owners go stale, but every surviving group averages.
+#[test]
+fn rs_churn_still_reduces_distortion() {
+    let n = 27;
+    let p = 65;
+    let before = random_states(n, p, 0xC0FFEE ^ n as u64);
+    let agg: Vec<usize> = (0..n).collect();
+    let (want_t, _) = mean_of(&before, &agg);
+    let dist = |states: &[PeerState]| -> f64 {
+        states
+            .iter()
+            .map(|s| {
+                s.theta
+                    .iter()
+                    .zip(&want_t)
+                    .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+                    .sum::<f64>()
+            })
+            .sum()
+    };
+    let (after, _, _) =
+        run_mar(n, 3, 3, p, GroupExchange::ReduceScatter, 0.3, true);
+    assert!(
+        dist(&after) < dist(&before) * 0.6,
+        "churned reduce-scatter must still mix states"
+    );
+}

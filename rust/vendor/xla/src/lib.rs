@@ -1,0 +1,224 @@
+//! Compile-time stub of the vendored `xla` PJRT bindings.
+//!
+//! The real PJRT backend needs the XLA closure (a multi-GB native
+//! toolchain — see EXPERIMENTS.md §Backends). This stub carries just
+//! enough of the binding surface that `cargo check --features pjrt`
+//! compiles everywhere, so CI can guard `runtime/pjrt.rs` against
+//! bit-rot without shipping XLA. Literals are fully functional host-side
+//! byte buffers (the `runtime/literal.rs` round-trip tests pass against
+//! them); anything that would dispatch to a real PJRT client returns a
+//! descriptive error at run time, which the marfl runtime surfaces as a
+//! failed backend construction (`MARFL_BACKEND=native` keeps working).
+//!
+//! To enable real execution, replace this directory with the actual
+//! bindings (or `[patch]` the `xla` dependency) — the API below mirrors
+//! the subset `runtime/pjrt.rs` uses.
+
+use std::fmt;
+
+/// Binding error; every stubbed dispatch entry point returns one.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Self {
+        Error(format!(
+            "xla stub: {what} requires the real PJRT bindings \
+             (vendor them over rust/vendor/xla to enable execution)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes the MAR-FL artifacts use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Host-native scalar types literals convert to.
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn from_le_bytes(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// A host-side literal: element type + shape + raw little-endian bytes,
+/// or a tuple of literals (entry points return tuples).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let want: usize = dims.iter().product::<usize>() * ty.byte_size();
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal shape {dims:?} wants {want} bytes, got {}",
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec(), tuple: None })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error("to_vec on a tuple literal".into()));
+        }
+        if self.ty != T::ELEMENT_TYPE {
+            return Err(Error(format!(
+                "element type mismatch: literal {:?}, requested {:?}",
+                self.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Destructure a tuple literal into its leaves.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple
+            .ok_or_else(|| Error("to_tuple on a non-tuple literal".into()))
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Parsed HLO module (stub: retains the artifact text only).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("read HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _hlo_text_len: usize,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _hlo_text_len: proto.text.len() }
+    }
+}
+
+/// PJRT client. Stub: construction always fails with a descriptive
+/// error, so `Runtime::new` reports a missing real backend instead of
+/// silently executing nothing.
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("compile"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_f32() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert_eq!(lit.element_count(), 3);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype mismatch must fail");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let err = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[2, 2],
+            &[0u8; 4],
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn dispatch_entry_points_report_stub() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla stub"));
+    }
+}
