@@ -48,7 +48,7 @@ fn states(n: usize, rng: &mut Rng) -> Vec<PeerState> {
     (0..n)
         .map(|_| PeerState {
             theta: (0..P).map(|_| rng.normal() as f32).collect(),
-            momentum: vec![0.0; P],
+            momentum: marfl::params::Theta::zeros(P),
         })
         .collect()
 }

@@ -128,7 +128,7 @@ impl SynthBundle {
                 theta: (0..self.model.padded_len)
                     .map(|_| self.rng.normal() as f32)
                     .collect(),
-                momentum: vec![0.0; self.model.padded_len],
+                momentum: marfl::params::Theta::zeros(self.model.padded_len),
             })
             .collect()
     }

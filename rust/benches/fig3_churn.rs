@@ -84,6 +84,58 @@ fn main() {
     }
     emit_csv("fig3_churn.csv", &rows);
 
+    // ---- reduce-scatter reliability vs owner-drop rate --------------
+    // Chunk ownership makes every member load-bearing: `mar.rs_drop`
+    // injects mid-exchange owner losses and the groups fall back to
+    // survivors-only full gathers. `RunSummary::rs_fallbacks` surfaces
+    // the per-run fallback count, so reliability is plottable against
+    // the drop rate (ROADMAP PR 2 follow-up).
+    println!("\nreduce-scatter reliability vs mar.rs_drop\n");
+    let mut rs_rows = vec![vec![
+        "rs_drop".into(),
+        "rs_fallbacks".into(),
+        "fallbacks_per_iter".into(),
+        "final_accuracy".into(),
+        "data_bytes".into(),
+    ]];
+    let mut fallbacks = std::collections::BTreeMap::new();
+    for &drop in &[0.0f64, 0.05, 0.1, 0.2] {
+        let cfg = ExperimentConfig {
+            strategy: Strategy::MarFl,
+            reduce_scatter: true,
+            rs_drop: drop,
+            ..base.clone()
+        };
+        let run = timed(&format!("marfl rs_drop={drop}"), || {
+            Trainer::new(cfg, &rt).unwrap().run().unwrap()
+        });
+        let per_iter =
+            run.rs_fallbacks as f64 / run.iterations_run.max(1) as f64;
+        println!(
+            "    fallbacks {} ({per_iter:.2}/iter)  acc {:.3}  data {:.0} MiB",
+            run.rs_fallbacks,
+            run.final_accuracy,
+            mib(run.comm.data_bytes)
+        );
+        rs_rows.push(vec![
+            drop.to_string(),
+            run.rs_fallbacks.to_string(),
+            format!("{per_iter:.3}"),
+            format!("{:.4}", run.final_accuracy),
+            run.comm.data_bytes.to_string(),
+        ]);
+        fallbacks.insert((drop * 100.0) as u64, run.rs_fallbacks);
+    }
+    emit_csv("fig3_rs_reliability.csv", &rs_rows);
+    assert_eq!(
+        fallbacks[&0], 0,
+        "no owner drops may occur at rs_drop=0"
+    );
+    assert!(
+        fallbacks[&20] > fallbacks[&0],
+        "rs_drop=0.2 must produce observable fallbacks"
+    );
+
     // ---- paper-shape assertions ------------------------------------
     let full = acc["marfl p=100% d=0%"];
     let dropped = acc["marfl p=100% d=20%"];

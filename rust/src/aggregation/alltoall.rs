@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState};
+use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState, Theta};
 use crate::metrics::Plane;
 
 #[derive(Debug, Default)]
@@ -36,11 +36,12 @@ impl Aggregate for AllToAll {
         }
         ctx.clock.parallel(lane_times);
         let (theta, mom) = mean_of(states, agg);
+        let (theta, mom) = (Theta::new(theta), Theta::new(mom));
         for &i in agg {
-            states[i].theta.copy_from_slice(&theta);
-            states[i].momentum.copy_from_slice(&mom);
+            states[i].theta = theta.clone();
+            states[i].momentum = mom.clone();
         }
-        Ok(AggReport { rounds: 1, groups: 1 })
+        Ok(AggReport { rounds: 1, groups: 1, ..Default::default() })
     }
 }
 

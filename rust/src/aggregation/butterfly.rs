@@ -17,7 +17,7 @@
 
 use anyhow::Result;
 
-use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState};
+use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState, Theta};
 use crate::metrics::Plane;
 
 #[derive(Debug, Default)]
@@ -72,11 +72,12 @@ impl Aggregate for Butterfly {
         }
         // the butterfly computes the exact mean over the 2^k subset
         let (theta, mom) = mean_of(states, &subset);
+        let (theta, mom) = (Theta::new(theta), Theta::new(mom));
         for &i in &subset {
-            states[i].theta.copy_from_slice(&theta);
-            states[i].momentum.copy_from_slice(&mom);
+            states[i].theta = theta.clone();
+            states[i].momentum = mom.clone();
         }
-        Ok(AggReport { rounds: 2 * rounds, groups: 1 })
+        Ok(AggReport { rounds: 2 * rounds, groups: 1, ..Default::default() })
     }
 }
 

@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState};
+use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState, Theta};
 use crate::metrics::Plane;
 
 #[derive(Debug, Default)]
@@ -33,13 +33,16 @@ impl Aggregate for FedAvgServer {
         // server — the bottleneck), then the average, then N broadcasts.
         let upload = ctx.fabric.sequential(agg.len(), bytes, Plane::Data);
         let (theta, mom) = mean_of(states, agg);
+        let (theta, mom) = (Theta::new(theta), Theta::new(mom));
         let broadcast = ctx.fabric.sequential(agg.len(), bytes, Plane::Data);
         ctx.clock.advance(upload + broadcast);
+        // the broadcast hands every aggregator a shared handle on the one
+        // server-side mean (zero-copy)
         for &i in agg {
-            states[i].theta.copy_from_slice(&theta);
-            states[i].momentum.copy_from_slice(&mom);
+            states[i].theta = theta.clone();
+            states[i].momentum = mom.clone();
         }
-        Ok(AggReport { rounds: 1, groups: 1 })
+        Ok(AggReport { rounds: 1, groups: 1, ..Default::default() })
     }
 }
 

@@ -56,8 +56,10 @@ impl Aggregate for Gossip {
                     .collect()
             })
             .collect();
-        // snapshot: pulls within one round all see round-start models
-        let snapshot: Vec<(Vec<f32>, Vec<f32>)> = agg
+        // snapshot: pulls within one round all see round-start models —
+        // shared handles, zero copies; the per-peer make_mut below
+        // detaches each merger from its own snapshot entry on first write
+        let snapshot: Vec<(super::Theta, super::Theta)> = agg
             .iter()
             .map(|&i| (states[i].theta.clone(), states[i].momentum.clone()))
             .collect();
@@ -69,17 +71,17 @@ impl Aggregate for Gossip {
                     lane += fabric.send(bytes, Plane::Data);
                     let (ot, om) = &snapshot[other];
                     // merge: equal-weight average of own and pulled state
-                    for (dst, &v) in st.theta.iter_mut().zip(ot) {
+                    for (dst, &v) in st.theta.make_mut().iter_mut().zip(ot) {
                         *dst = 0.5 * (*dst + v);
                     }
-                    for (dst, &v) in st.momentum.iter_mut().zip(om) {
+                    for (dst, &v) in st.momentum.make_mut().iter_mut().zip(om) {
                         *dst = 0.5 * (*dst + v);
                     }
                 }
                 lane
             })?;
         ctx.clock.parallel(lane_times);
-        Ok(AggReport { rounds: 1, groups: n })
+        Ok(AggReport { rounds: 1, groups: n, ..Default::default() })
     }
 }
 
@@ -89,7 +91,7 @@ mod tests {
     use crate::aggregation::test_support::*;
     use crate::coordinator::mixing::avg_distortion;
 
-    fn thetas(states: &[PeerState]) -> Vec<Vec<f32>> {
+    fn thetas(states: &[PeerState]) -> Vec<crate::params::Theta> {
         states.iter().map(|s| s.theta.clone()).collect()
     }
 

@@ -35,22 +35,24 @@ use anyhow::Result;
 use crate::metrics::{ExchangePhase, Plane};
 use crate::models::ModelMeta;
 use crate::net::Fabric;
+pub use crate::params::Theta;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::sim::SimClock;
 
 /// One peer's aggregatable state: flat parameters + momentum (both length
-/// `P_pad`).
+/// `P_pad`), held as copy-on-write [`Theta`] handles so snapshots, group
+/// means and DP references share storage instead of cloning.
 #[derive(Clone, Debug)]
 pub struct PeerState {
-    pub theta: Vec<f32>,
-    pub momentum: Vec<f32>,
+    pub theta: Theta,
+    pub momentum: Theta,
 }
 
 impl PeerState {
     pub fn new(theta: Vec<f32>) -> Self {
-        let momentum = vec![0.0; theta.len()];
-        PeerState { theta, momentum }
+        let momentum = Theta::zeros(theta.len());
+        PeerState { theta: theta.into(), momentum }
     }
 }
 
@@ -88,6 +90,11 @@ pub struct AggReport {
     pub rounds: usize,
     /// groups formed across all rounds (MAR) or 1 (global techniques)
     pub groups: usize,
+    /// reduce-scatter groups that lost a chunk owner mid-exchange and
+    /// fell back to a survivors-only full gather (0 under full-gather) —
+    /// the per-iteration reliability signal `fig3_churn` plots against
+    /// `mar.rs_drop`
+    pub rs_fallbacks: usize,
 }
 
 /// An aggregation technique. `agg` lists the indices of peers in `A_t`
@@ -111,12 +118,15 @@ pub trait Aggregate {
 // All strategies reduce to element-wise means over selected peer vectors.
 // The kernel below strip-mines the output into cache-resident chunks and
 // accumulates each chunk in a reusable per-thread f64 scratch buffer, so
-// the steady state performs zero heap allocations and the inner loop is a
-// plain `f64 += f32 as f64` stream the compiler auto-vectorizes. Because
-// every output element still sums its inputs in member order, the result
-// is bit-identical to the naive full-vector accumulation regardless of
-// strip width or thread count — the property the parallel round engine's
-// determinism tests pin down.
+// the inner loop is a plain `f64 += f32 as f64` stream the compiler
+// auto-vectorizes. Because every output element still sums its inputs in
+// member order, the result is bit-identical to the naive full-vector
+// accumulation regardless of strip width or thread count — the property
+// the parallel round engine's determinism tests pin down. Group averaging
+// lands the mean in ONE freshly allocated canonical vector per group and
+// broadcasts it to every member as a shared `Theta` handle: k refcount
+// bumps instead of k buffer copies (the zero-copy broadcast the
+// snapshot-aliasing tests pin down).
 
 /// Output strip width (f32 elements). The f64 scratch for one strip is
 /// 32 KiB — resident in L1/L2 while every member's strip streams through.
@@ -127,9 +137,6 @@ thread_local! {
     /// steady state).
     static MEAN_ACC: std::cell::RefCell<Vec<f64>> =
         const { std::cell::RefCell::new(Vec::new()) };
-    /// Per-thread canonical result buffers for in-place group averaging.
-    static GROUP_BUF: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
-        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
 }
 
 /// Mean one output strip: `out` is the strip at offset `off` of the full
@@ -218,8 +225,9 @@ trait GroupRows: Sync {
     fn rows(&self) -> usize;
     fn theta(&self, k: usize) -> &[f32];
     fn momentum(&self, k: usize) -> &[f32];
-    /// Broadcast the canonical mean back into every member.
-    fn write_all(&mut self, theta: &[f32], mom: &[f32]);
+    /// Broadcast the canonical mean to every member — shared handles,
+    /// zero buffer copies.
+    fn write_all(&mut self, theta: Theta, mom: Theta);
 }
 
 struct SliceRows<'a> {
@@ -232,15 +240,15 @@ impl GroupRows for SliceRows<'_> {
         self.members.len()
     }
     fn theta(&self, k: usize) -> &[f32] {
-        &self.states[self.members[k]].theta
+        self.states[self.members[k]].theta.as_slice()
     }
     fn momentum(&self, k: usize) -> &[f32] {
-        &self.states[self.members[k]].momentum
+        self.states[self.members[k]].momentum.as_slice()
     }
-    fn write_all(&mut self, theta: &[f32], mom: &[f32]) {
+    fn write_all(&mut self, theta: Theta, mom: Theta) {
         for &i in self.members {
-            self.states[i].theta.copy_from_slice(theta);
-            self.states[i].momentum.copy_from_slice(mom);
+            self.states[i].theta = theta.clone();
+            self.states[i].momentum = mom.clone();
         }
     }
 }
@@ -254,23 +262,24 @@ impl GroupRows for ViewRows<'_, '_> {
         self.views.len()
     }
     fn theta(&self, k: usize) -> &[f32] {
-        &self.views[k].theta
+        self.views[k].theta.as_slice()
     }
     fn momentum(&self, k: usize) -> &[f32] {
-        &self.views[k].momentum
+        self.views[k].momentum.as_slice()
     }
-    fn write_all(&mut self, theta: &[f32], mom: &[f32]) {
+    fn write_all(&mut self, theta: Theta, mom: Theta) {
         for v in self.views.iter_mut() {
-            v.theta.copy_from_slice(theta);
-            v.momentum.copy_from_slice(mom);
+            v.theta = theta.clone();
+            v.momentum = mom.clone();
         }
     }
 }
 
-/// In-place group average: the mean lands in one canonical per-thread
-/// buffer and is broadcast to every member. No heap allocation after
-/// thread warmup. Serial striping (used inside group-parallel lanes,
-/// where the outer fan-out owns the cores).
+/// In-place group average: the mean lands in one freshly allocated
+/// canonical vector and every member receives a shared handle on it —
+/// one O(|θ|) allocation per group instead of k buffer copies. Serial
+/// striping (used inside group-parallel lanes, where the outer fan-out
+/// owns the cores).
 fn average_rows<R: GroupRows>(rows: &mut R) {
     let n = rows.rows();
     if n < 2 {
@@ -282,20 +291,14 @@ fn average_rows<R: GroupRows>(rows: &mut R) {
         assert_eq!(rows.theta(k).len(), p, "ragged theta lengths");
         assert_eq!(rows.momentum(k).len(), q, "ragged momentum lengths");
     }
-    GROUP_BUF.with(|cell| {
-        let mut guard = cell.borrow_mut();
-        let (tbuf, mbuf) = &mut *guard;
-        tbuf.clear();
-        tbuf.resize(p, 0.0);
-        mbuf.clear();
-        mbuf.resize(q, 0.0);
-        {
-            let shared = &*rows;
-            mean_indexed_into(n, |k| shared.theta(k), tbuf.as_mut_slice(), false);
-            mean_indexed_into(n, |k| shared.momentum(k), mbuf.as_mut_slice(), false);
-        }
-        rows.write_all(tbuf, mbuf);
-    });
+    let mut tbuf = vec![0.0f32; p];
+    let mut mbuf = vec![0.0f32; q];
+    {
+        let shared = &*rows;
+        mean_indexed_into(n, |k| shared.theta(k), tbuf.as_mut_slice(), false);
+        mean_indexed_into(n, |k| shared.momentum(k), mbuf.as_mut_slice(), false);
+    }
+    rows.write_all(Theta::new(tbuf), Theta::new(mbuf));
 }
 
 /// [`average_rows`] over `states[members]` (serial reference engine).
@@ -327,12 +330,12 @@ pub fn average_views(views: &mut [&mut PeerState]) {
 
 /// In-place chunk-owned group average: owner `k` computes only its
 /// balanced stripe of the mean (the reduce-scatter compute model), the
-/// stripes assemble in one canonical buffer, and the all-gather
-/// broadcast writes it back to every member. Bit-identical to
+/// stripes assemble in one canonical vector, and the all-gather
+/// broadcast hands every member a shared handle on it. Bit-identical to
 /// [`average_rows`]. With `stripe_parallel`, owner stripes fan out
-/// across the `exec` pool; the scratch buffers are *taken* from the
-/// thread-local cell (not borrowed across the fan-out), so a
-/// work-stealing re-entry on this thread cannot alias them.
+/// across the `exec` pool; the canonical buffers are locals (never a
+/// thread-local borrow held across the fan-out), so a work-stealing
+/// re-entry on this thread cannot alias them.
 fn average_rows_chunked<R: GroupRows>(rows: &mut R, stripe_parallel: bool) {
     let n = rows.rows();
     if n < 2 {
@@ -344,11 +347,8 @@ fn average_rows_chunked<R: GroupRows>(rows: &mut R, stripe_parallel: bool) {
         assert_eq!(rows.theta(k).len(), p, "ragged theta lengths");
         assert_eq!(rows.momentum(k).len(), q, "ragged momentum lengths");
     }
-    let (mut tbuf, mut mbuf) = GROUP_BUF.with(|cell| cell.take());
-    tbuf.clear();
-    tbuf.resize(p, 0.0);
-    mbuf.clear();
-    mbuf.resize(q, 0.0);
+    let mut tbuf = vec![0.0f32; p];
+    let mut mbuf = vec![0.0f32; q];
     {
         let shared = &*rows;
         let par = stripe_parallel && crate::exec::threads() > 1;
@@ -383,8 +383,7 @@ fn average_rows_chunked<R: GroupRows>(rows: &mut R, stripe_parallel: bool) {
         )
         .expect("owner stripes are disjoint by construction");
     }
-    rows.write_all(&tbuf, &mbuf);
-    GROUP_BUF.with(|cell| cell.replace((tbuf, mbuf)));
+    rows.write_all(Theta::new(tbuf), Theta::new(mbuf));
 }
 
 /// [`average_rows_chunked`] over `states[members]` — the serial-engine
@@ -477,15 +476,15 @@ pub fn average_group(
             for &i in members {
                 stack.extend_from_slice(&states[i].theta);
             }
-            let theta = rt.group_mean(ctx.model, &stack, members.len())?;
+            let theta = Theta::new(rt.group_mean(ctx.model, &stack, members.len())?);
             stack.clear();
             for &i in members {
                 stack.extend_from_slice(&states[i].momentum);
             }
-            let mom = rt.group_mean(ctx.model, &stack, members.len())?;
+            let mom = Theta::new(rt.group_mean(ctx.model, &stack, members.len())?);
             for &i in members {
-                states[i].theta.copy_from_slice(&theta);
-                states[i].momentum.copy_from_slice(&mom);
+                states[i].theta = theta.clone();
+                states[i].momentum = mom.clone();
             }
         }
         _ => average_group_native(states, members),
@@ -698,8 +697,14 @@ mod tests {
     #[test]
     fn mean_of_matches_hand_computation() {
         let states = vec![
-            PeerState { theta: vec![1.0, 2.0], momentum: vec![0.0, 4.0] },
-            PeerState { theta: vec![3.0, 6.0], momentum: vec![2.0, 0.0] },
+            PeerState {
+                theta: vec![1.0, 2.0].into(),
+                momentum: vec![0.0, 4.0].into(),
+            },
+            PeerState {
+                theta: vec![3.0, 6.0].into(),
+                momentum: vec![2.0, 0.0].into(),
+            },
         ];
         let (t, m) = mean_of(&states, &[0, 1]);
         assert_eq!(t, vec![2.0, 4.0]);
@@ -759,6 +764,31 @@ mod tests {
     }
 
     #[test]
+    fn group_average_broadcast_is_zero_copy() {
+        // after a group averages, every member holds a shared handle on
+        // ONE canonical mean allocation — k refcount bumps, zero buffer
+        // copies — and non-members share nothing with it
+        let mut states = random_states(5, 64, 99);
+        let members = vec![0, 2, 4];
+        average_group_native(&mut states, &members);
+        assert!(states[0].theta.shares_storage(&states[2].theta));
+        assert!(states[0].theta.shares_storage(&states[4].theta));
+        assert!(states[0].momentum.shares_storage(&states[2].momentum));
+        assert!(!states[0].theta.shares_storage(&states[1].theta));
+        // same contract on the chunk-owned path
+        let mut states = random_states(5, 64, 99);
+        average_group_chunked(&mut states, &members);
+        assert!(states[0].theta.shares_storage(&states[4].theta));
+        // mutating one member afterwards detaches it without perturbing
+        // the groupmates (copy-on-write); compare against an independent
+        // Vec copy so the assertion reads real payload, not an alias
+        let before = states[2].theta.to_vec();
+        states[0].theta.make_mut()[0] += 1.0;
+        assert!(!states[0].theta.shares_storage(&states[2].theta));
+        assert_eq!(states[2].theta, before);
+    }
+
+    #[test]
     fn average_views_matches_average_group_native_bitwise() {
         let mut a = random_states(5, 513, 93);
         let mut b = a.clone();
@@ -799,7 +829,7 @@ mod tests {
         // each vector at its own length
         let mut a = random_states(3, 300, 98);
         for s in &mut a {
-            s.momentum.extend_from_slice(&[1.0, 2.0, 3.0]);
+            s.momentum.make_mut().extend_from_slice(&[1.0, 2.0, 3.0]);
         }
         let mut b = a.clone();
         let members = vec![0, 1, 2];
@@ -875,7 +905,7 @@ mod tests {
         // at its own length
         let mut states = random_states(3, 16, 94);
         for s in &mut states {
-            s.momentum.extend_from_slice(&[1.0, 2.0, 3.0]);
+            s.momentum.make_mut().extend_from_slice(&[1.0, 2.0, 3.0]);
         }
         let (t, m) = mean_of(&states, &[0, 1, 2]);
         assert_eq!(t.len(), 16);
@@ -912,7 +942,7 @@ mod tests {
         let mut states = random_states(2, 16, 14);
         assert_eq!(payload_bytes(&states, &[0, 1]), 2 * 16 * 4);
         // DP iteration: momentum carries Δ̄ and the clip indicator
-        states[0].momentum.extend_from_slice(&[0.0; 17]);
+        states[0].momentum.make_mut().extend_from_slice(&[0.0; 17]);
         assert_eq!(payload_bytes(&states, &[0]), (16 + 33) * 4);
     }
 

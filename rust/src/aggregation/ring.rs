@@ -69,14 +69,14 @@ impl Aggregate for RingRdfl {
         }
         let inv = 1.0 / n as f64;
         for (slot, &peer) in agg.iter().enumerate() {
-            for (dst, &s) in states[peer].theta.iter_mut().zip(&sum_t[slot]) {
-                *dst = (s * inv) as f32;
-            }
-            for (dst, &s) in states[peer].momentum.iter_mut().zip(&sum_m[slot]) {
-                *dst = (s * inv) as f32;
-            }
+            // fresh storage per slot: the old handle may be shared (a
+            // previous iteration's broadcast), so build rather than CoW
+            states[peer].theta =
+                sum_t[slot].iter().map(|&s| (s * inv) as f32).collect();
+            states[peer].momentum =
+                sum_m[slot].iter().map(|&s| (s * inv) as f32).collect();
         }
-        Ok(AggReport { rounds: n - 1, groups: 1 })
+        Ok(AggReport { rounds: n - 1, groups: 1, ..Default::default() })
     }
 }
 

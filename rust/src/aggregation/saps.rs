@@ -103,15 +103,16 @@ impl Aggregate for Saps {
                 let (sa_m, _) = top_k_sparsify(&a.momentum, ratio);
                 let (sb_m, _) = top_k_sparsify(&b.momentum, ratio);
                 // merge: average own dense state with partner's sparse one
-                // at the transmitted coordinates (SAPS-style partial merge)
-                merge_sparse(&mut a.theta, &sb_t);
-                merge_sparse(&mut b.theta, &sa_t);
-                merge_sparse(&mut a.momentum, &sb_m);
-                merge_sparse(&mut b.momentum, &sa_m);
+                // at the transmitted coordinates (SAPS-style partial
+                // merge). make_mut detaches any shared storage first.
+                merge_sparse(a.theta.make_mut(), &sb_t);
+                merge_sparse(b.theta.make_mut(), &sa_t);
+                merge_sparse(a.momentum.make_mut(), &sb_m);
+                merge_sparse(b.momentum.make_mut(), &sa_m);
                 t
             })?;
         ctx.clock.parallel(lane_times);
-        Ok(AggReport { rounds: 1, groups: pairs.len() })
+        Ok(AggReport { rounds: 1, groups: pairs.len(), ..Default::default() })
     }
 }
 

@@ -15,6 +15,13 @@
 //! With `|A_t| = M^d` the schedule is the exact hypercube all-reduce; any
 //! other count runs the approximate mode that converges across iterations
 //! (Eq. 1 / `mixing.rs`).
+//!
+//! The control plane is **pipelined**: round g+1's matchmaking depends
+//! only on round g's membership + pre-drawn drop plan (the chunk-index
+//! key update), never on the averaged values, so it runs concurrently
+//! with round g's group exchange. The simulated clock models the overlap
+//! with `SimClock::pipelined_two_phase` — only round 0's matchmaking sits
+//! on the critical path in full.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -183,20 +190,58 @@ impl MarAggregator {
         self.dht.hops_total()
     }
 
+    /// Simulated control-plane latency of one matchmaking pass that cost
+    /// `hops` DHT hops across `live` announcing peers: announcements and
+    /// collects run in parallel across peers, so the pass lasts the
+    /// per-peer average lookup depth (2 RTTs per hop: request+response).
+    fn matchmaking_latency(fabric: &Fabric, hops: u64, live: usize) -> f64 {
+        let avg_hops = hops as f64 / live.max(1) as f64;
+        2.0 * fabric.latency * (1.0 + avg_hops)
+    }
+
+    /// One timed matchmaking pass: the hops-delta measurement around
+    /// [`Self::matchmake`], converted into control-plane latency over
+    /// `fabric` with the live announcer count as the denominator — the
+    /// single definition every matchmaking pass (round 0, pipelined
+    /// round g+1, MKD) shares.
+    fn matchmake_timed(
+        &mut self,
+        agg: &[usize],
+        keys: &[GroupKey],
+        alive: &[bool],
+        round: usize,
+        scope: &str,
+        fabric: &Fabric,
+    ) -> (Vec<Vec<usize>>, f64) {
+        let hops_before = self.dht.hops_total();
+        let groups = self.matchmake(agg, keys, alive, round, scope);
+        let live = alive.iter().filter(|&&a| a).count();
+        let control_s = Self::matchmaking_latency(
+            fabric,
+            self.dht.hops_total() - hops_before,
+            live,
+        );
+        (groups, control_s)
+    }
+
     /// One standalone DHT-matchmade grouping round over `agg` with fresh
     /// uniform keys — Moshpit-KD collects candidate teachers "using the
     /// same procedure MAR uses for global model averaging" (paper §2.2).
     /// `tag` must be unique per call (it scopes the DHT announcements).
-    /// Returns groups of *positions into `agg`*.
-    pub fn form_groups_once(
+    /// Returns the groups (as *positions into `agg`*) plus the pass's
+    /// simulated control-plane latency over `fabric` — what the
+    /// pipelined MKD engine overlaps with the previous round's teacher
+    /// exchange.
+    pub fn form_groups_once_timed(
         &mut self,
         agg: &[usize],
         rng: &mut Rng,
         tag: &str,
-    ) -> Vec<Vec<usize>> {
+        fabric: &Fabric,
+    ) -> (Vec<Vec<usize>>, f64) {
         let keys = random_keys(agg.len(), self.group_size, 1, rng);
         let alive = vec![true; agg.len()];
-        self.matchmake(agg, &keys, &alive, 0, tag)
+        self.matchmake_timed(agg, &keys, &alive, 0, tag, fabric)
     }
 }
 
@@ -345,17 +390,19 @@ impl Aggregate for MarAggregator {
         // 2(k−1)·bytes per successful group (verified in debug builds)
         let phase_base = ctx.fabric.ledger().snapshot();
         let mut expected_phase_bytes = 0u64;
+        let mut rs_fallbacks = 0usize;
+        // Pipelined control plane: a round's chunk indices and owner-drop
+        // plan are schedule state fully determined by its *membership*
+        // (known the moment matchmaking returns), so round g+1's DHT
+        // matchmaking proceeds concurrently with round g's group
+        // averaging. Only round 0's matchmaking is exposed on the clock;
+        // every later pass hides under the previous round's exchange and
+        // extends it only by its overhang (SimClock::pipelined_two_phase).
+        let (mut groups, mm0) =
+            self.matchmake_timed(agg, &keys, &alive, 0, &scope, ctx.fabric);
+        // empty data lanes: advances by mm0 exactly, attributed exposed
+        ctx.clock.pipelined_two_phase(mm0, std::iter::empty());
         for g in 0..d {
-            let hops_before = self.dht.hops_total();
-            let groups = self.matchmake(agg, &keys, &alive, g, &scope);
-            // control-plane latency: announcements and collects run in
-            // parallel across peers; charge the per-peer average lookup
-            // depth (2 RTTs per hop: request+response)
-            let hops = self.dht.hops_total() - hops_before;
-            let live = alive.iter().filter(|&&a| a).count().max(1);
-            let avg_hops = hops as f64 / live as f64;
-            ctx.clock.advance(2.0 * ctx.fabric.latency * (1.0 + avg_hops));
-
             // owner-drop plan: drawn serially before fanning out (it is
             // schedule state, like batch cursors), so parallel lanes stay
             // bit-identical to the serial reference. Nothing is drawn
@@ -374,6 +421,44 @@ impl Aggregate for MarAggregator {
             } else {
                 vec![None; groups.len()]
             };
+            let exchange = self.exchange;
+            // key/alive bookkeeping for this round — membership plus the
+            // pre-drawn drop plan determine it, which is exactly what
+            // lets the next matchmaking pass start before the exchange
+            // finishes
+            for (gi, group) in groups.iter().enumerate() {
+                let victim = drops[gi];
+                for (chunk, &pos) in group.iter().enumerate() {
+                    if victim == Some(chunk) {
+                        // the dropped owner sits out the rest of the
+                        // iteration (stale key, no announcements)
+                        alive[pos] = false;
+                    } else {
+                        keys[pos].set_chunk(g, chunk);
+                    }
+                }
+                let averaged = group.len() - usize::from(victim.is_some());
+                if averaged >= 2 {
+                    groups_formed += 1;
+                }
+                if victim.is_some() {
+                    rs_fallbacks += 1;
+                }
+                if exchange == GroupExchange::ReduceScatter
+                    && group.len() >= 2
+                    && victim.is_none()
+                {
+                    expected_phase_bytes +=
+                        2 * (group.len() as u64 - 1) * bytes;
+                }
+            }
+            // round g+1's matchmaking — control plane, overlapped with
+            // this round's exchange at the clock boundary below
+            let (next_groups, mm_next) = if g + 1 < d {
+                self.matchmake_timed(agg, &keys, &alive, g + 1, &scope, ctx.fabric)
+            } else {
+                (Vec::new(), 0.0)
+            };
 
             // positions -> peer indices; groups within a round are
             // disjoint index sets over `states` by construction
@@ -386,7 +471,6 @@ impl Aggregate for MarAggregator {
             // owners across the idle workers (bit-identical either way)
             let stripe_par =
                 run_parallel && member_groups.len() * 2 <= exec::threads();
-            let exchange = self.exchange;
             let lane_times: Vec<ExchangeTiming> = if run_parallel {
                 // every group books its exchange and averages
                 // concurrently; lane order (and thus the clock) matches
@@ -412,36 +496,25 @@ impl Aggregate for MarAggregator {
                 }
                 lane_times
             };
-            for (gi, group) in groups.iter().enumerate() {
-                let victim = drops[gi];
-                for (chunk, &pos) in group.iter().enumerate() {
-                    if victim == Some(chunk) {
-                        // the dropped owner sits out the rest of the
-                        // iteration (stale key, no announcements)
-                        alive[pos] = false;
-                    } else {
-                        keys[pos].set_chunk(g, chunk);
-                    }
-                }
-                let averaged = group.len() - usize::from(victim.is_some());
-                if averaged >= 2 {
-                    groups_formed += 1;
-                }
-                if exchange == GroupExchange::ReduceScatter
-                    && group.len() >= 2
-                    && victim.is_none()
-                {
-                    expected_phase_bytes +=
-                        2 * (group.len() as u64 - 1) * bytes;
-                }
-            }
             // groups communicate concurrently; within a group the
-            // all-gather starts only once its reduction is done
-            ctx.clock.parallel_two_phase(
-                lane_times
-                    .iter()
-                    .map(|t| (t.reduce_scatter_s, t.all_gather_s)),
-            );
+            // all-gather starts only once its reduction is done; the next
+            // round's matchmaking hides under the exchange. Causality
+            // exception: an owner drop is only *observable* mid-exchange,
+            // and the next pass's announcer set reacts to it — so a round
+            // that lost an owner books its matchmaking sequentially
+            // (survivors time out first, then re-announce) instead of
+            // overlapped.
+            let lanes = lane_times
+                .iter()
+                .map(|t| (t.reduce_scatter_s, t.all_gather_s));
+            if drops.iter().all(|d| d.is_none()) {
+                ctx.clock.pipelined_two_phase(mm_next, lanes);
+            } else {
+                ctx.clock.pipelined_two_phase(0.0, lanes);
+                // sequential pass: fully exposed on the clock
+                ctx.clock.pipelined_two_phase(mm_next, std::iter::empty());
+            }
+            groups = next_groups;
         }
         // chunk-owned booking is exact: across the iteration the two wire
         // phases together move 2(k−1)·bytes per successful group — the
@@ -454,7 +527,7 @@ impl Aggregate for MarAggregator {
                 "chunk-owned booking must match the closed form"
             );
         }
-        Ok(AggReport { rounds: d, groups: groups_formed })
+        Ok(AggReport { rounds: d, groups: groups_formed, rs_fallbacks })
     }
 }
 

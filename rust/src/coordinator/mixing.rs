@@ -25,14 +25,15 @@ pub fn expected_distortion(d0: f64, n: usize, r: usize, t: usize) -> f64 {
 }
 
 /// Measured average squared distance to the global mean:
-/// (1/N) Σ_i ‖θ_i − θ̄‖².
-pub fn avg_distortion(values: &[Vec<f32>]) -> f64 {
+/// (1/N) Σ_i ‖θ_i − θ̄‖². Generic over the vector handle so both
+/// `Vec<f32>` rows and zero-copy [`crate::params::Theta`] handles work.
+pub fn avg_distortion<V: AsRef<[f32]>>(values: &[V]) -> f64 {
     let n = values.len();
     assert!(n > 0);
-    let p = values[0].len();
+    let p = values[0].as_ref().len();
     let mut mean = vec![0.0f64; p];
     for v in values {
-        for (a, &x) in mean.iter_mut().zip(v) {
+        for (a, &x) in mean.iter_mut().zip(v.as_ref()) {
             *a += x as f64;
         }
     }
@@ -42,7 +43,8 @@ pub fn avg_distortion(values: &[Vec<f32>]) -> f64 {
     values
         .iter()
         .map(|v| {
-            v.iter()
+            v.as_ref()
+                .iter()
                 .zip(&mean)
                 .map(|(&x, &m)| (x as f64 - m) * (x as f64 - m))
                 .sum::<f64>()

@@ -17,6 +17,7 @@ pub use accountant::RdpAccountant;
 
 use crate::aggregation::PeerState;
 use crate::config::DpConfig;
+use crate::params::Theta;
 use crate::rng::Rng;
 use crate::util::l2_norm;
 
@@ -27,8 +28,9 @@ pub struct DpEngine {
     pub clip_bound: f64,
     /// θ̄_i^{t-1}: the last global model each peer obtained (peers that
     /// missed aggregations hold stale entries — the paper's Algorithm 4
-    /// explicitly allows this)
-    last_global: Vec<Option<Vec<f32>>>,
+    /// explicitly allows this). Shared copy-on-write handles on the state
+    /// the peer already holds — zero-copy until either side writes.
+    last_global: Vec<Option<Theta>>,
     /// Δ̄_i^{t-1}: the last smoothed delta each peer obtained
     smoothed_delta: Vec<Option<Vec<f32>>>,
     accountant: RdpAccountant,
@@ -77,9 +79,10 @@ impl DpEngine {
         let per_coord_std = (sigma_delta * sigma_delta / n_t as f64).sqrt();
         for &i in agg {
             let p = states[i].theta.len();
-            let reference: Vec<f32> = self.last_global[i]
-                .clone()
-                .unwrap_or_else(|| vec![0.0; p]);
+            let reference: Theta = match &self.last_global[i] {
+                Some(t) => t.clone(),
+                None => Theta::zeros(p),
+            };
             // Δ_i = θ_i^t − θ̄_i^{t-1}
             let delta: Vec<f32> = states[i]
                 .theta
@@ -104,19 +107,19 @@ impl DpEngine {
                     .collect(),
                 None => noisy,
             };
-            // θ̂_i^{t,0} = θ̄_i^{t-1} + η_u Δ̄_i^{t,0}
-            for ((t, &g), &s) in states[i]
-                .theta
-                .iter_mut()
-                .zip(&reference)
+            // θ̂_i^{t,0} = θ̄_i^{t-1} + η_u Δ̄_i^{t,0} — built as fresh
+            // storage: the peer's θ handle may be shared with groupmates
+            // from the last broadcast, so replacing beats copy-on-write
+            states[i].theta = reference
+                .iter()
                 .zip(&smoothed)
-            {
-                *t = g + (self.cfg.eta_u as f32) * s;
-            }
+                .map(|(&g, &s)| g + (self.cfg.eta_u as f32) * s)
+                .collect();
             // pack (Δ̄ ‖ b) onto the momentum payload for aggregation
-            states[i].momentum.reserve(p + 1);
-            states[i].momentum.extend_from_slice(&smoothed);
-            states[i].momentum.push(clipped_flag);
+            let mom = states[i].momentum.make_mut();
+            mom.reserve(p + 1);
+            mom.extend_from_slice(&smoothed);
+            mom.push(clipped_flag);
         }
     }
 
@@ -137,7 +140,13 @@ impl DpEngine {
             debug_assert_eq!(mom_len, 2 * p + 1, "momentum not in DP-packed form");
             let b = states[i].momentum[mom_len - 1] as f64;
             let smoothed = states[i].momentum[p..mom_len - 1].to_vec();
-            states[i].momentum.truncate(p);
+            // trim the packed payload into fresh storage (the extended
+            // vector is shared group-wide after aggregation; truncating a
+            // CoW copy would copy 2p+1 elements to keep p)
+            let trimmed: Vec<f32> = states[i].momentum[..p].to_vec();
+            states[i].momentum = trimmed.into();
+            // the reference model is a shared handle on the peer's own
+            // state — zero-copy until either side writes
             self.last_global[i] = Some(states[i].theta.clone());
             self.smoothed_delta[i] = Some(smoothed);
             b_bar += b;
@@ -177,7 +186,7 @@ mod tests {
         (0..n)
             .map(|_| PeerState {
                 theta: (0..p).map(|_| rng.normal() as f32).collect(),
-                momentum: vec![0.0; p],
+                momentum: Theta::zeros(p),
             })
             .collect()
     }
@@ -226,10 +235,10 @@ mod tests {
         e.clip_bound = 1.0;
         let mut s = states(2, 8, 3);
         // peer 0: huge delta (norm >> 1); peer 1: tiny delta
-        for v in &mut s[0].theta {
+        for v in s[0].theta.make_mut() {
             *v = 100.0;
         }
-        for v in &mut s[1].theta {
+        for v in s[1].theta.make_mut() {
             *v = 0.001;
         }
         let mut rng = Rng::new(4);
@@ -250,7 +259,7 @@ mod tests {
         let start = e.clip_bound;
         let mut s = states(8, 8, 5);
         for st in &mut s {
-            for v in &mut st.theta {
+            for v in st.theta.make_mut() {
                 *v *= 1e-3; // tiny deltas => all below the clip bound
             }
         }
@@ -269,7 +278,7 @@ mod tests {
         let start2 = e2.clip_bound;
         let mut s2 = states(8, 8, 15);
         for st in &mut s2 {
-            for v in &mut st.theta {
+            for v in st.theta.make_mut() {
                 *v *= 100.0;
             }
         }
@@ -292,7 +301,10 @@ mod tests {
         let p = 4096;
         let n = 8;
         let mut s: Vec<PeerState> = (0..n)
-            .map(|_| PeerState { theta: vec![0.0; p], momentum: vec![0.0; p] })
+            .map(|_| PeerState {
+                theta: Theta::zeros(p),
+                momentum: Theta::zeros(p),
+            })
             .collect();
         let agg: Vec<usize> = (0..n).collect();
         let mut rng = Rng::new(7);

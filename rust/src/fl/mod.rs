@@ -56,6 +56,10 @@ pub struct RunSummary {
     pub epsilon: Option<f64>,
     /// cumulative DHT hops (MAR only)
     pub dht_hops: Option<u64>,
+    /// cumulative reduce-scatter owner-drop fallbacks across all
+    /// iterations (0 unless `mar.reduce_scatter` + `mar.rs_drop` are on)
+    /// — the reliability axis `fig3_churn` plots against `mar.rs_drop`
+    pub rs_fallbacks: u64,
     pub final_accuracy: f64,
     pub final_loss: f64,
 }
@@ -76,6 +80,8 @@ pub struct Trainer<'rt> {
     rng: Rng,
     kd: Option<KdEngine>,
     dp: Option<DpEngine>,
+    /// cumulative reduce-scatter owner-drop fallbacks (see `RunSummary`)
+    rs_fallbacks: u64,
     /// label used for the curve (strategy name by default)
     pub label: String,
 }
@@ -100,7 +106,8 @@ impl<'rt> Trainer<'rt> {
             cfg.test_samples,
             model.eval_chunk
         );
-        // every peer starts from the same θ⁰ (paper §2.2)
+        // every peer starts from the same θ⁰ (paper §2.2) — one shared
+        // allocation until a peer's first local update (copy-on-write)
         let theta0 = rt.init_params(&cfg.model)?;
         let states = vec![PeerState::new(theta0); cfg.peers];
         let ledger = Arc::new(CommLedger::new());
@@ -168,6 +175,7 @@ impl<'rt> Trainer<'rt> {
             rng,
             kd,
             dp,
+            rs_fallbacks: 0,
             label,
         })
     }
@@ -205,6 +213,7 @@ impl<'rt> Trainer<'rt> {
                 Agg::Mar(m) => Some(m.dht_hops()),
                 _ => None,
             },
+            rs_fallbacks: self.rs_fallbacks,
             final_loss: last.0,
             final_accuracy: last.1,
             curve,
@@ -256,8 +265,8 @@ impl<'rt> Trainer<'rt> {
                             eta,
                             mu,
                         )?;
-                        st.theta = out.theta;
-                        st.momentum = out.momentum;
+                        st.theta = out.theta.into();
+                        st.momentum = out.momentum.into();
                     }
                     Ok(())
                 },
@@ -320,7 +329,9 @@ impl<'rt> Trainer<'rt> {
             runtime: Some(self.rt),
             model: &self.model,
         };
-        self.agg.as_dyn().aggregate(&mut self.states, &aggers, &mut ctx)?;
+        let report =
+            self.agg.as_dyn().aggregate(&mut self.states, &aggers, &mut ctx)?;
+        self.rs_fallbacks += report.rs_fallbacks as u64;
 
         if let Some(dp) = &mut self.dp {
             dp.finalize(&mut self.states, &aggers, &mut dp_rng);

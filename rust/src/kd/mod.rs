@@ -3,8 +3,9 @@
 //! During the first K FL iterations, each MKD round `g`:
 //!
 //! 1. forms candidate-teacher groups with the same DHT matchmaking MAR
-//!    uses (`MarAggregator::form_groups_once`), exchanging *models* within
-//!    each group (θ only — the extra per-iteration load Figure 2 charges);
+//!    uses (`MarAggregator::form_groups_once_timed`), exchanging *models*
+//!    within each group (θ only — the extra per-iteration load Figure 2
+//!    charges);
 //! 2. each student rates every candidate teacher by the KL divergence
 //!    between their softened output distributions on the student's own
 //!    local batch (Algorithm 3) and keeps the top-ℓ (ρ_ℓ = 0.4) — the
@@ -13,13 +14,26 @@
 //! 3. the student distills from the averaged top-ℓ ensemble logits over E
 //!    local epochs with loss L = (1−λ)·CE + λ·τ²·KL, λ = max(0, 1−(t−1)/K)
 //!    decaying linearly so MKD hands over to plain MAR training.
+//!
+//! Execution: the engine runs the whole pass *in parallel* on the `exec`
+//! pool. Round-start teacher models are snapshot as shared [`Theta`]
+//! handles (zero copies — the copy-on-write storage makes a snapshot one
+//! refcount bump), every schedule-sensitive draw (group formation, batch
+//! cursors) happens serially up front, and then each student's rating +
+//! distillation runs as its own lane — students are disjoint across a
+//! round's groups, so lanes never alias and results are bit-identical to
+//! the serial reference (`with_parallel(false)`, pinned by
+//! `tests/mkd_parallel.rs`). Round g+1's DHT matchmaking is pipelined
+//! behind round g's teacher exchange, same two-lane clock attribution as
+//! the MAR aggregator.
 
 use anyhow::Result;
 
-use crate::aggregation::{AggCtx, PeerState};
+use crate::aggregation::{AggCtx, PeerState, Theta};
 use crate::config::KdConfig;
 use crate::coordinator::MarAggregator;
 use crate::data::{Dataset, Shard};
+use crate::exec;
 use crate::metrics::Plane;
 use crate::models::ModelMeta;
 use crate::runtime::Runtime;
@@ -42,11 +56,21 @@ pub struct KdEngine {
     tau: f32,
     eta: f32,
     mu: f32,
+    /// run student lanes concurrently on the `exec` pool (default). The
+    /// serial path is the bit-identical reference for the determinism
+    /// tests and the MKD serial-vs-parallel ablation in `micro_hotpath`.
+    pub parallel: bool,
 }
 
 impl KdEngine {
     pub fn new(cfg: KdConfig, tau: f64, eta: f32, mu: f32) -> Self {
-        KdEngine { cfg, tau: tau as f32, eta, mu }
+        KdEngine { cfg, tau: tau as f32, eta, mu, parallel: true }
+    }
+
+    /// Force the serial reference engine (benchmark/verification aid).
+    pub fn with_parallel(mut self, parallel: bool) -> Self {
+        self.parallel = parallel;
+        self
     }
 
     /// Is MKD active in FL iteration `t` (1-based)?
@@ -69,7 +93,8 @@ impl KdEngine {
 
     /// Run the full MKD pass for FL iteration `t` (Algorithm 2 over all
     /// MKD rounds). Teacher exchange is booked on the data plane; the DHT
-    /// matchmaking books its own control traffic.
+    /// matchmaking books its own control traffic, pipelined behind the
+    /// previous round's exchange on the simulated clock.
     #[allow(clippy::too_many_arguments)]
     pub fn run_mkd(
         &self,
@@ -86,12 +111,28 @@ impl KdEngine {
         let mut report = KdReport { rounds: mar.rounds, ..Default::default() };
         let lam = self.lambda(t);
         let model_bytes = model.model_bytes();
+        // round 0's matchmaking is exposed on the clock; each later
+        // round's pass happens while the previous teacher exchange runs
+        let (mut groups, mm0) = mar.form_groups_once_timed(
+            agg,
+            ctx.rng,
+            &format!("kd:{t}:0"),
+            ctx.fabric,
+        );
+        // empty data lanes: advances by mm0 exactly, attributed exposed
+        ctx.clock.pipelined_two_phase(mm0, std::iter::empty());
         for g in 0..mar.rounds {
-            let groups =
-                mar.form_groups_once(agg, ctx.rng, &format!("kd:{t}:{g}"));
+            // ---- serial schedule phase -------------------------------
+            // Per processed group: member peer ids, the round-start θ
+            // snapshot (shared Theta handles — zero per-group copies; all
+            // students distill from the same teacher parameters
+            // θ_c^{g-1}), the wire booking, and every student's batch
+            // indices (shard cursors are schedule state, drawn in the
+            // serial reference order: group-major, member order).
             let mut lane_times = Vec::with_capacity(groups.len());
-            let mut loss_acc = 0.0f64;
-            let mut loss_n = 0u64;
+            let mut member_groups: Vec<Vec<usize>> = Vec::new();
+            let mut snapshots: Vec<Vec<Theta>> = Vec::new();
+            let mut batch_plans: Vec<Vec<Vec<usize>>> = Vec::new();
             for group in &groups {
                 if group.len() < 2 {
                     lane_times.push(0.0);
@@ -110,69 +151,134 @@ impl KdEngine {
                 lane_times.push(lane);
                 report.teacher_transfers +=
                     (members.len() * (members.len() - 1)) as u64;
-                // snapshot round-start models (all students distill from
-                // the same teacher parameters θ_c^{g-1})
-                let snapshot: Vec<Vec<f32>> =
-                    members.iter().map(|&p| states[p].theta.clone()).collect();
-                for (si, &student) in members.iter().enumerate() {
-                    let batch_idx = shards[student].next_batch(model.batch);
-                    let (x, y) = data.gather(&batch_idx);
-                    let s_logits = rt.logits(model, &snapshot[si], &x)?;
-                    // rate candidate teachers by softened KL on this batch
-                    // (logits cached for the ensemble average below)
-                    let mut rated: Vec<(f64, Vec<f32>)> = Vec::new();
-                    for (ci, _c) in members.iter().enumerate() {
-                        if ci == si {
-                            continue;
-                        }
-                        let z = rt.logits(model, &snapshot[ci], &x)?;
-                        let kl = mean_softened_kl(
-                            &z,
-                            &s_logits,
-                            model.classes,
-                            self.tau,
-                        );
-                        rated.push((kl, z));
-                    }
-                    rated.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-                    let ell = self.top_ell(rated.len());
-                    rated.truncate(ell);
-                    // z̄_b = mean of selected teacher logits
-                    let mut zbar = vec![0.0f32; model.batch * model.classes];
-                    for (_, z) in &rated {
-                        for (a, &v) in zbar.iter_mut().zip(z) {
-                            *a += v;
-                        }
-                    }
-                    let inv = 1.0 / rated.len().max(1) as f32;
-                    for a in &mut zbar {
-                        *a *= inv;
-                    }
-                    // E local distillation epochs
-                    for _ in 0..self.cfg.epochs {
-                        let out = rt.kd_step(
-                            model,
-                            &states[student].theta,
-                            &states[student].momentum,
-                            &x,
-                            &y,
-                            &zbar,
-                            lam,
-                            self.eta,
-                            self.mu,
-                        )?;
-                        states[student].theta = out.theta;
-                        states[student].momentum = out.momentum;
-                        loss_acc += out.loss as f64;
-                        loss_n += 1;
-                        report.kd_steps += 1;
-                    }
+                snapshots.push(
+                    members.iter().map(|&p| states[p].theta.clone()).collect(),
+                );
+                batch_plans.push(
+                    members
+                        .iter()
+                        .map(|&s| shards[s].next_batch(model.batch))
+                        .collect(),
+                );
+                member_groups.push(members);
+            }
+            // one lane per student: students are disjoint across the
+            // round's groups, so every lane owns its peer state
+            let mut flat_students: Vec<usize> = Vec::new();
+            let mut lane_meta: Vec<(usize, usize)> = Vec::new();
+            for (gi, members) in member_groups.iter().enumerate() {
+                for (si, &peer) in members.iter().enumerate() {
+                    flat_students.push(peer);
+                    lane_meta.push((gi, si));
                 }
             }
-            ctx.clock.parallel(lane_times);
+
+            // ---- concurrent distillation phase -----------------------
+            // Pure function of (snapshot, batch plan, own state): safe to
+            // fan out, bit-identical in any interleaving.
+            let distill = |lane: usize, st: &mut PeerState| -> Result<Vec<f32>> {
+                let (gi, si) = lane_meta[lane];
+                let snap = &snapshots[gi];
+                let (x, y) = data.gather(&batch_plans[gi][si]);
+                let s_logits = rt.logits(model, &snap[si], &x)?;
+                // rate candidate teachers by softened KL on this batch;
+                // logits land in a cache and `rated` keeps (kl, cache
+                // index) — no logit vectors are cloned or shuffled
+                let mut cache: Vec<Vec<f32>> = Vec::with_capacity(snap.len() - 1);
+                let mut rated: Vec<(f64, usize)> =
+                    Vec::with_capacity(snap.len() - 1);
+                for (ci, teacher) in snap.iter().enumerate() {
+                    if ci == si {
+                        continue;
+                    }
+                    let z = rt.logits(model, teacher, &x)?;
+                    let kl =
+                        mean_softened_kl(&z, &s_logits, model.classes, self.tau);
+                    rated.push((kl, cache.len()));
+                    cache.push(z);
+                }
+                // total order: NaN logits sort last instead of panicking
+                rated.sort_by(|a, b| a.0.total_cmp(&b.0));
+                let ell = self.top_ell(rated.len());
+                rated.truncate(ell);
+                // z̄_b = mean of selected teacher logits
+                let mut zbar = vec![0.0f32; model.batch * model.classes];
+                for &(_, zi) in &rated {
+                    for (a, &v) in zbar.iter_mut().zip(&cache[zi]) {
+                        *a += v;
+                    }
+                }
+                let inv = 1.0 / rated.len().max(1) as f32;
+                for a in &mut zbar {
+                    *a *= inv;
+                }
+                // E local distillation epochs (replacing θ wholesale, so
+                // the shared snapshot handles are never perturbed)
+                let mut losses = Vec::with_capacity(self.cfg.epochs);
+                for _ in 0..self.cfg.epochs {
+                    let out = rt.kd_step(
+                        model,
+                        &st.theta,
+                        &st.momentum,
+                        &x,
+                        &y,
+                        &zbar,
+                        lam,
+                        self.eta,
+                        self.mu,
+                    )?;
+                    st.theta = out.theta.into();
+                    st.momentum = out.momentum.into();
+                    losses.push(out.loss);
+                }
+                Ok(losses)
+            };
+            let results: Vec<Result<Vec<f32>>> = if self.parallel {
+                exec::par_map_at(states, &flat_students, &distill)?
+            } else {
+                flat_students
+                    .iter()
+                    .enumerate()
+                    .map(|(lane, &peer)| distill(lane, &mut states[peer]))
+                    .collect()
+            };
+            // losses reduce in lane order — the serial reference's
+            // group-major, member-order stream — so mean_loss is
+            // bit-identical on both engines
+            let mut loss_acc = 0.0f64;
+            let mut loss_n = 0u64;
+            for lane in results {
+                for loss in lane? {
+                    loss_acc += loss as f64;
+                    loss_n += 1;
+                    report.kd_steps += 1;
+                }
+            }
             if loss_n > 0 {
                 report.mean_loss = loss_acc / loss_n as f64;
             }
+
+            // ---- pipelined round boundary ----------------------------
+            // round g+1's matchmaking overlaps this round's exchange
+            let (next_groups, mm_next) = if g + 1 < mar.rounds {
+                mar.form_groups_once_timed(
+                    agg,
+                    ctx.rng,
+                    &format!("kd:{t}:{}", g + 1),
+                    ctx.fabric,
+                )
+            } else {
+                (Vec::new(), 0.0)
+            };
+            // teacher exchanges are pure full-gathers, so their lane
+            // time books to the clock's gather accumulator — the same
+            // convention MAR's full-gather mode uses (a (0.0, t) lane in
+            // the two-phase model)
+            ctx.clock.pipelined_two_phase(
+                mm_next,
+                lane_times.iter().map(|&lane| (0.0, lane)),
+            );
+            groups = next_groups;
         }
         Ok(report)
     }

@@ -31,6 +31,7 @@ pub mod kd;
 pub mod metrics;
 pub mod models;
 pub mod net;
+pub mod params;
 pub mod rng;
 pub mod runtime;
 pub mod sim;

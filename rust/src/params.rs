@@ -1,0 +1,207 @@
+//! Copy-on-write model parameters.
+//!
+//! [`Theta`] is the flat parameter vector every peer carries, backed by an
+//! `Arc<Vec<f32>>` so the hot paths that used to clone full vectors now
+//! share storage instead:
+//!
+//! * **MKD teacher snapshots** — `KdEngine::run_mkd` snapshots every group
+//!   member's round-start θ; with `Theta` that is one refcount bump per
+//!   member instead of an O(k·|θ|) allocation storm per group.
+//! * **Group-average broadcast** — after a group averages, every member
+//!   holds the *same* canonical mean; `write_all` hands each member a
+//!   clone of one shared allocation instead of copying the buffer k times.
+//! * **DP reference models** — `DpEngine` keeps each peer's last global
+//!   model (`θ̄_i^{t-1}`) as a shared handle on the state the peer already
+//!   holds.
+//!
+//! Mutation goes through [`Theta::make_mut`] (clone-on-write: unique
+//! handles mutate in place, shared ones detach first), so a student
+//! distilling on its own θ can never perturb a teacher snapshot that
+//! aliases it — the aliasing-safety tests pin this down.
+
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// A flat `f32` parameter (or momentum) vector with shared, copy-on-write
+/// storage. Dereferences to `&[f32]`, so read-side call sites treat it
+/// exactly like the `Vec<f32>` it replaced.
+#[derive(Clone, Debug, Default)]
+pub struct Theta {
+    data: Arc<Vec<f32>>,
+}
+
+impl Theta {
+    pub fn new(v: Vec<f32>) -> Self {
+        Theta { data: Arc::new(v) }
+    }
+
+    pub fn zeros(len: usize) -> Self {
+        Theta::new(vec![0.0; len])
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.data.as_ref().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Mutable access with clone-on-write semantics: a uniquely held
+    /// vector is mutated in place (no allocation); a shared one is
+    /// detached into a private copy first, leaving every other handle —
+    /// snapshots, DP references, groupmates — untouched.
+    pub fn make_mut(&mut self) -> &mut Vec<f32> {
+        Arc::make_mut(&mut self.data)
+    }
+
+    /// Do two handles share the same backing allocation? (The zero-copy
+    /// assertions: group members share one mean, snapshots alias their
+    /// source until the first write.)
+    pub fn shares_storage(&self, other: &Theta) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+
+    /// Is this the only handle on the allocation? (`make_mut` on a unique
+    /// handle is in-place and allocation-free.)
+    pub fn is_unique(&self) -> bool {
+        Arc::strong_count(&self.data) == 1
+    }
+}
+
+impl Deref for Theta {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl AsRef<[f32]> for Theta {
+    fn as_ref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl From<Vec<f32>> for Theta {
+    fn from(v: Vec<f32>) -> Self {
+        Theta::new(v)
+    }
+}
+
+impl FromIterator<f32> for Theta {
+    fn from_iter<I: IntoIterator<Item = f32>>(iter: I) -> Self {
+        Theta::new(iter.into_iter().collect())
+    }
+}
+
+impl<'a> IntoIterator for &'a Theta {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.data.iter()
+    }
+}
+
+impl PartialEq for Theta {
+    fn eq(&self, other: &Theta) -> bool {
+        // deliberate content comparison with NO ptr_eq short-circuit:
+        // equality must match `Vec<f32>` semantics exactly (NaN != NaN,
+        // and an assertion against an aliased handle still reads the
+        // payload), so the bit-identity tests can never pass vacuously
+        *self.data == *other.data
+    }
+}
+
+impl PartialEq<Vec<f32>> for Theta {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Theta> for Vec<f32> {
+    fn eq(&self, other: &Theta) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[f32]> for Theta {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_shares_storage_without_copying() {
+        let a = Theta::new(vec![1.0, 2.0, 3.0]);
+        let b = a.clone();
+        assert!(a.shares_storage(&b));
+        assert!(!a.is_unique());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn make_mut_detaches_shared_storage() {
+        let mut student = Theta::new(vec![1.0, 2.0, 3.0]);
+        let snapshot = student.clone();
+        student.make_mut()[0] = 99.0;
+        // the write detached the student; the snapshot is untouched
+        assert!(!student.shares_storage(&snapshot));
+        assert_eq!(snapshot, vec![1.0, 2.0, 3.0]);
+        assert_eq!(student[0], 99.0);
+    }
+
+    #[test]
+    fn make_mut_is_in_place_when_unique() {
+        let mut a = Theta::new(vec![0.0; 8]);
+        assert!(a.is_unique());
+        let before = a.as_slice().as_ptr();
+        a.make_mut()[3] = 1.0;
+        assert_eq!(a.as_slice().as_ptr(), before, "unique mutation must not move");
+    }
+
+    #[test]
+    fn replacement_does_not_perturb_aliases() {
+        let mut state = Theta::new(vec![1.0, 1.0]);
+        let snapshot = state.clone();
+        state = Theta::new(vec![2.0, 2.0]);
+        assert_eq!(snapshot, vec![1.0, 1.0]);
+        assert!(!state.shares_storage(&snapshot));
+    }
+
+    #[test]
+    fn equality_against_vec_and_slice() {
+        let t = Theta::new(vec![1.0, 2.0]);
+        assert_eq!(t, vec![1.0, 2.0]);
+        assert_eq!(vec![1.0, 2.0], t);
+        assert!(t == *[1.0, 2.0].as_slice());
+        assert!(t != vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn collects_and_iterates_like_a_vec() {
+        let t: Theta = (0..4).map(|i| i as f32).collect();
+        assert_eq!(t.len(), 4);
+        let mut sum = 0.0f32;
+        for &v in &t {
+            sum += v;
+        }
+        assert_eq!(sum, 6.0);
+        assert_eq!(t.to_vec(), vec![0.0, 1.0, 2.0, 3.0]);
+        assert!(!t.is_empty());
+        assert!(Theta::zeros(0).is_empty());
+    }
+}

@@ -53,7 +53,11 @@ enum Backend {
     Pjrt(pjrt::PjrtBackend),
 }
 
-/// Result of one local training / KD step.
+/// Result of one local training / KD step. The buffers are freshly
+/// owned `Vec`s, so callers move them straight into the copy-on-write
+/// `params::Theta` peer state (`out.theta.into()`) — one Arc allocation,
+/// no buffer copy — which is what keeps a step from ever writing through
+/// storage shared with snapshots or groupmates.
 #[derive(Clone, Debug)]
 pub struct StepOut {
     pub theta: Vec<f32>,

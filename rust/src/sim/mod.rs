@@ -14,6 +14,12 @@ pub struct SimClock {
     rs_time_s: f64,
     /// cumulative time attributed to all-gather phases
     ag_time_s: f64,
+    /// control-plane (matchmaking) time hidden under a concurrent
+    /// data-plane exchange by [`Self::pipelined_two_phase`]
+    mm_hidden_s: f64,
+    /// control-plane time that extended the exchange (the matchmaking
+    /// lane outlasted every data lane)
+    mm_exposed_s: f64,
 }
 
 impl SimClock {
@@ -53,6 +59,35 @@ impl SimClock {
         &mut self,
         lanes: impl IntoIterator<Item = (f64, f64)>,
     ) {
+        // the zero-control special case of the pipelined boundary (one
+        // body; the bitwise equivalence is pinned by a test below)
+        self.pipelined_two_phase(0.0, lanes);
+    }
+
+    /// Cumulative `(reduce_scatter_s, all_gather_s)` attribution from
+    /// [`Self::parallel_two_phase`] exchanges.
+    pub fn phase_times(&self) -> (f64, f64) {
+        (self.rs_time_s, self.ag_time_s)
+    }
+
+    /// A pipelined round boundary: the *next* round's control-plane
+    /// matchmaking (`control_s`, one lane) runs concurrently with the
+    /// *current* round's two-phase data exchanges (`lanes`, as in
+    /// [`Self::parallel_two_phase`]). The boundary lasts as long as the
+    /// slowest of the two planes: matchmaking needs only the key
+    /// schedule — known before the exchange starts — so it costs extra
+    /// wall-clock only when it outlasts every data lane. Attribution: the
+    /// data advance splits into the rs/ag accumulators exactly as in
+    /// `parallel_two_phase`; the control lane splits into hidden
+    /// (overlapped) and exposed (exchange-extending) shares
+    /// ([`Self::matchmaking_times`]). With `control_s == 0` this is
+    /// bit-identical to `parallel_two_phase`.
+    pub fn pipelined_two_phase(
+        &mut self,
+        control_s: f64,
+        lanes: impl IntoIterator<Item = (f64, f64)>,
+    ) {
+        assert!(control_s >= 0.0, "negative control lane {control_s}");
         let mut max_total = 0.0f64;
         let mut max_first = 0.0f64;
         for (first, second) in lanes {
@@ -62,13 +97,18 @@ impl SimClock {
         let first_share = max_first.min(max_total);
         self.rs_time_s += first_share;
         self.ag_time_s += max_total - first_share;
-        self.time_s += max_total;
+        let exposed = (control_s - max_total).max(0.0);
+        self.mm_hidden_s += control_s - exposed;
+        self.mm_exposed_s += exposed;
+        self.time_s += max_total + exposed;
     }
 
-    /// Cumulative `(reduce_scatter_s, all_gather_s)` attribution from
-    /// [`Self::parallel_two_phase`] exchanges.
-    pub fn phase_times(&self) -> (f64, f64) {
-        (self.rs_time_s, self.ag_time_s)
+    /// Cumulative `(hidden_s, exposed_s)` control-plane attribution from
+    /// [`Self::pipelined_two_phase`] boundaries: how much matchmaking
+    /// time the pipeline absorbed under data exchanges vs how much still
+    /// extended the critical path.
+    pub fn matchmaking_times(&self) -> (f64, f64) {
+        (self.mm_hidden_s, self.mm_exposed_s)
     }
 }
 
@@ -126,5 +166,43 @@ mod tests {
         c.parallel_two_phase([]);
         assert_eq!(c.now(), 0.0);
         assert_eq!(c.phase_times(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn pipelined_control_hides_under_the_exchange() {
+        let mut c = SimClock::new();
+        // exchange lasts 0.9 (slowest lane sum); matchmaking 0.3 hides
+        c.pipelined_two_phase(0.3, [(0.5, 0.1), (0.2, 0.7)]);
+        assert!((c.now() - 0.9).abs() < 1e-12);
+        let (hidden, exposed) = c.matchmaking_times();
+        assert!((hidden - 0.3).abs() < 1e-12);
+        assert_eq!(exposed, 0.0);
+        // phase attribution unchanged by the hidden control lane
+        let (rs, ag) = c.phase_times();
+        assert!((rs - 0.5).abs() < 1e-12);
+        assert!((ag - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelined_control_exposes_only_its_overhang() {
+        let mut c = SimClock::new();
+        // matchmaking 1.0 vs exchange 0.4: 0.4 hides, 0.6 extends
+        c.pipelined_two_phase(1.0, [(0.1, 0.3)]);
+        assert!((c.now() - 1.0).abs() < 1e-12);
+        let (hidden, exposed) = c.matchmaking_times();
+        assert!((hidden - 0.4).abs() < 1e-12);
+        assert!((exposed - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelined_with_zero_control_matches_two_phase_bitwise() {
+        let lanes = [(0.25f64, 0.1f64), (0.0, 0.75), (0.5, 0.0)];
+        let mut a = SimClock::new();
+        a.parallel_two_phase(lanes);
+        let mut b = SimClock::new();
+        b.pipelined_two_phase(0.0, lanes);
+        assert_eq!(a.now().to_bits(), b.now().to_bits());
+        assert_eq!(a.phase_times(), b.phase_times());
+        assert_eq!(b.matchmaking_times(), (0.0, 0.0));
     }
 }

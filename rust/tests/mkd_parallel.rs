@@ -1,0 +1,203 @@
+//! Parallel Moshpit-KD verification: the student-lane engine must be
+//! *bit-identical* to the serial reference — same peer states, same
+//! ledger totals, same simulated clock, same report — and the zero-copy
+//! `Theta` snapshots must alias peer state without ever being perturbed
+//! by a student's distillation updates.
+
+use std::sync::Arc;
+
+use marfl::aggregation::{AggCtx, PeerState, Theta};
+use marfl::config::KdConfig;
+use marfl::coordinator::MarAggregator;
+use marfl::data::{build as build_data, FlData};
+use marfl::fl::Trainer;
+use marfl::kd::{KdEngine, KdReport};
+use marfl::metrics::{CommLedger, CommSnapshot};
+use marfl::models::default_artifact_dir;
+use marfl::net::Fabric;
+use marfl::rng::Rng;
+use marfl::runtime::Runtime;
+use marfl::sim::SimClock;
+
+const PEERS: usize = 12;
+const GROUP: usize = 4;
+const ROUNDS: usize = 2;
+
+fn data(rng: &mut Rng) -> FlData {
+    build_data("head", PEERS, 32, 250, true, 1.0, rng)
+}
+
+/// One full MKD pass on a fresh, identically seeded world; returns
+/// (states, ledger snapshot, simulated clock, report).
+fn run_mkd(
+    parallel: bool,
+) -> (Vec<PeerState>, CommSnapshot, f64, KdReport) {
+    let rt = Runtime::new(&default_artifact_dir()).unwrap();
+    let model = rt.meta.model("head").unwrap().clone();
+    let mut rng = Rng::new(0x5EED);
+    let mut fl = data(&mut rng.fork(1));
+    let theta0 = rt.init_params("head").unwrap();
+    let mut states = vec![PeerState::new(theta0); PEERS];
+    let agg: Vec<usize> = (0..PEERS).collect();
+    let ledger = Arc::new(CommLedger::new());
+    let fabric = Fabric::new(ledger.clone(), 12.5e6, 0.02);
+    let mut mar = MarAggregator::new(PEERS, GROUP, ROUNDS, ledger.clone(), 7);
+    ledger.reset(); // drop DHT join traffic
+    let kd = KdEngine::new(
+        KdConfig { enabled: true, k_iterations: 6, rho_ell: 0.4, epochs: 2 },
+        rt.meta.kd_tau,
+        0.1,
+        0.9,
+    )
+    .with_parallel(parallel);
+    let mut clock = SimClock::new();
+    let mut kd_rng = rng.fork(2);
+    let mut ctx = AggCtx {
+        fabric: &fabric,
+        clock: &mut clock,
+        rng: &mut kd_rng,
+        runtime: Some(&rt),
+        model: &model,
+    };
+    let report = kd
+        .run_mkd(
+            1,
+            &rt,
+            &model,
+            &fl.train,
+            &mut fl.shards,
+            &mut states,
+            &agg,
+            &mut mar,
+            &mut ctx,
+        )
+        .unwrap();
+    (states, ledger.snapshot(), clock.now(), report)
+}
+
+/// The headline determinism guarantee: student-parallel MKD yields the
+/// exact same peer states, byte/message totals, simulated time and
+/// report as the serial reference.
+#[test]
+fn parallel_and_serial_mkd_bit_identical() {
+    let (s_states, s_ledger, s_clock, s_report) = run_mkd(false);
+    let (p_states, p_ledger, p_clock, p_report) = run_mkd(true);
+    for (i, (a, b)) in s_states.iter().zip(&p_states).enumerate() {
+        assert_eq!(a.theta, b.theta, "peer {i} theta diverged");
+        assert_eq!(a.momentum, b.momentum, "peer {i} momentum diverged");
+    }
+    assert_eq!(s_ledger, p_ledger, "ledger totals diverged");
+    assert_eq!(
+        s_clock.to_bits(),
+        p_clock.to_bits(),
+        "simulated clock diverged"
+    );
+    assert_eq!(s_report.kd_steps, p_report.kd_steps);
+    assert_eq!(s_report.teacher_transfers, p_report.teacher_transfers);
+    assert_eq!(
+        s_report.mean_loss.to_bits(),
+        p_report.mean_loss.to_bits(),
+        "mean loss diverged"
+    );
+    // the pass actually did work
+    assert!(s_report.kd_steps > 0);
+    assert!(s_report.teacher_transfers > 0);
+}
+
+/// Zero-copy snapshot aliasing: handles cloned before the MKD pass alias
+/// peer state (no buffer copies), and a student's distillation updates
+/// must never leak through them — exactly the guarantee the in-pass
+/// round-start teacher snapshots rely on.
+#[test]
+fn mkd_updates_never_perturb_aliased_snapshots() {
+    let rt = Runtime::new(&default_artifact_dir()).unwrap();
+    let model = rt.meta.model("head").unwrap().clone();
+    let mut rng = Rng::new(0xA11A5);
+    let mut fl = data(&mut rng.fork(1));
+    let theta0 = rt.init_params("head").unwrap();
+    let mut states = vec![PeerState::new(theta0.clone()); PEERS];
+    // every peer starts from one shared θ⁰ allocation (zero-copy init)
+    assert!(states[0].theta.shares_storage(&states[PEERS - 1].theta));
+    // alias every peer's θ the same way run_mkd snapshots teachers
+    let snapshots: Vec<Theta> =
+        states.iter().map(|s| s.theta.clone()).collect();
+    let frozen: Vec<Vec<f32>> =
+        snapshots.iter().map(|s| s.to_vec()).collect();
+    let agg: Vec<usize> = (0..PEERS).collect();
+    let ledger = Arc::new(CommLedger::new());
+    let fabric = Fabric::new(ledger.clone(), 12.5e6, 0.02);
+    let mut mar = MarAggregator::new(PEERS, GROUP, ROUNDS, ledger.clone(), 7);
+    let kd = KdEngine::new(
+        KdConfig { enabled: true, k_iterations: 6, rho_ell: 0.4, epochs: 1 },
+        rt.meta.kd_tau,
+        0.1,
+        0.9,
+    );
+    let mut clock = SimClock::new();
+    let mut kd_rng = rng.fork(2);
+    let mut ctx = AggCtx {
+        fabric: &fabric,
+        clock: &mut clock,
+        rng: &mut kd_rng,
+        runtime: Some(&rt),
+        model: &model,
+    };
+    kd.run_mkd(
+        1,
+        &rt,
+        &model,
+        &fl.train,
+        &mut fl.shards,
+        &mut states,
+        &agg,
+        &mut mar,
+        &mut ctx,
+    )
+    .unwrap();
+    // the students moved...
+    let moved = states
+        .iter()
+        .zip(&snapshots)
+        .filter(|(st, snap)| st.theta != **snap)
+        .count();
+    assert!(moved > 0, "MKD pass did not update any student");
+    // ...but every aliased snapshot still holds the exact pre-pass bytes
+    for (i, (snap, want)) in snapshots.iter().zip(&frozen).enumerate() {
+        assert_eq!(snap, want, "aliased snapshot {i} was perturbed");
+    }
+}
+
+/// End-to-end reproducibility with MKD active on the thread pool: two
+/// identical trainer runs finish in bit-identical states.
+#[test]
+fn trainer_with_mkd_bit_reproducible() {
+    let rt = Runtime::new(&default_artifact_dir()).unwrap();
+    let run = || {
+        let mut cfg = marfl::config::ExperimentConfig {
+            model: "head".into(),
+            peers: 9,
+            group_size: 3,
+            iterations: 3,
+            samples_per_peer: 32,
+            test_samples: 250,
+            eval_every: 3,
+            local_batches: 2,
+            seed: 4321,
+            ..Default::default()
+        };
+        cfg.kd.enabled = true;
+        cfg.kd.k_iterations = 2;
+        let mut t = Trainer::new(cfg, &rt).unwrap();
+        let summary = t.run().unwrap();
+        let states: Vec<PeerState> = t.states().to_vec();
+        (states, summary.comm, summary.sim_time_s)
+    };
+    let (a_states, a_comm, a_time) = run();
+    let (b_states, b_comm, b_time) = run();
+    assert_eq!(a_comm, b_comm);
+    assert_eq!(a_time.to_bits(), b_time.to_bits());
+    for (a, b) in a_states.iter().zip(&b_states) {
+        assert_eq!(a.theta, b.theta);
+        assert_eq!(a.momentum, b.momentum);
+    }
+}

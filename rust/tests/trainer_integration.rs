@@ -244,7 +244,7 @@ fn bar_cheap_but_excludes_stragglers() {
         // spread of per-peer states: BAR leaves 4 peers un-aggregated
         let states = t.states();
         let all: Vec<usize> = (0..states.len()).collect();
-        let thetas: Vec<Vec<f32>> =
+        let thetas: Vec<_> =
             states.iter().map(|st| st.theta.clone()).collect();
         let _ = all;
         (s, marfl::coordinator::mixing::avg_distortion(&thetas))
