@@ -86,45 +86,60 @@ fn main() {
 
     // ---- reduce-scatter reliability vs owner-drop rate --------------
     // Chunk ownership makes every member load-bearing: `mar.rs_drop`
-    // injects mid-exchange owner losses and the groups fall back to
-    // survivors-only full gathers. `RunSummary::rs_fallbacks` surfaces
-    // the per-run fallback count, so reliability is plottable against
-    // the drop rate (ROADMAP PR 2 follow-up).
-    println!("\nreduce-scatter reliability vs mar.rs_drop\n");
+    // injects mid-exchange owner losses. With `mar.rs_retry_budget=0`
+    // (seed behavior) the group falls back to a survivors-only full
+    // gather; with a budget it defers to the next round's matchmaking
+    // instead, trading averaging progress for recovery bytes.
+    // `RunSummary::{rs_fallbacks, rs_retries}` surface both counts, so
+    // reliability is plottable against drop rate and budget.
+    println!("\nreduce-scatter reliability vs mar.rs_drop × mar.rs_retry_budget\n");
     let mut rs_rows = vec![vec![
         "rs_drop".into(),
+        "rs_retry_budget".into(),
         "rs_fallbacks".into(),
+        "rs_retries".into(),
         "fallbacks_per_iter".into(),
         "final_accuracy".into(),
         "data_bytes".into(),
     ]];
     let mut fallbacks = std::collections::BTreeMap::new();
-    for &drop in &[0.0f64, 0.05, 0.1, 0.2] {
-        let cfg = ExperimentConfig {
-            strategy: Strategy::MarFl,
-            reduce_scatter: true,
-            rs_drop: drop,
-            ..base.clone()
-        };
-        let run = timed(&format!("marfl rs_drop={drop}"), || {
-            Trainer::new(cfg, &rt).unwrap().run().unwrap()
-        });
-        let per_iter =
-            run.rs_fallbacks as f64 / run.iterations_run.max(1) as f64;
-        println!(
-            "    fallbacks {} ({per_iter:.2}/iter)  acc {:.3}  data {:.0} MiB",
-            run.rs_fallbacks,
-            run.final_accuracy,
-            mib(run.comm.data_bytes)
-        );
-        rs_rows.push(vec![
-            drop.to_string(),
-            run.rs_fallbacks.to_string(),
-            format!("{per_iter:.3}"),
-            format!("{:.4}", run.final_accuracy),
-            run.comm.data_bytes.to_string(),
-        ]);
-        fallbacks.insert((drop * 100.0) as u64, run.rs_fallbacks);
+    let mut retried = std::collections::BTreeMap::new();
+    for &budget in &[0usize, 2] {
+        for &drop in &[0.0f64, 0.05, 0.1, 0.2] {
+            let cfg = ExperimentConfig {
+                strategy: Strategy::MarFl,
+                reduce_scatter: true,
+                rs_drop: drop,
+                rs_retry_budget: budget,
+                ..base.clone()
+            };
+            let run = timed(&format!("marfl rs_drop={drop} budget={budget}"), || {
+                Trainer::new(cfg, &rt).unwrap().run().unwrap()
+            });
+            let per_iter =
+                run.rs_fallbacks as f64 / run.iterations_run.max(1) as f64;
+            println!(
+                "    fallbacks {} ({per_iter:.2}/iter)  retries {}  acc {:.3}  data {:.0} MiB",
+                run.rs_fallbacks,
+                run.rs_retries,
+                run.final_accuracy,
+                mib(run.comm.data_bytes)
+            );
+            rs_rows.push(vec![
+                drop.to_string(),
+                budget.to_string(),
+                run.rs_fallbacks.to_string(),
+                run.rs_retries.to_string(),
+                format!("{per_iter:.3}"),
+                format!("{:.4}", run.final_accuracy),
+                run.comm.data_bytes.to_string(),
+            ]);
+            if budget == 0 {
+                fallbacks.insert((drop * 100.0) as u64, run.rs_fallbacks);
+            } else {
+                retried.insert((drop * 100.0) as u64, run.rs_retries);
+            }
+        }
     }
     emit_csv("fig3_rs_reliability.csv", &rs_rows);
     assert_eq!(
@@ -134,6 +149,11 @@ fn main() {
     assert!(
         fallbacks[&20] > fallbacks[&0],
         "rs_drop=0.2 must produce observable fallbacks"
+    );
+    assert_eq!(retried[&0], 0, "no retries may occur at rs_drop=0");
+    assert!(
+        retried[&20] > 0,
+        "a retry budget must absorb drops at rs_drop=0.2"
     );
 
     // ---- paper-shape assertions ------------------------------------

@@ -89,6 +89,72 @@ fn main() {
         rt.evaluate(&h, &theta_h, &xe, &ye).unwrap();
     });
 
+    println!("\nallocation-free step kernels: seed (allocating, scalar) vs workspace/in-place\n");
+    // Single-thread train-step throughput, native path on both sides:
+    // the seed reference allocates every forward cache / gradient /
+    // state vector per step and runs the scalar kernels; the in-place
+    // path reuses the per-worker workspace and the register-blocked
+    // kernels. tests/kernel_equivalence.rs proves the two are
+    // bit-identical, so this gap is pure overhead removed.
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    let mut cnn_kernel_speedup = 0.0f64;
+    for (label, meta_m, theta0, xb, yb, reps) in [
+        ("cnn", &m, &theta, &x, &y, 20usize),
+        ("head", &h, &theta_h, &xh, &yh, 30),
+    ] {
+        let mom0 = vec![0.0f32; theta0.len()];
+        let seed_ns =
+            bench_ns(&format!("{label} train_step seed path"), 3, reps, || {
+                marfl::runtime::native::reference::train_step(
+                    meta_m, theta0, &mom0, xb, yb, 0.1, 0.9,
+                )
+                .unwrap();
+            });
+        let mut th = theta0.clone();
+        let mut mo = mom0.clone();
+        let inplace_ns =
+            bench_ns(&format!("{label} train_step in-place"), 3, reps, || {
+                marfl::runtime::native::train_step_into(
+                    meta_m, &mut th, &mut mo, xb, yb, 0.1, 0.9,
+                )
+                .unwrap();
+            });
+        let speedup = seed_ns / inplace_ns;
+        println!("  {label}: workspace/in-place step {speedup:.2}x the seed path");
+        if label == "cnn" {
+            cnn_kernel_speedup = speedup;
+        }
+        rows.0.push((format!("{label} train_step seed path"), seed_ns / 1e3));
+        rows.0.push((format!("{label} train_step in-place"), inplace_ns / 1e3));
+        kernel_rows.push(obj(vec![
+            ("model", s(label)),
+            ("seed_us", num(seed_ns / 1e3)),
+            ("inplace_us", num(inplace_ns / 1e3)),
+            ("speedup", num(speedup)),
+        ]));
+    }
+    // machine-readable kernel ablation (BENCH_kernels.json, uploaded by
+    // CI alongside the other bench artifacts)
+    let kernels_doc = obj(vec![
+        ("bench", s("kernel_ablation")),
+        ("backend", s("native")),
+        ("threads", num(1.0)), // a step is single-threaded by design
+        ("results", arr(kernel_rows)),
+    ]);
+    let kernels_path = common::results_dir().join("BENCH_kernels.json");
+    write_json(&kernels_path, &kernels_doc).expect("write BENCH_kernels.json");
+    println!("  -> {}", kernels_path.display());
+    // acceptance gate: >=1.5x single-thread cnn step throughput for the
+    // workspace/in-place path; MARFL_BENCH_NO_ASSERT=1 downgrades to
+    // report-only on hosts too noisy to trust wall-clock ratios
+    assert!(
+        cnn_kernel_speedup >= 1.5
+            || std::env::var_os("MARFL_BENCH_NO_ASSERT").is_some(),
+        "workspace/in-place cnn train_step must be >=1.5x the seed path \
+         (got {cnn_kernel_speedup:.2}x; set MARFL_BENCH_NO_ASSERT=1 to \
+         report without gating)"
+    );
+
     println!("\ngroup averaging ablation (k=5, cnn-size vectors)\n");
     let k = 5usize;
     let stack: Vec<f32> =

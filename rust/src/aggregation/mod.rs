@@ -95,6 +95,11 @@ pub struct AggReport {
     /// the per-iteration reliability signal `fig3_churn` plots against
     /// `mar.rs_drop`
     pub rs_fallbacks: usize,
+    /// reduce-scatter groups that lost a chunk owner and *deferred*
+    /// instead — survivors skipped averaging and re-formed via the next
+    /// round's matchmaking, spending one unit of `mar.rs_retry_budget`
+    /// (0 with the default budget of 0, where every drop falls back)
+    pub rs_retries: usize,
 }
 
 /// An aggregation technique. `agg` lists the indices of peers in `A_t`

@@ -136,6 +136,11 @@ pub struct ExperimentConfig {
     /// mid-exchange (the group falls back to a full gather among the
     /// survivors; ignored under full-gather)
     pub rs_drop: f64,
+    /// per-iteration budget of owner-drop retries: while budget remains
+    /// (and a later MAR round exists), a dropped-owner group defers to
+    /// the next round's matchmaking instead of falling back to the
+    /// survivors-only full gather. 0 = always fall back (seed behavior)
+    pub rs_retry_budget: usize,
     /// momentum-SGD stepsize η (paper: 0.1)
     pub eta: f32,
     /// momentum μ (paper: 0.9)
@@ -184,6 +189,7 @@ impl Default for ExperimentConfig {
             mar_rounds: 0,
             reduce_scatter: false,
             rs_drop: 0.0,
+            rs_retry_budget: 0,
             eta: 0.1,
             mu: 0.9,
             local_batches: 1,
@@ -304,6 +310,9 @@ impl ExperimentConfig {
                 self.reduce_scatter = bool_of(v)?
             }
             "mar.rs_drop" | "rs_drop" => self.rs_drop = f64_of(v)?,
+            "mar.rs_retry_budget" | "rs_retry_budget" => {
+                self.rs_retry_budget = usize_of(v)?
+            }
             "kd.enabled" => self.kd.enabled = bool_of(v)?,
             "kd.k_iterations" => self.kd.k_iterations = usize_of(v)?,
             "kd.rho_ell" => self.kd.rho_ell = f64_of(v)?,
@@ -421,10 +430,12 @@ mod tests {
         c.apply_overrides(&[
             "mar.reduce_scatter=true".into(),
             "mar.rs_drop=0.25".into(),
+            "mar.rs_retry_budget=3".into(),
         ])
         .unwrap();
         assert!(c.reduce_scatter);
         assert_eq!(c.rs_drop, 0.25);
+        assert_eq!(c.rs_retry_budget, 3);
         assert!(c.validate().is_ok());
         c.rs_drop = 1.5;
         assert!(c.validate().is_err());

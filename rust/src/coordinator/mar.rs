@@ -59,6 +59,15 @@ pub struct MarAggregator {
     /// themselves; the dropped peer goes stale and sits out the rest of
     /// the iteration. No effect under full-gather.
     pub rs_drop: f64,
+    /// per-iteration budget of owner-drop *retries* (`mar.rs_retry_budget`):
+    /// while budget remains and a later round exists to re-form in, a
+    /// group that loses a chunk owner defers — survivors skip averaging
+    /// (and the full-gather recovery bytes) and simply re-announce in the
+    /// next round's matchmaking. Once the budget is spent, and always in
+    /// an iteration's final round, drops fall back to the survivors-only
+    /// full gather. 0 (default) reproduces the immediate-fallback seed
+    /// behavior exactly.
+    pub rs_retry_budget: usize,
     /// run each round's groups concurrently on the `exec` pool (default).
     /// The serial path is kept as the bit-identical reference for the
     /// determinism tests and the serial-vs-parallel scaling bench.
@@ -93,6 +102,7 @@ impl MarAggregator {
             rounds,
             exchange: GroupExchange::FullGather,
             rs_drop: 0.0,
+            rs_retry_budget: 0,
             parallel: true,
             dht,
             node_ids,
@@ -111,6 +121,13 @@ impl MarAggregator {
     pub fn with_rs_drop(mut self, p: f64) -> Self {
         assert!((0.0..=1.0).contains(&p), "rs_drop {p} outside [0, 1]");
         self.rs_drop = p;
+        self
+    }
+
+    /// Set the per-iteration owner-drop retry budget (see
+    /// [`Self::rs_retry_budget`]).
+    pub fn with_rs_retry_budget(mut self, budget: usize) -> Self {
+        self.rs_retry_budget = budget;
         self
     }
 
@@ -245,26 +262,57 @@ impl MarAggregator {
     }
 }
 
+/// Pre-drawn owner-drop outcome for one group in one round — schedule
+/// state, decided serially (RNG + retry-budget counter) before the group
+/// fan-out so parallel lanes stay bit-identical to the serial reference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum DropPlan {
+    /// no owner dropped: normal exchange
+    Keep,
+    /// victim chunk index; survivors redo the exchange as a full gather
+    /// (the seed behavior — and the terminal case once the retry budget
+    /// is spent or no later round remains to re-form in)
+    Fallback(usize),
+    /// victim chunk index; survivors abort after the timeout and
+    /// re-form via the next round's matchmaking (`mar.rs_retry_budget`)
+    Retry(usize),
+}
+
+impl DropPlan {
+    fn victim(self) -> Option<usize> {
+        match self {
+            DropPlan::Keep => None,
+            DropPlan::Fallback(v) | DropPlan::Retry(v) => Some(v),
+        }
+    }
+}
+
 /// One group's exchange + averaging — the parallel lane body, over the
 /// exclusive member views `exec::par_disjoint_map` hands out. `drop`
-/// carries the pre-drawn victim for a reduce-scatter owner drop;
-/// `stripe_par` fans owner stripes across the pool when the round's
-/// group count underfills it.
+/// carries the pre-drawn owner-drop plan; `stripe_par` fans owner
+/// stripes across the pool when the round's group count underfills it.
 fn exchange_lane(
     views: &mut [&mut PeerState],
-    drop: Option<usize>,
+    drop: DropPlan,
     exchange: GroupExchange,
     bytes: u64,
     fabric: &Fabric,
     stripe_par: bool,
 ) -> ExchangeTiming {
     match (exchange, drop) {
-        (GroupExchange::ReduceScatter, None) => {
+        (GroupExchange::ReduceScatter, DropPlan::Keep) => {
             let timing = book_reduce_scatter_fabric(views.len(), bytes, fabric);
             average_views_chunked(views, stripe_par);
             timing
         }
-        (GroupExchange::ReduceScatter, Some(victim)) => {
+        (GroupExchange::ReduceScatter, DropPlan::Retry(_)) => {
+            // a chunk owner vanished but the retry budget covers it: the
+            // survivors time out on the missing stripe (one link
+            // latency) and defer to the next round's matchmaking — no
+            // averaging, no recovery bytes
+            ExchangeTiming { reduce_scatter_s: fabric.latency, all_gather_s: 0.0 }
+        }
+        (GroupExchange::ReduceScatter, DropPlan::Fallback(victim)) => {
             // a chunk owner vanished: the survivors time out on the
             // missing stripe (one link latency) and redo the exchange as
             // a full gather among themselves; the victim goes stale
@@ -305,19 +353,23 @@ fn exchange_lane(
 fn exchange_lane_serial(
     states: &mut [PeerState],
     members: &[usize],
-    drop: Option<usize>,
+    drop: DropPlan,
     exchange: GroupExchange,
     bytes: u64,
     ctx: &mut AggCtx<'_>,
 ) -> Result<ExchangeTiming> {
     Ok(match (exchange, drop) {
-        (GroupExchange::ReduceScatter, None) => {
+        (GroupExchange::ReduceScatter, DropPlan::Keep) => {
             let timing =
                 book_reduce_scatter_fabric(members.len(), bytes, ctx.fabric);
             average_group_chunked(states, members);
             timing
         }
-        (GroupExchange::ReduceScatter, Some(victim)) => {
+        (GroupExchange::ReduceScatter, DropPlan::Retry(_)) => ExchangeTiming {
+            reduce_scatter_s: ctx.fabric.latency,
+            all_gather_s: 0.0,
+        },
+        (GroupExchange::ReduceScatter, DropPlan::Fallback(victim)) => {
             let survivors: Vec<usize> = members
                 .iter()
                 .enumerate()
@@ -391,6 +443,10 @@ impl Aggregate for MarAggregator {
         let phase_base = ctx.fabric.ledger().snapshot();
         let mut expected_phase_bytes = 0u64;
         let mut rs_fallbacks = 0usize;
+        let mut rs_retries = 0usize;
+        // owner-drop retries remaining this iteration (schedule state,
+        // consumed serially as drops are drawn)
+        let mut retries_left = self.rs_retry_budget;
         // Pipelined control plane: a round's chunk indices and owner-drop
         // plan are schedule state fully determined by its *membership*
         // (known the moment matchmaking returns), so round g+1's DHT
@@ -406,20 +462,31 @@ impl Aggregate for MarAggregator {
             // owner-drop plan: drawn serially before fanning out (it is
             // schedule state, like batch cursors), so parallel lanes stay
             // bit-identical to the serial reference. Nothing is drawn
-            // while the knob is off.
-            let drops: Vec<Option<usize>> = if self.exchange
+            // while the knob is off; the victim draw order matches the
+            // seed exactly, so budget 0 reproduces it bit for bit.
+            let drops: Vec<DropPlan> = if self.exchange
                 == GroupExchange::ReduceScatter
                 && self.rs_drop > 0.0
             {
                 groups
                     .iter()
                     .map(|grp| {
-                        (grp.len() >= 2 && ctx.rng.chance(self.rs_drop))
-                            .then(|| ctx.rng.below(grp.len()))
+                        if grp.len() >= 2 && ctx.rng.chance(self.rs_drop) {
+                            let victim = ctx.rng.below(grp.len());
+                            // a retry needs a later round to re-form in
+                            if retries_left > 0 && g + 1 < d {
+                                retries_left -= 1;
+                                DropPlan::Retry(victim)
+                            } else {
+                                DropPlan::Fallback(victim)
+                            }
+                        } else {
+                            DropPlan::Keep
+                        }
                     })
                     .collect()
             } else {
-                vec![None; groups.len()]
+                vec![DropPlan::Keep; groups.len()]
             };
             let exchange = self.exchange;
             // key/alive bookkeeping for this round — membership plus the
@@ -427,7 +494,7 @@ impl Aggregate for MarAggregator {
             // lets the next matchmaking pass start before the exchange
             // finishes
             for (gi, group) in groups.iter().enumerate() {
-                let victim = drops[gi];
+                let victim = drops[gi].victim();
                 for (chunk, &pos) in group.iter().enumerate() {
                     if victim == Some(chunk) {
                         // the dropped owner sits out the rest of the
@@ -437,19 +504,27 @@ impl Aggregate for MarAggregator {
                         keys[pos].set_chunk(g, chunk);
                     }
                 }
-                let averaged = group.len() - usize::from(victim.is_some());
-                if averaged >= 2 {
-                    groups_formed += 1;
-                }
-                if victim.is_some() {
-                    rs_fallbacks += 1;
-                }
-                if exchange == GroupExchange::ReduceScatter
-                    && group.len() >= 2
-                    && victim.is_none()
-                {
-                    expected_phase_bytes +=
-                        2 * (group.len() as u64 - 1) * bytes;
+                match drops[gi] {
+                    DropPlan::Keep => {
+                        if group.len() >= 2 {
+                            groups_formed += 1;
+                        }
+                        if exchange == GroupExchange::ReduceScatter
+                            && group.len() >= 2
+                        {
+                            expected_phase_bytes +=
+                                2 * (group.len() as u64 - 1) * bytes;
+                        }
+                    }
+                    DropPlan::Fallback(_) => {
+                        rs_fallbacks += 1;
+                        if group.len() - 1 >= 2 {
+                            groups_formed += 1;
+                        }
+                    }
+                    // deferred: survivors average nothing this round and
+                    // re-form next round instead
+                    DropPlan::Retry(_) => rs_retries += 1,
                 }
             }
             // round g+1's matchmaking — control plane, overlapped with
@@ -507,7 +582,7 @@ impl Aggregate for MarAggregator {
             let lanes = lane_times
                 .iter()
                 .map(|t| (t.reduce_scatter_s, t.all_gather_s));
-            if drops.iter().all(|d| d.is_none()) {
+            if drops.iter().all(|d| *d == DropPlan::Keep) {
                 ctx.clock.pipelined_two_phase(mm_next, lanes);
             } else {
                 ctx.clock.pipelined_two_phase(0.0, lanes);
@@ -527,7 +602,7 @@ impl Aggregate for MarAggregator {
                 "chunk-owned booking must match the closed form"
             );
         }
-        Ok(AggReport { rounds: d, groups: groups_formed, rs_fallbacks })
+        Ok(AggReport { rounds: d, groups: groups_formed, rs_fallbacks, rs_retries })
     }
 }
 

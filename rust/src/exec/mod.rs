@@ -76,6 +76,37 @@ pub fn thread_stripe(buckets: usize) -> usize {
     })
 }
 
+/// Run `f` with the calling worker's persistent instance of the scratch
+/// type `T` — the per-worker arena primitive behind the allocation-free
+/// hot paths (the native backend's `StepWorkspace`). Each thread owns one
+/// `T` per type, created on first use with `Default` and reused for the
+/// life of the thread, so steady-state calls allocate nothing. The entry
+/// is *taken out* of the thread-local store for the duration of `f`:
+/// re-entrant use of the same scratch type sees a fresh (temporary)
+/// instance instead of a panicking `RefCell` borrow.
+pub fn with_scratch<T, R, F>(f: F) -> R
+where
+    T: Default + 'static,
+    F: FnOnce(&mut T) -> R,
+{
+    use std::any::{Any, TypeId};
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    thread_local! {
+        static SCRATCH: RefCell<HashMap<TypeId, Box<dyn Any>>> =
+            RefCell::new(HashMap::new());
+    }
+    SCRATCH.with(|store| {
+        let mut boxed: Box<dyn Any> = store
+            .borrow_mut()
+            .remove(&TypeId::of::<T>())
+            .unwrap_or_else(|| Box::<T>::default());
+        let out = f(boxed.downcast_mut::<T>().expect("scratch type"));
+        store.borrow_mut().insert(TypeId::of::<T>(), boxed);
+        out
+    })
+}
+
 /// Raw-pointer wrapper so disjoint `&mut` views can cross thread
 /// boundaries. Safety rests on the disjointness validation below.
 struct SendPtr<T>(*mut T);
@@ -365,6 +396,33 @@ mod tests {
         assert!(map_ranges_mut(&mut d, &[4..2], false, |_, _| ()).is_err());
         assert!(map_ranges_mut(&mut d, &[2..4, 0..2], false, |_, _| ()).is_err());
         assert!(map_ranges_mut(&mut d, &[0..2, 2..4], false, |_, _| ()).is_ok());
+    }
+
+    #[test]
+    fn scratch_persists_per_thread_and_is_reentrant() {
+        #[derive(Default)]
+        struct Buf(Vec<u64>);
+        // first use: default-constructed; grows and persists
+        with_scratch(|b: &mut Buf| {
+            assert!(b.0.is_empty());
+            b.0.extend_from_slice(&[1, 2, 3]);
+        });
+        let ptr = with_scratch(|b: &mut Buf| {
+            assert_eq!(b.0, vec![1, 2, 3], "scratch must persist across calls");
+            b.0.as_ptr() as usize
+        });
+        // steady state: same backing allocation, no reallocation
+        with_scratch(|b: &mut Buf| {
+            assert_eq!(b.0.as_ptr() as usize, ptr);
+            // re-entrant use sees a fresh temporary, not a borrow panic
+            with_scratch(|inner: &mut Buf| assert!(inner.0.is_empty()));
+        });
+        // other threads get their own instance
+        std::thread::spawn(|| {
+            with_scratch(|b: &mut Buf| assert!(b.0.is_empty()));
+        })
+        .join()
+        .unwrap();
     }
 
     #[test]

@@ -60,6 +60,11 @@ pub struct RunSummary {
     /// iterations (0 unless `mar.reduce_scatter` + `mar.rs_drop` are on)
     /// — the reliability axis `fig3_churn` plots against `mar.rs_drop`
     pub rs_fallbacks: u64,
+    /// cumulative owner-drop retries (groups that deferred to the next
+    /// round's matchmaking under `mar.rs_retry_budget` instead of
+    /// falling back) — the second reliability column in
+    /// `fig3_rs_reliability.csv`
+    pub rs_retries: u64,
     pub final_accuracy: f64,
     pub final_loss: f64,
 }
@@ -82,6 +87,8 @@ pub struct Trainer<'rt> {
     dp: Option<DpEngine>,
     /// cumulative reduce-scatter owner-drop fallbacks (see `RunSummary`)
     rs_fallbacks: u64,
+    /// cumulative owner-drop retries (see `RunSummary`)
+    rs_retries: u64,
     /// label used for the curve (strategy name by default)
     pub label: String,
 }
@@ -127,7 +134,8 @@ impl<'rt> Trainer<'rt> {
                         .with_exchange(
                             crate::aggregation::GroupExchange::ReduceScatter,
                         )
-                        .with_rs_drop(cfg.rs_drop);
+                        .with_rs_drop(cfg.rs_drop)
+                        .with_rs_retry_budget(cfg.rs_retry_budget);
                 }
                 Agg::Mar(mar)
             }
@@ -176,6 +184,7 @@ impl<'rt> Trainer<'rt> {
             kd,
             dp,
             rs_fallbacks: 0,
+            rs_retries: 0,
             label,
         })
     }
@@ -214,6 +223,7 @@ impl<'rt> Trainer<'rt> {
                 _ => None,
             },
             rs_fallbacks: self.rs_fallbacks,
+            rs_retries: self.rs_retries,
             final_loss: last.0,
             final_accuracy: last.1,
             curve,
@@ -256,17 +266,20 @@ impl<'rt> Trainer<'rt> {
                 |pos, st| -> Result<()> {
                     for idx in &plans[pos] {
                         let (x, y) = train.gather(idx);
-                        let out = rt.train_step(
+                        // in-place step through the copy-on-write
+                        // handles: a θ shared with a group mean or
+                        // snapshot detaches once on the first batch,
+                        // then the whole schedule mutates one buffer —
+                        // no per-step state allocations
+                        rt.train_step_into(
                             model,
-                            &st.theta,
-                            &st.momentum,
+                            st.theta.make_mut_slice(),
+                            st.momentum.make_mut_slice(),
                             &x,
                             &y,
                             eta,
                             mu,
                         )?;
-                        st.theta = out.theta.into();
-                        st.momentum = out.momentum.into();
                     }
                     Ok(())
                 },
@@ -332,6 +345,7 @@ impl<'rt> Trainer<'rt> {
         let report =
             self.agg.as_dyn().aggregate(&mut self.states, &aggers, &mut ctx)?;
         self.rs_fallbacks += report.rs_fallbacks as u64;
+        self.rs_retries += report.rs_retries as u64;
 
         if let Some(dp) = &mut self.dp {
             dp.finalize(&mut self.states, &aggers, &mut dp_rng);

@@ -180,10 +180,14 @@ impl KdEngine {
                 let (gi, si) = lane_meta[lane];
                 let snap = &snapshots[gi];
                 let (x, y) = data.gather(&batch_plans[gi][si]);
-                let s_logits = rt.logits(model, &snap[si], &x)?;
+                let mut s_logits = Vec::with_capacity(model.batch * model.classes);
+                rt.logits_into(model, &snap[si], &x, &mut s_logits)?;
                 // rate candidate teachers by softened KL on this batch;
-                // logits land in a cache and `rated` keeps (kl, cache
-                // index) — no logit vectors are cloned or shuffled
+                // each candidate's logits land in an owned cache entry
+                // (`rated` keeps (kl, cache index) — no logit vectors are
+                // cloned or shuffled); the forward activations behind
+                // every one of these calls live in the per-worker
+                // workspace, not per-call allocations
                 let mut cache: Vec<Vec<f32>> = Vec::with_capacity(snap.len() - 1);
                 let mut rated: Vec<(f64, usize)> =
                     Vec::with_capacity(snap.len() - 1);
@@ -212,14 +216,18 @@ impl KdEngine {
                 for a in &mut zbar {
                     *a *= inv;
                 }
-                // E local distillation epochs (replacing θ wholesale, so
-                // the shared snapshot handles are never perturbed)
+                // E local distillation epochs, stepped in place through
+                // the copy-on-write handles: the first epoch's write
+                // detaches the student from any teacher snapshot that
+                // aliases it (so snapshots are never perturbed), and
+                // every later epoch mutates the now-unique buffer with
+                // zero state allocations
                 let mut losses = Vec::with_capacity(self.cfg.epochs);
                 for _ in 0..self.cfg.epochs {
-                    let out = rt.kd_step(
+                    let loss = rt.kd_step_into(
                         model,
-                        &st.theta,
-                        &st.momentum,
+                        st.theta.make_mut_slice(),
+                        st.momentum.make_mut_slice(),
                         &x,
                         &y,
                         &zbar,
@@ -227,9 +235,7 @@ impl KdEngine {
                         self.eta,
                         self.mu,
                     )?;
-                    st.theta = out.theta.into();
-                    st.momentum = out.momentum.into();
-                    losses.push(out.loss);
+                    losses.push(loss);
                 }
                 Ok(losses)
             };

@@ -63,6 +63,17 @@ impl Theta {
         Arc::make_mut(&mut self.data)
     }
 
+    /// [`Self::make_mut`] as an exclusive slice — the buffer the
+    /// in-place step API (`Runtime::train_step_into` /
+    /// `Runtime::kd_step_into`) writes the fused momentum update
+    /// through. On a unique handle this detaches nothing and allocates
+    /// nothing, so a peer's local-SGD schedule mutates one buffer for
+    /// its whole lifetime; the first write through a handle shared with
+    /// a snapshot or groupmate detaches exactly once.
+    pub fn make_mut_slice(&mut self) -> &mut [f32] {
+        Arc::make_mut(&mut self.data).as_mut_slice()
+    }
+
     /// Do two handles share the same backing allocation? (The zero-copy
     /// assertions: group members share one mean, snapshots alias their
     /// source until the first write.)
@@ -171,6 +182,21 @@ mod tests {
         let before = a.as_slice().as_ptr();
         a.make_mut()[3] = 1.0;
         assert_eq!(a.as_slice().as_ptr(), before, "unique mutation must not move");
+    }
+
+    #[test]
+    fn make_mut_slice_detaches_aliases_once_then_stays_in_place() {
+        let mut student = Theta::new(vec![1.0, 2.0, 3.0]);
+        let snapshot = student.clone();
+        // first in-place write detaches from the snapshot
+        student.make_mut_slice()[0] = 9.0;
+        assert!(!student.shares_storage(&snapshot));
+        assert_eq!(snapshot, vec![1.0, 2.0, 3.0]);
+        // subsequent writes mutate the now-unique buffer without moving
+        let before = student.as_slice().as_ptr();
+        student.make_mut_slice()[1] = 8.0;
+        assert_eq!(student.as_slice().as_ptr(), before);
+        assert_eq!(student, vec![9.0, 8.0, 3.0]);
     }
 
     #[test]

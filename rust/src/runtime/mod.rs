@@ -16,9 +16,16 @@
 //!   `meta.json` exists; `MARFL_BACKEND=native` forces the fallback.
 //!
 //! The facade is `Sync`: the peer-parallel trainer (`fl`) drives
-//! `train_step` from many `exec` pool workers at once. Native compute is
-//! trivially thread-safe; the PJRT executable cache is behind locks and
-//! XLA's client/executables support concurrent execution.
+//! `train_step_into` from many `exec` pool workers at once. Native
+//! compute is thread-safe (its scratch arenas are per-worker
+//! thread-locals); the PJRT executable cache is behind locks and XLA's
+//! client/executables support concurrent execution.
+//!
+//! The hot path is the **in-place step API** (`train_step_into` /
+//! `kd_step_into`): the fused damped-momentum update is written straight
+//! into the caller's `Theta::make_mut` buffers and nothing is allocated
+//! per step. The original `StepOut`-returning signatures remain as thin
+//! compat shims over it (both backends), bit-identical by construction.
 
 #[cfg(feature = "pjrt")]
 pub mod literal;
@@ -42,9 +49,39 @@ const CALL_STRIPES: usize = 8;
 pub struct Runtime {
     pub meta: ArtifactMeta,
     backend: Backend,
+    /// per-model counter keys, formatted once at construction so the
+    /// step hot path books metrics without allocating a `String`
+    keys: HashMap<String, CounterKeys>,
     /// executions per entry point (perf accounting), striped per thread
     /// and merged at read so counting stays off the hot path's locks
     calls: [Mutex<HashMap<String, u64>>; CALL_STRIPES],
+}
+
+/// Precomputed `{model}_{entry}` counter keys (one set per registry
+/// model). The per-step `format!` these replace used to be the only
+/// allocation left on the native step path.
+struct CounterKeys {
+    train_step: String,
+    kd_step: String,
+    logits: String,
+    eval: String,
+    /// `group_mean_{model}_{k}` per supported group size k
+    group_mean: Vec<(usize, String)>,
+}
+
+impl CounterKeys {
+    fn new(model: &str, group_sizes: &[usize]) -> Self {
+        CounterKeys {
+            train_step: format!("{model}_train_step"),
+            kd_step: format!("{model}_kd_step"),
+            logits: format!("{model}_logits"),
+            eval: format!("{model}_eval"),
+            group_mean: group_sizes
+                .iter()
+                .map(|&k| (k, format!("group_mean_{model}_{k}")))
+                .collect(),
+        }
+    }
 }
 
 enum Backend {
@@ -53,11 +90,14 @@ enum Backend {
     Pjrt(pjrt::PjrtBackend),
 }
 
-/// Result of one local training / KD step. The buffers are freshly
-/// owned `Vec`s, so callers move them straight into the copy-on-write
-/// `params::Theta` peer state (`out.theta.into()`) — one Arc allocation,
-/// no buffer copy — which is what keeps a step from ever writing through
-/// storage shared with snapshots or groupmates.
+/// Result of one local training / KD step on the compat path
+/// ([`Runtime::train_step`] / [`Runtime::kd_step`]): freshly owned
+/// `Vec`s a caller can move straight into copy-on-write `params::Theta`
+/// handles. The hot path is the in-place API
+/// ([`Runtime::train_step_into`] / [`Runtime::kd_step_into`]), which
+/// writes the fused update through `Theta::make_mut` buffers and
+/// allocates nothing — copy-on-write is what keeps those writes from
+/// ever landing in storage shared with snapshots or groupmates.
 #[derive(Clone, Debug)]
 pub struct StepOut {
     pub theta: Vec<f32>,
@@ -83,9 +123,15 @@ impl Runtime {
             ArtifactMeta::builtin(artifact_dir)
         };
         let backend = Self::pick_backend(&meta)?;
+        let keys = meta
+            .models
+            .keys()
+            .map(|name| (name.clone(), CounterKeys::new(name, &meta.group_sizes)))
+            .collect();
         Ok(Runtime {
             meta,
             backend,
+            keys,
             calls: std::array::from_fn(|_| Mutex::new(HashMap::new())),
         })
     }
@@ -159,16 +205,62 @@ impl Runtime {
         merged
     }
 
-    fn count(&self, entry: String) {
+    /// Book one execution of `entry`. Allocation-free in the steady
+    /// state: only the first hit per (stripe, entry) stores an owned key.
+    fn count(&self, entry: &str) {
         let stripe = &self.calls[crate::exec::thread_stripe(CALL_STRIPES)];
-        *stripe.lock().expect("calls lock").entry(entry).or_insert(0) += 1;
+        let mut map = stripe.lock().expect("calls lock");
+        match map.get_mut(entry) {
+            Some(n) => *n += 1,
+            None => {
+                map.insert(entry.to_string(), 1);
+            }
+        }
+    }
+
+    /// Count a per-model entry point through the precomputed keys;
+    /// ad-hoc metas outside the registry fall back to formatting.
+    fn count_model(&self, m: &ModelMeta, pick: fn(&CounterKeys) -> &str, suffix: &str) {
+        match self.keys.get(m.name.as_str()) {
+            Some(keys) => self.count(pick(keys)),
+            None => self.count(&format!("{}_{suffix}", m.name)),
+        }
     }
 
     // -----------------------------------------------------------------
     // Typed entry points (flat-parameter ABI)
     // -----------------------------------------------------------------
 
-    /// One local momentum-SGD step over a batch.
+    /// One local momentum-SGD step over a batch, applied **in place**:
+    /// the fused damped-momentum update lands directly in `theta` /
+    /// `momentum` — the buffers a caller obtains from
+    /// `params::Theta::make_mut` — so the native step allocates nothing.
+    /// Returns the batch loss.
+    pub fn train_step_into(
+        &self,
+        m: &ModelMeta,
+        theta: &mut [f32],
+        momentum: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        eta: f32,
+        mu: f32,
+    ) -> Result<f32> {
+        debug_assert_eq!(theta.len(), m.padded_len);
+        debug_assert_eq!(x.len(), m.batch * m.input_elems());
+        debug_assert_eq!(y.len(), m.batch);
+        self.count_model(m, |k| &k.train_step, "train_step");
+        match &self.backend {
+            Backend::Native => {
+                native::train_step_into(m, theta, momentum, x, y, eta, mu)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.train_step_into(m, theta, momentum, x, y, eta, mu),
+        }
+    }
+
+    /// One local momentum-SGD step over a batch — compat shim over
+    /// [`Self::train_step_into`] returning freshly owned buffers.
     pub fn train_step(
         &self,
         m: &ModelMeta,
@@ -179,18 +271,45 @@ impl Runtime {
         eta: f32,
         mu: f32,
     ) -> Result<StepOut> {
-        debug_assert_eq!(theta.len(), m.padded_len);
-        debug_assert_eq!(x.len(), m.batch * m.input_elems());
-        debug_assert_eq!(y.len(), m.batch);
-        self.count(format!("{}_train_step", m.name));
+        let mut theta2 = theta.to_vec();
+        let mut momentum2 = momentum.to_vec();
+        let loss = self.train_step_into(m, &mut theta2, &mut momentum2, x, y, eta, mu)?;
+        Ok(StepOut { theta: theta2, momentum: momentum2, loss })
+    }
+
+    /// One Moshpit-KD student step (Algorithm 2), applied **in place**
+    /// like [`Self::train_step_into`]. Returns the distillation loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn kd_step_into(
+        &self,
+        m: &ModelMeta,
+        theta: &mut [f32],
+        momentum: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        zbar: &[f32],
+        lambda: f32,
+        eta: f32,
+        mu: f32,
+    ) -> Result<f32> {
+        debug_assert_eq!(zbar.len(), m.batch * m.classes);
+        self.count_model(m, |k| &k.kd_step, "kd_step");
         match &self.backend {
-            Backend::Native => native::train_step(m, theta, momentum, x, y, eta, mu),
+            Backend::Native => {
+                // τ is baked into the lowered artifact; the native path
+                // takes it from the registry
+                let tau = self.meta.kd_tau as f32;
+                native::kd_step_into(m, theta, momentum, x, y, zbar, lambda, tau, eta, mu)
+            }
             #[cfg(feature = "pjrt")]
-            Backend::Pjrt(b) => b.train_step(m, theta, momentum, x, y, eta, mu),
+            Backend::Pjrt(b) => {
+                b.kd_step_into(m, theta, momentum, x, y, zbar, lambda, eta, mu)
+            }
         }
     }
 
-    /// One Moshpit-KD student step (Algorithm 2).
+    /// One Moshpit-KD student step — compat shim over
+    /// [`Self::kd_step_into`] returning freshly owned buffers.
     #[allow(clippy::too_many_arguments)]
     pub fn kd_step(
         &self,
@@ -204,30 +323,42 @@ impl Runtime {
         eta: f32,
         mu: f32,
     ) -> Result<StepOut> {
-        debug_assert_eq!(zbar.len(), m.batch * m.classes);
-        self.count(format!("{}_kd_step", m.name));
+        let mut theta2 = theta.to_vec();
+        let mut momentum2 = momentum.to_vec();
+        let loss = self
+            .kd_step_into(m, &mut theta2, &mut momentum2, x, y, zbar, lambda, eta, mu)?;
+        Ok(StepOut { theta: theta2, momentum: momentum2, loss })
+    }
+
+    /// Teacher forward pass: logits for one training batch, written into
+    /// `out` (cleared first). On the native backend the forward caches
+    /// live in the per-worker workspace, so the call is allocation-free
+    /// once `out` has capacity.
+    pub fn logits_into(
+        &self,
+        m: &ModelMeta,
+        theta: &[f32],
+        x: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.count_model(m, |k| &k.logits, "logits");
         match &self.backend {
-            Backend::Native => {
-                // τ is baked into the lowered artifact; the native path
-                // takes it from the registry
-                let tau = self.meta.kd_tau as f32;
-                native::kd_step(m, theta, momentum, x, y, zbar, lambda, tau, eta, mu)
-            }
+            Backend::Native => native::logits_into(m, theta, x, out),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(b) => {
-                b.kd_step(m, theta, momentum, x, y, zbar, lambda, eta, mu)
+                let z = b.logits(m, theta, x)?;
+                out.clear();
+                out.extend_from_slice(&z);
+                Ok(())
             }
         }
     }
 
     /// Teacher forward pass: logits for one training batch.
     pub fn logits(&self, m: &ModelMeta, theta: &[f32], x: &[f32]) -> Result<Vec<f32>> {
-        self.count(format!("{}_logits", m.name));
-        match &self.backend {
-            Backend::Native => native::logits(m, theta, x),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(b) => b.logits(m, theta, x),
-        }
+        let mut out = Vec::new();
+        self.logits_into(m, theta, x, &mut out)?;
+        Ok(out)
     }
 
     /// Evaluate over a full test set (x row-major, len multiple of the
@@ -251,7 +382,7 @@ impl Runtime {
         for c in 0..n / m.eval_chunk {
             let xs = &x[c * m.eval_chunk * elems..(c + 1) * m.eval_chunk * elems];
             let ys = &y[c * m.eval_chunk..(c + 1) * m.eval_chunk];
-            self.count(format!("{}_eval", m.name));
+            self.count_model(m, |k| &k.eval, "eval");
             let (ls, cr) = match &self.backend {
                 Backend::Native => native::eval_chunk(m, theta, xs, ys)?,
                 #[cfg(feature = "pjrt")]
@@ -272,7 +403,14 @@ impl Runtime {
             self.meta.group_sizes
         );
         debug_assert_eq!(stack.len(), k * m.padded_len);
-        self.count(format!("group_mean_{}_{k}", m.name));
+        match self
+            .keys
+            .get(m.name.as_str())
+            .and_then(|ks| ks.group_mean.iter().find(|(gk, _)| *gk == k))
+        {
+            Some((_, key)) => self.count(key),
+            None => self.count(&format!("group_mean_{}_{k}", m.name)),
+        }
         match &self.backend {
             Backend::Native => native::group_mean(m, stack, k),
             #[cfg(feature = "pjrt")]
@@ -312,5 +450,24 @@ mod tests {
     fn runtime_is_sync() {
         fn assert_sync<T: Sync + Send>() {}
         assert_sync::<Runtime>();
+    }
+
+    #[test]
+    fn counter_keys_are_precomputed_for_every_registry_model() {
+        let rt = Runtime::new(Path::new("/nonexistent_marfl_artifacts")).unwrap();
+        for name in rt.meta.models.keys() {
+            let keys = &rt.keys[name];
+            assert_eq!(keys.train_step, format!("{name}_train_step"));
+            assert_eq!(keys.kd_step, format!("{name}_kd_step"));
+            assert_eq!(keys.logits, format!("{name}_logits"));
+            assert_eq!(keys.eval, format!("{name}_eval"));
+            assert_eq!(keys.group_mean.len(), rt.meta.group_sizes.len());
+        }
+        // counting through the precomputed keys lands on the same names
+        // the seed's per-call format! produced
+        let m = rt.meta.model("cnn").unwrap().clone();
+        rt.count_model(&m, |k| &k.train_step, "train_step");
+        rt.count_model(&m, |k| &k.train_step, "train_step");
+        assert_eq!(rt.call_counts()["cnn_train_step"], 2);
     }
 }

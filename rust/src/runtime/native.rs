@@ -18,8 +18,22 @@
 //! rule `m' = μ·m + (1−μ)·g`, `θ' = θ − η·m'` over the padded flat vector
 //! (padding gradients are zero, so the tail invariant survives).
 //!
-//! Everything here is stateless and `Sync`; the peer-parallel trainer
-//! calls these functions from many `exec` workers at once.
+//! Since the allocation-free kernel rework the hot path is **in place and
+//! workspace-backed**: [`train_step_into`] / [`kd_step_into`] apply the
+//! fused damped-momentum update directly into caller-owned θ/momentum
+//! buffers (the slices `params::Theta::make_mut` hands out), and every
+//! forward cache, logit gradient, flat gradient and softmax scratch lives
+//! in a per-worker [`StepWorkspace`] arena (`exec::with_scratch`) that is
+//! sized once and reused — the steady state allocates nothing. The dense
+//! and conv kernels are register-blocked (BLK-wide output tiles held in
+//! registers across the reduction) while keeping every output element's
+//! accumulation order identical to the seed scalar kernels, so results
+//! are **bit-identical** to the original path — preserved verbatim as
+//! [`reference`] and pinned by `tests/kernel_equivalence.rs`.
+//!
+//! Everything here is stateless and `Sync` (the workspace is per-thread);
+//! the peer-parallel trainer calls these functions from many `exec`
+//! workers at once.
 
 use anyhow::{bail, ensure, Result};
 
@@ -96,25 +110,56 @@ fn batch_of(m: &ModelMeta, x: &[f32], y: &[i32]) -> Result<usize> {
 }
 
 // ---------------------------------------------------------------------
-// Dense / conv primitives (f32, matching the lowered kernels)
+// Dense / conv primitives — register-blocked (f32, matching the lowered
+// kernels bit for bit)
 // ---------------------------------------------------------------------
+//
+// Every kernel below tiles its output dimension BLK-wide so the
+// accumulator tile lives in registers across the whole reduction instead
+// of a load/store of the output per reduction step. The reduction order
+// *per output element* is exactly the scalar seed kernel's (preserved
+// verbatim in [`reference`]), so f32 rounding is identical and results
+// are bit-identical — the property `tests/kernel_equivalence.rs` pins.
 
-/// out[b, o] = bias[o] + Σ_i x[b, i] · w[i, o]
+/// Register-block width (8 f32 = one 256-bit SIMD vector).
+const BLK: usize = 8;
+
+/// out[b, o] = bias[o] + Σ_i x[b, i] · w[i, o]. The o dimension is tiled
+/// BLK-wide; each tile accumulates the full i reduction in registers
+/// (per-element i order unchanged from the scalar kernel).
 fn affine(x: &[f32], w: &[f32], bias: &[f32], b: usize, din: usize, dout: usize, out: &mut [f32]) {
     for bi in 0..b {
         let xrow = &x[bi * din..(bi + 1) * din];
         let orow = &mut out[bi * dout..(bi + 1) * dout];
-        orow.copy_from_slice(bias);
-        for (i, &xv) in xrow.iter().enumerate() {
-            let wrow = &w[i * dout..(i + 1) * dout];
-            for (ov, &wv) in orow.iter_mut().zip(wrow) {
-                *ov += xv * wv;
+        let mut o = 0usize;
+        while o + BLK <= dout {
+            let mut acc = [0.0f32; BLK];
+            acc.copy_from_slice(&bias[o..o + BLK]);
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wrow = &w[i * dout + o..i * dout + o + BLK];
+                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                    *a += xv * wv;
+                }
             }
+            orow[o..o + BLK].copy_from_slice(&acc);
+            o += BLK;
+        }
+        for oj in o..dout {
+            let mut a = bias[oj];
+            for (i, &xv) in xrow.iter().enumerate() {
+                a += xv * w[i * dout + oj];
+            }
+            orow[oj] = a;
         }
     }
 }
 
-/// Accumulate dW/db (and optionally dx) for an affine layer given dout.
+/// Backward of [`affine`]: dW/db stream the batch through BLK-wide
+/// register tiles (one gradient-buffer load/store per tile instead of
+/// one per example); dx keeps its dot-product form with a 4-wide din
+/// tile sharing each upstream-gradient load. Per-element accumulation
+/// order (bi ascending for dW/db, o ascending for dx) matches the
+/// scalar seed kernel exactly.
 #[allow(clippy::too_many_arguments)]
 fn affine_backward(
     x: &[f32],
@@ -125,29 +170,77 @@ fn affine_backward(
     dout: usize,
     dw: &mut [f32],
     db: &mut [f32],
-    mut dx: Option<&mut [f32]>,
+    dx: Option<&mut [f32]>,
 ) {
-    for bi in 0..b {
-        let xrow = &x[bi * din..(bi + 1) * din];
-        let grow = &dout_grad[bi * dout..(bi + 1) * dout];
-        for (dbv, &g) in db.iter_mut().zip(grow) {
-            *dbv += g;
-        }
-        for (i, &xv) in xrow.iter().enumerate() {
-            let dwrow = &mut dw[i * dout..(i + 1) * dout];
-            for (dwv, &g) in dwrow.iter_mut().zip(grow) {
-                *dwv += xv * g;
+    // db[o] += Σ_bi g[bi, o]
+    let mut o = 0usize;
+    while o + BLK <= dout {
+        let mut acc = [0.0f32; BLK];
+        acc.copy_from_slice(&db[o..o + BLK]);
+        for bi in 0..b {
+            let grow = &dout_grad[bi * dout + o..bi * dout + o + BLK];
+            for (a, &g) in acc.iter_mut().zip(grow) {
+                *a += g;
             }
         }
-        if let Some(dx) = dx.as_deref_mut() {
+        db[o..o + BLK].copy_from_slice(&acc);
+        o += BLK;
+    }
+    for oj in o..dout {
+        let mut a = db[oj];
+        for bi in 0..b {
+            a += dout_grad[bi * dout + oj];
+        }
+        db[oj] = a;
+    }
+    // dW[i, o] += Σ_bi x[bi, i] · g[bi, o]
+    for i in 0..din {
+        let dwrow = &mut dw[i * dout..(i + 1) * dout];
+        let mut o = 0usize;
+        while o + BLK <= dout {
+            let mut acc = [0.0f32; BLK];
+            acc.copy_from_slice(&dwrow[o..o + BLK]);
+            for bi in 0..b {
+                let xv = x[bi * din + i];
+                let grow = &dout_grad[bi * dout + o..bi * dout + o + BLK];
+                for (a, &g) in acc.iter_mut().zip(grow) {
+                    *a += xv * g;
+                }
+            }
+            dwrow[o..o + BLK].copy_from_slice(&acc);
+            o += BLK;
+        }
+        for oj in o..dout {
+            let mut a = dwrow[oj];
+            for bi in 0..b {
+                a += x[bi * din + i] * dout_grad[bi * dout + oj];
+            }
+            dwrow[oj] = a;
+        }
+    }
+    // dx[bi, i] = Σ_o w[i, o] · g[bi, o]
+    if let Some(dx) = dx {
+        for bi in 0..b {
+            let grow = &dout_grad[bi * dout..(bi + 1) * dout];
             let dxrow = &mut dx[bi * din..(bi + 1) * din];
-            for (i, dxv) in dxrow.iter_mut().enumerate() {
-                let wrow = &w[i * dout..(i + 1) * dout];
+            let mut i = 0usize;
+            while i + 4 <= din {
+                let mut s = [0.0f32; 4];
+                for (oj, &g) in grow.iter().enumerate() {
+                    for (j, sj) in s.iter_mut().enumerate() {
+                        *sj += w[(i + j) * dout + oj] * g;
+                    }
+                }
+                dxrow[i..i + 4].copy_from_slice(&s);
+                i += 4;
+            }
+            for ij in i..din {
+                let wrow = &w[ij * dout..(ij + 1) * dout];
                 let mut s = 0.0f32;
                 for (&wv, &g) in wrow.iter().zip(grow) {
                     s += wv * g;
                 }
-                *dxv = s;
+                dxrow[ij] = s;
             }
         }
     }
@@ -170,7 +263,10 @@ fn relu_mask(grad: &mut [f32], act: &[f32]) {
     }
 }
 
-/// 3×3 SAME conv, NHWC, stride 1. `w` is `[3,3,cin,cout]` row-major.
+/// 3×3 SAME conv, NHWC, stride 1. `w` is `[3,3,cin,cout]` row-major. The
+/// cout dimension is tiled BLK-wide; the tile accumulates the whole
+/// ky/kx/cin reduction (same boundary skips, same per-element order as
+/// the scalar kernel) in registers.
 #[allow(clippy::too_many_arguments)]
 fn conv3x3_same(
     inp: &[f32],
@@ -188,35 +284,69 @@ fn conv3x3_same(
         for y in 0..hw {
             for x in 0..hw {
                 let ooff = obase + (y * hw + x) * cout;
-                let orow = &mut out[ooff..ooff + cout];
-                orow.copy_from_slice(bias);
-                for ky in 0..3usize {
-                    let sy = y as isize + ky as isize - 1;
-                    if sy < 0 || sy >= hw as isize {
-                        continue;
-                    }
-                    for kx in 0..3usize {
-                        let sx = x as isize + kx as isize - 1;
-                        if sx < 0 || sx >= hw as isize {
+                let mut co = 0usize;
+                while co + BLK <= cout {
+                    let mut acc = [0.0f32; BLK];
+                    acc.copy_from_slice(&bias[co..co + BLK]);
+                    for ky in 0..3usize {
+                        let sy = y as isize + ky as isize - 1;
+                        if sy < 0 || sy >= hw as isize {
                             continue;
                         }
-                        let ioff = ibase + (sy as usize * hw + sx as usize) * cin;
-                        for i in 0..cin {
-                            let iv = inp[ioff + i];
-                            let woff = ((ky * 3 + kx) * cin + i) * cout;
-                            let wrow = &w[woff..woff + cout];
-                            for (ov, &wv) in orow.iter_mut().zip(wrow) {
-                                *ov += iv * wv;
+                        for kx in 0..3usize {
+                            let sx = x as isize + kx as isize - 1;
+                            if sx < 0 || sx >= hw as isize {
+                                continue;
+                            }
+                            let ioff =
+                                ibase + (sy as usize * hw + sx as usize) * cin;
+                            for i in 0..cin {
+                                let iv = inp[ioff + i];
+                                let woff = ((ky * 3 + kx) * cin + i) * cout + co;
+                                let wrow = &w[woff..woff + BLK];
+                                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                    *a += iv * wv;
+                                }
                             }
                         }
                     }
+                    out[ooff + co..ooff + co + BLK].copy_from_slice(&acc);
+                    co += BLK;
+                }
+                while co < cout {
+                    let mut a = bias[co];
+                    for ky in 0..3usize {
+                        let sy = y as isize + ky as isize - 1;
+                        if sy < 0 || sy >= hw as isize {
+                            continue;
+                        }
+                        for kx in 0..3usize {
+                            let sx = x as isize + kx as isize - 1;
+                            if sx < 0 || sx >= hw as isize {
+                                continue;
+                            }
+                            let ioff =
+                                ibase + (sy as usize * hw + sx as usize) * cin;
+                            for i in 0..cin {
+                                a += inp[ioff + i]
+                                    * w[((ky * 3 + kx) * cin + i) * cout + co];
+                            }
+                        }
+                    }
+                    out[ooff + co] = a;
+                    co += 1;
                 }
             }
         }
     }
 }
 
-/// Backward of [`conv3x3_same`]: accumulate dW/db and optionally dInp.
+/// Backward of [`conv3x3_same`], split into register-tiled passes: db
+/// and dW stream every (bi, y, x) position through a BLK-wide register
+/// tile (per-element order stays (bi, y, x) ascending under the forward
+/// kernel's boundary skips); dInp keeps the scalar traversal with a
+/// 4-wide cin tile sharing each gradient-row load. Bit-identical to the
+/// scalar seed kernel.
 #[allow(clippy::too_many_arguments)]
 fn conv3x3_same_backward(
     inp: &[f32],
@@ -228,46 +358,139 @@ fn conv3x3_same_backward(
     dout: &[f32],
     dw: &mut [f32],
     db: &mut [f32],
-    mut dinp: Option<&mut [f32]>,
+    dinp: Option<&mut [f32]>,
 ) {
-    for bi in 0..b {
-        let ibase = bi * hw * hw * cin;
-        let obase = bi * hw * hw * cout;
-        for y in 0..hw {
-            for x in 0..hw {
-                let goff = obase + (y * hw + x) * cout;
-                let grow = &dout[goff..goff + cout];
-                for (dbv, &g) in db.iter_mut().zip(grow) {
-                    *dbv += g;
-                }
-                for ky in 0..3usize {
-                    let sy = y as isize + ky as isize - 1;
-                    if sy < 0 || sy >= hw as isize {
-                        continue;
-                    }
-                    for kx in 0..3usize {
-                        let sx = x as isize + kx as isize - 1;
-                        if sx < 0 || sx >= hw as isize {
-                            continue;
-                        }
-                        let ioff = ibase + (sy as usize * hw + sx as usize) * cin;
-                        for i in 0..cin {
-                            let iv = inp[ioff + i];
-                            let woff = ((ky * 3 + kx) * cin + i) * cout;
-                            let dwrow = &mut dw[woff..woff + cout];
-                            for (dwv, &g) in dwrow.iter_mut().zip(grow) {
-                                *dwv += iv * g;
+    // db[c] += Σ_{bi,y,x} g[bi, y, x, c] — all cells, no boundary skips
+    let cells = b * hw * hw;
+    let mut co = 0usize;
+    while co + BLK <= cout {
+        let mut acc = [0.0f32; BLK];
+        acc.copy_from_slice(&db[co..co + BLK]);
+        for cell in 0..cells {
+            let grow = &dout[cell * cout + co..cell * cout + co + BLK];
+            for (a, &g) in acc.iter_mut().zip(grow) {
+                *a += g;
+            }
+        }
+        db[co..co + BLK].copy_from_slice(&acc);
+        co += BLK;
+    }
+    while co < cout {
+        let mut a = db[co];
+        for cell in 0..cells {
+            a += dout[cell * cout + co];
+        }
+        db[co] = a;
+        co += 1;
+    }
+    // dW[ky, kx, i, c] += Σ over valid (bi, y, x) of inp · g
+    for ky in 0..3usize {
+        for kx in 0..3usize {
+            for i in 0..cin {
+                let wbase = ((ky * 3 + kx) * cin + i) * cout;
+                let mut co = 0usize;
+                while co + BLK <= cout {
+                    let mut acc = [0.0f32; BLK];
+                    acc.copy_from_slice(&dw[wbase + co..wbase + co + BLK]);
+                    for bi in 0..b {
+                        let ibase = bi * hw * hw * cin;
+                        let obase = bi * hw * hw * cout;
+                        for y in 0..hw {
+                            let sy = y as isize + ky as isize - 1;
+                            if sy < 0 || sy >= hw as isize {
+                                continue;
+                            }
+                            for x in 0..hw {
+                                let sx = x as isize + kx as isize - 1;
+                                if sx < 0 || sx >= hw as isize {
+                                    continue;
+                                }
+                                let iv = inp[ibase
+                                    + (sy as usize * hw + sx as usize) * cin
+                                    + i];
+                                let goff = obase + (y * hw + x) * cout + co;
+                                let grow = &dout[goff..goff + BLK];
+                                for (a, &g) in acc.iter_mut().zip(grow) {
+                                    *a += iv * g;
+                                }
                             }
                         }
-                        if let Some(dinp) = dinp.as_deref_mut() {
-                            for i in 0..cin {
-                                let woff = ((ky * 3 + kx) * cin + i) * cout;
-                                let wrow = &w[woff..woff + cout];
+                    }
+                    dw[wbase + co..wbase + co + BLK].copy_from_slice(&acc);
+                    co += BLK;
+                }
+                while co < cout {
+                    let mut a = dw[wbase + co];
+                    for bi in 0..b {
+                        let ibase = bi * hw * hw * cin;
+                        let obase = bi * hw * hw * cout;
+                        for y in 0..hw {
+                            let sy = y as isize + ky as isize - 1;
+                            if sy < 0 || sy >= hw as isize {
+                                continue;
+                            }
+                            for x in 0..hw {
+                                let sx = x as isize + kx as isize - 1;
+                                if sx < 0 || sx >= hw as isize {
+                                    continue;
+                                }
+                                a += inp[ibase
+                                    + (sy as usize * hw + sx as usize) * cin
+                                    + i]
+                                    * dout[obase + (y * hw + x) * cout + co];
+                            }
+                        }
+                    }
+                    dw[wbase + co] = a;
+                    co += 1;
+                }
+            }
+        }
+    }
+    // dInp: scalar (y, x, ky, kx) traversal, cin tiled 4-wide
+    if let Some(dinp) = dinp {
+        for bi in 0..b {
+            let ibase = bi * hw * hw * cin;
+            let obase = bi * hw * hw * cout;
+            for y in 0..hw {
+                for x in 0..hw {
+                    let goff = obase + (y * hw + x) * cout;
+                    let grow = &dout[goff..goff + cout];
+                    for ky in 0..3usize {
+                        let sy = y as isize + ky as isize - 1;
+                        if sy < 0 || sy >= hw as isize {
+                            continue;
+                        }
+                        for kx in 0..3usize {
+                            let sx = x as isize + kx as isize - 1;
+                            if sx < 0 || sx >= hw as isize {
+                                continue;
+                            }
+                            let ioff =
+                                ibase + (sy as usize * hw + sx as usize) * cin;
+                            let kbase = (ky * 3 + kx) * cin;
+                            let mut i = 0usize;
+                            while i + 4 <= cin {
+                                let mut s = [0.0f32; 4];
+                                for (oj, &g) in grow.iter().enumerate() {
+                                    for (j, sj) in s.iter_mut().enumerate() {
+                                        *sj += w[(kbase + i + j) * cout + oj] * g;
+                                    }
+                                }
+                                for (j, &sj) in s.iter().enumerate() {
+                                    dinp[ioff + i + j] += sj;
+                                }
+                                i += 4;
+                            }
+                            while i < cin {
+                                let wrow =
+                                    &w[(kbase + i) * cout..(kbase + i + 1) * cout];
                                 let mut s = 0.0f32;
                                 for (&wv, &g) in wrow.iter().zip(grow) {
                                     s += wv * g;
                                 }
                                 dinp[ioff + i] += s;
+                                i += 1;
                             }
                         }
                     }
@@ -313,146 +536,13 @@ fn maxpool2_backward(dout: &[f32], arg: &[u32], dinp: &mut [f32]) {
 }
 
 // ---------------------------------------------------------------------
-// Forward caches
+// Losses (workspace-buffer variants)
 // ---------------------------------------------------------------------
 
-struct HeadCache {
-    /// post-ReLU hidden activations [b, 128]
-    h: Vec<f32>,
-    /// logits [b, 20]
-    z: Vec<f32>,
-}
-
-fn head_forward(theta: &[f32], x: &[f32], b: usize) -> HeadCache {
-    let fc1_b = sl(theta, H_FC1_B, H_HID);
-    let fc1_w = sl(theta, H_FC1_W, H_IN * H_HID);
-    let fc2_b = sl(theta, H_FC2_B, H_CLS);
-    let fc2_w = sl(theta, H_FC2_W, H_HID * H_CLS);
-    let mut h = vec![0.0f32; b * H_HID];
-    affine(x, fc1_w, fc1_b, b, H_IN, H_HID, &mut h);
-    relu_inplace(&mut h);
-    let mut z = vec![0.0f32; b * H_CLS];
-    affine(&h, fc2_w, fc2_b, b, H_HID, H_CLS, &mut z);
-    HeadCache { h, z }
-}
-
-fn head_backward(theta: &[f32], x: &[f32], cache: &HeadCache, dz: &[f32], b: usize, g: &mut [f32]) {
-    let fc2_w = sl(theta, H_FC2_W, H_HID * H_CLS);
-    // decompose the flat gradient into its non-overlapping layer slices
-    let (gfc1b, rest) = g.split_at_mut(H_HID);
-    let (gfc1w, rest) = rest.split_at_mut(H_IN * H_HID);
-    let (gfc2b, rest) = rest.split_at_mut(H_CLS);
-    let (gfc2w, _pad) = rest.split_at_mut(H_HID * H_CLS);
-
-    let mut dh = vec![0.0f32; b * H_HID];
-    affine_backward(&cache.h, fc2_w, dz, b, H_HID, H_CLS, gfc2w, gfc2b, Some(&mut dh));
-    relu_mask(&mut dh, &cache.h);
-    affine_backward(x, &[], &dh, b, H_IN, H_HID, gfc1w, gfc1b, None);
-}
-
-struct CnnCache {
-    /// post-ReLU conv1 activations [b,16,16,8]
-    a1: Vec<f32>,
-    /// pooled [b,8,8,8]
-    p1: Vec<f32>,
-    arg1: Vec<u32>,
-    /// post-ReLU conv2 activations [b,8,8,16]
-    a2: Vec<f32>,
-    /// pooled = flat fc input [b,4,4,16] == [b,256]
-    p2: Vec<f32>,
-    arg2: Vec<u32>,
-    /// post-ReLU fc1 activations [b,64]
-    h: Vec<f32>,
-    /// logits [b,10]
-    z: Vec<f32>,
-}
-
-fn cnn_forward(theta: &[f32], x: &[f32], b: usize) -> CnnCache {
-    let c1b = sl(theta, C_C1B, C1);
-    let c1w = sl(theta, C_C1W, 3 * 3 * C1);
-    let c2b = sl(theta, C_C2B, C2);
-    let c2w = sl(theta, C_C2W, 3 * 3 * C1 * C2);
-    let f1b = sl(theta, C_F1B, FC_HID);
-    let f1w = sl(theta, C_F1W, FC_IN * FC_HID);
-    let f2b = sl(theta, C_F2B, C_CLS);
-    let f2w = sl(theta, C_F2W, FC_HID * C_CLS);
-
-    let mut a1 = vec![0.0f32; b * IMG * IMG * C1];
-    conv3x3_same(x, b, IMG, 1, c1w, c1b, C1, &mut a1);
-    relu_inplace(&mut a1);
-    let mut p1 = vec![0.0f32; b * 8 * 8 * C1];
-    let mut arg1 = vec![0u32; b * 8 * 8 * C1];
-    maxpool2(&a1, b, IMG, C1, &mut p1, &mut arg1);
-
-    let mut a2 = vec![0.0f32; b * 8 * 8 * C2];
-    conv3x3_same(&p1, b, 8, C1, c2w, c2b, C2, &mut a2);
-    relu_inplace(&mut a2);
-    let mut p2 = vec![0.0f32; b * 4 * 4 * C2];
-    let mut arg2 = vec![0u32; b * 4 * 4 * C2];
-    maxpool2(&a2, b, 8, C2, &mut p2, &mut arg2);
-
-    let mut h = vec![0.0f32; b * FC_HID];
-    affine(&p2, f1w, f1b, b, FC_IN, FC_HID, &mut h);
-    relu_inplace(&mut h);
-    let mut z = vec![0.0f32; b * C_CLS];
-    affine(&h, f2w, f2b, b, FC_HID, C_CLS, &mut z);
-    CnnCache { a1, p1, arg1, a2, p2, arg2, h, z }
-}
-
-fn cnn_backward(theta: &[f32], x: &[f32], cache: &CnnCache, dz: &[f32], b: usize, g: &mut [f32]) {
-    let c2w = sl(theta, C_C2W, 3 * 3 * C1 * C2);
-    let f1w = sl(theta, C_F1W, FC_IN * FC_HID);
-    let f2w = sl(theta, C_F2W, FC_HID * C_CLS);
-    // decompose the flat gradient into its non-overlapping layer slices
-    let (gc1b, rest) = g.split_at_mut(C1);
-    let (gc1w, rest) = rest.split_at_mut(3 * 3 * C1);
-    let (gc2b, rest) = rest.split_at_mut(C2);
-    let (gc2w, rest) = rest.split_at_mut(3 * 3 * C1 * C2);
-    let (gf1b, rest) = rest.split_at_mut(FC_HID);
-    let (gf1w, rest) = rest.split_at_mut(FC_IN * FC_HID);
-    let (gf2b, rest) = rest.split_at_mut(C_CLS);
-    let (gf2w, _pad) = rest.split_at_mut(FC_HID * C_CLS);
-
-    let mut dh = vec![0.0f32; b * FC_HID];
-    let mut dp2 = vec![0.0f32; b * FC_IN];
-    let mut da2 = vec![0.0f32; b * 8 * 8 * C2];
-    let mut dp1 = vec![0.0f32; b * 8 * 8 * C1];
-    let mut da1 = vec![0.0f32; b * IMG * IMG * C1];
-
-    // fc head
-    affine_backward(&cache.h, f2w, dz, b, FC_HID, C_CLS, gf2w, gf2b, Some(&mut dh));
-    relu_mask(&mut dh, &cache.h);
-    affine_backward(&cache.p2, f1w, &dh, b, FC_IN, FC_HID, gf1w, gf1b, Some(&mut dp2));
-
-    // conv block 2
-    maxpool2_backward(&dp2, &cache.arg2, &mut da2);
-    relu_mask(&mut da2, &cache.a2);
-    conv3x3_same_backward(
-        &cache.p1,
-        b,
-        8,
-        C1,
-        c2w,
-        C2,
-        &da2,
-        gc2w,
-        gc2b,
-        Some(&mut dp1),
-    );
-
-    // conv block 1
-    maxpool2_backward(&dp1, &cache.arg1, &mut da1);
-    relu_mask(&mut da1, &cache.a1);
-    conv3x3_same_backward(x, b, IMG, 1, &[], C1, &da1, gc1w, gc1b, None);
-}
-
-// ---------------------------------------------------------------------
-// Losses
-// ---------------------------------------------------------------------
-
-/// Mean softmax cross-entropy and its logit gradient `(p − onehot)/B`.
-fn ce_loss_grad(z: &[f32], y: &[i32], rows: usize, classes: usize) -> (f32, Vec<f32>) {
-    let mut dz = vec![0.0f32; rows * classes];
+/// Mean softmax cross-entropy; writes the logit gradient `(p − onehot)/B`
+/// into `dz` (fully overwritten) and returns the loss.
+fn ce_loss_grad_into(z: &[f32], y: &[i32], rows: usize, classes: usize, dz: &mut [f32]) -> f32 {
+    debug_assert_eq!(dz.len(), rows * classes);
     let invb = 1.0 / rows as f32;
     let mut loss = 0.0f64;
     for r in 0..rows {
@@ -472,7 +562,7 @@ fn ce_loss_grad(z: &[f32], y: &[i32], rows: usize, classes: usize) -> (f32, Vec<
         }
         dr[yi] -= invb;
     }
-    ((loss / rows as f64) as f32, dz)
+    (loss / rows as f64) as f32
 }
 
 /// Softened softmax probabilities of one logit row at temperature τ.
@@ -489,11 +579,12 @@ fn softmax_tau(zr: &[f32], tau: f32, out: &mut [f32]) {
     }
 }
 
-/// KD loss `L = (1−λ)·CE + λ·τ²·KL(p_t ‖ p_s)` (Hinton rescaling) and its
-/// logit gradient `(1−λ)·dCE + (λ·τ/B)·(p_s − p_t)`. With λ = 0 this is
-/// exactly [`ce_loss_grad`].
+/// KD loss `L = (1−λ)·CE + λ·τ²·KL(p_t ‖ p_s)` (Hinton rescaling); writes
+/// the logit gradient `(1−λ)·dCE + (λ·τ/B)·(p_s − p_t)` into `dz` and
+/// uses the caller's `ps`/`pt` softmax scratch (length `classes` each).
+/// With λ = 0 this is exactly [`ce_loss_grad_into`].
 #[allow(clippy::too_many_arguments)]
-fn kd_loss_grad(
+fn kd_loss_grad_into(
     z: &[f32],
     y: &[i32],
     zbar: &[f32],
@@ -501,20 +592,21 @@ fn kd_loss_grad(
     tau: f32,
     rows: usize,
     classes: usize,
-) -> (f32, Vec<f32>) {
-    let (ce, mut dz) = ce_loss_grad(z, y, rows, classes);
+    dz: &mut [f32],
+    ps: &mut [f32],
+    pt: &mut [f32],
+) -> f32 {
+    let ce = ce_loss_grad_into(z, y, rows, classes, dz);
     for d in dz.iter_mut() {
         *d *= 1.0 - lam;
     }
-    let mut ps = vec![0.0f32; classes];
-    let mut pt = vec![0.0f32; classes];
     let mut kl_mean = 0.0f64;
     let scale = lam * tau / rows as f32;
     for r in 0..rows {
         let zr = &z[r * classes..(r + 1) * classes];
         let tr = &zbar[r * classes..(r + 1) * classes];
-        softmax_tau(zr, tau, &mut ps);
-        softmax_tau(tr, tau, &mut pt);
+        softmax_tau(zr, tau, ps);
+        softmax_tau(tr, tau, pt);
         let mut kl = 0.0f64;
         for c in 0..classes {
             if pt[c] > 0.0 {
@@ -528,60 +620,312 @@ fn kd_loss_grad(
         }
     }
     kl_mean /= rows as f64;
-    let loss = (1.0 - lam) * ce + lam * tau * tau * (kl_mean as f32);
-    (loss, dz)
+    (1.0 - lam) * ce + lam * tau * tau * (kl_mean as f32)
+}
+
+// ---------------------------------------------------------------------
+// Per-worker scratch arena
+// ---------------------------------------------------------------------
+
+/// Every buffer one step / forward pass needs, owned per worker thread
+/// (`exec::with_scratch`) and reused across calls: the seed path
+/// heap-allocated each of these afresh per `train_step`/`kd_step`/
+/// `logits`/`eval_chunk` call. Buffers are grown once per (model, batch)
+/// shape; accumulation targets are re-zeroed (a memset, not an
+/// allocation) before each use, buffers the kernels fully overwrite are
+/// only resized.
+#[derive(Default)]
+pub struct StepWorkspace {
+    /// padded flat gradient (zeroed per step; backward accumulates)
+    g: Vec<f32>,
+    /// loss gradient wrt logits [b, classes]
+    dz: Vec<f32>,
+    /// post-ReLU hidden activations (head fc1 / cnn fc1)
+    h: Vec<f32>,
+    /// logits [b, classes]
+    z: Vec<f32>,
+    /// cnn: post-ReLU conv1 activations [b,16,16,8]
+    a1: Vec<f32>,
+    /// cnn: pooled [b,8,8,8]
+    p1: Vec<f32>,
+    arg1: Vec<u32>,
+    /// cnn: post-ReLU conv2 activations [b,8,8,16]
+    a2: Vec<f32>,
+    /// cnn: pooled = flat fc input [b,4,4,16] == [b,256]
+    p2: Vec<f32>,
+    arg2: Vec<u32>,
+    /// hidden-layer gradient scratch
+    dh: Vec<f32>,
+    /// cnn backward scratch (dp* accumulate, hence zeroed per step)
+    dp2: Vec<f32>,
+    da2: Vec<f32>,
+    dp1: Vec<f32>,
+    da1: Vec<f32>,
+    /// softmax scratch rows for the KD loss
+    ps: Vec<f32>,
+    pt: Vec<f32>,
+}
+
+/// Size `buf` for `n` elements the kernel fully overwrites (no zeroing;
+/// allocation-free once capacity is established).
+fn sized(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() != n {
+        buf.resize(n, 0.0);
+    }
+}
+
+fn sized_u32(buf: &mut Vec<u32>, n: usize) {
+    if buf.len() != n {
+        buf.resize(n, 0);
+    }
+}
+
+/// Size `buf` to `n` zeros — for accumulation targets. A memset in the
+/// steady state, never an allocation once capacity is established.
+fn zeroed(buf: &mut Vec<f32>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Workspace-backed forward / backward passes
+// ---------------------------------------------------------------------
+
+fn head_forward_ws(ws: &mut StepWorkspace, theta: &[f32], x: &[f32], b: usize) {
+    let fc1_b = sl(theta, H_FC1_B, H_HID);
+    let fc1_w = sl(theta, H_FC1_W, H_IN * H_HID);
+    let fc2_b = sl(theta, H_FC2_B, H_CLS);
+    let fc2_w = sl(theta, H_FC2_W, H_HID * H_CLS);
+    sized(&mut ws.h, b * H_HID);
+    sized(&mut ws.z, b * H_CLS);
+    affine(x, fc1_w, fc1_b, b, H_IN, H_HID, &mut ws.h);
+    relu_inplace(&mut ws.h);
+    affine(&ws.h, fc2_w, fc2_b, b, H_HID, H_CLS, &mut ws.z);
+}
+
+fn head_backward_ws(
+    ws: &mut StepWorkspace,
+    m: &ModelMeta,
+    theta: &[f32],
+    x: &[f32],
+    b: usize,
+) {
+    zeroed(&mut ws.g, m.padded_len);
+    sized(&mut ws.dh, b * H_HID);
+    let fc2_w = sl(theta, H_FC2_W, H_HID * H_CLS);
+    let StepWorkspace { g, dz, h, dh, .. } = ws;
+    // decompose the flat gradient into its non-overlapping layer slices
+    let (gfc1b, rest) = g.split_at_mut(H_HID);
+    let (gfc1w, rest) = rest.split_at_mut(H_IN * H_HID);
+    let (gfc2b, rest) = rest.split_at_mut(H_CLS);
+    let (gfc2w, _pad) = rest.split_at_mut(H_HID * H_CLS);
+
+    affine_backward(h, fc2_w, dz, b, H_HID, H_CLS, gfc2w, gfc2b, Some(&mut dh[..]));
+    relu_mask(dh, h);
+    affine_backward(x, &[], dh, b, H_IN, H_HID, gfc1w, gfc1b, None);
+}
+
+fn cnn_forward_ws(ws: &mut StepWorkspace, theta: &[f32], x: &[f32], b: usize) {
+    let c1b = sl(theta, C_C1B, C1);
+    let c1w = sl(theta, C_C1W, 3 * 3 * C1);
+    let c2b = sl(theta, C_C2B, C2);
+    let c2w = sl(theta, C_C2W, 3 * 3 * C1 * C2);
+    let f1b = sl(theta, C_F1B, FC_HID);
+    let f1w = sl(theta, C_F1W, FC_IN * FC_HID);
+    let f2b = sl(theta, C_F2B, C_CLS);
+    let f2w = sl(theta, C_F2W, FC_HID * C_CLS);
+
+    sized(&mut ws.a1, b * IMG * IMG * C1);
+    sized(&mut ws.p1, b * 8 * 8 * C1);
+    sized_u32(&mut ws.arg1, b * 8 * 8 * C1);
+    sized(&mut ws.a2, b * 8 * 8 * C2);
+    sized(&mut ws.p2, b * 4 * 4 * C2);
+    sized_u32(&mut ws.arg2, b * 4 * 4 * C2);
+    sized(&mut ws.h, b * FC_HID);
+    sized(&mut ws.z, b * C_CLS);
+
+    conv3x3_same(x, b, IMG, 1, c1w, c1b, C1, &mut ws.a1);
+    relu_inplace(&mut ws.a1);
+    maxpool2(&ws.a1, b, IMG, C1, &mut ws.p1, &mut ws.arg1);
+
+    conv3x3_same(&ws.p1, b, 8, C1, c2w, c2b, C2, &mut ws.a2);
+    relu_inplace(&mut ws.a2);
+    maxpool2(&ws.a2, b, 8, C2, &mut ws.p2, &mut ws.arg2);
+
+    affine(&ws.p2, f1w, f1b, b, FC_IN, FC_HID, &mut ws.h);
+    relu_inplace(&mut ws.h);
+    affine(&ws.h, f2w, f2b, b, FC_HID, C_CLS, &mut ws.z);
+}
+
+fn cnn_backward_ws(
+    ws: &mut StepWorkspace,
+    m: &ModelMeta,
+    theta: &[f32],
+    x: &[f32],
+    b: usize,
+) {
+    zeroed(&mut ws.g, m.padded_len);
+    sized(&mut ws.dh, b * FC_HID);
+    sized(&mut ws.dp2, b * FC_IN);
+    // maxpool/conv backward accumulate into these
+    zeroed(&mut ws.da2, b * 8 * 8 * C2);
+    zeroed(&mut ws.dp1, b * 8 * 8 * C1);
+    zeroed(&mut ws.da1, b * IMG * IMG * C1);
+    let c2w = sl(theta, C_C2W, 3 * 3 * C1 * C2);
+    let f1w = sl(theta, C_F1W, FC_IN * FC_HID);
+    let f2w = sl(theta, C_F2W, FC_HID * C_CLS);
+    let StepWorkspace { g, dz, h, a1, p1, arg1, a2, p2, arg2, dh, dp2, da2, dp1, da1, .. } =
+        ws;
+    // decompose the flat gradient into its non-overlapping layer slices
+    let (gc1b, rest) = g.split_at_mut(C1);
+    let (gc1w, rest) = rest.split_at_mut(3 * 3 * C1);
+    let (gc2b, rest) = rest.split_at_mut(C2);
+    let (gc2w, rest) = rest.split_at_mut(3 * 3 * C1 * C2);
+    let (gf1b, rest) = rest.split_at_mut(FC_HID);
+    let (gf1w, rest) = rest.split_at_mut(FC_IN * FC_HID);
+    let (gf2b, rest) = rest.split_at_mut(C_CLS);
+    let (gf2w, _pad) = rest.split_at_mut(FC_HID * C_CLS);
+
+    // fc head
+    affine_backward(h, f2w, dz, b, FC_HID, C_CLS, gf2w, gf2b, Some(&mut dh[..]));
+    relu_mask(dh, h);
+    affine_backward(p2, f1w, dh, b, FC_IN, FC_HID, gf1w, gf1b, Some(&mut dp2[..]));
+
+    // conv block 2
+    maxpool2_backward(dp2, arg2, da2);
+    relu_mask(da2, a2);
+    conv3x3_same_backward(p1, b, 8, C1, c2w, C2, da2, gc2w, gc2b, Some(&mut dp1[..]));
+
+    // conv block 1
+    maxpool2_backward(dp1, arg1, da1);
+    relu_mask(da1, a1);
+    conv3x3_same_backward(x, b, IMG, 1, &[], C1, da1, gc1w, gc1b, None);
+}
+
+/// Forward pass into the workspace (`ws.z` holds the logits afterwards).
+fn forward_ws(
+    ws: &mut StepWorkspace,
+    m: &ModelMeta,
+    theta: &[f32],
+    x: &[f32],
+    b: usize,
+) -> Result<()> {
+    ensure!(theta.len() == m.padded_len, "theta length mismatch");
+    match m.name.as_str() {
+        "head" => head_forward_ws(ws, theta, x, b),
+        "cnn" => cnn_forward_ws(ws, theta, x, b),
+        other => bail!("native backend has no model {other:?}"),
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
 // Entry points (called by the Runtime facade)
 // ---------------------------------------------------------------------
 
-/// Forward + loss-grad + backward + damped momentum, generically over the
-/// loss's logit gradient.
+/// Forward + loss-grad + backward + fused damped momentum applied in
+/// place, generically over the loss's logit gradient. The `loss_grad`
+/// closure reads `ws.z` and fills `ws.dz`.
 #[allow(clippy::too_many_arguments)]
-fn step_with<F>(
+fn step_into_with<F>(
     m: &ModelMeta,
-    theta: &[f32],
-    momentum: &[f32],
+    theta: &mut [f32],
+    momentum: &mut [f32],
     x: &[f32],
     b: usize,
     eta: f32,
     mu: f32,
     loss_grad: F,
-) -> Result<StepOut>
+) -> Result<f32>
 where
-    F: FnOnce(&[f32]) -> (f32, Vec<f32>),
+    F: FnOnce(&mut StepWorkspace, usize) -> f32,
 {
     ensure!(theta.len() == m.padded_len, "theta length mismatch");
     ensure!(momentum.len() == m.padded_len, "momentum length mismatch");
-    let mut g = vec![0.0f32; m.padded_len];
-    let loss = match m.name.as_str() {
-        "head" => {
-            let cache = head_forward(theta, x, b);
-            let (loss, dz) = loss_grad(&cache.z);
-            head_backward(theta, x, &cache, &dz, b, &mut g);
-            loss
+    crate::exec::with_scratch(|ws: &mut StepWorkspace| -> Result<f32> {
+        let loss = match m.name.as_str() {
+            "head" => {
+                head_forward_ws(ws, theta, x, b);
+                let loss = loss_grad(ws, b);
+                head_backward_ws(ws, m, theta, x, b);
+                loss
+            }
+            "cnn" => {
+                cnn_forward_ws(ws, theta, x, b);
+                let loss = loss_grad(ws, b);
+                cnn_backward_ws(ws, m, theta, x, b);
+                loss
+            }
+            other => bail!("native backend has no model {other:?}"),
+        };
+        // fused damped-momentum update, in place over the padded flat
+        // vectors: m' = μ·m + (1−μ)·g, θ' = θ − η·m'. Same expressions,
+        // same order as the seed rule — bit-identical; padding gradients
+        // are zero, so the tail invariant survives.
+        for ((t, mv), &gv) in theta.iter_mut().zip(momentum.iter_mut()).zip(ws.g.iter()) {
+            let mn = mu * *mv + (1.0 - mu) * gv;
+            *mv = mn;
+            *t -= eta * mn;
         }
-        "cnn" => {
-            let cache = cnn_forward(theta, x, b);
-            let (loss, dz) = loss_grad(&cache.z);
-            cnn_backward(theta, x, &cache, &dz, b, &mut g);
-            loss
-        }
-        other => bail!("native backend has no model {other:?}"),
-    };
-    // fused damped-momentum update over the padded flat vector
-    let mut theta2 = Vec::with_capacity(theta.len());
-    let mut mom2 = Vec::with_capacity(momentum.len());
-    for ((&t, &mv), &gv) in theta.iter().zip(momentum).zip(&g) {
-        let mn = mu * mv + (1.0 - mu) * gv;
-        mom2.push(mn);
-        theta2.push(t - eta * mn);
-    }
-    Ok(StepOut { theta: theta2, momentum: mom2, loss })
+        Ok(loss)
+    })
 }
 
-/// One local momentum-SGD step over a batch.
+/// One local momentum-SGD step over a batch, applied **in place**:
+/// `theta`/`momentum` are the buffers `params::Theta::make_mut` hands
+/// out, and the step allocates nothing in the steady state. Returns the
+/// batch loss. Bit-identical to the seed [`reference::train_step`] path
+/// (pinned by `tests/kernel_equivalence.rs`).
+pub fn train_step_into(
+    m: &ModelMeta,
+    theta: &mut [f32],
+    momentum: &mut [f32],
+    x: &[f32],
+    y: &[i32],
+    eta: f32,
+    mu: f32,
+) -> Result<f32> {
+    check_meta(m)?;
+    let b = batch_of(m, x, y)?;
+    let classes = m.classes;
+    step_into_with(m, theta, momentum, x, b, eta, mu, |ws, b| {
+        sized(&mut ws.dz, b * classes);
+        ce_loss_grad_into(&ws.z, y, b, classes, &mut ws.dz)
+    })
+}
+
+/// One Moshpit-KD student step (Algorithm 2), applied **in place** like
+/// [`train_step_into`]. τ is the lowering-time KD temperature
+/// (`meta.kd_tau`).
+#[allow(clippy::too_many_arguments)]
+pub fn kd_step_into(
+    m: &ModelMeta,
+    theta: &mut [f32],
+    momentum: &mut [f32],
+    x: &[f32],
+    y: &[i32],
+    zbar: &[f32],
+    lambda: f32,
+    tau: f32,
+    eta: f32,
+    mu: f32,
+) -> Result<f32> {
+    check_meta(m)?;
+    let b = batch_of(m, x, y)?;
+    ensure!(zbar.len() == b * m.classes, "zbar shape mismatch");
+    ensure!(tau > 0.0, "KD temperature must be positive");
+    let classes = m.classes;
+    step_into_with(m, theta, momentum, x, b, eta, mu, |ws, b| {
+        sized(&mut ws.dz, b * classes);
+        sized(&mut ws.ps, classes);
+        sized(&mut ws.pt, classes);
+        let StepWorkspace { z, dz, ps, pt, .. } = ws;
+        kd_loss_grad_into(z, y, zbar, lambda, tau, b, classes, dz, ps, pt)
+    })
+}
+
+/// One local momentum-SGD step over a batch — compat shim over
+/// [`train_step_into`] for callers that want freshly owned buffers.
 pub fn train_step(
     m: &ModelMeta,
     theta: &[f32],
@@ -591,15 +935,13 @@ pub fn train_step(
     eta: f32,
     mu: f32,
 ) -> Result<StepOut> {
-    check_meta(m)?;
-    let b = batch_of(m, x, y)?;
-    step_with(m, theta, momentum, x, b, eta, mu, |z| {
-        ce_loss_grad(z, y, b, m.classes)
-    })
+    let mut theta2 = theta.to_vec();
+    let mut momentum2 = momentum.to_vec();
+    let loss = train_step_into(m, &mut theta2, &mut momentum2, x, y, eta, mu)?;
+    Ok(StepOut { theta: theta2, momentum: momentum2, loss })
 }
 
-/// One Moshpit-KD student step (Algorithm 2). τ is the lowering-time KD
-/// temperature (`meta.kd_tau`).
+/// One Moshpit-KD student step — compat shim over [`kd_step_into`].
 #[allow(clippy::too_many_arguments)]
 pub fn kd_step(
     m: &ModelMeta,
@@ -613,53 +955,64 @@ pub fn kd_step(
     eta: f32,
     mu: f32,
 ) -> Result<StepOut> {
-    check_meta(m)?;
-    let b = batch_of(m, x, y)?;
-    ensure!(zbar.len() == b * m.classes, "zbar shape mismatch");
-    ensure!(tau > 0.0, "KD temperature must be positive");
-    step_with(m, theta, momentum, x, b, eta, mu, |z| {
-        kd_loss_grad(z, y, zbar, lambda, tau, b, m.classes)
-    })
+    let mut theta2 = theta.to_vec();
+    let mut momentum2 = momentum.to_vec();
+    let loss =
+        kd_step_into(m, &mut theta2, &mut momentum2, x, y, zbar, lambda, tau, eta, mu)?;
+    Ok(StepOut { theta: theta2, momentum: momentum2, loss })
 }
 
-/// Forward pass: logits for a batch.
-pub fn logits(m: &ModelMeta, theta: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+/// Forward pass: logits for a batch, written into `out` (cleared first).
+/// The forward caches live in the per-worker workspace, so KD teacher
+/// rating stops allocating activation buffers per call.
+pub fn logits_into(m: &ModelMeta, theta: &[f32], x: &[f32], out: &mut Vec<f32>) -> Result<()> {
     check_meta(m)?;
     let elems = m.input_elems();
     ensure!(!x.is_empty() && x.len() % elems == 0, "x shape mismatch");
     let b = x.len() / elems;
-    ensure!(theta.len() == m.padded_len, "theta length mismatch");
-    Ok(match m.name.as_str() {
-        "head" => head_forward(theta, x, b).z,
-        "cnn" => cnn_forward(theta, x, b).z,
-        other => bail!("native backend has no model {other:?}"),
+    crate::exec::with_scratch(|ws: &mut StepWorkspace| -> Result<()> {
+        forward_ws(ws, m, theta, x, b)?;
+        out.clear();
+        out.extend_from_slice(&ws.z);
+        Ok(())
     })
 }
 
-/// One eval chunk: (summed NLL, correct count).
+/// Forward pass: logits for a batch (allocating convenience wrapper).
+pub fn logits(m: &ModelMeta, theta: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    logits_into(m, theta, x, &mut out)?;
+    Ok(out)
+}
+
+/// One eval chunk: (summed NLL, correct count). Workspace-backed — the
+/// whole evaluation allocates nothing in the steady state.
 pub fn eval_chunk(m: &ModelMeta, theta: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
     check_meta(m)?;
     let rows = batch_of(m, x, y)?;
-    let z = logits(m, theta, x)?;
-    let c = m.classes;
-    let mut loss_sum = 0.0f64;
-    let mut correct = 0.0f64;
-    for r in 0..rows {
-        let zr = &z[r * c..(r + 1) * c];
-        let max = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let denom: f32 = zr.iter().map(|&v| (v - max).exp()).sum();
-        loss_sum += (denom.ln() + max - zr[y[r] as usize]) as f64;
-        let mut best = 0usize;
-        for (j, &v) in zr.iter().enumerate() {
-            if v > zr[best] {
-                best = j;
+    crate::exec::with_scratch(|ws: &mut StepWorkspace| -> Result<(f64, f64)> {
+        forward_ws(ws, m, theta, x, rows)?;
+        let c = m.classes;
+        let z: &[f32] = &ws.z;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for r in 0..rows {
+            let zr = &z[r * c..(r + 1) * c];
+            let max = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let denom: f32 = zr.iter().map(|&v| (v - max).exp()).sum();
+            loss_sum += (denom.ln() + max - zr[y[r] as usize]) as f64;
+            let mut best = 0usize;
+            for (j, &v) in zr.iter().enumerate() {
+                if v > zr[best] {
+                    best = j;
+                }
+            }
+            if best == y[r] as usize {
+                correct += 1.0;
             }
         }
-        if best == y[r] as usize {
-            correct += 1.0;
-        }
-    }
-    Ok((loss_sum, correct))
+        Ok((loss_sum, correct))
+    })
 }
 
 /// Mean of `k` stacked flat vectors (`stack` row-major `[k, padded_len]`),
@@ -703,6 +1056,529 @@ pub fn init_params(m: &ModelMeta) -> Result<Vec<f32>> {
     Ok(theta)
 }
 
+// ---------------------------------------------------------------------
+// Seed reference path
+// ---------------------------------------------------------------------
+
+/// The seed's allocating, scalar-kernel backend, preserved verbatim: the
+/// bit-identity anchor for the workspace/in-place path
+/// (`tests/kernel_equivalence.rs` asserts exact equality of states,
+/// momentum and losses) and the baseline of the `micro_hotpath`
+/// train-step ablation (`BENCH_kernels.json`). Element-wise helpers that
+/// the rework did not touch (ReLU, maxpool, τ-softmax) are shared with
+/// the parent module.
+pub mod reference {
+    use anyhow::{bail, ensure, Result};
+
+    use super::{
+        batch_of, check_meta, maxpool2, maxpool2_backward, relu_inplace, relu_mask,
+        sl, softmax_tau, C1, C2, C_C1W, C_C2W, C_CLS, C_F1W, C_F2W, FC_HID, FC_IN,
+        H_CLS, H_FC1_W, H_FC2_W, H_HID, H_IN, IMG,
+    };
+    use crate::models::ModelMeta;
+    use crate::runtime::StepOut;
+
+    /// out[b, o] = bias[o] + Σ_i x[b, i] · w[i, o] (seed scalar kernel)
+    fn affine(
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        b: usize,
+        din: usize,
+        dout: usize,
+        out: &mut [f32],
+    ) {
+        for bi in 0..b {
+            let xrow = &x[bi * din..(bi + 1) * din];
+            let orow = &mut out[bi * dout..(bi + 1) * dout];
+            orow.copy_from_slice(bias);
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wrow = &w[i * dout..(i + 1) * dout];
+                for (ov, &wv) in orow.iter_mut().zip(wrow) {
+                    *ov += xv * wv;
+                }
+            }
+        }
+    }
+
+    /// Accumulate dW/db (and optionally dx) for an affine layer given
+    /// dout (seed scalar kernel).
+    #[allow(clippy::too_many_arguments)]
+    fn affine_backward(
+        x: &[f32],
+        w: &[f32],
+        dout_grad: &[f32],
+        b: usize,
+        din: usize,
+        dout: usize,
+        dw: &mut [f32],
+        db: &mut [f32],
+        mut dx: Option<&mut [f32]>,
+    ) {
+        for bi in 0..b {
+            let xrow = &x[bi * din..(bi + 1) * din];
+            let grow = &dout_grad[bi * dout..(bi + 1) * dout];
+            for (dbv, &g) in db.iter_mut().zip(grow) {
+                *dbv += g;
+            }
+            for (i, &xv) in xrow.iter().enumerate() {
+                let dwrow = &mut dw[i * dout..(i + 1) * dout];
+                for (dwv, &g) in dwrow.iter_mut().zip(grow) {
+                    *dwv += xv * g;
+                }
+            }
+            if let Some(dx) = dx.as_deref_mut() {
+                let dxrow = &mut dx[bi * din..(bi + 1) * din];
+                for (i, dxv) in dxrow.iter_mut().enumerate() {
+                    let wrow = &w[i * dout..(i + 1) * dout];
+                    let mut s = 0.0f32;
+                    for (&wv, &g) in wrow.iter().zip(grow) {
+                        s += wv * g;
+                    }
+                    *dxv = s;
+                }
+            }
+        }
+    }
+
+    /// 3×3 SAME conv, NHWC, stride 1 (seed scalar kernel).
+    #[allow(clippy::too_many_arguments)]
+    fn conv3x3_same(
+        inp: &[f32],
+        b: usize,
+        hw: usize,
+        cin: usize,
+        w: &[f32],
+        bias: &[f32],
+        cout: usize,
+        out: &mut [f32],
+    ) {
+        for bi in 0..b {
+            let ibase = bi * hw * hw * cin;
+            let obase = bi * hw * hw * cout;
+            for y in 0..hw {
+                for x in 0..hw {
+                    let ooff = obase + (y * hw + x) * cout;
+                    let orow = &mut out[ooff..ooff + cout];
+                    orow.copy_from_slice(bias);
+                    for ky in 0..3usize {
+                        let sy = y as isize + ky as isize - 1;
+                        if sy < 0 || sy >= hw as isize {
+                            continue;
+                        }
+                        for kx in 0..3usize {
+                            let sx = x as isize + kx as isize - 1;
+                            if sx < 0 || sx >= hw as isize {
+                                continue;
+                            }
+                            let ioff =
+                                ibase + (sy as usize * hw + sx as usize) * cin;
+                            for i in 0..cin {
+                                let iv = inp[ioff + i];
+                                let woff = ((ky * 3 + kx) * cin + i) * cout;
+                                let wrow = &w[woff..woff + cout];
+                                for (ov, &wv) in orow.iter_mut().zip(wrow) {
+                                    *ov += iv * wv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Backward of the seed conv kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn conv3x3_same_backward(
+        inp: &[f32],
+        b: usize,
+        hw: usize,
+        cin: usize,
+        w: &[f32],
+        cout: usize,
+        dout: &[f32],
+        dw: &mut [f32],
+        db: &mut [f32],
+        mut dinp: Option<&mut [f32]>,
+    ) {
+        for bi in 0..b {
+            let ibase = bi * hw * hw * cin;
+            let obase = bi * hw * hw * cout;
+            for y in 0..hw {
+                for x in 0..hw {
+                    let goff = obase + (y * hw + x) * cout;
+                    let grow = &dout[goff..goff + cout];
+                    for (dbv, &g) in db.iter_mut().zip(grow) {
+                        *dbv += g;
+                    }
+                    for ky in 0..3usize {
+                        let sy = y as isize + ky as isize - 1;
+                        if sy < 0 || sy >= hw as isize {
+                            continue;
+                        }
+                        for kx in 0..3usize {
+                            let sx = x as isize + kx as isize - 1;
+                            if sx < 0 || sx >= hw as isize {
+                                continue;
+                            }
+                            let ioff =
+                                ibase + (sy as usize * hw + sx as usize) * cin;
+                            for i in 0..cin {
+                                let iv = inp[ioff + i];
+                                let woff = ((ky * 3 + kx) * cin + i) * cout;
+                                let dwrow = &mut dw[woff..woff + cout];
+                                for (dwv, &g) in dwrow.iter_mut().zip(grow) {
+                                    *dwv += iv * g;
+                                }
+                            }
+                            if let Some(dinp) = dinp.as_deref_mut() {
+                                for i in 0..cin {
+                                    let woff = ((ky * 3 + kx) * cin + i) * cout;
+                                    let wrow = &w[woff..woff + cout];
+                                    let mut s = 0.0f32;
+                                    for (&wv, &g) in wrow.iter().zip(grow) {
+                                        s += wv * g;
+                                    }
+                                    dinp[ioff + i] += s;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    struct HeadCache {
+        h: Vec<f32>,
+        z: Vec<f32>,
+    }
+
+    fn head_forward(theta: &[f32], x: &[f32], b: usize) -> HeadCache {
+        let fc1_b = sl(theta, 0, H_HID);
+        let fc1_w = sl(theta, H_FC1_W, H_IN * H_HID);
+        let fc2_b = sl(theta, H_FC1_W + H_IN * H_HID, H_CLS);
+        let fc2_w = sl(theta, H_FC2_W, H_HID * H_CLS);
+        let mut h = vec![0.0f32; b * H_HID];
+        affine(x, fc1_w, fc1_b, b, H_IN, H_HID, &mut h);
+        relu_inplace(&mut h);
+        let mut z = vec![0.0f32; b * H_CLS];
+        affine(&h, fc2_w, fc2_b, b, H_HID, H_CLS, &mut z);
+        HeadCache { h, z }
+    }
+
+    fn head_backward(
+        theta: &[f32],
+        x: &[f32],
+        cache: &HeadCache,
+        dz: &[f32],
+        b: usize,
+        g: &mut [f32],
+    ) {
+        let fc2_w = sl(theta, H_FC2_W, H_HID * H_CLS);
+        let (gfc1b, rest) = g.split_at_mut(H_HID);
+        let (gfc1w, rest) = rest.split_at_mut(H_IN * H_HID);
+        let (gfc2b, rest) = rest.split_at_mut(H_CLS);
+        let (gfc2w, _pad) = rest.split_at_mut(H_HID * H_CLS);
+
+        let mut dh = vec![0.0f32; b * H_HID];
+        affine_backward(&cache.h, fc2_w, dz, b, H_HID, H_CLS, gfc2w, gfc2b, Some(&mut dh));
+        relu_mask(&mut dh, &cache.h);
+        affine_backward(x, &[], &dh, b, H_IN, H_HID, gfc1w, gfc1b, None);
+    }
+
+    struct CnnCache {
+        a1: Vec<f32>,
+        p1: Vec<f32>,
+        arg1: Vec<u32>,
+        a2: Vec<f32>,
+        p2: Vec<f32>,
+        arg2: Vec<u32>,
+        h: Vec<f32>,
+        z: Vec<f32>,
+    }
+
+    fn cnn_forward(theta: &[f32], x: &[f32], b: usize) -> CnnCache {
+        let c1b = sl(theta, 0, C1);
+        let c1w = sl(theta, C_C1W, 3 * 3 * C1);
+        let c2b = sl(theta, C_C1W + 3 * 3 * C1, C2);
+        let c2w = sl(theta, C_C2W, 3 * 3 * C1 * C2);
+        let f1b = sl(theta, C_C2W + 3 * 3 * C1 * C2, FC_HID);
+        let f1w = sl(theta, C_F1W, FC_IN * FC_HID);
+        let f2b = sl(theta, C_F1W + FC_IN * FC_HID, C_CLS);
+        let f2w = sl(theta, C_F2W, FC_HID * C_CLS);
+
+        let mut a1 = vec![0.0f32; b * IMG * IMG * C1];
+        conv3x3_same(x, b, IMG, 1, c1w, c1b, C1, &mut a1);
+        relu_inplace(&mut a1);
+        let mut p1 = vec![0.0f32; b * 8 * 8 * C1];
+        let mut arg1 = vec![0u32; b * 8 * 8 * C1];
+        maxpool2(&a1, b, IMG, C1, &mut p1, &mut arg1);
+
+        let mut a2 = vec![0.0f32; b * 8 * 8 * C2];
+        conv3x3_same(&p1, b, 8, C1, c2w, c2b, C2, &mut a2);
+        relu_inplace(&mut a2);
+        let mut p2 = vec![0.0f32; b * 4 * 4 * C2];
+        let mut arg2 = vec![0u32; b * 4 * 4 * C2];
+        maxpool2(&a2, b, 8, C2, &mut p2, &mut arg2);
+
+        let mut h = vec![0.0f32; b * FC_HID];
+        affine(&p2, f1w, f1b, b, FC_IN, FC_HID, &mut h);
+        relu_inplace(&mut h);
+        let mut z = vec![0.0f32; b * C_CLS];
+        affine(&h, f2w, f2b, b, FC_HID, C_CLS, &mut z);
+        CnnCache { a1, p1, arg1, a2, p2, arg2, h, z }
+    }
+
+    fn cnn_backward(
+        theta: &[f32],
+        x: &[f32],
+        cache: &CnnCache,
+        dz: &[f32],
+        b: usize,
+        g: &mut [f32],
+    ) {
+        let c2w = sl(theta, C_C2W, 3 * 3 * C1 * C2);
+        let f1w = sl(theta, C_F1W, FC_IN * FC_HID);
+        let f2w = sl(theta, C_F2W, FC_HID * C_CLS);
+        let (gc1b, rest) = g.split_at_mut(C1);
+        let (gc1w, rest) = rest.split_at_mut(3 * 3 * C1);
+        let (gc2b, rest) = rest.split_at_mut(C2);
+        let (gc2w, rest) = rest.split_at_mut(3 * 3 * C1 * C2);
+        let (gf1b, rest) = rest.split_at_mut(FC_HID);
+        let (gf1w, rest) = rest.split_at_mut(FC_IN * FC_HID);
+        let (gf2b, rest) = rest.split_at_mut(C_CLS);
+        let (gf2w, _pad) = rest.split_at_mut(FC_HID * C_CLS);
+
+        let mut dh = vec![0.0f32; b * FC_HID];
+        let mut dp2 = vec![0.0f32; b * FC_IN];
+        let mut da2 = vec![0.0f32; b * 8 * 8 * C2];
+        let mut dp1 = vec![0.0f32; b * 8 * 8 * C1];
+        let mut da1 = vec![0.0f32; b * IMG * IMG * C1];
+
+        affine_backward(&cache.h, f2w, dz, b, FC_HID, C_CLS, gf2w, gf2b, Some(&mut dh));
+        relu_mask(&mut dh, &cache.h);
+        affine_backward(&cache.p2, f1w, &dh, b, FC_IN, FC_HID, gf1w, gf1b, Some(&mut dp2));
+
+        maxpool2_backward(&dp2, &cache.arg2, &mut da2);
+        relu_mask(&mut da2, &cache.a2);
+        conv3x3_same_backward(
+            &cache.p1,
+            b,
+            8,
+            C1,
+            c2w,
+            C2,
+            &da2,
+            gc2w,
+            gc2b,
+            Some(&mut dp1),
+        );
+
+        maxpool2_backward(&dp1, &cache.arg1, &mut da1);
+        relu_mask(&mut da1, &cache.a1);
+        conv3x3_same_backward(x, b, IMG, 1, &[], C1, &da1, gc1w, gc1b, None);
+    }
+
+    /// Mean softmax cross-entropy and its logit gradient (seed, fresh
+    /// `dz` allocation per call).
+    fn ce_loss_grad(z: &[f32], y: &[i32], rows: usize, classes: usize) -> (f32, Vec<f32>) {
+        let mut dz = vec![0.0f32; rows * classes];
+        let invb = 1.0 / rows as f32;
+        let mut loss = 0.0f64;
+        for r in 0..rows {
+            let zr = &z[r * classes..(r + 1) * classes];
+            let dr = &mut dz[r * classes..(r + 1) * classes];
+            let max = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for (&zv, d) in zr.iter().zip(dr.iter_mut()) {
+                let e = (zv - max).exp();
+                *d = e;
+                denom += e;
+            }
+            let yi = y[r] as usize;
+            loss += (denom.ln() + max - zr[yi]) as f64;
+            for d in dr.iter_mut() {
+                *d = *d / denom * invb;
+            }
+            dr[yi] -= invb;
+        }
+        ((loss / rows as f64) as f32, dz)
+    }
+
+    /// Seed KD loss (fresh allocations per call).
+    #[allow(clippy::too_many_arguments)]
+    fn kd_loss_grad(
+        z: &[f32],
+        y: &[i32],
+        zbar: &[f32],
+        lam: f32,
+        tau: f32,
+        rows: usize,
+        classes: usize,
+    ) -> (f32, Vec<f32>) {
+        let (ce, mut dz) = ce_loss_grad(z, y, rows, classes);
+        for d in dz.iter_mut() {
+            *d *= 1.0 - lam;
+        }
+        let mut ps = vec![0.0f32; classes];
+        let mut pt = vec![0.0f32; classes];
+        let mut kl_mean = 0.0f64;
+        let scale = lam * tau / rows as f32;
+        for r in 0..rows {
+            let zr = &z[r * classes..(r + 1) * classes];
+            let tr = &zbar[r * classes..(r + 1) * classes];
+            softmax_tau(zr, tau, &mut ps);
+            softmax_tau(tr, tau, &mut pt);
+            let mut kl = 0.0f64;
+            for c in 0..classes {
+                if pt[c] > 0.0 {
+                    kl += pt[c] as f64
+                        * ((pt[c] as f64).ln() - (ps[c].max(1e-30) as f64).ln());
+                }
+            }
+            kl_mean += kl;
+            let dr = &mut dz[r * classes..(r + 1) * classes];
+            for c in 0..classes {
+                dr[c] += scale * (ps[c] - pt[c]);
+            }
+        }
+        kl_mean /= rows as f64;
+        let loss = (1.0 - lam) * ce + lam * tau * tau * (kl_mean as f32);
+        (loss, dz)
+    }
+
+    /// Seed step driver: fresh forward cache, fresh gradient, fresh
+    /// θ'/m' output vectors.
+    #[allow(clippy::too_many_arguments)]
+    fn step_with<F>(
+        m: &ModelMeta,
+        theta: &[f32],
+        momentum: &[f32],
+        x: &[f32],
+        b: usize,
+        eta: f32,
+        mu: f32,
+        loss_grad: F,
+    ) -> Result<StepOut>
+    where
+        F: FnOnce(&[f32]) -> (f32, Vec<f32>),
+    {
+        ensure!(theta.len() == m.padded_len, "theta length mismatch");
+        ensure!(momentum.len() == m.padded_len, "momentum length mismatch");
+        let mut g = vec![0.0f32; m.padded_len];
+        let loss = match m.name.as_str() {
+            "head" => {
+                let cache = head_forward(theta, x, b);
+                let (loss, dz) = loss_grad(&cache.z);
+                head_backward(theta, x, &cache, &dz, b, &mut g);
+                loss
+            }
+            "cnn" => {
+                let cache = cnn_forward(theta, x, b);
+                let (loss, dz) = loss_grad(&cache.z);
+                cnn_backward(theta, x, &cache, &dz, b, &mut g);
+                loss
+            }
+            other => bail!("native backend has no model {other:?}"),
+        };
+        let mut theta2 = Vec::with_capacity(theta.len());
+        let mut mom2 = Vec::with_capacity(momentum.len());
+        for ((&t, &mv), &gv) in theta.iter().zip(momentum).zip(&g) {
+            let mn = mu * mv + (1.0 - mu) * gv;
+            mom2.push(mn);
+            theta2.push(t - eta * mn);
+        }
+        Ok(StepOut { theta: theta2, momentum: mom2, loss })
+    }
+
+    /// Seed train step (allocating, scalar kernels).
+    pub fn train_step(
+        m: &ModelMeta,
+        theta: &[f32],
+        momentum: &[f32],
+        x: &[f32],
+        y: &[i32],
+        eta: f32,
+        mu: f32,
+    ) -> Result<StepOut> {
+        check_meta(m)?;
+        let b = batch_of(m, x, y)?;
+        step_with(m, theta, momentum, x, b, eta, mu, |z| {
+            ce_loss_grad(z, y, b, m.classes)
+        })
+    }
+
+    /// Seed KD step (allocating, scalar kernels).
+    #[allow(clippy::too_many_arguments)]
+    pub fn kd_step(
+        m: &ModelMeta,
+        theta: &[f32],
+        momentum: &[f32],
+        x: &[f32],
+        y: &[i32],
+        zbar: &[f32],
+        lambda: f32,
+        tau: f32,
+        eta: f32,
+        mu: f32,
+    ) -> Result<StepOut> {
+        check_meta(m)?;
+        let b = batch_of(m, x, y)?;
+        ensure!(zbar.len() == b * m.classes, "zbar shape mismatch");
+        ensure!(tau > 0.0, "KD temperature must be positive");
+        step_with(m, theta, momentum, x, b, eta, mu, |z| {
+            kd_loss_grad(z, y, zbar, lambda, tau, b, m.classes)
+        })
+    }
+
+    /// Seed forward pass (fresh cache + logits allocation per call).
+    pub fn logits(m: &ModelMeta, theta: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        check_meta(m)?;
+        let elems = m.input_elems();
+        ensure!(!x.is_empty() && x.len() % elems == 0, "x shape mismatch");
+        let b = x.len() / elems;
+        ensure!(theta.len() == m.padded_len, "theta length mismatch");
+        Ok(match m.name.as_str() {
+            "head" => head_forward(theta, x, b).z,
+            "cnn" => cnn_forward(theta, x, b).z,
+            other => bail!("native backend has no model {other:?}"),
+        })
+    }
+
+    /// Seed eval chunk: (summed NLL, correct count).
+    pub fn eval_chunk(
+        m: &ModelMeta,
+        theta: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f64, f64)> {
+        check_meta(m)?;
+        let rows = batch_of(m, x, y)?;
+        let z = logits(m, theta, x)?;
+        let c = m.classes;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for r in 0..rows {
+            let zr = &z[r * c..(r + 1) * c];
+            let max = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let denom: f32 = zr.iter().map(|&v| (v - max).exp()).sum();
+            loss_sum += (denom.ln() + max - zr[y[r] as usize]) as f64;
+            let mut best = 0usize;
+            for (j, &v) in zr.iter().enumerate() {
+                if v > zr[best] {
+                    best = j;
+                }
+            }
+            if best == y[r] as usize {
+                correct += 1.0;
+            }
+        }
+        Ok((loss_sum, correct))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -744,7 +1620,8 @@ mod tests {
     }
 
     /// Central finite differences against the analytic gradient — the
-    /// correctness anchor for the whole backward implementation.
+    /// correctness anchor for the whole backward implementation, run
+    /// against the register-blocked kernels (the shim path).
     fn fd_check(m: &ModelMeta, probes: &[usize]) {
         let mut rng = Rng::new(0xFD);
         let theta = init_params(m).unwrap();
@@ -868,6 +1745,56 @@ mod tests {
             last = out.loss;
         }
         assert!(last < first * 0.6, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn in_place_step_equals_shim_and_reference() {
+        // one multi-step schedule, three paths: seed reference, compat
+        // shim, and the in-place workspace path — bitwise identical
+        // states, momentum and losses (the full suite lives in
+        // tests/kernel_equivalence.rs; this is the unit-level smoke pin)
+        for m in [head_meta(), cnn_meta()] {
+            let mut rng = Rng::new(11);
+            let b = 4usize;
+            let x: Vec<f32> =
+                (0..b * m.input_elems()).map(|_| rng.normal() as f32).collect();
+            let y: Vec<i32> = (0..b).map(|i| (i % m.classes) as i32).collect();
+            let mut t_ref = init_params(&m).unwrap();
+            let mut m_ref = vec![0.0f32; t_ref.len()];
+            let mut t_inp = t_ref.clone();
+            let mut m_inp = m_ref.clone();
+            for _ in 0..3 {
+                let out =
+                    reference::train_step(&m, &t_ref, &m_ref, &x, &y, 0.1, 0.9).unwrap();
+                let loss =
+                    train_step_into(&m, &mut t_inp, &mut m_inp, &x, &y, 0.1, 0.9)
+                        .unwrap();
+                t_ref = out.theta;
+                m_ref = out.momentum;
+                assert_eq!(out.loss.to_bits(), loss.to_bits(), "loss diverged");
+                assert_eq!(t_ref, t_inp, "theta diverged ({})", m.name);
+                assert_eq!(m_ref, m_inp, "momentum diverged ({})", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn logits_and_eval_match_reference_bitwise() {
+        for m in [head_meta(), cnn_meta()] {
+            let mut rng = Rng::new(12);
+            let rows = 8usize;
+            let x: Vec<f32> =
+                (0..rows * m.input_elems()).map(|_| rng.normal() as f32).collect();
+            let y: Vec<i32> = (0..rows).map(|i| (i % m.classes) as i32).collect();
+            let theta = init_params(&m).unwrap();
+            let z_ref = reference::logits(&m, &theta, &x).unwrap();
+            let z_ws = logits(&m, &theta, &x).unwrap();
+            assert_eq!(z_ref, z_ws, "logits diverged ({})", m.name);
+            let e_ref = reference::eval_chunk(&m, &theta, &x, &y).unwrap();
+            let e_ws = eval_chunk(&m, &theta, &x, &y).unwrap();
+            assert_eq!(e_ref.0.to_bits(), e_ws.0.to_bits());
+            assert_eq!(e_ref.1.to_bits(), e_ws.1.to_bits());
+        }
     }
 
     #[test]

@@ -142,6 +142,55 @@ impl PjrtBackend {
         self.step_entry(&format!("{}_train_step", m.name), &args, &mut inner)
     }
 
+    /// In-place variant of [`Self::train_step`]: executes the lowered
+    /// step and copies the result back into the caller's buffers, so
+    /// PJRT builds satisfy the same `*_into` facade contract the native
+    /// backend serves allocation-free.
+    pub(super) fn train_step_into(
+        &self,
+        m: &ModelMeta,
+        theta: &mut [f32],
+        momentum: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        eta: f32,
+        mu: f32,
+    ) -> Result<f32> {
+        let out = self.train_step(m, theta, momentum, x, y, eta, mu)?;
+        anyhow::ensure!(
+            out.theta.len() == theta.len() && out.momentum.len() == momentum.len(),
+            "pjrt train_step output shape mismatch"
+        );
+        theta.copy_from_slice(&out.theta);
+        momentum.copy_from_slice(&out.momentum);
+        Ok(out.loss)
+    }
+
+    /// In-place variant of [`Self::kd_step`] (see
+    /// [`Self::train_step_into`]).
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn kd_step_into(
+        &self,
+        m: &ModelMeta,
+        theta: &mut [f32],
+        momentum: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        zbar: &[f32],
+        lambda: f32,
+        eta: f32,
+        mu: f32,
+    ) -> Result<f32> {
+        let out = self.kd_step(m, theta, momentum, x, y, zbar, lambda, eta, mu)?;
+        anyhow::ensure!(
+            out.theta.len() == theta.len() && out.momentum.len() == momentum.len(),
+            "pjrt kd_step output shape mismatch"
+        );
+        theta.copy_from_slice(&out.theta);
+        momentum.copy_from_slice(&out.momentum);
+        Ok(out.loss)
+    }
+
     #[allow(clippy::too_many_arguments)]
     pub(super) fn kd_step(
         &self,

@@ -1,0 +1,287 @@
+//! Bit-identity pins for the allocation-free training kernels: the
+//! workspace-backed, register-blocked, in-place step path
+//! (`native::{train_step_into, kd_step_into, logits, eval_chunk}`) must
+//! reproduce the seed's allocating scalar path (`native::reference`)
+//! exactly — states, momentum and losses, bit for bit — over random
+//! batches and multi-epoch schedules on both models, and the blocked
+//! kernels must still pass finite-difference gradient checks. The
+//! `Runtime` facade shims and the copy-on-write aliasing contract of the
+//! in-place API are pinned here too.
+
+use std::path::Path;
+
+use marfl::models::{ArtifactMeta, ModelMeta};
+use marfl::params::Theta;
+use marfl::rng::Rng;
+use marfl::runtime::{native, Runtime};
+
+fn models() -> Vec<ModelMeta> {
+    let meta = ArtifactMeta::builtin(Path::new("/nonexistent"));
+    vec![
+        meta.model("head").unwrap().clone(),
+        meta.model("cnn").unwrap().clone(),
+    ]
+}
+
+fn batch(m: &ModelMeta, b: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+    let x: Vec<f32> =
+        (0..b * m.input_elems()).map(|_| rng.normal() as f32 * 0.7).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.below(m.classes) as i32).collect();
+    (x, y)
+}
+
+/// Multi-epoch training schedule: the in-place path must track the seed
+/// reference exactly at every step — theta, momentum AND loss bits —
+/// across fresh random batches, both models, several (η, μ) settings.
+#[test]
+fn train_schedule_bit_identical_to_seed_reference() {
+    for m in models() {
+        for &(eta, mu) in &[(0.1f32, 0.9f32), (0.5, 0.0), (0.01, 0.99)] {
+            let mut rng = Rng::new(0xE0 ^ m.classes as u64);
+            let mut t_ref = native::init_params(&m).unwrap();
+            let mut m_ref = vec![0.0f32; t_ref.len()];
+            let mut t_inp = t_ref.clone();
+            let mut m_inp = m_ref.clone();
+            // 2 epochs × 3 batches
+            for step in 0..6 {
+                let (x, y) = batch(&m, 4, &mut rng);
+                let out = native::reference::train_step(
+                    &m, &t_ref, &m_ref, &x, &y, eta, mu,
+                )
+                .unwrap();
+                let loss =
+                    native::train_step_into(&m, &mut t_inp, &mut m_inp, &x, &y, eta, mu)
+                        .unwrap();
+                t_ref = out.theta;
+                m_ref = out.momentum;
+                assert_eq!(
+                    out.loss.to_bits(),
+                    loss.to_bits(),
+                    "loss diverged at step {step} ({}, eta={eta}, mu={mu})",
+                    m.name
+                );
+                assert_eq!(t_ref, t_inp, "theta diverged at step {step} ({})", m.name);
+                assert_eq!(
+                    m_ref, m_inp,
+                    "momentum diverged at step {step} ({})",
+                    m.name
+                );
+            }
+        }
+    }
+}
+
+/// Same pin for the KD step: random teacher logits, several λ (including
+/// the CE-only λ=0 and pure-KL λ=1 ends), multi-epoch.
+#[test]
+fn kd_schedule_bit_identical_to_seed_reference() {
+    for m in models() {
+        for &lam in &[0.0f32, 0.4, 1.0] {
+            let mut rng = Rng::new(0x3D ^ m.classes as u64);
+            let tau = 3.0f32;
+            let mut t_ref = native::init_params(&m).unwrap();
+            let mut m_ref = vec![0.0f32; t_ref.len()];
+            let mut t_inp = t_ref.clone();
+            let mut m_inp = m_ref.clone();
+            for step in 0..4 {
+                let b = 4usize;
+                let (x, y) = batch(&m, b, &mut rng);
+                let zbar: Vec<f32> =
+                    (0..b * m.classes).map(|_| rng.normal() as f32).collect();
+                let out = native::reference::kd_step(
+                    &m, &t_ref, &m_ref, &x, &y, &zbar, lam, tau, 0.1, 0.9,
+                )
+                .unwrap();
+                let loss = native::kd_step_into(
+                    &m, &mut t_inp, &mut m_inp, &x, &y, &zbar, lam, tau, 0.1, 0.9,
+                )
+                .unwrap();
+                t_ref = out.theta;
+                m_ref = out.momentum;
+                assert_eq!(
+                    out.loss.to_bits(),
+                    loss.to_bits(),
+                    "KD loss diverged at step {step} ({}, lam={lam})",
+                    m.name
+                );
+                assert_eq!(t_ref, t_inp, "theta diverged ({}, lam={lam})", m.name);
+                assert_eq!(m_ref, m_inp, "momentum diverged ({}, lam={lam})", m.name);
+            }
+        }
+    }
+}
+
+/// Logits and eval through the workspace match the seed path bitwise
+/// (the KD teacher-rating and evaluation routes).
+#[test]
+fn logits_and_eval_bit_identical_to_seed_reference() {
+    for m in models() {
+        let mut rng = Rng::new(0x10 ^ m.classes as u64);
+        let theta = native::init_params(&m).unwrap();
+        for rows in [1usize, 5, 16] {
+            let (x, y) = batch(&m, rows, &mut rng);
+            let z_ref = native::reference::logits(&m, &theta, &x).unwrap();
+            let z_ws = native::logits(&m, &theta, &x).unwrap();
+            assert_eq!(z_ref, z_ws, "logits diverged ({}, rows={rows})", m.name);
+            let (l_ref, c_ref) =
+                native::reference::eval_chunk(&m, &theta, &x, &y).unwrap();
+            let (l_ws, c_ws) = native::eval_chunk(&m, &theta, &x, &y).unwrap();
+            assert_eq!(l_ref.to_bits(), l_ws.to_bits(), "eval loss ({})", m.name);
+            assert_eq!(c_ref.to_bits(), c_ws.to_bits(), "eval correct ({})", m.name);
+        }
+    }
+}
+
+/// Alternating models and batch sizes on ONE thread reuses one workspace
+/// arena; stale buffer contents from the previous shape must never leak
+/// into a result.
+#[test]
+fn workspace_reuse_across_models_and_shapes_is_clean() {
+    let ms = models();
+    let mut rng = Rng::new(0xA17);
+    // interleave: head b=4, cnn b=4, head b=9, cnn b=2, head b=4 ...
+    for &(mi, b) in &[(0usize, 4usize), (1, 4), (0, 9), (1, 2), (0, 4), (1, 7)] {
+        let m = &ms[mi];
+        let (x, y) = batch(m, b, &mut rng);
+        let theta = native::init_params(m).unwrap();
+        let mom = vec![0.1f32; theta.len()];
+        // fresh-reference answer for exactly this call
+        let want = native::reference::train_step(m, &theta, &mom, &x, &y, 0.2, 0.5)
+            .unwrap();
+        let mut t = theta.clone();
+        let mut mo = mom.clone();
+        let loss =
+            native::train_step_into(m, &mut t, &mut mo, &x, &y, 0.2, 0.5).unwrap();
+        assert_eq!(want.loss.to_bits(), loss.to_bits(), "loss ({} b={b})", m.name);
+        assert_eq!(want.theta, t, "stale workspace leaked ({} b={b})", m.name);
+        assert_eq!(want.momentum, mo, "stale momentum ({} b={b})", m.name);
+    }
+}
+
+/// Finite differences against the blocked kernels' analytic gradient,
+/// driven through the in-place entry directly (η=1, μ=0 ⇒ θ' = θ − g).
+#[test]
+fn blocked_kernel_gradients_match_finite_differences() {
+    for m in models() {
+        let mut rng = Rng::new(0xFD2);
+        let theta = native::init_params(&m).unwrap();
+        let b = 3usize;
+        let (x, y) = batch(&m, b, &mut rng);
+        let mut t = theta.clone();
+        let mut mo = vec![0.0f32; theta.len()];
+        native::train_step_into(&m, &mut t, &mut mo, &x, &y, 1.0, 0.0).unwrap();
+        let grad: Vec<f32> = theta.iter().zip(&t).map(|(&a, &b)| a - b).collect();
+        let loss_at = |th: &mut Vec<f32>| -> f64 {
+            let mut z = vec![0.0f32; th.len()];
+            native::train_step_into(&m, th, &mut z, &x, &y, 0.0, 0.0).unwrap() as f64
+        };
+        let eps = 2e-2f64;
+        // probe a spread of parameters across the layout
+        for j in (0..m.param_count).step_by(m.param_count / 7) {
+            let mut tp = theta.clone();
+            tp[j] += eps as f32;
+            let lp = loss_at(&mut tp);
+            tp[j] = theta[j] - eps as f32;
+            let lm = loss_at(&mut tp);
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = grad[j] as f64;
+            assert!(
+                (fd - an).abs() <= 2e-3 + 0.08 * an.abs().max(fd.abs()),
+                "{} param {j}: fd {fd:.6} vs analytic {an:.6}",
+                m.name
+            );
+        }
+    }
+}
+
+/// The facade compat shims (`Runtime::train_step` / `kd_step`) are thin
+/// wrappers over the in-place path: identical results, and the metrics
+/// counters keep the seed's key names without per-step formatting.
+#[test]
+fn runtime_shims_agree_with_in_place_api_and_count_under_seed_keys() {
+    let rt = Runtime::new(Path::new("/nonexistent_marfl_artifacts")).unwrap();
+    let m = rt.meta.model("head").unwrap().clone();
+    let mut rng = Rng::new(0xFA);
+    let x: Vec<f32> =
+        (0..m.batch * m.input_elems()).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..m.batch).map(|i| (i % m.classes) as i32).collect();
+    let theta = rt.init_params("head").unwrap();
+    let mom = vec![0.0f32; theta.len()];
+
+    let out = rt.train_step(&m, &theta, &mom, &x, &y, 0.1, 0.9).unwrap();
+    let mut t = theta.clone();
+    let mut mo = mom.clone();
+    let loss = rt.train_step_into(&m, &mut t, &mut mo, &x, &y, 0.1, 0.9).unwrap();
+    assert_eq!(out.theta, t);
+    assert_eq!(out.momentum, mo);
+    assert_eq!(out.loss.to_bits(), loss.to_bits());
+
+    let zbar = vec![0.0f32; m.batch * m.classes];
+    let kout =
+        rt.kd_step(&m, &theta, &mom, &x, &y, &zbar, 0.5, 0.1, 0.9).unwrap();
+    let mut kt = theta.clone();
+    let mut kmo = mom.clone();
+    let kloss = rt
+        .kd_step_into(&m, &mut kt, &mut kmo, &x, &y, &zbar, 0.5, 0.1, 0.9)
+        .unwrap();
+    assert_eq!(kout.theta, kt);
+    assert_eq!(kout.loss.to_bits(), kloss.to_bits());
+
+    let mut zbuf = Vec::new();
+    rt.logits_into(&m, &theta, &x, &mut zbuf).unwrap();
+    assert_eq!(zbuf, rt.logits(&m, &theta, &x).unwrap());
+
+    // seed-compatible counter keys: shim + in-place both count once
+    let counts = rt.call_counts();
+    assert_eq!(counts["head_train_step"], 2);
+    assert_eq!(counts["head_kd_step"], 2);
+    assert_eq!(counts["head_logits"], 2);
+}
+
+/// The in-place step through `Theta::make_mut_slice` detaches from
+/// aliasing snapshots exactly once and never perturbs them — the
+/// copy-on-write contract the MKD teacher snapshots rely on.
+#[test]
+fn in_place_step_preserves_snapshot_aliasing_contract() {
+    let rt = Runtime::new(Path::new("/nonexistent_marfl_artifacts")).unwrap();
+    let m = rt.meta.model("head").unwrap().clone();
+    let mut rng = Rng::new(0xA5);
+    let x: Vec<f32> =
+        (0..m.batch * m.input_elems()).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..m.batch).map(|i| (i % m.classes) as i32).collect();
+
+    let mut theta = Theta::new(rt.init_params("head").unwrap());
+    let mut momentum = Theta::zeros(theta.len());
+    let snapshot = theta.clone();
+    let frozen = snapshot.to_vec();
+    assert!(theta.shares_storage(&snapshot));
+
+    rt.train_step_into(
+        &m,
+        theta.make_mut_slice(),
+        momentum.make_mut_slice(),
+        &x,
+        &y,
+        0.1,
+        0.9,
+    )
+    .unwrap();
+    // the write detached the student; the snapshot is bitwise frozen
+    assert!(!theta.shares_storage(&snapshot));
+    assert_eq!(snapshot, frozen);
+    assert_ne!(theta.as_slice(), frozen.as_slice());
+
+    // a second step mutates the now-unique buffer in place
+    let before = theta.as_slice().as_ptr();
+    rt.train_step_into(
+        &m,
+        theta.make_mut_slice(),
+        momentum.make_mut_slice(),
+        &x,
+        &y,
+        0.1,
+        0.9,
+    )
+    .unwrap();
+    assert_eq!(theta.as_slice().as_ptr(), before, "unique step must not move");
+}

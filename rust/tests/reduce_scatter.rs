@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use marfl::aggregation::{mean_of, AggCtx, Aggregate, GroupExchange, PeerState};
+use marfl::aggregation::{mean_of, AggCtx, AggReport, Aggregate, GroupExchange, PeerState};
 use marfl::coordinator::MarAggregator;
 use marfl::metrics::{CommLedger, CommSnapshot};
 use marfl::models::ModelMeta;
@@ -39,16 +39,18 @@ fn random_states(n: usize, p: usize, seed: u64) -> Vec<PeerState> {
 }
 
 /// One MAR aggregate call with fixed seeds; returns (states, ledger
-/// delta, simulated clock).
-fn run_mar(
+/// delta, simulated clock, report).
+#[allow(clippy::too_many_arguments)]
+fn run_mar_budget(
     n: usize,
     m: usize,
     g: usize,
     p: usize,
     exchange: GroupExchange,
     rs_drop: f64,
+    rs_retry_budget: usize,
     parallel: bool,
-) -> (Vec<PeerState>, CommSnapshot, f64) {
+) -> (Vec<PeerState>, CommSnapshot, f64, AggReport) {
     let mut states = random_states(n, p, 0xC0FFEE ^ n as u64);
     let agg: Vec<usize> = (0..n).collect();
     let ledger = Arc::new(CommLedger::new());
@@ -59,6 +61,7 @@ fn run_mar(
     let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 7)
         .with_exchange(exchange)
         .with_rs_drop(rs_drop)
+        .with_rs_retry_budget(rs_retry_budget)
         .with_parallel(parallel);
     ledger.reset(); // drop DHT join traffic
     let mut ctx = AggCtx {
@@ -68,8 +71,23 @@ fn run_mar(
         runtime: None,
         model: &model,
     };
-    mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
-    (states, ledger.snapshot(), clock.now())
+    let report = mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+    (states, ledger.snapshot(), clock.now(), report)
+}
+
+/// [`run_mar_budget`] with the default (seed) retry budget of 0.
+fn run_mar(
+    n: usize,
+    m: usize,
+    g: usize,
+    p: usize,
+    exchange: GroupExchange,
+    rs_drop: f64,
+    parallel: bool,
+) -> (Vec<PeerState>, CommSnapshot, f64) {
+    let (states, snap, clock, _) =
+        run_mar_budget(n, m, g, p, exchange, rs_drop, 0, parallel);
+    (states, snap, clock)
 }
 
 /// The tentpole equivalence: chunk-owned reduce-scatter assembles the
@@ -154,6 +172,123 @@ fn rs_with_drops_parallel_matches_serial() {
         }
         assert_eq!(s_snap, p_snap, "ledger diverged (rs_drop={rs_drop})");
         assert_eq!(s_clock.to_bits(), p_clock.to_bits(), "clock diverged");
+    }
+}
+
+/// `mar.rs_retry_budget`: the same drop schedule is drawn either way
+/// (victims, staleness and matchmaking are identical), but budgeted
+/// groups *defer* — no survivors-only recovery gather, no averaging —
+/// so every drop lands as either a fallback (budget 0) or a retry /
+/// terminal-round fallback (budget on), and the budgeted run books
+/// strictly fewer recovery bytes.
+#[test]
+fn retry_budget_defers_instead_of_falling_back() {
+    let (seed_states, seed_snap, _, seed_rep) =
+        run_mar_budget(27, 3, 3, 129, GroupExchange::ReduceScatter, 1.0, 0, true);
+    let (ret_states, ret_snap, _, ret_rep) = run_mar_budget(
+        27,
+        3,
+        3,
+        129,
+        GroupExchange::ReduceScatter,
+        1.0,
+        usize::MAX,
+        true,
+    );
+    assert_eq!(seed_rep.rs_retries, 0, "budget 0 must never retry");
+    assert!(seed_rep.rs_fallbacks > 0);
+    assert!(ret_rep.rs_retries > 0, "an uncapped budget must retry");
+    assert!(
+        ret_rep.rs_fallbacks > 0,
+        "final-round drops cannot retry (no round to re-form in)"
+    );
+    // identical drop schedule: every drop is accounted exactly once
+    assert_eq!(
+        seed_rep.rs_fallbacks,
+        ret_rep.rs_fallbacks + ret_rep.rs_retries,
+        "retries must re-label fallbacks, not change the drop schedule"
+    );
+    // deferring skips the survivors-only recovery gathers
+    assert!(
+        ret_snap.data_bytes < seed_snap.data_bytes,
+        "retry runs must book fewer recovery bytes ({} vs {})",
+        ret_snap.data_bytes,
+        seed_snap.data_bytes
+    );
+    // and some retried groups' members keep their pre-round state
+    // (they averaged nothing), so the state sets differ
+    let diverged = seed_states
+        .iter()
+        .zip(&ret_states)
+        .any(|(a, b)| a.theta != b.theta);
+    assert!(diverged, "deferred groups must skip averaging");
+}
+
+/// A finite budget is consumed in draw order and then drops fall back
+/// again; the drop schedule itself never changes.
+#[test]
+fn retry_budget_is_consumed_in_schedule_order() {
+    let (_, _, _, unbounded) = run_mar_budget(
+        27,
+        3,
+        3,
+        129,
+        GroupExchange::ReduceScatter,
+        1.0,
+        usize::MAX,
+        true,
+    );
+    let budget = 2usize;
+    let (_, _, _, capped) = run_mar_budget(
+        27,
+        3,
+        3,
+        129,
+        GroupExchange::ReduceScatter,
+        1.0,
+        budget,
+        true,
+    );
+    assert_eq!(capped.rs_retries, budget, "exactly the budget may be spent");
+    assert_eq!(
+        capped.rs_retries + capped.rs_fallbacks,
+        unbounded.rs_retries + unbounded.rs_fallbacks,
+        "total drops are schedule state, independent of the budget"
+    );
+}
+
+/// Budgeted runs stay bit-identical across engines, like every other
+/// schedule-state knob.
+#[test]
+fn retry_budget_parallel_matches_serial() {
+    for &budget in &[1usize, 4] {
+        let (s_states, s_snap, s_clock, s_rep) = run_mar_budget(
+            27,
+            3,
+            3,
+            129,
+            GroupExchange::ReduceScatter,
+            0.5,
+            budget,
+            false,
+        );
+        let (p_states, p_snap, p_clock, p_rep) = run_mar_budget(
+            27,
+            3,
+            3,
+            129,
+            GroupExchange::ReduceScatter,
+            0.5,
+            budget,
+            true,
+        );
+        for (a, b) in s_states.iter().zip(&p_states) {
+            assert_eq!(a.theta, b.theta, "states diverged (budget={budget})");
+            assert_eq!(a.momentum, b.momentum);
+        }
+        assert_eq!(s_snap, p_snap, "ledger diverged (budget={budget})");
+        assert_eq!(s_clock.to_bits(), p_clock.to_bits(), "clock diverged");
+        assert_eq!(s_rep, p_rep, "report diverged (budget={budget})");
     }
 }
 
