@@ -119,6 +119,7 @@ impl SynthBundle {
             rng: &mut self.rng,
             runtime: None,
             model: &self.model,
+            faults: &marfl::net::FaultConfig::OFF,
         }
     }
 

@@ -12,9 +12,12 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{emit_csv, iters, mib, runtime, timed};
+use common::{emit_csv, iters, mib, results_dir, runtime, timed};
 use marfl::config::{ExperimentConfig, Strategy};
 use marfl::fl::Trainer;
+use marfl::metrics::write_json;
+use marfl::net::FaultConfig;
+use marfl::util::json::{arr, num, obj, s};
 
 fn main() {
     let dataset =
@@ -82,7 +85,142 @@ fn main() {
         acc.insert(label.to_string(), run.final_accuracy);
         bytes.insert(label.to_string(), run.comm.data_bytes);
     }
+    // ---- Gilbert–Elliott (markov) churn row -------------------------
+    // `churn.model = "markov"` swaps the i.i.d. Bernoulli participation
+    // draw for per-peer Up/Down chains (bursty wireless availability —
+    // the `configs/churn_markov.toml` preset). Stationary availability
+    // p_up/(p_up+p_down) = 0.75 makes this row comparable to p=75%.
+    {
+        let cfg = ExperimentConfig {
+            strategy: Strategy::MarFl,
+            churn_model: "markov".into(),
+            markov_p_down: 0.15,
+            markov_p_up: 0.45,
+            ..base.clone()
+        };
+        let label = "marfl markov GE(.15,.45)";
+        let run =
+            timed(label, || Trainer::new(cfg, &rt).unwrap().run().unwrap());
+        println!(
+            "    acc {:.3}  data {:.0} MiB  revivals {}  rescues {}",
+            run.final_accuracy,
+            mib(run.comm.data_bytes),
+            run.markov_revivals,
+            run.churn_rescues
+        );
+        rows.push(vec![
+            label.to_string(),
+            "marfl".into(),
+            "markov(0.15,0.45)".into(),
+            "0".into(),
+            format!("{:.4}", run.final_accuracy),
+            run.comm.data_bytes.to_string(),
+        ]);
+        acc.insert(label.to_string(), run.final_accuracy);
+    }
     emit_csv("fig3_churn.csv", &rows);
+
+    // ---- fault-injection matrix (BENCH_churn.json) ------------------
+    // The seeded fault plan rides on the same fixed-seed configuration:
+    // a faults-off row — which must report all-zero counters, the
+    // determinism contract CI asserts — plus two loss/straggler settings
+    // showing what the recovery machinery (retries, quorum-degraded
+    // groups, straggler exposure) costs as conditions worsen.
+    println!("\nfault-injection matrix (loss × stragglers, fixed seeds)\n");
+    let mut fault_rows = Vec::new();
+    let mut fault_csv = vec![vec![
+        "scenario".into(),
+        "loss".into(),
+        "straggler_prob".into(),
+        "msgs_lost".into(),
+        "retries".into(),
+        "timeouts".into(),
+        "quorum_degraded".into(),
+        "crashes".into(),
+        "straggler_exposed_s".into(),
+        "final_accuracy".into(),
+        "data_bytes".into(),
+    ]];
+    for &(label, loss, straggler) in &[
+        ("faults-off", 0.0f64, 0.0f64),
+        ("mild loss=0.05 strag=0.1", 0.05, 0.1),
+        ("harsh loss=0.2 strag=0.3", 0.2, 0.3),
+    ] {
+        let off = label == "faults-off";
+        let cfg = ExperimentConfig {
+            strategy: Strategy::MarFl,
+            faults: FaultConfig {
+                loss,
+                straggler_prob: straggler,
+                degrade_prob: if off { 0.0 } else { 0.1 },
+                crash_prob: if off { 0.0 } else { 0.01 },
+                ..FaultConfig::default()
+            },
+            ..base.clone()
+        };
+        let run =
+            timed(label, || Trainer::new(cfg, &rt).unwrap().run().unwrap());
+        let f = run.faults;
+        println!(
+            "    lost {}  retries {}  timeouts {}  degraded {}  crashes {}  \
+             strag {:.1}s  acc {:.3}",
+            f.msgs_lost,
+            f.retries,
+            f.timeouts,
+            f.quorum_degraded_rounds,
+            f.crashes,
+            run.straggler_exposed_s,
+            run.final_accuracy
+        );
+        if off {
+            assert!(
+                !f.any() && run.straggler_exposed_s == 0.0,
+                "faults-off row must report all-zero fault counters"
+            );
+        } else {
+            assert!(f.msgs_lost > 0, "loss must lose messages ({label})");
+            assert!(
+                run.straggler_exposed_s > 0.0,
+                "stragglers must surface exposed time ({label})"
+            );
+        }
+        fault_csv.push(vec![
+            label.to_string(),
+            loss.to_string(),
+            straggler.to_string(),
+            f.msgs_lost.to_string(),
+            f.retries.to_string(),
+            f.timeouts.to_string(),
+            f.quorum_degraded_rounds.to_string(),
+            f.crashes.to_string(),
+            format!("{:.3}", run.straggler_exposed_s),
+            format!("{:.4}", run.final_accuracy),
+            run.comm.data_bytes.to_string(),
+        ]);
+        fault_rows.push(obj(vec![
+            ("scenario", s(label)),
+            ("loss", num(loss)),
+            ("straggler_prob", num(straggler)),
+            ("msgs_lost", num(f.msgs_lost as f64)),
+            ("retries", num(f.retries as f64)),
+            ("timeouts", num(f.timeouts as f64)),
+            ("quorum_degraded_rounds", num(f.quorum_degraded_rounds as f64)),
+            ("crashes", num(f.crashes as f64)),
+            ("straggler_exposed_s", num(run.straggler_exposed_s)),
+            ("final_accuracy", num(run.final_accuracy)),
+            ("data_bytes", num(run.comm.data_bytes as f64)),
+        ]));
+    }
+    emit_csv("fig3_fault_matrix.csv", &fault_csv);
+    let churn_doc = obj(vec![
+        ("bench", s("churn_fault_matrix")),
+        ("peers", num(peers as f64)),
+        ("iterations", num(t as f64)),
+        ("results", arr(fault_rows)),
+    ]);
+    let churn_path = results_dir().join("BENCH_churn.json");
+    write_json(&churn_path, &churn_doc).expect("write BENCH_churn.json");
+    println!("  -> {}", churn_path.display());
 
     // ---- reduce-scatter reliability vs owner-drop rate --------------
     // Chunk ownership makes every member load-bearing: `mar.rs_drop`

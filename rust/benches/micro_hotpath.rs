@@ -335,6 +335,7 @@ fn main() {
                 rng: &mut kd_rng,
                 runtime: Some(&rt),
                 model: &model_h,
+                faults: &marfl::net::FaultConfig::OFF,
             };
             kd.run_mkd(
                 t,

@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState, Theta};
 use crate::metrics::Plane;
+use crate::net::LinkFault;
 
 #[derive(Debug, Default)]
 pub struct AllToAll;
@@ -28,6 +29,9 @@ impl Aggregate for AllToAll {
             return Ok(AggReport::default());
         }
         let bytes = payload_bytes(states, agg);
+        if ctx.faults.enabled() {
+            return self.aggregate_faulty(states, agg, bytes, ctx);
+        }
         // each peer sends its state to n-1 others; peers act in parallel,
         // per-peer sends are sequential over its uplink
         let mut lane_times = Vec::with_capacity(n);
@@ -42,6 +46,83 @@ impl Aggregate for AllToAll {
             states[i].momentum = mom.clone();
         }
         Ok(AggReport { rounds: 1, groups: 1, ..Default::default() })
+    }
+}
+
+impl AllToAll {
+    /// Fault-plan round: crashed peers never broadcast, and a peer whose
+    /// broadcast lost a message (timeout after the retry budget) never
+    /// reaches the full set — it is excluded from the consensus mean and
+    /// stays stale this round, though every attempt and probe is booked.
+    fn aggregate_faulty(
+        &mut self,
+        states: &mut [PeerState],
+        agg: &[usize],
+        bytes: u64,
+        ctx: &mut AggCtx<'_>,
+    ) -> Result<AggReport> {
+        let fp = ctx.faults;
+        let mut report =
+            AggReport { rounds: 1, groups: 1, ..Default::default() };
+        // mid-round crash draws (serial, aggregator order)
+        let mut live: Vec<usize> = Vec::with_capacity(agg.len());
+        if fp.crash_prob > 0.0 {
+            for &i in agg {
+                if ctx.rng.chance(fp.crash_prob) {
+                    report.faults.crashes += 1;
+                } else {
+                    live.push(i);
+                }
+            }
+        } else {
+            live.extend_from_slice(agg);
+        }
+        if live.len() < 2 {
+            return Ok(report);
+        }
+        // per-peer link draws for the n-1 outbound broadcasts
+        let link_on = fp.link_faults_enabled();
+        let links: Vec<LinkFault> = live
+            .iter()
+            .map(|_| {
+                if link_on {
+                    let lf = fp.draw_link(live.len() - 1, ctx.rng);
+                    report.faults.absorb(&lf);
+                    lf
+                } else {
+                    LinkFault::CLEAN
+                }
+            })
+            .collect();
+        let mut lane_times = Vec::with_capacity(live.len());
+        for lf in &links {
+            lane_times.push(ctx.fabric.sequential_faulty(
+                live.len() - 1,
+                bytes,
+                Plane::Data,
+                lf,
+            ));
+        }
+        ctx.clock.parallel(lane_times);
+        let complete: Vec<usize> = live
+            .iter()
+            .enumerate()
+            .filter(|&(j, _)| !links[j].lost())
+            .map(|(_, &i)| i)
+            .collect();
+        if complete.len() < 2 {
+            return Ok(report);
+        }
+        if complete.len() < agg.len() {
+            report.faults.quorum_degraded_rounds += 1;
+        }
+        let (theta, mom) = mean_of(states, &complete);
+        let (theta, mom) = (Theta::new(theta), Theta::new(mom));
+        for &i in &complete {
+            states[i].theta = theta.clone();
+            states[i].momentum = mom.clone();
+        }
+        Ok(report)
     }
 }
 

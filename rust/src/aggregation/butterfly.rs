@@ -19,6 +19,7 @@ use anyhow::Result;
 
 use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState, Theta};
 use crate::metrics::Plane;
+use crate::net::FaultCounters;
 
 #[derive(Debug, Default)]
 pub struct Butterfly;
@@ -45,20 +46,54 @@ impl Aggregate for Butterfly {
         agg: &[usize],
         ctx: &mut AggCtx<'_>,
     ) -> Result<AggReport> {
-        let subset: Vec<usize> = Self::butterfly_subset(agg).to_vec();
+        let fp = ctx.faults;
+        let mut faults = FaultCounters::default();
+        // fault plan: BAR "requires peers to be totally reliable" — a
+        // crashed peer owns a disjoint chunk, so the butterfly re-forms
+        // over the survivors (possibly halving the 2^k subset) before it
+        // starts; draws are gated so the fault-free path is draw-free
+        let live: Vec<usize> = if fp.crash_prob > 0.0 {
+            agg.iter()
+                .copied()
+                .filter(|_| {
+                    if ctx.rng.chance(fp.crash_prob) {
+                        faults.crashes += 1;
+                        false
+                    } else {
+                        true
+                    }
+                })
+                .collect()
+        } else {
+            agg.to_vec()
+        };
+        let subset: Vec<usize> = Self::butterfly_subset(&live).to_vec();
         let n = subset.len();
         if n < 2 {
-            return Ok(AggReport::default());
+            return Ok(AggReport { faults, ..Default::default() });
         }
         let bytes = payload_bytes(states, &subset);
         let rounds = n.trailing_zeros() as usize; // log2(n)
+        let link_on = fp.link_faults_enabled();
         // reduce-scatter: round r exchanges segments of bytes / 2^(r+1);
         // all-gather mirrors it. All pairs act in parallel per round.
+        // Chunk ownership tolerates no loss: senders retry until delivery
+        // (persistent links), so faults cost bytes and time, never chunks.
         for r in 0..rounds {
             let seg = bytes >> (r + 1);
             let mut lane_times = Vec::with_capacity(n);
             for _ in 0..n {
-                lane_times.push(ctx.fabric.send(seg.max(1), Plane::Data));
+                if link_on {
+                    let lf = fp.draw_link_persistent(1, ctx.rng);
+                    faults.absorb(&lf);
+                    lane_times.push(ctx.fabric.send_faulty(
+                        seg.max(1),
+                        Plane::Data,
+                        &lf,
+                    ));
+                } else {
+                    lane_times.push(ctx.fabric.send(seg.max(1), Plane::Data));
+                }
             }
             ctx.clock.parallel(lane_times);
         }
@@ -66,7 +101,17 @@ impl Aggregate for Butterfly {
             let seg = bytes >> (r + 1);
             let mut lane_times = Vec::with_capacity(n);
             for _ in 0..n {
-                lane_times.push(ctx.fabric.send(seg.max(1), Plane::Data));
+                if link_on {
+                    let lf = fp.draw_link_persistent(1, ctx.rng);
+                    faults.absorb(&lf);
+                    lane_times.push(ctx.fabric.send_faulty(
+                        seg.max(1),
+                        Plane::Data,
+                        &lf,
+                    ));
+                } else {
+                    lane_times.push(ctx.fabric.send(seg.max(1), Plane::Data));
+                }
             }
             ctx.clock.parallel(lane_times);
         }
@@ -77,7 +122,12 @@ impl Aggregate for Butterfly {
             states[i].theta = theta.clone();
             states[i].momentum = mom.clone();
         }
-        Ok(AggReport { rounds: 2 * rounds, groups: 1, ..Default::default() })
+        Ok(AggReport {
+            rounds: 2 * rounds,
+            groups: 1,
+            faults,
+            ..Default::default()
+        })
     }
 }
 

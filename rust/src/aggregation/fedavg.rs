@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState, Theta};
 use crate::metrics::Plane;
+use crate::net::LinkFault;
 
 #[derive(Debug, Default)]
 pub struct FedAvgServer;
@@ -29,6 +30,9 @@ impl Aggregate for FedAvgServer {
             return Ok(AggReport::default());
         }
         let bytes = payload_bytes(states, agg);
+        if ctx.faults.enabled() {
+            return self.aggregate_faulty(states, agg, bytes, ctx);
+        }
         // N uploads through the server's ingress link (sequential at the
         // server — the bottleneck), then the average, then N broadcasts.
         let upload = ctx.fabric.sequential(agg.len(), bytes, Plane::Data);
@@ -43,6 +47,85 @@ impl Aggregate for FedAvgServer {
             states[i].momentum = mom.clone();
         }
         Ok(AggReport { rounds: 1, groups: 1, ..Default::default() })
+    }
+}
+
+impl FedAvgServer {
+    /// Fault-plan round: crashed clients never contact the server, lost
+    /// uploads (timeouts after the retry budget) are excluded from the
+    /// mean, and a lost broadcast leaves that client stale — every
+    /// attempt and probe is booked either way. Only reached when the
+    /// plan is live; the fault-free path above stays draw-free.
+    fn aggregate_faulty(
+        &mut self,
+        states: &mut [PeerState],
+        agg: &[usize],
+        bytes: u64,
+        ctx: &mut AggCtx<'_>,
+    ) -> Result<AggReport> {
+        let fp = ctx.faults;
+        let mut report =
+            AggReport { rounds: 1, groups: 1, ..Default::default() };
+        // mid-round crash draws (serial, aggregator order)
+        let mut live: Vec<usize> = Vec::with_capacity(agg.len());
+        if fp.crash_prob > 0.0 {
+            for &i in agg {
+                if ctx.rng.chance(fp.crash_prob) {
+                    report.faults.crashes += 1;
+                } else {
+                    live.push(i);
+                }
+            }
+        } else {
+            live.extend_from_slice(agg);
+        }
+        let link_on = fp.link_faults_enabled();
+        // uploads: one message per live client through the server's
+        // sequential ingress link
+        let mut upload = 0.0f64;
+        let mut received: Vec<usize> = Vec::with_capacity(live.len());
+        for &i in &live {
+            let lf = if link_on {
+                let lf = fp.draw_link(1, ctx.rng);
+                report.faults.absorb(&lf);
+                lf
+            } else {
+                LinkFault::CLEAN
+            };
+            upload += ctx.fabric.send_faulty(bytes, Plane::Data, &lf);
+            if !lf.lost() {
+                received.push(i);
+            }
+        }
+        if received.len() < 2 {
+            // not enough surviving uploads to average
+            ctx.clock.advance(upload);
+            return Ok(report);
+        }
+        if received.len() < agg.len() {
+            report.faults.quorum_degraded_rounds += 1;
+        }
+        let (theta, mom) = mean_of(states, &received);
+        let (theta, mom) = (Theta::new(theta), Theta::new(mom));
+        // broadcasts: every live client gets a download attempt; a lost
+        // broadcast leaves that client on its pre-round state
+        let mut broadcast = 0.0f64;
+        for &i in &live {
+            let lf = if link_on {
+                let lf = fp.draw_link(1, ctx.rng);
+                report.faults.absorb(&lf);
+                lf
+            } else {
+                LinkFault::CLEAN
+            };
+            broadcast += ctx.fabric.send_faulty(bytes, Plane::Data, &lf);
+            if !lf.lost() {
+                states[i].theta = theta.clone();
+                states[i].momentum = mom.clone();
+            }
+        }
+        ctx.clock.advance(upload + broadcast);
+        Ok(report)
     }
 }
 

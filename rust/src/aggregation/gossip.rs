@@ -16,6 +16,7 @@ use anyhow::Result;
 
 use super::{payload_bytes, AggCtx, AggReport, Aggregate, PeerState};
 use crate::metrics::Plane;
+use crate::net::{FaultCounters, LinkFault};
 
 #[derive(Debug)]
 pub struct Gossip {
@@ -40,9 +41,29 @@ impl Aggregate for Gossip {
         agg: &[usize],
         ctx: &mut AggCtx<'_>,
     ) -> Result<AggReport> {
+        let fp = ctx.faults;
+        let mut faults = FaultCounters::default();
+        // fault plan: crashed peers sit the round out entirely (draws
+        // gated — the fault-free path consumes no extra randomness)
+        let live: Vec<usize> = if fp.crash_prob > 0.0 {
+            agg.iter()
+                .copied()
+                .filter(|_| {
+                    if ctx.rng.chance(fp.crash_prob) {
+                        faults.crashes += 1;
+                        false
+                    } else {
+                        true
+                    }
+                })
+                .collect()
+        } else {
+            agg.to_vec()
+        };
+        let agg = &live[..];
         let n = agg.len();
         if n < 2 {
-            return Ok(AggReport::default());
+            return Ok(AggReport { faults, ..Default::default() });
         }
         let bytes = payload_bytes(states, agg);
         // pull targets are drawn serially (deterministic rng schedule),
@@ -56,6 +77,25 @@ impl Aggregate for Gossip {
                     .collect()
             })
             .collect();
+        // per-pull link draws (serial, pull order): a pull whose
+        // transfer times out books its attempts and probes but merges
+        // nothing — epidemic spread just misses that edge this round
+        let pull_links: Vec<Vec<LinkFault>> = if fp.link_faults_enabled() {
+            pulls
+                .iter()
+                .map(|ps| {
+                    ps.iter()
+                        .map(|_| {
+                            let lf = fp.draw_link(1, ctx.rng);
+                            faults.absorb(&lf);
+                            lf
+                        })
+                        .collect()
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         // snapshot: pulls within one round all see round-start models —
         // shared handles, zero copies; the per-peer make_mut below
         // detaches each merger from its own snapshot entry on first write
@@ -67,8 +107,16 @@ impl Aggregate for Gossip {
         let lane_times =
             crate::exec::par_map_at(states, agg, |slot, st| {
                 let mut lane = 0.0;
-                for &other in &pulls[slot] {
-                    lane += fabric.send(bytes, Plane::Data);
+                for (pi, &other) in pulls[slot].iter().enumerate() {
+                    match pull_links.get(slot).map(|ls| ls[pi]) {
+                        Some(lf) => {
+                            lane += fabric.send_faulty(bytes, Plane::Data, &lf);
+                            if lf.lost() {
+                                continue; // booked, never arrived
+                            }
+                        }
+                        None => lane += fabric.send(bytes, Plane::Data),
+                    }
                     let (ot, om) = &snapshot[other];
                     // merge: equal-weight average of own and pulled state
                     for (dst, &v) in st.theta.make_mut().iter_mut().zip(ot) {
@@ -81,7 +129,7 @@ impl Aggregate for Gossip {
                 lane
             })?;
         ctx.clock.parallel(lane_times);
-        Ok(AggReport { rounds: 1, groups: n, ..Default::default() })
+        Ok(AggReport { rounds: 1, groups: n, faults, ..Default::default() })
     }
 }
 

@@ -34,7 +34,7 @@ use anyhow::Result;
 
 use crate::metrics::{ExchangePhase, Plane};
 use crate::models::ModelMeta;
-use crate::net::Fabric;
+use crate::net::{Fabric, FaultConfig, FaultCounters, LinkFault};
 pub use crate::params::Theta;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
@@ -81,6 +81,9 @@ pub struct AggCtx<'a> {
     /// `group_mean` artifact; otherwise the native f64 path is used.
     pub runtime: Option<&'a Runtime>,
     pub model: &'a ModelMeta,
+    /// Fault-injection plan (net::faults). `&FaultConfig::OFF` disables
+    /// injection — the default everywhere faults are not under test.
+    pub faults: &'a FaultConfig,
 }
 
 /// What an aggregation did (for ledger-independent assertions).
@@ -100,6 +103,9 @@ pub struct AggReport {
     /// round's matchmaking, spending one unit of `mar.rs_retry_budget`
     /// (0 with the default budget of 0, where every drop falls back)
     pub rs_retries: usize,
+    /// fault-injection outcomes for this aggregation (all zero when the
+    /// plan is off)
+    pub faults: FaultCounters,
 }
 
 /// An aggregation technique. `agg` lists the indices of peers in `A_t`
@@ -572,6 +578,96 @@ pub fn book_reduce_scatter_fabric(
     ExchangeTiming { reduce_scatter_s: rs, all_gather_s: ag }
 }
 
+/// [`book_reduce_scatter_fabric`] under per-member pre-drawn links.
+/// Degradation multiplies each member's phase durations; retry
+/// surcharges (extra chunk retransmissions, their control-plane probes,
+/// and the timeout/backoff penalty) book on the reduce-scatter phase, a
+/// retried chunk costing the balanced `bytes/k` floor — keeping the
+/// coordinator's closed-form phase-byte assertion exact. Links with
+/// timeouts must not reach this booker: a member whose message died for
+/// good leaves the group through the quorum path instead. All-clean
+/// links delegate to [`book_reduce_scatter_fabric`] bit-exactly.
+pub fn book_reduce_scatter_faulty(
+    links: &[LinkFault],
+    bytes: u64,
+    fabric: &Fabric,
+) -> ExchangeTiming {
+    if links.iter().all(LinkFault::is_clean) {
+        return book_reduce_scatter_fabric(links.len(), bytes, fabric);
+    }
+    let group_len = links.len();
+    if group_len < 2 {
+        return ExchangeTiming::default();
+    }
+    let k = group_len as u64;
+    let chunk = |i: u64| bytes / k + u64::from(i < bytes % k);
+    let retry_chunk = bytes / k;
+    let ledger = fabric.ledger();
+    let mut rs = 0.0f64;
+    for (j, f) in links.iter().enumerate() {
+        debug_assert!(!f.lost(), "timed-out member reached the RS booker");
+        let payload = bytes - chunk(j as u64);
+        ledger.record_phase(
+            ExchangePhase::ReduceScatter,
+            (group_len - 1) as u64,
+            payload,
+        );
+        let mut t = (group_len - 1) as f64 * fabric.latency * f.lat_mult
+            + payload as f64 / (fabric.bandwidth * f.bw_mult);
+        if f.retries > 0 {
+            ledger.record_phase(
+                ExchangePhase::ReduceScatter,
+                f.retries,
+                f.retries * retry_chunk,
+            );
+            ledger.record_many(
+                Plane::Control,
+                f.retries,
+                f.retries * crate::net::RETRY_CTRL_BYTES,
+            );
+            t += f.retries as f64 * fabric.latency * f.lat_mult
+                + (f.retries * retry_chunk) as f64
+                    / (fabric.bandwidth * f.bw_mult);
+        }
+        t += f.penalty_s;
+        rs = rs.max(t);
+    }
+    let mut ag = 0.0f64;
+    for (i, f) in links.iter().enumerate() {
+        let payload = (k - 1) * chunk(i as u64);
+        ledger.record_phase(
+            ExchangePhase::AllGather,
+            (group_len - 1) as u64,
+            payload,
+        );
+        let t = (group_len - 1) as f64 * fabric.latency * f.lat_mult
+            + payload as f64 / (fabric.bandwidth * f.bw_mult);
+        ag = ag.max(t);
+    }
+    ExchangeTiming { reduce_scatter_s: rs, all_gather_s: ag }
+}
+
+/// Full-gather group exchange under per-member pre-drawn links: each
+/// member's lane books through [`Fabric::sequential_faulty`] (clean
+/// links delegate to the exact legacy path); the exchange lasts as long
+/// as the slowest member.
+pub fn book_full_gather_faulty(
+    links: &[LinkFault],
+    bytes: u64,
+    fabric: &Fabric,
+) -> f64 {
+    if links.len() < 2 {
+        return 0.0;
+    }
+    let mut per_member = 0.0f64;
+    for f in links {
+        per_member = fabric
+            .sequential_faulty(links.len() - 1, bytes, Plane::Data, f)
+            .max(per_member);
+    }
+    per_member
+}
+
 /// Book one group's exchange on the fabric; returns the group's simulated
 /// duration (each member's sends are sequential; members operate in
 /// parallel). Takes `&Fabric` directly so group-parallel lanes can book
@@ -678,6 +774,7 @@ pub(crate) mod test_support {
                 rng: &mut self.rng,
                 runtime: None,
                 model: &self.model,
+                faults: &FaultConfig::OFF,
             }
         }
     }

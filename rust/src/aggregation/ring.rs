@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use super::{payload_bytes, AggCtx, AggReport, Aggregate, PeerState};
 use crate::metrics::Plane;
+use crate::net::FaultCounters;
 
 #[derive(Debug, Default)]
 pub struct RingRdfl;
@@ -28,9 +29,32 @@ impl Aggregate for RingRdfl {
         agg: &[usize],
         ctx: &mut AggCtx<'_>,
     ) -> Result<AggReport> {
+        let fp = ctx.faults;
+        let mut faults = FaultCounters::default();
+        // fault plan: a crashed peer would stall the walk, so the ring
+        // re-forms from the survivors before it starts — mid-walk the
+        // closed topology has no recovery, which is exactly the
+        // churn-intolerance the paper cites (draws gated: the fault-free
+        // path consumes no randomness)
+        let live: Vec<usize> = if fp.crash_prob > 0.0 {
+            agg.iter()
+                .copied()
+                .filter(|_| {
+                    if ctx.rng.chance(fp.crash_prob) {
+                        faults.crashes += 1;
+                        false
+                    } else {
+                        true
+                    }
+                })
+                .collect()
+        } else {
+            agg.to_vec()
+        };
+        let agg = &live[..];
         let n = agg.len();
         if n < 2 {
-            return Ok(AggReport::default());
+            return Ok(AggReport { faults, ..Default::default() });
         }
         let p = states[agg[0]].theta.len();
         let q = states[agg[0]].momentum.len(); // may exceed p under DP
@@ -50,10 +74,21 @@ impl Aggregate for RingRdfl {
         }
         // N-1 ring steps: every peer sends its *current carried state* to
         // its successor; all links are active in parallel per step
+        let link_on = fp.link_faults_enabled();
         for step in 1..n {
             let mut lane_times = Vec::with_capacity(n);
             for _ in 0..n {
-                lane_times.push(ctx.fabric.send(bytes, Plane::Data));
+                if link_on {
+                    // the ring cannot drop a message — the sender retries
+                    // until delivery (persistent link), so losses cost
+                    // retransmitted bytes and backoff time, never data
+                    let lf = fp.draw_link_persistent(1, ctx.rng);
+                    faults.absorb(&lf);
+                    lane_times
+                        .push(ctx.fabric.send_faulty(bytes, Plane::Data, &lf));
+                } else {
+                    lane_times.push(ctx.fabric.send(bytes, Plane::Data));
+                }
             }
             ctx.clock.parallel(lane_times);
             // slot r receives the original state of the peer (r - step)
@@ -76,7 +111,7 @@ impl Aggregate for RingRdfl {
             states[peer].momentum =
                 sum_m[slot].iter().map(|&s| (s * inv) as f32).collect();
         }
-        Ok(AggReport { rounds: n - 1, groups: 1, ..Default::default() })
+        Ok(AggReport { rounds: n - 1, groups: 1, faults, ..Default::default() })
     }
 }
 

@@ -15,6 +15,7 @@ use anyhow::Result;
 
 use super::{AggCtx, AggReport, Aggregate, PeerState};
 use crate::metrics::Plane;
+use crate::net::{FaultCounters, LinkFault};
 use crate::rng::Rng;
 
 /// Keep the `ratio` largest-magnitude entries of `v` (others zeroed).
@@ -76,8 +77,28 @@ impl Aggregate for Saps {
         agg: &[usize],
         ctx: &mut AggCtx<'_>,
     ) -> Result<AggReport> {
+        let fp = ctx.faults;
+        let mut faults = FaultCounters::default();
+        // fault plan: crashed peers are never paired (draws gated — the
+        // fault-free path consumes no extra randomness)
+        let live: Vec<usize> = if fp.crash_prob > 0.0 {
+            agg.iter()
+                .copied()
+                .filter(|_| {
+                    if ctx.rng.chance(fp.crash_prob) {
+                        faults.crashes += 1;
+                        false
+                    } else {
+                        true
+                    }
+                })
+                .collect()
+        } else {
+            agg.to_vec()
+        };
+        let agg = &live[..];
         if agg.len() < 2 {
-            return Ok(AggReport::default());
+            return Ok(AggReport { faults, ..Default::default() });
         }
         let pairs = self.pair(agg, ctx.rng);
         let p = states[agg[0]].theta.len();
@@ -88,13 +109,42 @@ impl Aggregate for Saps {
         // concurrently on the exec pool
         let groups: Vec<Vec<usize>> =
             pairs.iter().map(|&(a, b)| vec![a, b]).collect();
+        // per-direction link draws (serial, pair order): a direction
+        // whose sparse packet times out is booked but never merged
+        let pair_links: Vec<(LinkFault, LinkFault)> =
+            if fp.link_faults_enabled() {
+                pairs
+                    .iter()
+                    .map(|_| {
+                        let ab = fp.draw_link(1, ctx.rng);
+                        faults.absorb(&ab);
+                        let ba = fp.draw_link(1, ctx.rng);
+                        faults.absorb(&ba);
+                        (ab, ba)
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
         let ratio = self.ratio;
         let fabric = ctx.fabric;
         let lane_times =
-            crate::exec::par_disjoint_map(states, &groups, |_, views| {
+            crate::exec::par_disjoint_map(states, &groups, |gi, views| {
                 // bidirectional sparsified exchange
-                let t = fabric.send(bytes, Plane::Data)
-                    + fabric.send(bytes, Plane::Data);
+                let (got_ab, got_ba, t) = match pair_links.get(gi) {
+                    Some(&(ab, ba)) => (
+                        !ab.lost(),
+                        !ba.lost(),
+                        fabric.send_faulty(bytes, Plane::Data, &ab)
+                            + fabric.send_faulty(bytes, Plane::Data, &ba),
+                    ),
+                    None => (
+                        true,
+                        true,
+                        fabric.send(bytes, Plane::Data)
+                            + fabric.send(bytes, Plane::Data),
+                    ),
+                };
                 let (va, vb) = views.split_at_mut(1);
                 let a = &mut *va[0];
                 let b = &mut *vb[0];
@@ -105,14 +155,27 @@ impl Aggregate for Saps {
                 // merge: average own dense state with partner's sparse one
                 // at the transmitted coordinates (SAPS-style partial
                 // merge). make_mut detaches any shared storage first.
-                merge_sparse(a.theta.make_mut(), &sb_t);
-                merge_sparse(b.theta.make_mut(), &sa_t);
-                merge_sparse(a.momentum.make_mut(), &sb_m);
-                merge_sparse(b.momentum.make_mut(), &sa_m);
+                if got_ba {
+                    merge_sparse(a.theta.make_mut(), &sb_t);
+                }
+                if got_ab {
+                    merge_sparse(b.theta.make_mut(), &sa_t);
+                }
+                if got_ba {
+                    merge_sparse(a.momentum.make_mut(), &sb_m);
+                }
+                if got_ab {
+                    merge_sparse(b.momentum.make_mut(), &sa_m);
+                }
                 t
             })?;
         ctx.clock.parallel(lane_times);
-        Ok(AggReport { rounds: 1, groups: pairs.len(), ..Default::default() })
+        Ok(AggReport {
+            rounds: 1,
+            groups: pairs.len(),
+            faults,
+            ..Default::default()
+        })
     }
 }
 

@@ -14,6 +14,8 @@ use anyhow::{bail, Context, Result};
 
 use toml_lite::{parse_value, Value};
 
+use crate::net::FaultConfig;
+
 /// Aggregation technique (paper baselines + contribution).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
@@ -174,6 +176,8 @@ pub struct ExperimentConfig {
     pub link_bandwidth: f64,
     /// link latency (s)
     pub link_latency: f64,
+    /// fault-injection plan (net::faults) — all knobs default off
+    pub faults: FaultConfig,
     /// stop once this test accuracy is reached (0 disables)
     pub target_accuracy: f64,
 }
@@ -209,6 +213,7 @@ impl Default for ExperimentConfig {
             // 100 Mbit/s wireless-ish link, 20 ms latency
             link_bandwidth: 12.5e6,
             link_latency: 0.02,
+            faults: FaultConfig::default(),
             target_accuracy: 0.0,
         }
     }
@@ -325,6 +330,19 @@ impl ExperimentConfig {
             "dp.eta_u" => self.dp.eta_u = f64_of(v)?,
             "dp.beta" => self.dp.beta = f64_of(v)?,
             "dp.delta" => self.dp.delta = f64_of(v)?,
+            "faults.loss" => self.faults.loss = f64_of(v)?,
+            "faults.degrade_prob" => self.faults.degrade_prob = f64_of(v)?,
+            "faults.degrade_bw" => self.faults.degrade_bw = f64_of(v)?,
+            "faults.degrade_lat" => self.faults.degrade_lat = f64_of(v)?,
+            "faults.straggler_prob" => self.faults.straggler_prob = f64_of(v)?,
+            "faults.straggler_mult" => self.faults.straggler_mult = f64_of(v)?,
+            "faults.crash_prob" => self.faults.crash_prob = f64_of(v)?,
+            "faults.max_retries" => {
+                self.faults.max_retries = usize_of(v)? as u32
+            }
+            "faults.timeout_s" => self.faults.timeout_s = f64_of(v)?,
+            "faults.backoff_s" => self.faults.backoff_s = f64_of(v)?,
+            "faults.quorum_min" => self.faults.quorum_min = usize_of(v)?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -357,6 +375,32 @@ impl ExperimentConfig {
         }
         if self.churn_model == "markov" && self.markov_p_up <= 0.0 {
             bail!("markov churn needs p_up > 0");
+        }
+        let f = &self.faults;
+        for (name, p) in [
+            ("faults.loss", f.loss),
+            ("faults.degrade_prob", f.degrade_prob),
+            ("faults.straggler_prob", f.straggler_prob),
+            ("faults.crash_prob", f.crash_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("{name} must be in [0, 1]");
+            }
+        }
+        if !(f.degrade_bw > 0.0 && f.degrade_bw <= 1.0) {
+            bail!("faults.degrade_bw must be in (0, 1]");
+        }
+        if f.degrade_lat < 1.0 {
+            bail!("faults.degrade_lat must be >= 1");
+        }
+        if f.straggler_mult < 1.0 {
+            bail!("faults.straggler_mult must be >= 1");
+        }
+        if f.quorum_min < 2 {
+            bail!("faults.quorum_min must be >= 2");
+        }
+        if f.timeout_s < 0.0 || f.backoff_s < 0.0 {
+            bail!("faults.timeout_s / backoff_s must be >= 0");
         }
         Ok(())
     }
@@ -442,6 +486,35 @@ mod tests {
     }
 
     #[test]
+    fn fault_knobs_apply_and_validate() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.faults.enabled());
+        c.apply_overrides(&[
+            "faults.loss=0.05".into(),
+            "faults.degrade_prob=0.1".into(),
+            "faults.straggler_prob=0.2".into(),
+            "faults.straggler_mult=6.0".into(),
+            "faults.crash_prob=0.02".into(),
+            "faults.max_retries=5".into(),
+            "faults.quorum_min=3".into(),
+        ])
+        .unwrap();
+        assert!(c.faults.enabled());
+        assert_eq!(c.faults.loss, 0.05);
+        assert_eq!(c.faults.max_retries, 5);
+        assert_eq!(c.faults.quorum_min, 3);
+        assert!(c.validate().is_ok());
+        c.faults.loss = 1.5;
+        assert!(c.validate().is_err());
+        c.faults.loss = 0.05;
+        c.faults.quorum_min = 1;
+        assert!(c.validate().is_err());
+        c.faults.quorum_min = 2;
+        c.faults.degrade_bw = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
     fn unknown_key_rejected() {
         let mut c = ExperimentConfig::default();
         assert!(c.apply_overrides(&["bogus=1".into()]).is_err());
@@ -465,6 +538,7 @@ mod tests {
             "configs/fig11_approx.toml",
             "configs/dp_20ng.toml",
             "configs/mkd_20ng.toml",
+            "configs/churn_markov.toml",
         ] {
             let cfg = ExperimentConfig::load(
                 Path::new(preset),
@@ -487,6 +561,13 @@ mod tests {
         .unwrap();
         assert!(kd.kd.enabled);
         assert_eq!(kd.kd.k_iterations, 6);
+        let churn = ExperimentConfig::load(
+            Path::new("configs/churn_markov.toml"),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(churn.churn_model, "markov");
+        assert!(churn.faults.enabled());
     }
 
     #[test]

@@ -31,14 +31,15 @@ use anyhow::Result;
 use super::group_key::{grid_keys, perfect_grid, random_keys, GroupKey};
 use crate::aggregation::{
     average_group, average_group_chunked, average_group_native, average_views,
-    average_views_chunked, book_group_exchange_fabric, book_group_exchange_mode,
-    book_reduce_scatter_fabric, payload_bytes, AggCtx, AggReport, Aggregate,
+    average_views_chunked, book_full_gather_faulty, book_group_exchange_fabric,
+    book_group_exchange_mode, book_reduce_scatter_fabric,
+    book_reduce_scatter_faulty, payload_bytes, AggCtx, AggReport, Aggregate,
     ExchangeTiming, GroupExchange, PeerState,
 };
 use crate::exec;
 use crate::dht::{decode_peer, encode_peer, Key, SimDht};
 use crate::metrics::CommLedger;
-use crate::net::Fabric;
+use crate::net::{Fabric, FaultCounters, LinkFault};
 use crate::rng::Rng;
 
 /// MAR-FL's aggregator: owns the DHT control plane and the group-key
@@ -77,6 +78,11 @@ pub struct MarAggregator {
     node_ids: Vec<Key>,
     /// FL-iteration counter (scopes DHT announcement keys)
     iteration: usize,
+    /// peers (indices into `states`) that crash-faulted during the most
+    /// recent `aggregate` call — the Trainer collects them via
+    /// [`Self::take_crashed`] to mark them stale / push their Markov
+    /// chains Down
+    crashed_last: Vec<usize>,
 }
 
 impl MarAggregator {
@@ -107,6 +113,7 @@ impl MarAggregator {
             dht,
             node_ids,
             iteration: 0,
+            crashed_last: Vec::new(),
         }
     }
 
@@ -135,6 +142,13 @@ impl MarAggregator {
     pub fn with_parallel(mut self, parallel: bool) -> Self {
         self.parallel = parallel;
         self
+    }
+
+    /// Drain the peers that crash-faulted during the last `aggregate`
+    /// call (indices into the `states` slice). Empty unless the fault
+    /// plan's `crash_prob` is active.
+    pub fn take_crashed(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.crashed_last)
     }
 
     /// DHT-mediated matchmaking for one round. `positions[i]` announces
@@ -262,87 +276,136 @@ impl MarAggregator {
     }
 }
 
-/// Pre-drawn owner-drop outcome for one group in one round — schedule
-/// state, decided serially (RNG + retry-budget counter) before the group
+/// Pre-drawn outcome for one group in one round — schedule state,
+/// decided serially (RNG + retry-budget counter) before the group
 /// fan-out so parallel lanes stay bit-identical to the serial reference.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum DropPlan {
-    /// no owner dropped: normal exchange
+/// Generalizes the original chunk-owner `DropPlan` to arbitrary member
+/// loss: the legacy `rs_drop` victim, fault-plan crashes, and messages
+/// that exhausted their retry budget all land in the same lost set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum GroupPlan {
+    /// nobody lost: normal exchange
     Keep,
-    /// victim chunk index; survivors redo the exchange as a full gather
-    /// (the seed behavior — and the terminal case once the retry budget
-    /// is spent or no later round remains to re-form in)
-    Fallback(usize),
-    /// victim chunk index; survivors abort after the timeout and
+    /// lost chunk indices; survivors abort after the timeout and
     /// re-form via the next round's matchmaking (`mar.rs_retry_budget`)
-    Retry(usize),
+    Retry(Vec<usize>),
+    /// lost chunk indices; the surviving quorum redoes the exchange as
+    /// a renormalized full gather among themselves (the seed's
+    /// single-victim `Fallback`, generalized)
+    Degraded(Vec<usize>),
+    /// lost chunk indices left fewer than `quorum_min` survivors: the
+    /// group times out without averaging (fault plan only — the legacy
+    /// path always proceeds, matching seed behavior)
+    Abort(Vec<usize>),
 }
 
-impl DropPlan {
-    fn victim(self) -> Option<usize> {
+impl GroupPlan {
+    fn lost(&self) -> &[usize] {
         match self {
-            DropPlan::Keep => None,
-            DropPlan::Fallback(v) | DropPlan::Retry(v) => Some(v),
+            GroupPlan::Keep => &[],
+            GroupPlan::Retry(l) | GroupPlan::Degraded(l) | GroupPlan::Abort(l) => l,
         }
     }
 }
 
+/// Timing of a lane that lost members: the survivors' timeout (one link
+/// latency) plus an optional recovery gather, attributed to the phase
+/// the exchange mode makes legible (RS lanes surface the timeout as
+/// reduce-scatter time — the seed's convention; full-gather lanes have
+/// no RS phase so everything books as gather time).
+fn lossy_timing(exchange: GroupExchange, latency: f64, gather_s: f64) -> ExchangeTiming {
+    match exchange {
+        GroupExchange::ReduceScatter => ExchangeTiming {
+            reduce_scatter_s: latency,
+            all_gather_s: gather_s,
+        },
+        GroupExchange::FullGather => ExchangeTiming {
+            reduce_scatter_s: 0.0,
+            all_gather_s: latency + gather_s,
+        },
+    }
+}
+
+/// Per-survivor links for a degraded recovery gather: degradation
+/// multipliers persist, loss outcomes are not re-rolled (stops the
+/// cascade). Empty input (faults off) stays empty.
+fn survivor_links(links: &[LinkFault], lost: &[usize]) -> Vec<LinkFault> {
+    links
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !lost.contains(i))
+        .map(|(_, f)| f.degraded_only())
+        .collect()
+}
+
 /// One group's exchange + averaging — the parallel lane body, over the
-/// exclusive member views `exec::par_disjoint_map` hands out. `drop`
-/// carries the pre-drawn owner-drop plan; `stripe_par` fans owner
-/// stripes across the pool when the round's group count underfills it.
+/// exclusive member views `exec::par_disjoint_map` hands out. `plan`
+/// carries the pre-drawn loss plan and `links` the members' pre-drawn
+/// link faults (empty when link faults are off — the bookers then take
+/// their exact legacy paths); `stripe_par` fans owner stripes across the
+/// pool when the round's group count underfills it.
 fn exchange_lane(
     views: &mut [&mut PeerState],
-    drop: DropPlan,
+    plan: &GroupPlan,
+    links: &[LinkFault],
     exchange: GroupExchange,
     bytes: u64,
     fabric: &Fabric,
     stripe_par: bool,
 ) -> ExchangeTiming {
-    match (exchange, drop) {
-        (GroupExchange::ReduceScatter, DropPlan::Keep) => {
-            let timing = book_reduce_scatter_fabric(views.len(), bytes, fabric);
+    match (exchange, plan) {
+        (GroupExchange::ReduceScatter, GroupPlan::Keep) => {
+            let timing = if links.is_empty() {
+                book_reduce_scatter_fabric(views.len(), bytes, fabric)
+            } else {
+                book_reduce_scatter_faulty(links, bytes, fabric)
+            };
             average_views_chunked(views, stripe_par);
             timing
         }
-        (GroupExchange::ReduceScatter, DropPlan::Retry(_)) => {
-            // a chunk owner vanished but the retry budget covers it: the
-            // survivors time out on the missing stripe (one link
-            // latency) and defer to the next round's matchmaking — no
-            // averaging, no recovery bytes
-            ExchangeTiming { reduce_scatter_s: fabric.latency, all_gather_s: 0.0 }
+        (GroupExchange::FullGather, GroupPlan::Keep) => {
+            let t = if links.is_empty() {
+                book_group_exchange_fabric(
+                    views.len(),
+                    bytes,
+                    GroupExchange::FullGather,
+                    fabric,
+                )
+            } else {
+                book_full_gather_faulty(links, bytes, fabric)
+            };
+            average_views(views);
+            ExchangeTiming { reduce_scatter_s: 0.0, all_gather_s: t }
         }
-        (GroupExchange::ReduceScatter, DropPlan::Fallback(victim)) => {
-            // a chunk owner vanished: the survivors time out on the
-            // missing stripe (one link latency) and redo the exchange as
-            // a full gather among themselves; the victim goes stale
+        (_, GroupPlan::Retry(_)) | (_, GroupPlan::Abort(_)) => {
+            // members vanished but nobody averages: the survivors time
+            // out on the missing traffic (one link latency) and either
+            // defer to the next round's matchmaking (Retry) or sit the
+            // round out below quorum (Abort) — no recovery bytes
+            lossy_timing(exchange, fabric.latency, 0.0)
+        }
+        (_, GroupPlan::Degraded(lost)) => {
+            // members vanished: the survivors time out on the missing
+            // traffic (one link latency) and redo the exchange as a
+            // full gather among themselves; the lost peers go stale
             let mut survivors: Vec<&mut PeerState> = views
                 .iter_mut()
                 .enumerate()
-                .filter(|(i, _)| *i != victim)
+                .filter(|(i, _)| !lost.contains(i))
                 .map(|(_, v)| &mut **v)
                 .collect();
-            let t = book_group_exchange_fabric(
-                survivors.len(),
-                bytes,
-                GroupExchange::FullGather,
-                fabric,
-            );
+            let t = if links.is_empty() {
+                book_group_exchange_fabric(
+                    survivors.len(),
+                    bytes,
+                    GroupExchange::FullGather,
+                    fabric,
+                )
+            } else {
+                book_full_gather_faulty(&survivor_links(links, lost), bytes, fabric)
+            };
             average_views(&mut survivors);
-            ExchangeTiming {
-                reduce_scatter_s: fabric.latency,
-                all_gather_s: t,
-            }
-        }
-        (GroupExchange::FullGather, _) => {
-            let t = book_group_exchange_fabric(
-                views.len(),
-                bytes,
-                GroupExchange::FullGather,
-                fabric,
-            );
-            average_views(views);
-            ExchangeTiming { reduce_scatter_s: 0.0, all_gather_s: t }
+            lossy_timing(exchange, fabric.latency, t)
         }
     }
 }
@@ -353,50 +416,62 @@ fn exchange_lane(
 fn exchange_lane_serial(
     states: &mut [PeerState],
     members: &[usize],
-    drop: DropPlan,
+    plan: &GroupPlan,
+    links: &[LinkFault],
     exchange: GroupExchange,
     bytes: u64,
     ctx: &mut AggCtx<'_>,
 ) -> Result<ExchangeTiming> {
-    Ok(match (exchange, drop) {
-        (GroupExchange::ReduceScatter, DropPlan::Keep) => {
-            let timing =
-                book_reduce_scatter_fabric(members.len(), bytes, ctx.fabric);
+    Ok(match (exchange, plan) {
+        (GroupExchange::ReduceScatter, GroupPlan::Keep) => {
+            let timing = if links.is_empty() {
+                book_reduce_scatter_fabric(members.len(), bytes, ctx.fabric)
+            } else {
+                book_reduce_scatter_faulty(links, bytes, ctx.fabric)
+            };
             average_group_chunked(states, members);
             timing
         }
-        (GroupExchange::ReduceScatter, DropPlan::Retry(_)) => ExchangeTiming {
-            reduce_scatter_s: ctx.fabric.latency,
-            all_gather_s: 0.0,
-        },
-        (GroupExchange::ReduceScatter, DropPlan::Fallback(victim)) => {
+        (GroupExchange::FullGather, GroupPlan::Keep) => {
+            let t = if links.is_empty() {
+                book_group_exchange_mode(
+                    members.len(),
+                    bytes,
+                    GroupExchange::FullGather,
+                    ctx,
+                )
+            } else {
+                book_full_gather_faulty(links, bytes, ctx.fabric)
+            };
+            average_group(states, members, ctx)?;
+            ExchangeTiming { reduce_scatter_s: 0.0, all_gather_s: t }
+        }
+        (_, GroupPlan::Retry(_)) | (_, GroupPlan::Abort(_)) => {
+            lossy_timing(exchange, ctx.fabric.latency, 0.0)
+        }
+        (_, GroupPlan::Degraded(lost)) => {
             let survivors: Vec<usize> = members
                 .iter()
                 .enumerate()
-                .filter(|(i, _)| *i != victim)
+                .filter(|(i, _)| !lost.contains(i))
                 .map(|(_, &peer)| peer)
                 .collect();
-            let t = book_group_exchange_fabric(
-                survivors.len(),
-                bytes,
-                GroupExchange::FullGather,
-                ctx.fabric,
-            );
+            let t = if links.is_empty() {
+                book_group_exchange_fabric(
+                    survivors.len(),
+                    bytes,
+                    GroupExchange::FullGather,
+                    ctx.fabric,
+                )
+            } else {
+                book_full_gather_faulty(
+                    &survivor_links(links, lost),
+                    bytes,
+                    ctx.fabric,
+                )
+            };
             average_group_native(states, &survivors);
-            ExchangeTiming {
-                reduce_scatter_s: ctx.fabric.latency,
-                all_gather_s: t,
-            }
-        }
-        (GroupExchange::FullGather, _) => {
-            let t = book_group_exchange_mode(
-                members.len(),
-                bytes,
-                GroupExchange::FullGather,
-                ctx,
-            );
-            average_group(states, members, ctx)?;
-            ExchangeTiming { reduce_scatter_s: 0.0, all_gather_s: t }
+            lossy_timing(exchange, ctx.fabric.latency, t)
         }
     })
 }
@@ -430,6 +505,8 @@ impl Aggregate for MarAggregator {
         let bytes = payload_bytes(states, agg);
         let scope = format!("agg{}", self.iteration);
         let mut groups_formed = 0;
+        self.crashed_last.clear();
+        let mut fault_totals = FaultCounters::default();
         // chunk owners that dropped this iteration: stale state, excluded
         // from every subsequent round's matchmaking
         let mut alive = vec![true; n];
@@ -458,74 +535,150 @@ impl Aggregate for MarAggregator {
             self.matchmake_timed(agg, &keys, &alive, 0, &scope, ctx.fabric);
         // empty data lanes: advances by mm0 exactly, attributed exposed
         ctx.clock.pipelined_two_phase(mm0, std::iter::empty());
+        let legacy_drops_on =
+            self.exchange == GroupExchange::ReduceScatter && self.rs_drop > 0.0;
+        let crash_on = ctx.faults.crash_prob > 0.0;
+        let link_faults_on = ctx.faults.link_faults_enabled();
         for g in 0..d {
-            // owner-drop plan: drawn serially before fanning out (it is
+            // loss plan: drawn serially before fanning out (it is
             // schedule state, like batch cursors), so parallel lanes stay
             // bit-identical to the serial reference. Nothing is drawn
-            // while the knob is off; the victim draw order matches the
-            // seed exactly, so budget 0 reproduces it bit for bit.
-            let drops: Vec<DropPlan> = if self.exchange
-                == GroupExchange::ReduceScatter
-                && self.rs_drop > 0.0
-            {
-                groups
-                    .iter()
-                    .map(|grp| {
-                        if grp.len() >= 2 && ctx.rng.chance(self.rs_drop) {
-                            let victim = ctx.rng.below(grp.len());
-                            // a retry needs a later round to re-form in
-                            if retries_left > 0 && g + 1 < d {
-                                retries_left -= 1;
-                                DropPlan::Retry(victim)
-                            } else {
-                                DropPlan::Fallback(victim)
-                            }
-                        } else {
-                            DropPlan::Keep
-                        }
-                    })
-                    .collect()
-            } else {
-                vec![DropPlan::Keep; groups.len()]
-            };
+            // while every knob is off; the legacy victim draw comes first
+            // with the seed's exact gating and order, so rs_drop alone
+            // (faults off) reproduces the seed bit for bit.
             let exchange = self.exchange;
-            // key/alive bookkeeping for this round — membership plus the
-            // pre-drawn drop plan determine it, which is exactly what
-            // lets the next matchmaking pass start before the exchange
-            // finishes
-            for (gi, group) in groups.iter().enumerate() {
-                let victim = drops[gi].victim();
+            let mut plans: Vec<GroupPlan> = Vec::with_capacity(groups.len());
+            let mut link_plans: Vec<Vec<LinkFault>> =
+                Vec::with_capacity(groups.len());
+            for group in &groups {
+                let k = group.len();
+                // (1) legacy chunk-owner drop (seed-exact draw order)
+                let legacy_victim = if legacy_drops_on
+                    && k >= 2
+                    && ctx.rng.chance(self.rs_drop)
+                {
+                    Some(ctx.rng.below(k))
+                } else {
+                    None
+                };
+                // (2) mid-exchange crashes
+                let mut crashed: Vec<usize> = Vec::new();
+                if crash_on && k >= 2 {
+                    for chunk in 0..k {
+                        if ctx.rng.chance(ctx.faults.crash_prob) {
+                            crashed.push(chunk);
+                        }
+                    }
+                }
+                // (3) per-member link faults (crashed members draw
+                // nothing — their traffic never happens)
+                let mut links: Vec<LinkFault> = Vec::new();
+                if link_faults_on && k >= 2 {
+                    let msgs = match exchange {
+                        GroupExchange::ReduceScatter => 2 * (k - 1),
+                        GroupExchange::FullGather => k - 1,
+                    };
+                    links = (0..k)
+                        .map(|chunk| {
+                            if crashed.contains(&chunk) {
+                                LinkFault::CLEAN
+                            } else {
+                                ctx.faults.draw_link(msgs, ctx.rng)
+                            }
+                        })
+                        .collect();
+                    for f in &links {
+                        fault_totals.absorb(f);
+                    }
+                }
+                fault_totals.crashes += crashed.len() as u64;
+                for &chunk in &crashed {
+                    self.crashed_last.push(agg[group[chunk]]);
+                }
+                // (4) the lost set: crashed peers, peers whose messages
+                // exhausted the retry budget, and the legacy victim
+                let fault_lost_any = !crashed.is_empty()
+                    || links.iter().any(LinkFault::lost);
+                let mut lost = crashed;
+                for (chunk, f) in links.iter().enumerate() {
+                    if f.lost() && !lost.contains(&chunk) {
+                        lost.push(chunk);
+                    }
+                }
+                if let Some(v) = legacy_victim {
+                    if !lost.contains(&v) {
+                        lost.push(v);
+                    }
+                }
+                lost.sort_unstable();
+                // (5) classify — the legacy-only case reproduces the
+                // seed's Retry/Fallback decision exactly
+                let plan = if lost.is_empty() {
+                    GroupPlan::Keep
+                } else if !fault_lost_any {
+                    if retries_left > 0 && g + 1 < d {
+                        retries_left -= 1;
+                        GroupPlan::Retry(lost)
+                    } else {
+                        GroupPlan::Degraded(lost)
+                    }
+                } else if exchange == GroupExchange::ReduceScatter
+                    && retries_left > 0
+                    && g + 1 < d
+                {
+                    retries_left -= 1;
+                    GroupPlan::Retry(lost)
+                } else if k - lost.len() >= ctx.faults.quorum_min.max(2) {
+                    GroupPlan::Degraded(lost)
+                } else {
+                    GroupPlan::Abort(lost)
+                };
+                // key/alive bookkeeping — membership plus the pre-drawn
+                // plan determine it, which is exactly what lets the next
+                // matchmaking pass start before the exchange finishes
                 for (chunk, &pos) in group.iter().enumerate() {
-                    if victim == Some(chunk) {
-                        // the dropped owner sits out the rest of the
+                    if plan.lost().contains(&chunk) {
+                        // a lost member sits out the rest of the
                         // iteration (stale key, no announcements)
                         alive[pos] = false;
                     } else {
                         keys[pos].set_chunk(g, chunk);
                     }
                 }
-                match drops[gi] {
-                    DropPlan::Keep => {
-                        if group.len() >= 2 {
+                match &plan {
+                    GroupPlan::Keep => {
+                        if k >= 2 {
                             groups_formed += 1;
                         }
-                        if exchange == GroupExchange::ReduceScatter
-                            && group.len() >= 2
-                        {
-                            expected_phase_bytes +=
-                                2 * (group.len() as u64 - 1) * bytes;
+                        if exchange == GroupExchange::ReduceScatter && k >= 2 {
+                            // the closed form the faulty RS booker
+                            // matches: both phases plus per-member retry
+                            // surcharges at the balanced chunk floor
+                            expected_phase_bytes += 2 * (k as u64 - 1) * bytes;
+                            for f in &links {
+                                expected_phase_bytes +=
+                                    f.retries * (bytes / k as u64);
+                            }
                         }
                     }
-                    DropPlan::Fallback(_) => {
-                        rs_fallbacks += 1;
-                        if group.len() - 1 >= 2 {
+                    GroupPlan::Degraded(lost) => {
+                        if legacy_victim.is_some() {
+                            rs_fallbacks += 1;
+                        }
+                        if fault_lost_any {
+                            fault_totals.quorum_degraded_rounds += 1;
+                        }
+                        if k - lost.len() >= 2 {
                             groups_formed += 1;
                         }
                     }
                     // deferred: survivors average nothing this round and
                     // re-form next round instead
-                    DropPlan::Retry(_) => rs_retries += 1,
+                    GroupPlan::Retry(_) => rs_retries += 1,
+                    GroupPlan::Abort(_) => {}
                 }
+                plans.push(plan);
+                link_plans.push(links);
             }
             // round g+1's matchmaking — control plane, overlapped with
             // this round's exchange at the clock boundary below
@@ -551,11 +704,13 @@ impl Aggregate for MarAggregator {
                 // concurrently; lane order (and thus the clock) matches
                 // the serial path because results come back in group order
                 let fabric = ctx.fabric;
-                let drops_ref = &drops;
+                let plans_ref = &plans;
+                let links_ref = &link_plans;
                 exec::par_disjoint_map(states, &member_groups, |gi, views| {
                     exchange_lane(
                         views,
-                        drops_ref[gi],
+                        &plans_ref[gi],
+                        &links_ref[gi],
                         exchange,
                         bytes,
                         fabric,
@@ -566,7 +721,13 @@ impl Aggregate for MarAggregator {
                 let mut lane_times = Vec::with_capacity(member_groups.len());
                 for (gi, members) in member_groups.iter().enumerate() {
                     lane_times.push(exchange_lane_serial(
-                        states, members, drops[gi], exchange, bytes, ctx,
+                        states,
+                        members,
+                        &plans[gi],
+                        &link_plans[gi],
+                        exchange,
+                        bytes,
+                        ctx,
                     )?);
                 }
                 lane_times
@@ -582,7 +743,7 @@ impl Aggregate for MarAggregator {
             let lanes = lane_times
                 .iter()
                 .map(|t| (t.reduce_scatter_s, t.all_gather_s));
-            if drops.iter().all(|d| *d == DropPlan::Keep) {
+            if plans.iter().all(|p| *p == GroupPlan::Keep) {
                 ctx.clock.pipelined_two_phase(mm_next, lanes);
             } else {
                 ctx.clock.pipelined_two_phase(0.0, lanes);
@@ -602,7 +763,13 @@ impl Aggregate for MarAggregator {
                 "chunk-owned booking must match the closed form"
             );
         }
-        Ok(AggReport { rounds: d, groups: groups_formed, rs_fallbacks, rs_retries })
+        Ok(AggReport {
+            rounds: d,
+            groups: groups_formed,
+            rs_fallbacks,
+            rs_retries,
+            faults: fault_totals,
+        })
     }
 }
 

@@ -43,13 +43,31 @@ impl Dataset {
 
     /// Gather examples by index into a contiguous batch (x, y).
     pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
-        let mut x = Vec::with_capacity(idx.len() * self.elems);
-        let mut y = Vec::with_capacity(idx.len());
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        self.gather_into(idx, &mut x, &mut y);
+        (x, y)
+    }
+
+    /// [`Self::gather`] into caller-owned buffers: clears and refills
+    /// `x`/`y` without shrinking their capacity, so a per-worker scratch
+    /// buffer (see [`crate::exec::with_scratch`]) amortizes the batch
+    /// allocation to zero after the first gather on each worker.
+    pub fn gather_into(&self, idx: &[usize], x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        x.clear();
+        y.clear();
+        x.reserve(idx.len() * self.elems);
+        y.reserve(idx.len());
         for &i in idx {
             x.extend_from_slice(&self.x[i * self.elems..(i + 1) * self.elems]);
             y.push(self.y[i]);
         }
-        (x, y)
+    }
+
+    /// Gather into a [`BatchBuf`] (convenience for scratch-buffer call
+    /// sites).
+    pub fn gather_into_buf(&self, idx: &[usize], buf: &mut BatchBuf) {
+        self.gather_into(idx, &mut buf.x, &mut buf.y);
     }
 
     /// Class histogram (used by heterogeneity tests/benches).
@@ -60,6 +78,16 @@ impl Dataset {
         }
         counts
     }
+}
+
+/// Reusable mini-batch buffers for [`Dataset::gather_into`]. `Default` so
+/// it can live in the per-worker scratch arena
+/// ([`crate::exec::with_scratch`]): each pool thread gathers every batch
+/// it processes into the same pair of vectors.
+#[derive(Clone, Debug, Default)]
+pub struct BatchBuf {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
 }
 
 /// A peer's local shard: indices into a shared dataset plus a cursor so

@@ -18,9 +18,9 @@ use crate::coordinator::MarAggregator;
 use crate::data::{build as build_data, FlData};
 use crate::dp::DpEngine;
 use crate::kd::KdEngine;
-use crate::metrics::{CommLedger, CommSnapshot, TrainCurve};
+use crate::metrics::{CommLedger, CommSnapshot, Plane, TrainCurve};
 use crate::models::ModelMeta;
-use crate::net::{ChurnModel, Fabric, MarkovChurn};
+use crate::net::{ChurnModel, Fabric, FaultCounters, MarkovChurn};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::sim::SimClock;
@@ -65,6 +65,21 @@ pub struct RunSummary {
     /// falling back) — the second reliability column in
     /// `fig3_rs_reliability.csv`
     pub rs_retries: u64,
+    /// fault-injection outcomes accumulated across the run (messages
+    /// lost, retries, timeouts, quorum-degraded groups, crashes) — all
+    /// zero when the fault plan is off
+    pub faults: FaultCounters,
+    /// simulated wall-time stragglers added beyond the fault-free
+    /// compute (training and distillation lanes)
+    pub straggler_exposed_s: f64,
+    /// crash-faulted peers that pulled a fresh θ when they rejoined
+    pub rejoin_pulls: u64,
+    /// times `ChurnModel::sample_aggregators`'s keep-alive fallback
+    /// rebuilt `A_t` from dropped participants
+    pub churn_rescues: u64,
+    /// times `MarkovChurn::step` resurrected a random peer to keep the
+    /// network non-empty
+    pub markov_revivals: u64,
     pub final_accuracy: f64,
     pub final_loss: f64,
 }
@@ -89,6 +104,17 @@ pub struct Trainer<'rt> {
     rs_fallbacks: u64,
     /// cumulative owner-drop retries (see `RunSummary`)
     rs_retries: u64,
+    /// cumulative fault-injection outcomes (see `RunSummary`)
+    faults: FaultCounters,
+    /// straggler-added simulated wall-time (see `RunSummary`)
+    straggler_exposed_s: f64,
+    /// fresh-θ pulls by rejoining crashed peers (see `RunSummary`)
+    rejoin_pulls: u64,
+    /// aggregator keep-alive rescues (see `RunSummary`)
+    churn_rescues: u64,
+    /// peers that crash-faulted and have not yet rejoined: they resume
+    /// with a booked fresh-θ pull the next time they participate
+    stale: Vec<bool>,
     /// label used for the curve (strategy name by default)
     pub label: String,
 }
@@ -168,6 +194,7 @@ impl<'rt> Trainer<'rt> {
             )
         });
         let label = cfg.strategy.name().to_string();
+        let peers = cfg.peers;
         Ok(Trainer {
             cfg,
             rt,
@@ -185,6 +212,11 @@ impl<'rt> Trainer<'rt> {
             dp,
             rs_fallbacks: 0,
             rs_retries: 0,
+            faults: FaultCounters::default(),
+            straggler_exposed_s: 0.0,
+            rejoin_pulls: 0,
+            churn_rescues: 0,
+            stale: vec![false; peers],
             label,
         })
     }
@@ -213,6 +245,17 @@ impl<'rt> Trainer<'rt> {
                 }
             }
         }
+        let markov_revivals =
+            self.markov.as_ref().map(|c| c.revivals()).unwrap_or(0);
+        if self.churn_rescues > 0 || markov_revivals > 0 {
+            log::info!(
+                "[{}] liveness: {} aggregator keep-alive rescues, \
+                 {} Markov revivals",
+                self.label,
+                self.churn_rescues,
+                markov_revivals,
+            );
+        }
         Ok(RunSummary {
             comm: self.ledger.snapshot(),
             sim_time_s: self.clock.now(),
@@ -224,6 +267,11 @@ impl<'rt> Trainer<'rt> {
             },
             rs_fallbacks: self.rs_fallbacks,
             rs_retries: self.rs_retries,
+            faults: self.faults,
+            straggler_exposed_s: self.straggler_exposed_s,
+            rejoin_pulls: self.rejoin_pulls,
+            churn_rescues: self.churn_rescues,
+            markov_revivals,
             final_loss: last.0,
             final_accuracy: last.1,
             curve,
@@ -239,6 +287,38 @@ impl<'rt> Trainer<'rt> {
             Some(chain) => chain.step(&mut churn_rng),
             None => self.churn.sample_participants(self.cfg.peers, &mut churn_rng),
         };
+
+        // fault plan RNG: forked only when the plan is live, so the
+        // fault-free path consumes exactly the draws it always did and
+        // stays bit-identical (pinned by `tests/fault_injection.rs`)
+        let mut fault_rng = self
+            .cfg
+            .faults
+            .enabled()
+            .then(|| self.rng.fork(t as u64 * 31 + 5));
+
+        // crash-faulted peers rejoin here: a stale participant pulls a
+        // fresh θ from a live donor before training (one state-sized
+        // transfer each, booked on the data plane; pulls run as parallel
+        // lanes). With no live donor this iteration, the peer resumes
+        // from its stale θ — the pull would have nothing fresher to offer.
+        if self.stale.iter().any(|&s| s) {
+            let donor = participants.iter().copied().find(|&p| !self.stale[p]);
+            let bytes = crate::aggregation::state_bytes(&self.model);
+            let mut lanes = Vec::new();
+            for &p in &participants {
+                if !self.stale[p] {
+                    continue;
+                }
+                if let Some(d) = donor {
+                    self.states[p] = self.states[d].clone();
+                    lanes.push(self.fabric.send(bytes, Plane::Data));
+                    self.rejoin_pulls += 1;
+                }
+                self.stale[p] = false;
+            }
+            self.clock.parallel(lanes);
+        }
 
         // local momentum-SGD updates — run truly in parallel across peers
         // on the exec pool, matching the parallel deployment the clock
@@ -264,24 +344,32 @@ impl<'rt> Trainer<'rt> {
                 &mut self.states,
                 &participants,
                 |pos, st| -> Result<()> {
-                    for idx in &plans[pos] {
-                        let (x, y) = train.gather(idx);
-                        // in-place step through the copy-on-write
-                        // handles: a θ shared with a group mean or
-                        // snapshot detaches once on the first batch,
-                        // then the whole schedule mutates one buffer —
-                        // no per-step state allocations
-                        rt.train_step_into(
-                            model,
-                            st.theta.make_mut_slice(),
-                            st.momentum.make_mut_slice(),
-                            &x,
-                            &y,
-                            eta,
-                            mu,
-                        )?;
-                    }
-                    Ok(())
+                    // batches gather into the worker's scratch buffers —
+                    // after each worker's first batch, the schedule runs
+                    // with zero batch allocations
+                    crate::exec::with_scratch::<crate::data::BatchBuf, _, _>(
+                        |buf| {
+                            for idx in &plans[pos] {
+                                train.gather_into_buf(idx, buf);
+                                // in-place step through the copy-on-write
+                                // handles: a θ shared with a group mean or
+                                // snapshot detaches once on the first
+                                // batch, then the whole schedule mutates
+                                // one buffer — no per-step state
+                                // allocations
+                                rt.train_step_into(
+                                    model,
+                                    st.theta.make_mut_slice(),
+                                    st.momentum.make_mut_slice(),
+                                    &buf.x,
+                                    &buf.y,
+                                    eta,
+                                    mu,
+                                )?;
+                            }
+                            Ok(())
+                        },
+                    )
                 },
             )?;
             for r in results {
@@ -292,12 +380,33 @@ impl<'rt> Trainer<'rt> {
         // modelled deployment, so an iteration costs one peer's batches —
         // and nothing at all when nobody participated
         if !participants.is_empty() {
-            self.clock
-                .advance(self.cfg.local_batches as f64 * LOCAL_BATCH_COMPUTE_S);
+            let base = self.cfg.local_batches as f64 * LOCAL_BATCH_COMPUTE_S;
+            // straggler faults: every participant draws a compute
+            // multiplier (serially — the fault RNG is schedule state);
+            // lanes run concurrently, so the slowest straggler gates the
+            // iteration. `base * 1.0` is exact, so the fault-free clock
+            // is bit-identical.
+            let mut mult_max = 1.0f64;
+            if let Some(frng) = fault_rng.as_mut() {
+                if self.cfg.faults.straggler_prob > 0.0 {
+                    for _ in &participants {
+                        if frng.chance(self.cfg.faults.straggler_prob) {
+                            mult_max =
+                                mult_max.max(self.cfg.faults.straggler_mult);
+                        }
+                    }
+                }
+            }
+            self.clock.advance(base * mult_max);
+            self.straggler_exposed_s += base * (mult_max - 1.0);
         }
 
         // A_t: aggregators (participants that survive dropout)
-        let aggers = self.churn.sample_aggregators(&participants, &mut churn_rng);
+        let (aggers, rescued) =
+            self.churn.sample_aggregators_counted(&participants, &mut churn_rng);
+        if rescued {
+            self.churn_rescues += 1;
+        }
         if aggers.len() < 2 {
             return Ok(());
         }
@@ -312,8 +421,9 @@ impl<'rt> Trainer<'rt> {
                     rng: &mut rng,
                     runtime: Some(self.rt),
                     model: &self.model,
+                    faults: &self.cfg.faults,
                 };
-                kd.run_mkd(
+                let kd_rep = kd.run_mkd(
                     t,
                     self.rt,
                     &self.model,
@@ -324,6 +434,8 @@ impl<'rt> Trainer<'rt> {
                     mar,
                     &mut ctx,
                 )?;
+                self.faults.add(kd_rep.faults);
+                self.straggler_exposed_s += kd_rep.straggler_exposed_s;
             }
         }
 
@@ -341,11 +453,31 @@ impl<'rt> Trainer<'rt> {
             rng: &mut agg_rng,
             runtime: Some(self.rt),
             model: &self.model,
+            faults: &self.cfg.faults,
         };
         let report =
             self.agg.as_dyn().aggregate(&mut self.states, &aggers, &mut ctx)?;
         self.rs_fallbacks += report.rs_fallbacks as u64;
         self.rs_retries += report.rs_retries as u64;
+        self.faults.add(report.faults);
+
+        // crash-faulted MAR members leave mid-exchange: their θ stays
+        // stale until the next iteration they participate in (the
+        // fresh-θ rejoin pull above), and the Markov availability chain —
+        // when driving churn — sees them go Down so the rejoin follows
+        // the chain's own Up transition.
+        if self.cfg.faults.crash_prob > 0.0 {
+            let crashed = match &mut self.agg {
+                Agg::Mar(m) => m.take_crashed(),
+                _ => Vec::new(),
+            };
+            for peer in crashed {
+                self.stale[peer] = true;
+                if let Some(chain) = &mut self.markov {
+                    chain.set_down(peer);
+                }
+            }
+        }
 
         if let Some(dp) = &mut self.dp {
             dp.finalize(&mut self.states, &aggers, &mut dp_rng);

@@ -36,6 +36,7 @@ use crate::data::{Dataset, Shard};
 use crate::exec;
 use crate::metrics::Plane;
 use crate::models::ModelMeta;
+use crate::net::{FaultCounters, LinkFault};
 use crate::runtime::Runtime;
 
 /// What one MKD pass did.
@@ -48,6 +49,11 @@ pub struct KdReport {
     pub kd_steps: u64,
     /// mean student loss over the last round (diagnostic)
     pub mean_loss: f64,
+    /// fault outcomes on the teacher-exchange lanes (zero when the
+    /// fault plan is off)
+    pub faults: FaultCounters,
+    /// wall-time straggling students added to the distillation lanes
+    pub straggler_exposed_s: f64,
 }
 
 /// Moshpit-KD engine.
@@ -111,6 +117,13 @@ impl KdEngine {
         let mut report = KdReport { rounds: mar.rounds, ..Default::default() };
         let lam = self.lambda(t);
         let model_bytes = model.model_bytes();
+        // fault plan: every draw happens in the serial schedule phase
+        // below; with the plan off, all three axes are gated so this
+        // pass consumes zero extra randomness and stays bit-identical
+        let fp = ctx.faults;
+        let crash_on = fp.crash_prob > 0.0;
+        let link_on = fp.link_faults_enabled();
+        let straggler_on = fp.straggler_prob > 0.0;
         // round 0's matchmaking is exposed on the clock; each later
         // round's pass happens while the previous teacher exchange runs
         let (mut groups, mm0) = mar.form_groups_once_timed(
@@ -138,29 +151,102 @@ impl KdEngine {
                     lane_times.push(0.0);
                     continue;
                 }
-                let members: Vec<usize> =
+                let mut members: Vec<usize> =
                     group.iter().map(|&pos| agg[pos]).collect();
-                // teacher-model full-gather: θ only, k(k-1) transfers
-                let mut lane = 0.0f64;
-                for _ in &members {
-                    lane = ctx
-                        .fabric
-                        .sequential(members.len() - 1, model_bytes, Plane::Data)
-                        .max(lane);
+                // mid-exchange crashes thin the group before any transfer
+                // (serial draws, member order)
+                if crash_on {
+                    members.retain(|_| {
+                        if ctx.rng.chance(fp.crash_prob) {
+                            report.faults.crashes += 1;
+                            false
+                        } else {
+                            true
+                        }
+                    });
                 }
-                lane_times.push(lane);
+                if members.len() < 2 {
+                    // crashes left nobody to exchange with
+                    lane_times.push(0.0);
+                    continue;
+                }
+                // per-member link draws for the gather (serial order)
+                let links: Vec<LinkFault> = if link_on {
+                    members
+                        .iter()
+                        .map(|_| {
+                            let lf = fp.draw_link(members.len() - 1, ctx.rng);
+                            report.faults.absorb(&lf);
+                            lf
+                        })
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                // teacher-model full-gather: θ only, k(k-1) transfers.
+                // Clean links delegate to the exact legacy booking; a
+                // member whose link timed out still books its attempts
+                // (payload per retransmission + control-plane probes) but
+                // never assembles the teacher set, so it sits the
+                // distillation out.
+                let mut comm = 0.0f64;
+                for (j, _) in members.iter().enumerate() {
+                    let dur = match links.get(j) {
+                        Some(lf) => ctx.fabric.sequential_faulty(
+                            members.len() - 1,
+                            model_bytes,
+                            Plane::Data,
+                            lf,
+                        ),
+                        None => ctx.fabric.sequential(
+                            members.len() - 1,
+                            model_bytes,
+                            Plane::Data,
+                        ),
+                    };
+                    comm = dur.max(comm);
+                }
                 report.teacher_transfers +=
                     (members.len() * (members.len() - 1)) as u64;
+                let complete: Vec<usize> = members
+                    .iter()
+                    .enumerate()
+                    .filter(|&(j, _)| {
+                        !links.get(j).is_some_and(|lf| lf.lost())
+                    })
+                    .map(|(_, &p)| p)
+                    .collect();
+                // straggler draws: a slow student's distillation lane
+                // (E epochs ≈ E local batches) runs `straggler_mult`×
+                // longer; the group's lane waits for its slowest student
+                let mut lane = comm;
+                if straggler_on {
+                    for _ in &complete {
+                        if ctx.rng.chance(fp.straggler_prob) {
+                            let pen = self.cfg.epochs as f64
+                                * crate::fl::LOCAL_BATCH_COMPUTE_S
+                                * (fp.straggler_mult - 1.0);
+                            report.straggler_exposed_s += pen;
+                            lane = lane.max(comm + pen);
+                        }
+                    }
+                }
+                lane_times.push(lane);
+                if complete.len() < 2 {
+                    // the quorum drained: traffic is booked, nobody
+                    // distills this round in this group
+                    continue;
+                }
                 snapshots.push(
-                    members.iter().map(|&p| states[p].theta.clone()).collect(),
+                    complete.iter().map(|&p| states[p].theta.clone()).collect(),
                 );
                 batch_plans.push(
-                    members
+                    complete
                         .iter()
                         .map(|&s| shards[s].next_batch(model.batch))
                         .collect(),
                 );
-                member_groups.push(members);
+                member_groups.push(complete);
             }
             // one lane per student: students are disjoint across the
             // round's groups, so every lane owns its peer state
@@ -179,65 +265,77 @@ impl KdEngine {
             let distill = |lane: usize, st: &mut PeerState| -> Result<Vec<f32>> {
                 let (gi, si) = lane_meta[lane];
                 let snap = &snapshots[gi];
-                let (x, y) = data.gather(&batch_plans[gi][si]);
-                let mut s_logits = Vec::with_capacity(model.batch * model.classes);
-                rt.logits_into(model, &snap[si], &x, &mut s_logits)?;
-                // rate candidate teachers by softened KL on this batch;
-                // each candidate's logits land in an owned cache entry
-                // (`rated` keeps (kl, cache index) — no logit vectors are
-                // cloned or shuffled); the forward activations behind
-                // every one of these calls live in the per-worker
-                // workspace, not per-call allocations
-                let mut cache: Vec<Vec<f32>> = Vec::with_capacity(snap.len() - 1);
-                let mut rated: Vec<(f64, usize)> =
-                    Vec::with_capacity(snap.len() - 1);
-                for (ci, teacher) in snap.iter().enumerate() {
-                    if ci == si {
-                        continue;
+                // the student's batch gathers into the worker's scratch
+                // buffers — zero batch allocations after each worker's
+                // first lane
+                exec::with_scratch::<crate::data::BatchBuf, _, _>(|buf| {
+                    data.gather_into_buf(&batch_plans[gi][si], buf);
+                    let (x, y) = (&buf.x, &buf.y);
+                    let mut s_logits =
+                        Vec::with_capacity(model.batch * model.classes);
+                    rt.logits_into(model, &snap[si], x, &mut s_logits)?;
+                    // rate candidate teachers by softened KL on this
+                    // batch; each candidate's logits land in an owned
+                    // cache entry (`rated` keeps (kl, cache index) — no
+                    // logit vectors are cloned or shuffled); the forward
+                    // activations behind every one of these calls live in
+                    // the per-worker workspace, not per-call allocations
+                    let mut cache: Vec<Vec<f32>> =
+                        Vec::with_capacity(snap.len() - 1);
+                    let mut rated: Vec<(f64, usize)> =
+                        Vec::with_capacity(snap.len() - 1);
+                    for (ci, teacher) in snap.iter().enumerate() {
+                        if ci == si {
+                            continue;
+                        }
+                        let z = rt.logits(model, teacher, x)?;
+                        let kl = mean_softened_kl(
+                            &z,
+                            &s_logits,
+                            model.classes,
+                            self.tau,
+                        );
+                        rated.push((kl, cache.len()));
+                        cache.push(z);
                     }
-                    let z = rt.logits(model, teacher, &x)?;
-                    let kl =
-                        mean_softened_kl(&z, &s_logits, model.classes, self.tau);
-                    rated.push((kl, cache.len()));
-                    cache.push(z);
-                }
-                // total order: NaN logits sort last instead of panicking
-                rated.sort_by(|a, b| a.0.total_cmp(&b.0));
-                let ell = self.top_ell(rated.len());
-                rated.truncate(ell);
-                // z̄_b = mean of selected teacher logits
-                let mut zbar = vec![0.0f32; model.batch * model.classes];
-                for &(_, zi) in &rated {
-                    for (a, &v) in zbar.iter_mut().zip(&cache[zi]) {
-                        *a += v;
+                    // total order: NaN logits sort last, not panicking
+                    rated.sort_by(|a, b| a.0.total_cmp(&b.0));
+                    let ell = self.top_ell(rated.len());
+                    rated.truncate(ell);
+                    // z̄_b = mean of selected teacher logits
+                    let mut zbar = vec![0.0f32; model.batch * model.classes];
+                    for &(_, zi) in &rated {
+                        for (a, &v) in zbar.iter_mut().zip(&cache[zi]) {
+                            *a += v;
+                        }
                     }
-                }
-                let inv = 1.0 / rated.len().max(1) as f32;
-                for a in &mut zbar {
-                    *a *= inv;
-                }
-                // E local distillation epochs, stepped in place through
-                // the copy-on-write handles: the first epoch's write
-                // detaches the student from any teacher snapshot that
-                // aliases it (so snapshots are never perturbed), and
-                // every later epoch mutates the now-unique buffer with
-                // zero state allocations
-                let mut losses = Vec::with_capacity(self.cfg.epochs);
-                for _ in 0..self.cfg.epochs {
-                    let loss = rt.kd_step_into(
-                        model,
-                        st.theta.make_mut_slice(),
-                        st.momentum.make_mut_slice(),
-                        &x,
-                        &y,
-                        &zbar,
-                        lam,
-                        self.eta,
-                        self.mu,
-                    )?;
-                    losses.push(loss);
-                }
-                Ok(losses)
+                    let inv = 1.0 / rated.len().max(1) as f32;
+                    for a in &mut zbar {
+                        *a *= inv;
+                    }
+                    // E local distillation epochs, stepped in place
+                    // through the copy-on-write handles: the first
+                    // epoch's write detaches the student from any teacher
+                    // snapshot that aliases it (so snapshots are never
+                    // perturbed), and every later epoch mutates the
+                    // now-unique buffer with zero state allocations
+                    let mut losses = Vec::with_capacity(self.cfg.epochs);
+                    for _ in 0..self.cfg.epochs {
+                        let loss = rt.kd_step_into(
+                            model,
+                            st.theta.make_mut_slice(),
+                            st.momentum.make_mut_slice(),
+                            x,
+                            y,
+                            &zbar,
+                            lam,
+                            self.eta,
+                            self.mu,
+                        )?;
+                        losses.push(loss);
+                    }
+                    Ok(losses)
+                })
             };
             let results: Vec<Result<Vec<f32>>> = if self.parallel {
                 exec::par_map_at(states, &flat_students, &distill)?

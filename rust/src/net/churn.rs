@@ -41,20 +41,34 @@ impl ChurnModel {
         participants: &[usize],
         rng: &mut Rng,
     ) -> Vec<usize> {
+        self.sample_aggregators_counted(participants, rng).0
+    }
+
+    /// [`Self::sample_aggregators`] plus a flag reporting whether the
+    /// keep-alive fallback fired (the dropout draws left `< 2` survivors
+    /// and `A_t` was rebuilt from dropped participants) — a silent
+    /// "resurrection" path `RunSummary` now surfaces as a metric.
+    pub fn sample_aggregators_counted(
+        &self,
+        participants: &[usize],
+        rng: &mut Rng,
+    ) -> (Vec<usize>, bool) {
         let mut agg: Vec<usize> = participants
             .iter()
             .copied()
             .filter(|_| !rng.chance(self.dropout))
             .collect();
+        let mut rescued = false;
         if agg.len() < 2 && participants.len() >= 2 {
             // keep the system alive under pathological dropout draws
+            rescued = true;
             agg = participants.to_vec();
             while agg.len() > 2 {
                 let i = rng.below(agg.len());
                 agg.remove(i);
             }
         }
-        agg
+        (agg, rescued)
     }
 }
 
@@ -100,6 +114,20 @@ mod tests {
             let agg = c.sample_aggregators(&[3, 9, 12], &mut rng);
             assert!(agg.len() >= 2, "{agg:?}");
         }
+    }
+
+    #[test]
+    fn counted_variant_reports_rescues() {
+        let mut rng = Rng::new(4);
+        let c = ChurnModel::new(1.0, 1.0);
+        // certain dropout: every draw kills everyone, so every call rescues
+        let (agg, rescued) = c.sample_aggregators_counted(&[3, 9, 12], &mut rng);
+        assert!(rescued);
+        assert_eq!(agg.len(), 2);
+        let c = ChurnModel::new(1.0, 0.0);
+        let (agg, rescued) = c.sample_aggregators_counted(&[3, 9, 12], &mut rng);
+        assert!(!rescued);
+        assert_eq!(agg, vec![3, 9, 12]);
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! Deterministic fault-injection fabric.
+//!
+//! Wireless-FL deployments lose messages, suffer bursty link
+//! degradation, and straggle — failure modes the iteration-granular
+//! churn models (`net::churn`, `net::trace`) cannot express. This module
+//! provides a seeded fault model shared by every aggregation strategy:
+//!
+//! * **message loss** — each message is independently lost with
+//!   probability `loss`; the sender times out and retries with bounded
+//!   exponential backoff (retries are never free: every retransmission
+//!   books payload bytes and a control-plane probe, and the timeout +
+//!   backoff wall-time lands on the simulated clock);
+//! * **link degradation** — a peer's links for one round run at a
+//!   fraction of nominal bandwidth with a latency multiplier;
+//! * **stragglers** — a peer's simulated compute lanes (local SGD,
+//!   distillation) run `straggler_mult`× slower for one iteration;
+//! * **crashes** — a peer dies mid-exchange; its group proceeds with a
+//!   quorum of survivors and the peer rejoins stale.
+//!
+//! Determinism contract: every fault is drawn *serially* (in the same
+//! schedule phase that draws `DropPlan`s today) before any parallel
+//! fan-out, so serial and parallel engines stay bit-identical. With all
+//! knobs at their defaults the model draws **zero** random numbers and
+//! every code path is bit-identical to the fault-free build.
+
+use crate::rng::Rng;
+
+/// Control-plane bytes booked per timeout probe / retransmit request.
+pub const RETRY_CTRL_BYTES: u64 = 64;
+
+/// Fault-model knobs. All probabilities default to 0 — the model is
+/// inert (and draw-free) unless explicitly enabled.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// per-message loss probability
+    pub loss: f64,
+    /// per-peer per-round probability of link degradation
+    pub degrade_prob: f64,
+    /// bandwidth multiplier while degraded (fraction of nominal)
+    pub degrade_bw: f64,
+    /// latency multiplier while degraded
+    pub degrade_lat: f64,
+    /// per-peer per-iteration straggler probability
+    pub straggler_prob: f64,
+    /// compute-time multiplier for straggling peers
+    pub straggler_mult: f64,
+    /// per-peer per-round mid-exchange crash probability
+    pub crash_prob: f64,
+    /// retransmissions attempted per message before giving up
+    pub max_retries: u32,
+    /// seconds before a lost message is declared timed out
+    pub timeout_s: f64,
+    /// base backoff delay; attempt `a` waits `backoff_s · 2^a`
+    pub backoff_s: f64,
+    /// minimum survivors for a group to proceed quorum-degraded
+    pub quorum_min: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            loss: 0.0,
+            degrade_prob: 0.0,
+            degrade_bw: 0.25,
+            degrade_lat: 4.0,
+            straggler_prob: 0.0,
+            straggler_mult: 4.0,
+            crash_prob: 0.0,
+            max_retries: 3,
+            timeout_s: 0.1,
+            backoff_s: 0.05,
+            quorum_min: 2,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// The inert plan — shared by every construction site that does not
+    /// inject faults.
+    pub const OFF: FaultConfig = FaultConfig {
+        loss: 0.0,
+        degrade_prob: 0.0,
+        degrade_bw: 0.25,
+        degrade_lat: 4.0,
+        straggler_prob: 0.0,
+        straggler_mult: 4.0,
+        crash_prob: 0.0,
+        max_retries: 3,
+        timeout_s: 0.1,
+        backoff_s: 0.05,
+        quorum_min: 2,
+    };
+
+    /// Any fault axis active?
+    pub fn enabled(&self) -> bool {
+        self.loss > 0.0
+            || self.degrade_prob > 0.0
+            || self.straggler_prob > 0.0
+            || self.crash_prob > 0.0
+    }
+
+    /// Any *link-level* axis active (loss or degradation)? Gates the
+    /// per-peer link draws so a straggler-only plan stays draw-free on
+    /// the exchange path.
+    pub fn link_faults_enabled(&self) -> bool {
+        self.loss > 0.0 || self.degrade_prob > 0.0
+    }
+
+    /// Draw one peer's link state for a round: a degradation draw, then
+    /// per-message loss/retry draws for `msgs` planned messages. All
+    /// randomness happens here (serial schedule phase) — applying the
+    /// resulting [`LinkFault`] is draw-free.
+    pub fn draw_link(&self, msgs: usize, rng: &mut Rng) -> LinkFault {
+        let mut f = LinkFault::CLEAN;
+        if self.degrade_prob > 0.0 && rng.chance(self.degrade_prob) {
+            f.bw_mult = self.degrade_bw;
+            f.lat_mult = self.degrade_lat;
+        }
+        if self.loss > 0.0 {
+            for _ in 0..msgs {
+                for attempt in 0..=self.max_retries {
+                    if !rng.chance(self.loss) {
+                        break;
+                    }
+                    if attempt < self.max_retries {
+                        f.retries += 1;
+                        f.penalty_s += self.timeout_s
+                            + self.backoff_s * (1u64 << attempt.min(20)) as f64;
+                    } else {
+                        f.timeouts += 1;
+                        f.penalty_s += self.timeout_s;
+                    }
+                }
+            }
+        }
+        f
+    }
+
+    /// Like [`Self::draw_link`] but the sender never gives up — for
+    /// protocols that cannot proceed without delivery (ring steps,
+    /// butterfly segments). Only retries, never timeouts; the backoff
+    /// exponent is capped at `max_retries`.
+    pub fn draw_link_persistent(&self, msgs: usize, rng: &mut Rng) -> LinkFault {
+        let mut f = LinkFault::CLEAN;
+        if self.degrade_prob > 0.0 && rng.chance(self.degrade_prob) {
+            f.bw_mult = self.degrade_bw;
+            f.lat_mult = self.degrade_lat;
+        }
+        if self.loss > 0.0 {
+            for _ in 0..msgs {
+                let mut attempt = 0u32;
+                while rng.chance(self.loss) {
+                    f.retries += 1;
+                    f.penalty_s += self.timeout_s
+                        + self.backoff_s
+                            * (1u64 << attempt.min(self.max_retries).min(20)) as f64;
+                    attempt += 1;
+                }
+            }
+        }
+        f
+    }
+}
+
+/// One peer's pre-drawn link state for one round: degradation
+/// multipliers plus the total retry/timeout outcome of its planned
+/// messages. Applying it (via `Fabric::send_faulty` /
+/// `Fabric::sequential_faulty`) is deterministic and draw-free.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkFault {
+    /// bandwidth multiplier (1.0 = nominal)
+    pub bw_mult: f64,
+    /// latency multiplier (1.0 = nominal)
+    pub lat_mult: f64,
+    /// retransmissions that eventually succeeded
+    pub retries: u64,
+    /// messages abandoned after `max_retries` retransmissions
+    pub timeouts: u64,
+    /// timeout + backoff wall-time accumulated by the loss draws
+    pub penalty_s: f64,
+}
+
+impl LinkFault {
+    pub const CLEAN: LinkFault = LinkFault {
+        bw_mult: 1.0,
+        lat_mult: 1.0,
+        retries: 0,
+        timeouts: 0,
+        penalty_s: 0.0,
+    };
+
+    /// No observable deviation from a fault-free link — the fabric
+    /// delegates to its exact legacy cost path in this case.
+    pub fn is_clean(&self) -> bool {
+        self.retries == 0
+            && self.timeouts == 0
+            && self.bw_mult == 1.0
+            && self.lat_mult == 1.0
+    }
+
+    /// Did any message on this link die for good?
+    pub fn lost(&self) -> bool {
+        self.timeouts > 0
+    }
+
+    /// The same link with loss outcomes stripped: degradation
+    /// multipliers survive, retries/timeouts/penalty reset. Used when a
+    /// recovery path re-plans traffic (quorum-degraded gather) — the
+    /// link stays slow but we do not re-roll losses, which would cascade.
+    pub fn degraded_only(&self) -> LinkFault {
+        LinkFault {
+            bw_mult: self.bw_mult,
+            lat_mult: self.lat_mult,
+            ..LinkFault::CLEAN
+        }
+    }
+}
+
+/// Aggregated fault outcomes for one run / one report. All-`u64` so the
+/// containing `AggReport` keeps `Copy + Eq`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// messages that failed at least one transmission (retries + timeouts)
+    pub msgs_lost: u64,
+    /// retransmissions that eventually delivered
+    pub retries: u64,
+    /// messages abandoned after the retry budget
+    pub timeouts: u64,
+    /// groups that proceeded with a survivor quorum
+    pub quorum_degraded_rounds: u64,
+    /// peers crashed mid-exchange
+    pub crashes: u64,
+}
+
+impl FaultCounters {
+    /// Fold one drawn link into the totals.
+    pub fn absorb(&mut self, f: &LinkFault) {
+        self.msgs_lost += f.retries + f.timeouts;
+        self.retries += f.retries;
+        self.timeouts += f.timeouts;
+    }
+
+    /// Merge another counter set (e.g. per-round into per-run).
+    pub fn add(&mut self, other: FaultCounters) {
+        self.msgs_lost += other.msgs_lost;
+        self.retries += other.retries;
+        self.timeouts += other.timeouts;
+        self.quorum_degraded_rounds += other.quorum_degraded_rounds;
+        self.crashes += other.crashes;
+    }
+
+    pub fn any(&self) -> bool {
+        *self != FaultCounters::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inert_and_draw_free() {
+        let cfg = FaultConfig::default();
+        assert!(!cfg.enabled());
+        assert!(!cfg.link_faults_enabled());
+        let mut rng = Rng::new(1);
+        let before = rng.next_u64();
+        let mut rng = Rng::new(1);
+        let f = cfg.draw_link(10, &mut rng);
+        assert!(f.is_clean());
+        // zero draws consumed: the next value matches a fresh stream
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn off_const_matches_default() {
+        assert_eq!(FaultConfig::OFF, FaultConfig::default());
+    }
+
+    #[test]
+    fn certain_loss_exhausts_retry_budget() {
+        let cfg = FaultConfig { loss: 1.0, ..FaultConfig::default() };
+        let mut rng = Rng::new(2);
+        let f = cfg.draw_link(3, &mut rng);
+        // every message burns max_retries retries then times out
+        assert_eq!(f.retries, 3 * cfg.max_retries as u64);
+        assert_eq!(f.timeouts, 3);
+        assert!(f.lost());
+        // penalty: per message, retries wait timeout+backoff·2^a, the
+        // final timeout waits timeout only
+        let mut expect = 0.0;
+        for _ in 0..3 {
+            for a in 0..cfg.max_retries {
+                expect += cfg.timeout_s + cfg.backoff_s * (1u64 << a) as f64;
+            }
+            expect += cfg.timeout_s;
+        }
+        assert!((f.penalty_s - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn persistent_links_never_time_out() {
+        let cfg = FaultConfig { loss: 0.6, ..FaultConfig::default() };
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let f = cfg.draw_link_persistent(4, &mut rng);
+            assert_eq!(f.timeouts, 0);
+            assert!(!f.lost());
+        }
+    }
+
+    #[test]
+    fn degraded_only_strips_loss_outcomes() {
+        let cfg = FaultConfig {
+            loss: 1.0,
+            degrade_prob: 1.0,
+            ..FaultConfig::default()
+        };
+        let mut rng = Rng::new(4);
+        let f = cfg.draw_link(2, &mut rng);
+        assert!(f.lost());
+        let d = f.degraded_only();
+        assert_eq!(d.retries, 0);
+        assert_eq!(d.timeouts, 0);
+        assert_eq!(d.penalty_s, 0.0);
+        assert_eq!(d.bw_mult, cfg.degrade_bw);
+        assert_eq!(d.lat_mult, cfg.degrade_lat);
+        assert!(!d.is_clean());
+    }
+
+    #[test]
+    fn counters_absorb_and_add() {
+        let mut c = FaultCounters::default();
+        let f = LinkFault { retries: 2, timeouts: 1, ..LinkFault::CLEAN };
+        c.absorb(&f);
+        assert_eq!(c.msgs_lost, 3);
+        assert_eq!(c.retries, 2);
+        assert_eq!(c.timeouts, 1);
+        let mut total = FaultCounters::default();
+        total.add(c);
+        total.add(c);
+        assert_eq!(total.msgs_lost, 6);
+        assert!(total.any());
+        assert!(!FaultCounters::default().any());
+    }
+}

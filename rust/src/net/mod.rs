@@ -11,9 +11,11 @@
 //!   update but vanishes before/during aggregation, thinning `A_t`.
 
 pub mod churn;
+pub mod faults;
 pub mod trace;
 
 pub use churn::ChurnModel;
+pub use faults::{FaultConfig, FaultCounters, LinkFault, RETRY_CTRL_BYTES};
 pub use trace::MarkovChurn;
 
 use std::sync::Arc;
@@ -79,6 +81,66 @@ impl Fabric {
         }
         self.ledger.record_phase(phase, k as u64, total_bytes);
         k as f64 * self.latency + total_bytes as f64 / self.bandwidth
+    }
+
+    /// [`Self::send`] under a pre-drawn [`LinkFault`]: every lost
+    /// transmission is retried, so the payload is booked once per
+    /// attempt (`1 + retries` attempts) plus one control-plane probe per
+    /// retry/timeout, and the duration carries the degradation
+    /// multipliers and the timeout/backoff penalty. A clean link
+    /// delegates to [`Self::send`] — bit-identical to the fault-free
+    /// build (pinned by `tests/fault_injection.rs`).
+    pub fn send_faulty(&self, bytes: u64, plane: Plane, f: &LinkFault) -> f64 {
+        if f.is_clean() {
+            return self.send(bytes, plane);
+        }
+        let attempts = 1 + f.retries;
+        self.ledger.record_many(plane, attempts, attempts * bytes);
+        let probes = f.retries + f.timeouts;
+        if probes > 0 {
+            self.ledger.record_many(
+                Plane::Control,
+                probes,
+                probes * faults::RETRY_CTRL_BYTES,
+            );
+        }
+        attempts as f64 * self.latency * f.lat_mult
+            + (attempts * bytes) as f64 / (self.bandwidth * f.bw_mult)
+            + f.penalty_s
+    }
+
+    /// [`Self::sequential`] under a pre-drawn [`LinkFault`]: `k`
+    /// first-attempt messages plus the link's retries, each booked on
+    /// `plane`, probes on the control plane, degradation and penalty on
+    /// the duration. Clean links delegate to [`Self::sequential`]
+    /// (whose duration is a *sum* of per-message times — delegation is
+    /// what keeps the faults-off path bit-identical).
+    pub fn sequential_faulty(
+        &self,
+        k: usize,
+        bytes: u64,
+        plane: Plane,
+        f: &LinkFault,
+    ) -> f64 {
+        if f.is_clean() {
+            return self.sequential(k, bytes, plane);
+        }
+        if k == 0 && f.retries == 0 && f.timeouts == 0 {
+            return 0.0;
+        }
+        let attempts = k as u64 + f.retries;
+        self.ledger.record_many(plane, attempts, attempts * bytes);
+        let probes = f.retries + f.timeouts;
+        if probes > 0 {
+            self.ledger.record_many(
+                Plane::Control,
+                probes,
+                probes * faults::RETRY_CTRL_BYTES,
+            );
+        }
+        attempts as f64 * self.latency * f.lat_mult
+            + (attempts * bytes) as f64 / (self.bandwidth * f.bw_mult)
+            + f.penalty_s
     }
 
     pub fn ledger(&self) -> &Arc<CommLedger> {

@@ -24,6 +24,8 @@ pub struct MarkovChurn {
     pub p_down: f64,
     /// P(Down -> Up) per iteration
     pub p_up: f64,
+    /// times the never-empty guard resurrected a random peer
+    revivals: u64,
 }
 
 impl MarkovChurn {
@@ -33,7 +35,7 @@ impl MarkovChurn {
         assert!(p_up > 0.0, "peers must be able to return");
         let stationary = p_up / (p_up + p_down);
         let up = (0..n).map(|_| rng.chance(stationary)).collect();
-        MarkovChurn { up, p_down, p_up }
+        MarkovChurn { up, p_down, p_up, revivals: 0 }
     }
 
     /// Long-run fraction of available peers.
@@ -62,6 +64,7 @@ impl MarkovChurn {
         if avail.is_empty() {
             let lucky = rng.below(self.up.len());
             self.up[lucky] = true;
+            self.revivals += 1;
             avail.push(lucky);
         }
         avail
@@ -69,6 +72,17 @@ impl MarkovChurn {
 
     pub fn is_up(&self, peer: usize) -> bool {
         self.up[peer]
+    }
+
+    /// Force a peer's chain Down (a mid-exchange crash observed by the
+    /// fault model); it rejoins through the normal `p_up` transition.
+    pub fn set_down(&mut self, peer: usize) {
+        self.up[peer] = false;
+    }
+
+    /// How many times the never-empty guard silently resurrected a peer.
+    pub fn revivals(&self) -> u64 {
+        self.revivals
     }
 }
 
@@ -128,6 +142,18 @@ mod tests {
         for _ in 0..200 {
             assert!(!chain.step(&mut rng).is_empty());
         }
+        // the guard must have fired — and been counted — at least once
+        assert!(chain.revivals() > 0);
+    }
+
+    #[test]
+    fn set_down_takes_a_peer_offline() {
+        let mut rng = Rng::new(74);
+        let mut chain = MarkovChurn::new(4, 0.0, 1.0, &mut rng);
+        chain.set_down(2);
+        assert!(!chain.is_up(2));
+        // p_up = 1.0: rejoins on the next step
+        assert!(chain.step(&mut rng).contains(&2));
     }
 
     #[test]

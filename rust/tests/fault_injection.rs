@@ -1,0 +1,319 @@
+//! Fault-injection fabric verification: an inert plan must be
+//! bit-identical to `FaultConfig::OFF` (zero extra draws), an active
+//! plan must stay bit-identical across the serial and parallel engines,
+//! the fabric's retry booking must match its closed form, and a
+//! quorum-degraded group must average exactly its survivors while the
+//! lost members stay bitwise stale.
+
+use std::sync::Arc;
+
+use marfl::aggregation::{
+    mean_of, AggCtx, AggReport, Aggregate, GroupExchange, PeerState,
+};
+use marfl::config::ExperimentConfig;
+use marfl::coordinator::MarAggregator;
+use marfl::fl::Trainer;
+use marfl::metrics::{CommLedger, CommSnapshot, Plane};
+use marfl::net::{Fabric, FaultConfig, LinkFault, RETRY_CTRL_BYTES};
+use marfl::rng::Rng;
+use marfl::runtime::Runtime;
+use marfl::sim::SimClock;
+
+fn toy_model(p: usize) -> marfl::models::ModelMeta {
+    marfl::models::ModelMeta {
+        name: "toy".into(),
+        param_count: p,
+        padded_len: p,
+        input_shape: vec![4],
+        classes: 3,
+        batch: 8,
+        eval_chunk: 8,
+        init_file: String::new(),
+        artifacts: Default::default(),
+    }
+}
+
+fn random_states(n: usize, p: usize, seed: u64) -> Vec<PeerState> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| PeerState {
+            theta: (0..p).map(|_| rng.normal() as f32).collect(),
+            momentum: (0..p).map(|_| rng.normal() as f32 * 0.1).collect(),
+        })
+        .collect()
+}
+
+/// One MAR aggregate call under `faults`; returns (states, ledger
+/// snapshot, simulated clock, report).
+#[allow(clippy::too_many_arguments)]
+fn run_mar_faulty(
+    n: usize,
+    m: usize,
+    g: usize,
+    p: usize,
+    exchange: GroupExchange,
+    faults: &FaultConfig,
+    parallel: bool,
+    rng_seed: u64,
+) -> (Vec<PeerState>, CommSnapshot, f64, AggReport) {
+    let mut states = random_states(n, p, 0xFA17 ^ n as u64);
+    let agg: Vec<usize> = (0..n).collect();
+    let ledger = Arc::new(CommLedger::new());
+    let fabric = Fabric::new(ledger.clone(), 12.5e6, 0.02);
+    let mut clock = SimClock::new();
+    let mut rng = Rng::new(rng_seed);
+    let model = toy_model(p);
+    let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 7)
+        .with_exchange(exchange)
+        .with_parallel(parallel);
+    ledger.reset(); // drop DHT join traffic
+    let mut ctx = AggCtx {
+        fabric: &fabric,
+        clock: &mut clock,
+        rng: &mut rng,
+        runtime: None,
+        model: &model,
+        faults,
+    };
+    let report = mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+    (states, ledger.snapshot(), clock.now(), report)
+}
+
+/// (a) Faults off ⇒ bit-identical to the inert `OFF` plan: a config
+/// whose probabilities are all zero (whatever its other knobs say) must
+/// consume zero extra draws and leave states, ledger, clock and report
+/// untouched relative to `FaultConfig::OFF` — on both engines and both
+/// wire protocols.
+#[test]
+fn inert_plan_is_bit_identical_to_off() {
+    // zero probabilities, deliberately weird non-probability knobs: none
+    // of them may be observable while the plan is inert
+    let inert = FaultConfig {
+        loss: 0.0,
+        degrade_prob: 0.0,
+        straggler_prob: 0.0,
+        crash_prob: 0.0,
+        degrade_bw: 0.01,
+        degrade_lat: 100.0,
+        straggler_mult: 50.0,
+        max_retries: 9,
+        timeout_s: 7.0,
+        backoff_s: 3.0,
+        quorum_min: 5,
+    };
+    assert!(!inert.enabled());
+    for &exchange in &[GroupExchange::FullGather, GroupExchange::ReduceScatter]
+    {
+        for &parallel in &[false, true] {
+            let (off_states, off_snap, off_clock, off_rep) = run_mar_faulty(
+                27,
+                3,
+                3,
+                129,
+                exchange,
+                &FaultConfig::OFF,
+                parallel,
+                77,
+            );
+            let (in_states, in_snap, in_clock, in_rep) = run_mar_faulty(
+                27, 3, 3, 129, exchange, &inert, parallel, 77,
+            );
+            for (a, b) in off_states.iter().zip(&in_states) {
+                assert_eq!(a.theta, b.theta, "inert plan perturbed states");
+                assert_eq!(a.momentum, b.momentum);
+            }
+            assert_eq!(off_snap, in_snap, "inert plan perturbed the ledger");
+            assert_eq!(off_clock.to_bits(), in_clock.to_bits());
+            assert_eq!(off_rep, in_rep);
+            assert!(!off_rep.faults.any(), "OFF plan must report no faults");
+        }
+    }
+}
+
+/// (b) An active plan stays bit-identical across engines: every fault is
+/// drawn in the serial schedule phase, so the group-parallel engine
+/// reproduces the serial reference exactly — states, ledger, clock and
+/// fault counters — and the counters are actually nonzero.
+#[test]
+fn active_plan_parallel_matches_serial() {
+    let plan = FaultConfig {
+        loss: 0.15,
+        degrade_prob: 0.25,
+        crash_prob: 0.03,
+        ..FaultConfig::default()
+    };
+    for &exchange in &[GroupExchange::FullGather, GroupExchange::ReduceScatter]
+    {
+        let (s_states, s_snap, s_clock, s_rep) =
+            run_mar_faulty(27, 3, 3, 129, exchange, &plan, false, 77);
+        let (p_states, p_snap, p_clock, p_rep) =
+            run_mar_faulty(27, 3, 3, 129, exchange, &plan, true, 77);
+        for (i, (a, b)) in s_states.iter().zip(&p_states).enumerate() {
+            assert_eq!(a.theta, b.theta, "peer {i} theta diverged");
+            assert_eq!(a.momentum, b.momentum, "peer {i} momentum diverged");
+        }
+        assert_eq!(s_snap, p_snap, "ledger diverged under faults");
+        assert_eq!(s_clock.to_bits(), p_clock.to_bits(), "clock diverged");
+        assert_eq!(s_rep, p_rep, "fault counters diverged");
+        assert!(
+            s_rep.faults.msgs_lost > 0,
+            "loss=0.15 over 27 peers must lose messages"
+        );
+        assert!(s_rep.faults.retries > 0, "losses must trigger retries");
+    }
+}
+
+/// (c) Closed-form retry accounting: a lossy link books the payload once
+/// per attempt on its own plane, one `RETRY_CTRL_BYTES` probe per
+/// retry/timeout on the control plane, and a duration of
+/// `attempts·latency·lat_mult + attempts·bytes/(bw·bw_mult) + penalty`.
+#[test]
+fn fabric_retry_booking_matches_closed_form() {
+    let ledger = Arc::new(CommLedger::new());
+    let fabric = Fabric::new(ledger.clone(), 1000.0, 0.01);
+    let lf = LinkFault {
+        bw_mult: 0.5,
+        lat_mult: 2.0,
+        retries: 3,
+        timeouts: 1,
+        penalty_s: 0.7,
+    };
+
+    // single message: 1 + 3 retries = 4 attempts, 4 probes
+    let t = fabric.send_faulty(500, Plane::Data, &lf);
+    let snap = ledger.snapshot();
+    assert_eq!(snap.data_msgs, 4);
+    assert_eq!(snap.data_bytes, 4 * 500);
+    assert_eq!(snap.control_msgs, 4);
+    assert_eq!(snap.control_bytes, 4 * RETRY_CTRL_BYTES);
+    let want = 4.0 * 0.01 * 2.0 + (4.0 * 500.0) / (1000.0 * 0.5) + 0.7;
+    assert!((t - want).abs() < 1e-12, "{t} vs {want}");
+
+    // k-message sequence: k + retries attempts over the same link
+    ledger.reset();
+    let t = fabric.sequential_faulty(5, 500, Plane::Data, &lf);
+    let snap = ledger.snapshot();
+    assert_eq!(snap.data_msgs, 5 + 3);
+    assert_eq!(snap.data_bytes, (5 + 3) * 500);
+    assert_eq!(snap.control_msgs, 4);
+    assert_eq!(snap.control_bytes, 4 * RETRY_CTRL_BYTES);
+    let want = 8.0 * 0.01 * 2.0 + (8.0 * 500.0) / (1000.0 * 0.5) + 0.7;
+    assert!((t - want).abs() < 1e-12, "{t} vs {want}");
+
+    // a clean link delegates to the legacy path bit for bit
+    ledger.reset();
+    let faulty = fabric.send_faulty(500, Plane::Data, &LinkFault::CLEAN);
+    let clean_snap = ledger.snapshot();
+    ledger.reset();
+    let legacy = fabric.send(500, Plane::Data);
+    assert_eq!(faulty.to_bits(), legacy.to_bits());
+    assert_eq!(clean_snap, ledger.snapshot());
+    ledger.reset();
+    let faulty = fabric.sequential_faulty(7, 500, Plane::Data, &LinkFault::CLEAN);
+    let clean_snap = ledger.snapshot();
+    ledger.reset();
+    let legacy = fabric.sequential(7, 500, Plane::Data);
+    assert_eq!(faulty.to_bits(), legacy.to_bits());
+    assert_eq!(clean_snap, ledger.snapshot());
+}
+
+/// (d) Quorum-degraded groups: when losses thin a full-gather group but
+/// leave at least `quorum_min` survivors, the survivors average exactly
+/// their renormalized mean (hand-computed via `mean_of`) and the lost
+/// members stay bitwise stale.
+#[test]
+fn quorum_degraded_group_averages_survivors_exactly() {
+    // single group of 4 (4 = 4^1), one MAR round, lossy links: scan a
+    // few deterministic seeds until one yields a degraded (not aborted,
+    // not clean) round, then pin its exact outcome
+    let n = 4;
+    let p = 65;
+    let plan = FaultConfig { loss: 0.35, ..FaultConfig::default() };
+    let before = random_states(n, p, 0xFA17 ^ n as u64);
+    let mut found = false;
+    for seed in 0..200u64 {
+        let (states, _, _, rep) = run_mar_faulty(
+            n,
+            4,
+            1,
+            p,
+            GroupExchange::FullGather,
+            &plan,
+            true,
+            seed,
+        );
+        if rep.faults.quorum_degraded_rounds == 0 {
+            continue;
+        }
+        let stale: Vec<usize> =
+            (0..n).filter(|&i| states[i].theta == before[i].theta).collect();
+        let survivors: Vec<usize> =
+            (0..n).filter(|i| !stale.contains(i)).collect();
+        assert!(!stale.is_empty(), "a degraded round must lose someone");
+        assert!(
+            survivors.len() >= plan.quorum_min,
+            "degraded rounds require a quorum of survivors"
+        );
+        let (want_t, want_m) = mean_of(&before, &survivors);
+        for &i in &survivors {
+            assert_eq!(
+                states[i].theta, want_t,
+                "survivor {i} must hold the survivor mean exactly"
+            );
+            assert_eq!(states[i].momentum, want_m);
+        }
+        for &i in &stale {
+            assert_eq!(
+                states[i].momentum, before[i].momentum,
+                "lost peer {i} must stay bitwise stale"
+            );
+        }
+        assert!(rep.faults.timeouts > 0, "degradation implies timeouts");
+        found = true;
+        break;
+    }
+    assert!(found, "no seed in 0..200 produced a quorum-degraded round");
+}
+
+/// End-to-end: a default-config Trainer run reports all-zero fault
+/// counters (the plan is off by default), and an active plan surfaces
+/// nonzero counters through `RunSummary` while both engines agree.
+#[test]
+fn trainer_surfaces_fault_counters_deterministically() {
+    let rt = Runtime::new(&marfl::models::default_artifact_dir()).unwrap();
+    let base = ExperimentConfig {
+        model: "head".into(),
+        peers: 9,
+        group_size: 3,
+        iterations: 3,
+        samples_per_peer: 32,
+        test_samples: 250,
+        eval_every: 3,
+        local_batches: 2,
+        seed: 4321,
+        ..Default::default()
+    };
+    let run = |cfg: ExperimentConfig| {
+        let mut t = Trainer::new(cfg, &rt).unwrap();
+        t.run().unwrap()
+    };
+    let clean = run(base.clone());
+    assert!(!clean.faults.any(), "default plan must report zero faults");
+    assert_eq!(clean.straggler_exposed_s, 0.0);
+    assert_eq!(clean.rejoin_pulls, 0);
+
+    let mut faulty_cfg = base.clone();
+    faulty_cfg.faults = FaultConfig {
+        loss: 0.2,
+        straggler_prob: 0.3,
+        crash_prob: 0.05,
+        ..FaultConfig::default()
+    };
+    let a = run(faulty_cfg.clone());
+    let b = run(faulty_cfg);
+    assert!(a.faults.msgs_lost > 0, "loss=0.2 must lose messages");
+    assert!(a.straggler_exposed_s > 0.0, "stragglers must cost time");
+    assert_eq!(a.faults, b.faults, "fault counters must be reproducible");
+    assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
+    assert_eq!(a.comm, b.comm);
+}

@@ -58,6 +58,7 @@ fn run_mkd(
         rng: &mut kd_rng,
         runtime: Some(&rt),
         model: &model,
+        faults: &marfl::net::FaultConfig::OFF,
     };
     let report = kd
         .run_mkd(
@@ -141,6 +142,7 @@ fn mkd_updates_never_perturb_aliased_snapshots() {
         rng: &mut kd_rng,
         runtime: Some(&rt),
         model: &model,
+        faults: &marfl::net::FaultConfig::OFF,
     };
     kd.run_mkd(
         1,

@@ -64,6 +64,7 @@ fn run_mar(
         rng: &mut rng,
         runtime: None,
         model: &model,
+        faults: &marfl::net::FaultConfig::OFF,
     };
     mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
     (states, ledger.snapshot(), clock.now())
@@ -111,6 +112,7 @@ fn parallel_reduce_scatter_matches_serial() {
             rng: &mut rng,
             runtime: None,
             model: &model,
+            faults: &marfl::net::FaultConfig::OFF,
         };
         mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
         (states, ledger.snapshot())
@@ -217,6 +219,7 @@ fn parallel_baselines_reproducible() {
                 rng: &mut rng,
                 runtime: None,
                 model: &model,
+                faults: &marfl::net::FaultConfig::OFF,
             };
             agg_impl.aggregate(&mut states, &agg, &mut ctx).unwrap();
             (states, ledger.snapshot())

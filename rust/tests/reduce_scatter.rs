@@ -70,6 +70,7 @@ fn run_mar_budget(
         rng: &mut rng,
         runtime: None,
         model: &model,
+        faults: &marfl::net::FaultConfig::OFF,
     };
     let report = mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
     (states, ledger.snapshot(), clock.now(), report)

@@ -74,6 +74,7 @@ fn property_all_strategies_preserve_subset_mean() {
                 rng,
                 runtime: None,
                 model: &b.model,
+                faults: &marfl::net::FaultConfig::OFF,
             };
             s.aggregate(&mut states, &agg_idx, &mut ctx).unwrap();
             let (got, _) = mean_of(&states, &agg_idx);
@@ -115,6 +116,7 @@ fn property_mar_contracts_distortion_and_preserves_mean() {
             rng,
             runtime: None,
             model: &b.model,
+            faults: &marfl::net::FaultConfig::OFF,
         };
         mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
         let after = avg_distortion(
@@ -156,6 +158,7 @@ fn property_mar_transfer_count_bounded() {
             rng,
             runtime: None,
             model: &b2.model,
+            faults: &marfl::net::FaultConfig::OFF,
         };
         mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
         let msgs = b2.ledger.snapshot().data_msgs as usize;
@@ -217,6 +220,7 @@ fn property_scaling_shape() {
             rng: &mut rng,
             runtime: None,
             model: &b.model,
+            faults: &marfl::net::FaultConfig::OFF,
         };
         mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
         b.ledger.snapshot().data_msgs as f64
