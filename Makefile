@@ -9,7 +9,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS ?= artifacts
 
-.PHONY: build test verify bench bench-micro artifacts fmt clippy clean
+.PHONY: build test verify bench bench-micro artifacts fmt clippy doc clean
 
 build:
 	$(CARGO) build --release
@@ -35,6 +35,11 @@ fmt:
 
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
+
+# API docs for the marfl crate; warnings (broken links, missing code
+# fences) are errors, matching the CI gate.
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
 clean:
 	$(CARGO) clean

@@ -85,6 +85,8 @@ fn main() -> anyhow::Result<()> {
                 rng: &mut rng,
                 runtime: None,
                 model: &mdl,
+                faults: &marfl::net::FaultConfig::OFF,
+                links: None,
             };
             aggregator.aggregate(&mut st, &agg, &mut ctx).unwrap();
             let s = ledger.snapshot();
@@ -140,6 +142,8 @@ fn main() -> anyhow::Result<()> {
                 rng: &mut rng,
                 runtime: None,
                 model: &mdl,
+                faults: &marfl::net::FaultConfig::OFF,
+                links: None,
             };
             // warm the pool and the scratch buffers, then time one call
             mar.aggregate(&mut st, &agg, &mut ctx).unwrap();
@@ -166,6 +170,8 @@ fn main() -> anyhow::Result<()> {
                 rng: &mut rng,
                 runtime: None,
                 model: &mdl,
+                faults: &marfl::net::FaultConfig::OFF,
+                links: None,
             };
             mar.aggregate(&mut st, &agg, &mut ctx).unwrap();
             ledger.snapshot()

@@ -120,6 +120,7 @@ impl SynthBundle {
             runtime: None,
             model: &self.model,
             faults: &marfl::net::FaultConfig::OFF,
+            links: None,
         }
     }
 

@@ -126,25 +126,31 @@ fn main() {
     // determinism contract CI asserts — plus two loss/straggler settings
     // showing what the recovery machinery (retries, quorum-degraded
     // groups, straggler exposure) costs as conditions worsen.
-    println!("\nfault-injection matrix (loss × stragglers, fixed seeds)\n");
+    println!("\nfault-injection matrix (loss × stragglers × bursts, fixed seeds)\n");
     let mut fault_rows = Vec::new();
     let mut fault_csv = vec![vec![
         "scenario".into(),
         "loss".into(),
         "straggler_prob".into(),
+        "ge_p".into(),
         "msgs_lost".into(),
         "retries".into(),
         "timeouts".into(),
         "quorum_degraded".into(),
         "crashes".into(),
+        "ge_bad_transitions".into(),
+        "bursty_losses".into(),
         "straggler_exposed_s".into(),
         "final_accuracy".into(),
         "data_bytes".into(),
     ]];
-    for &(label, loss, straggler) in &[
-        ("faults-off", 0.0f64, 0.0f64),
-        ("mild loss=0.05 strag=0.1", 0.05, 0.1),
-        ("harsh loss=0.2 strag=0.3", 0.2, 0.3),
+    for &(label, loss, straggler, ge_p) in &[
+        ("faults-off", 0.0f64, 0.0f64, 0.0f64),
+        ("mild loss=0.05 strag=0.1", 0.05, 0.1, 0.0),
+        ("harsh loss=0.2 strag=0.3", 0.2, 0.3, 0.0),
+        // bursty row: the mild plan with a Gilbert–Elliott chain layered
+        // on — same mean loss while a link is good, bursts while bad
+        ("bursty loss=0.05 GE(.1,.3)", 0.05, 0.1, 0.1),
     ] {
         let off = label == "faults-off";
         let cfg = ExperimentConfig {
@@ -154,21 +160,26 @@ fn main() {
                 straggler_prob: straggler,
                 degrade_prob: if off { 0.0 } else { 0.1 },
                 crash_prob: if off { 0.0 } else { 0.01 },
+                ge_p,
+                ge_r: 0.3,
                 ..FaultConfig::default()
             },
             ..base.clone()
         };
         let run =
             timed(label, || Trainer::new(cfg, &rt).unwrap().run().unwrap());
+        // the run's own counters are authoritative — no loss-rate
+        // arithmetic over the ledger here
         let f = run.faults;
         println!(
             "    lost {}  retries {}  timeouts {}  degraded {}  crashes {}  \
-             strag {:.1}s  acc {:.3}",
+             bursts {}  strag {:.1}s  acc {:.3}",
             f.msgs_lost,
             f.retries,
             f.timeouts,
             f.quorum_degraded_rounds,
             f.crashes,
+            f.ge_bad_transitions,
             run.straggler_exposed_s,
             run.final_accuracy
         );
@@ -184,15 +195,26 @@ fn main() {
                 "stragglers must surface exposed time ({label})"
             );
         }
+        if ge_p > 0.0 {
+            assert!(
+                f.ge_bad_transitions > 0 && f.bursty_losses > 0,
+                "an active chain must surface burst counters ({label})"
+            );
+        } else {
+            assert_eq!(f.ge_bad_transitions, 0, "chains off ⇒ no bursts");
+        }
         fault_csv.push(vec![
             label.to_string(),
             loss.to_string(),
             straggler.to_string(),
+            ge_p.to_string(),
             f.msgs_lost.to_string(),
             f.retries.to_string(),
             f.timeouts.to_string(),
             f.quorum_degraded_rounds.to_string(),
             f.crashes.to_string(),
+            f.ge_bad_transitions.to_string(),
+            f.bursty_losses.to_string(),
             format!("{:.3}", run.straggler_exposed_s),
             format!("{:.4}", run.final_accuracy),
             run.comm.data_bytes.to_string(),
@@ -201,11 +223,14 @@ fn main() {
             ("scenario", s(label)),
             ("loss", num(loss)),
             ("straggler_prob", num(straggler)),
+            ("ge_p", num(ge_p)),
             ("msgs_lost", num(f.msgs_lost as f64)),
             ("retries", num(f.retries as f64)),
             ("timeouts", num(f.timeouts as f64)),
             ("quorum_degraded_rounds", num(f.quorum_degraded_rounds as f64)),
             ("crashes", num(f.crashes as f64)),
+            ("ge_bad_transitions", num(f.ge_bad_transitions as f64)),
+            ("bursty_losses", num(f.bursty_losses as f64)),
             ("straggler_exposed_s", num(run.straggler_exposed_s)),
             ("final_accuracy", num(run.final_accuracy)),
             ("data_bytes", num(run.comm.data_bytes as f64)),

@@ -336,6 +336,7 @@ fn main() {
                 runtime: Some(&rt),
                 model: &model_h,
                 faults: &marfl::net::FaultConfig::OFF,
+                links: None,
             };
             kd.run_mkd(
                 t,

@@ -82,11 +82,23 @@ impl AllToAll {
         }
         // per-peer link draws for the n-1 outbound broadcasts
         let link_on = fp.link_faults_enabled();
-        let links: Vec<LinkFault> = live
-            .iter()
-            .map(|_| {
+        let links: Vec<LinkFault> = (0..live.len())
+            .map(|j| {
                 if link_on {
-                    let lf = fp.draw_link(live.len() - 1, ctx.rng);
+                    // one message to every other live peer; each directed
+                    // edge observes its own Gilbert–Elliott chain
+                    let dsts: Vec<usize> = live
+                        .iter()
+                        .copied()
+                        .filter(|&p| p != live[j])
+                        .collect();
+                    let lf = fp.draw_member(
+                        live[j],
+                        &dsts,
+                        1,
+                        ctx.links.as_deref_mut(),
+                        ctx.rng,
+                    );
                     report.faults.absorb(&lf);
                     lf
                 } else {

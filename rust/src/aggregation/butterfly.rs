@@ -82,9 +82,18 @@ impl Aggregate for Butterfly {
         for r in 0..rounds {
             let seg = bytes >> (r + 1);
             let mut lane_times = Vec::with_capacity(n);
-            for _ in 0..n {
+            for i in 0..n {
                 if link_on {
-                    let lf = fp.draw_link_persistent(1, ctx.rng);
+                    // round r pairs i with i ^ 2^r — the directed link the
+                    // Gilbert–Elliott chain (when active) is keyed on
+                    let lf = fp.draw_directed(
+                        subset[i],
+                        subset[i ^ (1 << r)],
+                        1,
+                        true,
+                        ctx.links.as_deref_mut(),
+                        ctx.rng,
+                    );
                     faults.absorb(&lf);
                     lane_times.push(ctx.fabric.send_faulty(
                         seg.max(1),
@@ -100,9 +109,16 @@ impl Aggregate for Butterfly {
         for r in (0..rounds).rev() {
             let seg = bytes >> (r + 1);
             let mut lane_times = Vec::with_capacity(n);
-            for _ in 0..n {
+            for i in 0..n {
                 if link_on {
-                    let lf = fp.draw_link_persistent(1, ctx.rng);
+                    let lf = fp.draw_directed(
+                        subset[i],
+                        subset[i ^ (1 << r)],
+                        1,
+                        true,
+                        ctx.links.as_deref_mut(),
+                        ctx.rng,
+                    );
                     faults.absorb(&lf);
                     lane_times.push(ctx.fabric.send_faulty(
                         seg.max(1),

@@ -86,7 +86,17 @@ impl FedAvgServer {
         let mut received: Vec<usize> = Vec::with_capacity(live.len());
         for &i in &live {
             let lf = if link_on {
-                let lf = fp.draw_link(1, ctx.rng);
+                // the client's single radio channel carries both its
+                // upload and its download, so both legs key the same
+                // diagonal (i, i) Gilbert–Elliott chain
+                let lf = fp.draw_directed(
+                    i,
+                    i,
+                    1,
+                    false,
+                    ctx.links.as_deref_mut(),
+                    ctx.rng,
+                );
                 report.faults.absorb(&lf);
                 lf
             } else {
@@ -112,7 +122,14 @@ impl FedAvgServer {
         let mut broadcast = 0.0f64;
         for &i in &live {
             let lf = if link_on {
-                let lf = fp.draw_link(1, ctx.rng);
+                let lf = fp.draw_directed(
+                    i,
+                    i,
+                    1,
+                    false,
+                    ctx.links.as_deref_mut(),
+                    ctx.rng,
+                );
                 report.faults.absorb(&lf);
                 lf
             } else {

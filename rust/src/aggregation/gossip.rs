@@ -83,10 +83,20 @@ impl Aggregate for Gossip {
         let pull_links: Vec<Vec<LinkFault>> = if fp.link_faults_enabled() {
             pulls
                 .iter()
-                .map(|ps| {
+                .enumerate()
+                .map(|(slot, ps)| {
                     ps.iter()
-                        .map(|_| {
-                            let lf = fp.draw_link(1, ctx.rng);
+                        .map(|&other| {
+                            // a pull transfers other → slot; that directed
+                            // link keys the Gilbert–Elliott chain
+                            let lf = fp.draw_directed(
+                                agg[other],
+                                agg[slot],
+                                1,
+                                false,
+                                ctx.links.as_deref_mut(),
+                                ctx.rng,
+                            );
                             faults.absorb(&lf);
                             lf
                         })

@@ -34,7 +34,7 @@ use anyhow::Result;
 
 use crate::metrics::{ExchangePhase, Plane};
 use crate::models::ModelMeta;
-use crate::net::{Fabric, FaultConfig, FaultCounters, LinkFault};
+use crate::net::{Fabric, FaultConfig, FaultCounters, LinkFault, LinkState};
 pub use crate::params::Theta;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
@@ -84,6 +84,10 @@ pub struct AggCtx<'a> {
     /// Fault-injection plan (net::faults). `&FaultConfig::OFF` disables
     /// injection — the default everywhere faults are not under test.
     pub faults: &'a FaultConfig,
+    /// Time-correlated link state (Gilbert–Elliott chains + per-peer
+    /// bandwidths), present only when `faults.time_correlated()`. `None`
+    /// keeps every draw on the bit-exact i.i.d. path.
+    pub links: Option<&'a mut LinkState>,
 }
 
 /// What an aggregation did (for ledger-independent assertions).
@@ -775,6 +779,7 @@ pub(crate) mod test_support {
                 runtime: None,
                 model: &self.model,
                 faults: &FaultConfig::OFF,
+                links: None,
             }
         }
     }

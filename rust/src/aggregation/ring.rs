@@ -77,12 +77,22 @@ impl Aggregate for RingRdfl {
         let link_on = fp.link_faults_enabled();
         for step in 1..n {
             let mut lane_times = Vec::with_capacity(n);
-            for _ in 0..n {
+            for slot in 0..n {
                 if link_on {
                     // the ring cannot drop a message — the sender retries
                     // until delivery (persistent link), so losses cost
-                    // retransmitted bytes and backoff time, never data
-                    let lf = fp.draw_link_persistent(1, ctx.rng);
+                    // retransmitted bytes and backoff time, never data.
+                    // Every step reuses the same directed successor link,
+                    // so a Gilbert–Elliott burst on it stalls consecutive
+                    // steps (the chain is observed, not redrawn).
+                    let lf = fp.draw_directed(
+                        agg[slot],
+                        agg[(slot + 1) % n],
+                        1,
+                        true,
+                        ctx.links.as_deref_mut(),
+                        ctx.rng,
+                    );
                     faults.absorb(&lf);
                     lane_times
                         .push(ctx.fabric.send_faulty(bytes, Plane::Data, &lf));

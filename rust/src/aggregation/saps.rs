@@ -115,10 +115,26 @@ impl Aggregate for Saps {
             if fp.link_faults_enabled() {
                 pairs
                     .iter()
-                    .map(|_| {
-                        let ab = fp.draw_link(1, ctx.rng);
+                    .map(|&(a, b)| {
+                        // each direction of the pair keys its own
+                        // Gilbert–Elliott chain
+                        let ab = fp.draw_directed(
+                            a,
+                            b,
+                            1,
+                            false,
+                            ctx.links.as_deref_mut(),
+                            ctx.rng,
+                        );
                         faults.absorb(&ab);
-                        let ba = fp.draw_link(1, ctx.rng);
+                        let ba = fp.draw_directed(
+                            b,
+                            a,
+                            1,
+                            false,
+                            ctx.links.as_deref_mut(),
+                            ctx.rng,
+                        );
                         faults.absorb(&ba);
                         (ab, ba)
                     })

@@ -14,7 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use toml_lite::{parse_value, Value};
 
-use crate::net::FaultConfig;
+use crate::net::{BwDist, FaultConfig};
 
 /// Aggregation technique (paper baselines + contribution).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -343,6 +343,25 @@ impl ExperimentConfig {
             "faults.timeout_s" => self.faults.timeout_s = f64_of(v)?,
             "faults.backoff_s" => self.faults.backoff_s = f64_of(v)?,
             "faults.quorum_min" => self.faults.quorum_min = usize_of(v)?,
+            "faults.ge_p" => self.faults.ge_p = f64_of(v)?,
+            "faults.ge_r" => self.faults.ge_r = f64_of(v)?,
+            "faults.ge_loss" => self.faults.ge_loss = f64_of(v)?,
+            "faults.ge_bw" => self.faults.ge_bw = f64_of(v)?,
+            "faults.ge_lat" => self.faults.ge_lat = f64_of(v)?,
+            "faults.bw_dist" => {
+                let name = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("expected string"))?;
+                self.faults.bw_dist = BwDist::parse(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "faults.bw_dist must be off, lognormal or uniform, \
+                         got {name:?}"
+                    )
+                })?
+            }
+            "faults.bw_sigma" => self.faults.bw_sigma = f64_of(v)?,
+            "faults.bw_min" => self.faults.bw_min = f64_of(v)?,
+            "faults.bw_max" => self.faults.bw_max = f64_of(v)?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -401,6 +420,30 @@ impl ExperimentConfig {
         }
         if f.timeout_s < 0.0 || f.backoff_s < 0.0 {
             bail!("faults.timeout_s / backoff_s must be >= 0");
+        }
+        for (name, p) in [
+            ("faults.ge_p", f.ge_p),
+            ("faults.ge_r", f.ge_r),
+            ("faults.ge_loss", f.ge_loss),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("{name} must be in [0, 1]");
+            }
+        }
+        if f.ge_p > 0.0 && f.ge_r <= 0.0 {
+            bail!("faults.ge_r must be > 0 when ge_p > 0 (bad links must be able to recover)");
+        }
+        if !(f.ge_bw > 0.0 && f.ge_bw <= 1.0) {
+            bail!("faults.ge_bw must be in (0, 1]");
+        }
+        if f.ge_lat < 1.0 {
+            bail!("faults.ge_lat must be >= 1");
+        }
+        if f.bw_sigma < 0.0 {
+            bail!("faults.bw_sigma must be >= 0");
+        }
+        if !(f.bw_min > 0.0 && f.bw_min <= f.bw_max) {
+            bail!("faults.bw_min/bw_max must satisfy 0 < bw_min <= bw_max");
         }
         Ok(())
     }
@@ -515,6 +558,43 @@ mod tests {
     }
 
     #[test]
+    fn ge_knobs_apply_and_validate() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.faults.time_correlated());
+        c.apply_overrides(&[
+            "faults.ge_p=0.1".into(),
+            "faults.ge_r=0.4".into(),
+            "faults.ge_loss=0.6".into(),
+            "faults.ge_bw=0.2".into(),
+            "faults.ge_lat=8.0".into(),
+            "faults.bw_dist=lognormal".into(),
+            "faults.bw_sigma=0.7".into(),
+            "faults.bw_min=0.2".into(),
+            "faults.bw_max=0.9".into(),
+        ])
+        .unwrap();
+        assert!(c.faults.ge_enabled());
+        assert!(c.faults.hetero_bw());
+        assert_eq!(c.faults.ge_p, 0.1);
+        assert_eq!(c.faults.bw_dist, BwDist::LogNormal);
+        assert!(c.validate().is_ok());
+        // an absorbing bad state can never deliver: rejected
+        c.faults.ge_r = 0.0;
+        assert!(c.validate().is_err());
+        c.faults.ge_r = 0.4;
+        c.faults.ge_loss = 1.5;
+        assert!(c.validate().is_err());
+        c.faults.ge_loss = 0.6;
+        c.faults.bw_min = 0.0;
+        assert!(c.validate().is_err());
+        c.faults.bw_min = 0.95;
+        assert!(c.validate().is_err(), "bw_min > bw_max must fail");
+        // unknown distribution name is rejected at set() time
+        let mut c2 = ExperimentConfig::default();
+        assert!(c2.apply_overrides(&["faults.bw_dist=pareto".into()]).is_err());
+    }
+
+    #[test]
     fn unknown_key_rejected() {
         let mut c = ExperimentConfig::default();
         assert!(c.apply_overrides(&["bogus=1".into()]).is_err());
@@ -539,6 +619,7 @@ mod tests {
             "configs/dp_20ng.toml",
             "configs/mkd_20ng.toml",
             "configs/churn_markov.toml",
+            "configs/faults_bursty.toml",
         ] {
             let cfg = ExperimentConfig::load(
                 Path::new(preset),

@@ -574,16 +574,32 @@ impl Aggregate for MarAggregator {
                 // nothing — their traffic never happens)
                 let mut links: Vec<LinkFault> = Vec::new();
                 if link_faults_on && k >= 2 {
-                    let msgs = match exchange {
-                        GroupExchange::ReduceScatter => 2 * (k - 1),
-                        GroupExchange::FullGather => k - 1,
+                    // messages per destination; with no LinkState this
+                    // delegates to the seed's draw_link(msgs_per_dst·(k−1))
+                    // bit for bit; with one present a member's retries
+                    // observe the per-destination Gilbert–Elliott chains
+                    let msgs_per_dst = match exchange {
+                        GroupExchange::ReduceScatter => 2,
+                        GroupExchange::FullGather => 1,
                     };
                     links = (0..k)
                         .map(|chunk| {
                             if crashed.contains(&chunk) {
                                 LinkFault::CLEAN
                             } else {
-                                ctx.faults.draw_link(msgs, ctx.rng)
+                                let dsts: Vec<usize> = group
+                                    .iter()
+                                    .enumerate()
+                                    .filter(|&(c, _)| c != chunk)
+                                    .map(|(_, &pos)| agg[pos])
+                                    .collect();
+                                ctx.faults.draw_member(
+                                    agg[group[chunk]],
+                                    &dsts,
+                                    msgs_per_dst,
+                                    ctx.links.as_deref_mut(),
+                                    ctx.rng,
+                                )
                             }
                         })
                         .collect();

@@ -20,7 +20,7 @@ use crate::dp::DpEngine;
 use crate::kd::KdEngine;
 use crate::metrics::{CommLedger, CommSnapshot, Plane, TrainCurve};
 use crate::models::ModelMeta;
-use crate::net::{ChurnModel, Fabric, FaultCounters, MarkovChurn};
+use crate::net::{ChurnModel, Fabric, FaultCounters, LinkState, MarkovChurn};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::sim::SimClock;
@@ -74,6 +74,9 @@ pub struct RunSummary {
     pub straggler_exposed_s: f64,
     /// crash-faulted peers that pulled a fresh θ when they rejoined
     pub rejoin_pulls: u64,
+    /// `[p10, p50, p90]` of the per-peer bandwidth-capacity multipliers
+    /// when `faults.bw_dist` draws heterogeneous links, `None` otherwise
+    pub bw_percentiles: Option<[f64; 3]>,
     /// times `ChurnModel::sample_aggregators`'s keep-alive fallback
     /// rebuilt `A_t` from dropped participants
     pub churn_rescues: u64,
@@ -112,6 +115,11 @@ pub struct Trainer<'rt> {
     rejoin_pulls: u64,
     /// aggregator keep-alive rescues (see `RunSummary`)
     churn_rescues: u64,
+    /// time-correlated link state (Gilbert–Elliott chains + per-peer
+    /// bandwidths), present only when `faults.time_correlated()` — the
+    /// gated construction keeps time-uncorrelated plans draw-identical
+    /// to the seed
+    links: Option<LinkState>,
     /// peers that crash-faulted and have not yet rejoined: they resume
     /// with a booked fresh-θ pull the next time they participate
     stale: Vec<bool>,
@@ -193,6 +201,13 @@ impl<'rt> Trainer<'rt> {
                 &mut rng.fork(2),
             )
         });
+        // dedicated fork (tag 3 — tags 1/2 are data/markov, iteration
+        // forks start at 32) so the chain/bandwidth draws never shift the
+        // schedule streams; gated exactly like the markov chain above
+        let links = cfg
+            .faults
+            .time_correlated()
+            .then(|| LinkState::new(&cfg.faults, cfg.peers, &mut rng.fork(3)));
         let label = cfg.strategy.name().to_string();
         let peers = cfg.peers;
         Ok(Trainer {
@@ -216,6 +231,7 @@ impl<'rt> Trainer<'rt> {
             straggler_exposed_s: 0.0,
             rejoin_pulls: 0,
             churn_rescues: 0,
+            links,
             stale: vec![false; peers],
             label,
         })
@@ -247,13 +263,25 @@ impl<'rt> Trainer<'rt> {
         }
         let markov_revivals =
             self.markov.as_ref().map(|c| c.revivals()).unwrap_or(0);
-        if self.churn_rescues > 0 || markov_revivals > 0 {
+        // surface the link-state outcome: the chains live outside the
+        // per-round counters, so the run totals are assigned (not
+        // accumulated) from the single shared LinkState
+        if let Some(ls) = &self.links {
+            self.faults.ge_bad_transitions = ls.ge_bad_transitions;
+            self.faults.bursty_losses = ls.bursty_losses;
+        }
+        if self.churn_rescues > 0
+            || markov_revivals > 0
+            || self.faults.ge_bad_transitions > 0
+        {
             log::info!(
                 "[{}] liveness: {} aggregator keep-alive rescues, \
-                 {} Markov revivals",
+                 {} Markov revivals, {} link bursts ({} bursty losses)",
                 self.label,
                 self.churn_rescues,
                 markov_revivals,
+                self.faults.ge_bad_transitions,
+                self.faults.bursty_losses,
             );
         }
         Ok(RunSummary {
@@ -270,6 +298,10 @@ impl<'rt> Trainer<'rt> {
             faults: self.faults,
             straggler_exposed_s: self.straggler_exposed_s,
             rejoin_pulls: self.rejoin_pulls,
+            bw_percentiles: self
+                .links
+                .as_ref()
+                .and_then(|ls| ls.bw_percentiles()),
             churn_rescues: self.churn_rescues,
             markov_revivals,
             final_loss: last.0,
@@ -422,6 +454,7 @@ impl<'rt> Trainer<'rt> {
                     runtime: Some(self.rt),
                     model: &self.model,
                     faults: &self.cfg.faults,
+                    links: self.links.as_mut(),
                 };
                 let kd_rep = kd.run_mkd(
                     t,
@@ -454,6 +487,7 @@ impl<'rt> Trainer<'rt> {
             runtime: Some(self.rt),
             model: &self.model,
             faults: &self.cfg.faults,
+            links: self.links.as_mut(),
         };
         let report =
             self.agg.as_dyn().aggregate(&mut self.states, &aggers, &mut ctx)?;

@@ -170,7 +170,11 @@ impl KdEngine {
                     lane_times.push(0.0);
                     continue;
                 }
-                // per-member link draws for the gather (serial order)
+                // per-member link draws for the gather (serial order).
+                // Deliberately i.i.d.: the logit gather fans out to
+                // k-1 peers at once, so it has no single directed link
+                // for a Gilbert–Elliott chain to key on — the bursty
+                // `LinkState` layer applies to model exchange only.
                 let links: Vec<LinkFault> = if link_on {
                     members
                         .iter()

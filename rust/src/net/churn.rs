@@ -23,7 +23,7 @@ impl ChurnModel {
         ChurnModel { participation: 1.0, dropout: 0.0 }
     }
 
-    /// Sample the participant set `U_t` ⊆ [N] for one FL iteration.
+    /// Sample the participant set `U_t ⊆ [N]` for one FL iteration.
     /// Guarantees at least one participant.
     pub fn sample_participants(&self, n: usize, rng: &mut Rng) -> Vec<usize> {
         let k = ((n as f64 * self.participation).round() as usize).clamp(1, n);

@@ -15,13 +15,29 @@
 //! * **stragglers** — a peer's simulated compute lanes (local SGD,
 //!   distillation) run `straggler_mult`× slower for one iteration;
 //! * **crashes** — a peer dies mid-exchange; its group proceeds with a
-//!   quorum of survivors and the peer rejoins stale.
+//!   quorum of survivors and the peer rejoins stale;
+//! * **bursty (Gilbert–Elliott) links** — each *directed* link carries a
+//!   two-state good/bad Markov chain ([`LinkState`], transition
+//!   probabilities `ge_p`/`ge_r`); while bad, messages are lost with
+//!   `ge_loss` and the link runs at `ge_bw`/`ge_lat` multipliers.
+//!   Retransmissions *observe* the chain — each retry advances it, so a
+//!   burst must actually end before delivery succeeds (losses are
+//!   time-correlated, not re-rolled i.i.d.);
+//! * **heterogeneous bandwidths** — each peer draws a static capacity
+//!   multiplier once per run (`bw_dist` = lognormal or uniform over
+//!   `[bw_min, bw_max]`) that scales every booking it originates.
 //!
 //! Determinism contract: every fault is drawn *serially* (in the same
 //! schedule phase that draws `DropPlan`s today) before any parallel
 //! fan-out, so serial and parallel engines stay bit-identical. With all
 //! knobs at their defaults the model draws **zero** random numbers and
-//! every code path is bit-identical to the fault-free build.
+//! every code path is bit-identical to the fault-free build. The
+//! Gilbert–Elliott layer keeps the same contract one level up: with
+//! `ge_p = 0` and `bw_dist = "off"`, [`FaultConfig::draw_directed`] and
+//! [`FaultConfig::draw_member`] delegate bit-exactly to the i.i.d.
+//! [`FaultConfig::draw_link`] / [`FaultConfig::draw_link_persistent`]
+//! paths (zero extra draws), so every pre-existing faults-on pin stays
+//! green.
 
 use crate::rng::Rng;
 
@@ -54,6 +70,62 @@ pub struct FaultConfig {
     pub backoff_s: f64,
     /// minimum survivors for a group to proceed quorum-degraded
     pub quorum_min: usize,
+    /// Gilbert–Elliott good→bad transition probability per link advance
+    /// (0 disables the chain layer entirely — zero extra draws)
+    pub ge_p: f64,
+    /// Gilbert–Elliott bad→good recovery probability per link advance
+    pub ge_r: f64,
+    /// per-message loss probability while a link is in the bad state
+    /// (the good state uses `loss`)
+    pub ge_loss: f64,
+    /// bandwidth multiplier while a link is in the bad state
+    pub ge_bw: f64,
+    /// latency multiplier while a link is in the bad state
+    pub ge_lat: f64,
+    /// per-peer static bandwidth-capacity distribution ("off" disables)
+    pub bw_dist: BwDist,
+    /// lognormal shape parameter for `bw_dist = "lognormal"`
+    pub bw_sigma: f64,
+    /// lower bound of the per-peer capacity multiplier
+    pub bw_min: f64,
+    /// upper bound of the per-peer capacity multiplier
+    pub bw_max: f64,
+}
+
+/// Shape of the per-peer heterogeneous-bandwidth draw. `Off` keeps every
+/// peer at nominal capacity and consumes zero draws.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BwDist {
+    /// homogeneous links (multiplier 1.0 everywhere, draw-free)
+    #[default]
+    Off,
+    /// lognormal around the geometric midpoint of `[bw_min, bw_max]`,
+    /// shape `bw_sigma`, clamped to the range — the classic heavy-tailed
+    /// wireless-capacity shape
+    LogNormal,
+    /// uniform over `[bw_min, bw_max]`
+    Uniform,
+}
+
+impl BwDist {
+    /// Parse the `faults.bw_dist` config value.
+    pub fn parse(v: &str) -> Option<BwDist> {
+        match v {
+            "off" => Some(BwDist::Off),
+            "lognormal" => Some(BwDist::LogNormal),
+            "uniform" => Some(BwDist::Uniform),
+            _ => None,
+        }
+    }
+
+    /// The config spelling of this variant.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BwDist::Off => "off",
+            BwDist::LogNormal => "lognormal",
+            BwDist::Uniform => "uniform",
+        }
+    }
 }
 
 impl Default for FaultConfig {
@@ -70,6 +142,15 @@ impl Default for FaultConfig {
             timeout_s: 0.1,
             backoff_s: 0.05,
             quorum_min: 2,
+            ge_p: 0.0,
+            ge_r: 0.25,
+            ge_loss: 0.5,
+            ge_bw: 0.25,
+            ge_lat: 4.0,
+            bw_dist: BwDist::Off,
+            bw_sigma: 0.5,
+            bw_min: 0.1,
+            bw_max: 1.0,
         }
     }
 }
@@ -89,6 +170,15 @@ impl FaultConfig {
         timeout_s: 0.1,
         backoff_s: 0.05,
         quorum_min: 2,
+        ge_p: 0.0,
+        ge_r: 0.25,
+        ge_loss: 0.5,
+        ge_bw: 0.25,
+        ge_lat: 4.0,
+        bw_dist: BwDist::Off,
+        bw_sigma: 0.5,
+        bw_min: 0.1,
+        bw_max: 1.0,
     };
 
     /// Any fault axis active?
@@ -97,13 +187,32 @@ impl FaultConfig {
             || self.degrade_prob > 0.0
             || self.straggler_prob > 0.0
             || self.crash_prob > 0.0
+            || self.time_correlated()
     }
 
     /// Any *link-level* axis active (loss or degradation)? Gates the
     /// per-peer link draws so a straggler-only plan stays draw-free on
     /// the exchange path.
     pub fn link_faults_enabled(&self) -> bool {
-        self.loss > 0.0 || self.degrade_prob > 0.0
+        self.loss > 0.0 || self.degrade_prob > 0.0 || self.time_correlated()
+    }
+
+    /// Gilbert–Elliott chains active? (`ge_p = 0` keeps every link
+    /// pinned good with zero chain draws.)
+    pub fn ge_enabled(&self) -> bool {
+        self.ge_p > 0.0
+    }
+
+    /// Heterogeneous per-peer bandwidth draw active?
+    pub fn hetero_bw(&self) -> bool {
+        self.bw_dist != BwDist::Off
+    }
+
+    /// Does this plan need persistent per-run [`LinkState`]? Gates the
+    /// state's construction (and its dedicated RNG fork) so plans
+    /// without time correlation stay bit-identical to the seed.
+    pub fn time_correlated(&self) -> bool {
+        self.ge_enabled() || self.hetero_bw()
     }
 
     /// Draw one peer's link state for a round: a degradation draw, then
@@ -159,6 +268,255 @@ impl FaultConfig {
             }
         }
         f
+    }
+
+    /// Draw the fault outcome of `msgs` messages on the *directed* link
+    /// `src → dst`, observing (and advancing) the per-link
+    /// Gilbert–Elliott chain in `links` when one is active. Must be
+    /// called from the serial schedule phase — it mutates the shared
+    /// link state, and call order is part of the determinism contract.
+    ///
+    /// With `links = None` or no time-correlated axis enabled this
+    /// delegates bit-exactly to [`Self::draw_link`] /
+    /// [`Self::draw_link_persistent`] (same draws, same outcome), so the
+    /// i.i.d. plan and all its pins are unchanged.
+    pub fn draw_directed(
+        &self,
+        src: usize,
+        dst: usize,
+        msgs: usize,
+        persistent: bool,
+        links: Option<&mut LinkState>,
+        rng: &mut Rng,
+    ) -> LinkFault {
+        let ls = match links {
+            Some(ls) if self.time_correlated() => ls,
+            _ => {
+                return if persistent {
+                    self.draw_link_persistent(msgs, rng)
+                } else {
+                    self.draw_link(msgs, rng)
+                };
+            }
+        };
+        let mut f = LinkFault::CLEAN;
+        if self.degrade_prob > 0.0 && rng.chance(self.degrade_prob) {
+            f.bw_mult = self.degrade_bw;
+            f.lat_mult = self.degrade_lat;
+        }
+        let bad = self.ge_messages(&mut f, ls, src, dst, msgs, persistent, rng);
+        if bad {
+            f.bw_mult *= self.ge_bw;
+            f.lat_mult *= self.ge_lat;
+        }
+        f.bw_mult *= ls.peer_bw(src);
+        f
+    }
+
+    /// Draw one group member's combined link outcome: `msgs_per_dst`
+    /// messages to *each* destination in `dsts`, each destination
+    /// observing its own directed chain. Used by exchanges that book one
+    /// aggregate [`LinkFault`] per member (MAR groups, all-to-all).
+    ///
+    /// With `links = None` or no time-correlated axis this delegates
+    /// bit-exactly to `draw_link(msgs_per_dst · dsts.len())`.
+    pub fn draw_member(
+        &self,
+        src: usize,
+        dsts: &[usize],
+        msgs_per_dst: usize,
+        links: Option<&mut LinkState>,
+        rng: &mut Rng,
+    ) -> LinkFault {
+        let ls = match links {
+            Some(ls) if self.time_correlated() => ls,
+            _ => return self.draw_link(msgs_per_dst * dsts.len(), rng),
+        };
+        let mut f = LinkFault::CLEAN;
+        if self.degrade_prob > 0.0 && rng.chance(self.degrade_prob) {
+            f.bw_mult = self.degrade_bw;
+            f.lat_mult = self.degrade_lat;
+        }
+        let mut any_bad = false;
+        for &dst in dsts {
+            any_bad |= self
+                .ge_messages(&mut f, ls, src, dst, msgs_per_dst, false, rng);
+        }
+        if any_bad {
+            f.bw_mult *= self.ge_bw;
+            f.lat_mult *= self.ge_lat;
+        }
+        f.bw_mult *= ls.peer_bw(src);
+        f
+    }
+
+    /// Run the loss/retry loop for `msgs` messages on one directed link:
+    /// advance the chain once (the round tick), then draw each message
+    /// against the *current* state's loss probability, advancing the
+    /// chain again after every failed attempt — a retry waits out the
+    /// backoff and retransmits into whatever state the link is in by
+    /// then. Returns whether the round tick found the link bad (the
+    /// caller applies `ge_bw`/`ge_lat` off that observation).
+    #[allow(clippy::too_many_arguments)]
+    fn ge_messages(
+        &self,
+        f: &mut LinkFault,
+        ls: &mut LinkState,
+        src: usize,
+        dst: usize,
+        msgs: usize,
+        persistent: bool,
+        rng: &mut Rng,
+    ) -> bool {
+        let tick_bad = ls.advance(self, src, dst, rng);
+        let mut bad = tick_bad;
+        for _ in 0..msgs {
+            if persistent {
+                let mut attempt = 0u32;
+                loop {
+                    let p = if bad { self.ge_loss } else { self.loss };
+                    if p <= 0.0 || !rng.chance(p) {
+                        break;
+                    }
+                    if bad {
+                        ls.bursty_losses += 1;
+                    }
+                    f.retries += 1;
+                    f.penalty_s += self.timeout_s
+                        + self.backoff_s
+                            * (1u64 << attempt.min(self.max_retries).min(20))
+                                as f64;
+                    attempt += 1;
+                    bad = ls.advance(self, src, dst, rng);
+                }
+            } else {
+                for attempt in 0..=self.max_retries {
+                    let p = if bad { self.ge_loss } else { self.loss };
+                    if p <= 0.0 || !rng.chance(p) {
+                        break;
+                    }
+                    if bad {
+                        ls.bursty_losses += 1;
+                    }
+                    if attempt < self.max_retries {
+                        f.retries += 1;
+                        f.penalty_s += self.timeout_s
+                            + self.backoff_s * (1u64 << attempt.min(20)) as f64;
+                        bad = ls.advance(self, src, dst, rng);
+                    } else {
+                        f.timeouts += 1;
+                        f.penalty_s += self.timeout_s;
+                    }
+                }
+            }
+        }
+        tick_bad
+    }
+}
+
+/// Per-run time-correlated link state: one two-state Gilbert–Elliott
+/// chain per *directed* link plus one static capacity multiplier per
+/// peer. Owned by the run (the `Trainer` keeps one across iterations,
+/// gated on [`FaultConfig::time_correlated`]) and only ever touched from
+/// the serial schedule phase.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkState {
+    /// number of peers (chains are indexed `src · n + dst`)
+    n: usize,
+    /// chain states, row-major by sender; empty when `ge_p = 0`
+    bad: Vec<bool>,
+    /// per-peer capacity multipliers; empty when `bw_dist = "off"`
+    peer_bw: Vec<f64>,
+    /// good→bad transitions observed (burst onsets)
+    pub ge_bad_transitions: u64,
+    /// message losses that happened while the link was in the bad state
+    pub bursty_losses: u64,
+}
+
+impl LinkState {
+    /// Initialize all chains from their stationary distribution
+    /// (`P(bad) = ge_p / (ge_p + ge_r)`) and draw the per-peer capacity
+    /// multipliers. Draw order is fixed (all chains row-major, then all
+    /// capacities) — both engines construct the identical state.
+    pub fn new(cfg: &FaultConfig, peers: usize, rng: &mut Rng) -> LinkState {
+        let bad = if cfg.ge_enabled() {
+            let pi_bad = cfg.ge_p / (cfg.ge_p + cfg.ge_r);
+            (0..peers * peers).map(|_| rng.chance(pi_bad)).collect()
+        } else {
+            Vec::new()
+        };
+        let peer_bw = match cfg.bw_dist {
+            BwDist::Off => Vec::new(),
+            BwDist::Uniform => {
+                (0..peers).map(|_| rng.range_f64(cfg.bw_min, cfg.bw_max)).collect()
+            }
+            BwDist::LogNormal => {
+                let median = (cfg.bw_min * cfg.bw_max).sqrt();
+                (0..peers)
+                    .map(|_| {
+                        (median.ln() + cfg.bw_sigma * rng.normal())
+                            .exp()
+                            .clamp(cfg.bw_min, cfg.bw_max)
+                    })
+                    .collect()
+            }
+        };
+        LinkState { n: peers, bad, peer_bw, ge_bad_transitions: 0, bursty_losses: 0 }
+    }
+
+    /// Advance the `src → dst` chain one step and return its new state
+    /// (`true` = bad). Draw-free (and always good) when `ge_p = 0`.
+    pub fn advance(
+        &mut self,
+        cfg: &FaultConfig,
+        src: usize,
+        dst: usize,
+        rng: &mut Rng,
+    ) -> bool {
+        if self.bad.is_empty() {
+            return false;
+        }
+        let i = src * self.n + dst;
+        let cur = self.bad[i];
+        let next =
+            if cur { !rng.chance(cfg.ge_r) } else { rng.chance(cfg.ge_p) };
+        if !cur && next {
+            self.ge_bad_transitions += 1;
+        }
+        self.bad[i] = next;
+        next
+    }
+
+    /// Current state of the `src → dst` chain without advancing it.
+    pub fn is_bad(&self, src: usize, dst: usize) -> bool {
+        !self.bad.is_empty() && self.bad[src * self.n + dst]
+    }
+
+    /// Fraction of directed links currently in the bad state.
+    pub fn bad_fraction(&self) -> f64 {
+        if self.bad.is_empty() {
+            return 0.0;
+        }
+        self.bad.iter().filter(|&&b| b).count() as f64 / self.bad.len() as f64
+    }
+
+    /// Peer `src`'s static capacity multiplier (1.0 when `bw_dist` off).
+    pub fn peer_bw(&self, src: usize) -> f64 {
+        self.peer_bw.get(src).copied().unwrap_or(1.0)
+    }
+
+    /// `[p10, p50, p90]` of the per-peer capacity multipliers, `None`
+    /// when the heterogeneous-bandwidth draw is off.
+    pub fn bw_percentiles(&self) -> Option<[f64; 3]> {
+        if self.peer_bw.is_empty() {
+            return None;
+        }
+        let mut v = self.peer_bw.clone();
+        v.sort_by(f64::total_cmp);
+        let pick = |q: f64| {
+            v[((q * (v.len() - 1) as f64).round() as usize).min(v.len() - 1)]
+        };
+        Some([pick(0.1), pick(0.5), pick(0.9)])
     }
 }
 
@@ -230,6 +588,11 @@ pub struct FaultCounters {
     pub quorum_degraded_rounds: u64,
     /// peers crashed mid-exchange
     pub crashes: u64,
+    /// Gilbert–Elliott good→bad transitions (burst onsets) observed by
+    /// the run's [`LinkState`]
+    pub ge_bad_transitions: u64,
+    /// message losses that struck while the link was in the bad state
+    pub bursty_losses: u64,
 }
 
 impl FaultCounters {
@@ -247,6 +610,8 @@ impl FaultCounters {
         self.timeouts += other.timeouts;
         self.quorum_degraded_rounds += other.quorum_degraded_rounds;
         self.crashes += other.crashes;
+        self.ge_bad_transitions += other.ge_bad_transitions;
+        self.bursty_losses += other.bursty_losses;
     }
 
     pub fn any(&self) -> bool {
@@ -326,6 +691,163 @@ mod tests {
         assert_eq!(d.bw_mult, cfg.degrade_bw);
         assert_eq!(d.lat_mult, cfg.degrade_lat);
         assert!(!d.is_clean());
+    }
+
+    #[test]
+    fn ge_off_directed_delegates_bit_exactly() {
+        // ge_p = 0 and bw_dist off: draw_directed/draw_member must equal
+        // the i.i.d. draws bit for bit, whether or not a LinkState is
+        // supplied, consuming the identical number of draws
+        let cfg = FaultConfig {
+            loss: 0.3,
+            degrade_prob: 0.2,
+            ..FaultConfig::default()
+        };
+        assert!(!cfg.time_correlated());
+        let mut ls = LinkState::new(&cfg, 8, &mut Rng::new(9));
+        for persistent in [false, true] {
+            let mut a = Rng::new(42);
+            let mut b = Rng::new(42);
+            for (src, dst) in [(0usize, 1usize), (3, 7), (5, 5)] {
+                let legacy = if persistent {
+                    cfg.draw_link_persistent(4, &mut a)
+                } else {
+                    cfg.draw_link(4, &mut a)
+                };
+                let directed = cfg.draw_directed(
+                    src,
+                    dst,
+                    4,
+                    persistent,
+                    Some(&mut ls),
+                    &mut b,
+                );
+                assert_eq!(legacy, directed);
+            }
+            assert_eq!(a.next_u64(), b.next_u64(), "draw counts diverged");
+        }
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let legacy = cfg.draw_link(6, &mut a);
+        let member = cfg.draw_member(2, &[0, 1, 3], 2, Some(&mut ls), &mut b);
+        assert_eq!(legacy, member);
+        assert_eq!(a.next_u64(), b.next_u64());
+        assert_eq!(ls.ge_bad_transitions, 0);
+        assert_eq!(ls.bursty_losses, 0);
+    }
+
+    #[test]
+    fn ge_chain_reaches_stationary_bad_fraction() {
+        let cfg = FaultConfig {
+            ge_p: 0.1,
+            ge_r: 0.3,
+            ..FaultConfig::default()
+        };
+        let mut rng = Rng::new(11);
+        let mut ls = LinkState::new(&cfg, 2, &mut rng);
+        let steps = 40_000usize;
+        let mut bad_steps = 0usize;
+        for _ in 0..steps {
+            if ls.advance(&cfg, 0, 1, &mut rng) {
+                bad_steps += 1;
+            }
+        }
+        let want = cfg.ge_p / (cfg.ge_p + cfg.ge_r);
+        let got = bad_steps as f64 / steps as f64;
+        assert!(
+            (got - want).abs() < 0.02,
+            "empirical bad fraction {got:.3} vs stationary {want:.3}"
+        );
+        assert!(ls.ge_bad_transitions > 0);
+    }
+
+    #[test]
+    fn bad_links_are_slow_and_bursty() {
+        // a link pinned bad (ge_r ≈ 0 over the horizon) must apply the
+        // bad-state multipliers and lose at ge_loss, not loss
+        let cfg = FaultConfig {
+            loss: 0.0,
+            ge_p: 1.0,
+            ge_r: 1e-12,
+            ge_loss: 1.0,
+            ..FaultConfig::default()
+        };
+        let mut rng = Rng::new(13);
+        let mut ls = LinkState::new(&cfg, 2, &mut rng);
+        let f = cfg.draw_directed(0, 1, 1, false, Some(&mut ls), &mut rng);
+        // certain loss in the bad state: full retry budget then timeout
+        assert_eq!(f.retries, cfg.max_retries as u64);
+        assert_eq!(f.timeouts, 1);
+        assert_eq!(f.bw_mult, cfg.ge_bw);
+        assert_eq!(f.lat_mult, cfg.ge_lat);
+        assert_eq!(ls.bursty_losses, (cfg.max_retries + 1) as u64);
+    }
+
+    #[test]
+    fn retries_observe_the_chain_until_the_burst_ends() {
+        // bad state loses every message, good state none: a persistent
+        // sender keeps retrying exactly until the chain recovers, so
+        // every loss is a bursty loss
+        let cfg = FaultConfig {
+            loss: 0.0,
+            ge_p: 0.4,
+            ge_r: 0.35,
+            ge_loss: 1.0,
+            ..FaultConfig::default()
+        };
+        let mut rng = Rng::new(17);
+        let mut ls = LinkState::new(&cfg, 2, &mut rng);
+        let mut total = LinkFault::CLEAN;
+        for _ in 0..200 {
+            let f = cfg.draw_directed(0, 1, 1, true, Some(&mut ls), &mut rng);
+            total.retries += f.retries;
+            assert_eq!(f.timeouts, 0, "persistent links never give up");
+            // delivery only ever happens from the good state, so the
+            // chain must be good once the draw returns
+            assert!(!ls.is_bad(0, 1));
+        }
+        assert!(total.retries > 0, "bursts must have forced retries");
+        assert_eq!(
+            ls.bursty_losses, total.retries,
+            "every loss happened inside a burst"
+        );
+    }
+
+    #[test]
+    fn hetero_bw_scales_within_bounds_and_reports_percentiles() {
+        for dist in [BwDist::Uniform, BwDist::LogNormal] {
+            let cfg = FaultConfig {
+                bw_dist: dist,
+                bw_min: 0.2,
+                bw_max: 0.9,
+                ..FaultConfig::default()
+            };
+            assert!(cfg.time_correlated() && !cfg.ge_enabled());
+            let mut rng = Rng::new(19);
+            let mut ls = LinkState::new(&cfg, 64, &mut rng);
+            for p in 0..64 {
+                let bw = ls.peer_bw(p);
+                assert!((0.2..=0.9).contains(&bw), "peer {p} bw {bw}");
+            }
+            let [p10, p50, p90] = ls.bw_percentiles().unwrap();
+            assert!(p10 <= p50 && p50 <= p90);
+            // a loss-free hetero plan draws nothing per link but still
+            // scales the sender's bandwidth
+            let f = cfg.draw_directed(3, 4, 5, false, Some(&mut ls), &mut rng);
+            assert_eq!(f.bw_mult, ls.peer_bw(3));
+            assert_eq!(f.retries + f.timeouts, 0);
+            assert!(LinkState::new(&FaultConfig::OFF, 4, &mut rng)
+                .bw_percentiles()
+                .is_none());
+        }
+    }
+
+    #[test]
+    fn bw_dist_parses_and_round_trips() {
+        for dist in [BwDist::Off, BwDist::LogNormal, BwDist::Uniform] {
+            assert_eq!(BwDist::parse(dist.as_str()), Some(dist));
+        }
+        assert_eq!(BwDist::parse("pareto"), None);
     }
 
     #[test]

@@ -15,7 +15,9 @@ pub mod faults;
 pub mod trace;
 
 pub use churn::ChurnModel;
-pub use faults::{FaultConfig, FaultCounters, LinkFault, RETRY_CTRL_BYTES};
+pub use faults::{
+    BwDist, FaultConfig, FaultCounters, LinkFault, LinkState, RETRY_CTRL_BYTES,
+};
 pub use trace::MarkovChurn;
 
 use std::sync::Arc;

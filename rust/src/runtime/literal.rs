@@ -35,7 +35,7 @@ pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
         .context("create s32 literal")
 }
 
-/// Copy a literal back to a host Vec<f32>.
+/// Copy a literal back to a host `Vec<f32>`.
 pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>().context("literal to f32 vec")
 }

@@ -124,7 +124,7 @@ fn batch_of(m: &ModelMeta, x: &[f32], y: &[i32]) -> Result<usize> {
 /// Register-block width (8 f32 = one 256-bit SIMD vector).
 const BLK: usize = 8;
 
-/// out[b, o] = bias[o] + Σ_i x[b, i] · w[i, o]. The o dimension is tiled
+/// `out[b, o] = bias[o] + Σ_i x[b, i] · w[i, o]`. The o dimension is tiled
 /// BLK-wide; each tile accumulates the full i reduction in registers
 /// (per-element i order unchanged from the scalar kernel).
 fn affine(x: &[f32], w: &[f32], bias: &[f32], b: usize, din: usize, dout: usize, out: &mut [f32]) {
@@ -1078,7 +1078,7 @@ pub mod reference {
     use crate::models::ModelMeta;
     use crate::runtime::StepOut;
 
-    /// out[b, o] = bias[o] + Σ_i x[b, i] · w[i, o] (seed scalar kernel)
+    /// `out[b, o] = bias[o] + Σ_i x[b, i] · w[i, o]` (seed scalar kernel)
     fn affine(
         x: &[f32],
         w: &[f32],

@@ -14,7 +14,7 @@ use marfl::config::ExperimentConfig;
 use marfl::coordinator::MarAggregator;
 use marfl::fl::Trainer;
 use marfl::metrics::{CommLedger, CommSnapshot, Plane};
-use marfl::net::{Fabric, FaultConfig, LinkFault, RETRY_CTRL_BYTES};
+use marfl::net::{BwDist, Fabric, FaultConfig, LinkFault, RETRY_CTRL_BYTES};
 use marfl::rng::Rng;
 use marfl::runtime::Runtime;
 use marfl::sim::SimClock;
@@ -74,6 +74,7 @@ fn run_mar_faulty(
         runtime: None,
         model: &model,
         faults,
+        links: None,
     };
     let report = mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
     (states, ledger.snapshot(), clock.now(), report)
@@ -100,6 +101,18 @@ fn inert_plan_is_bit_identical_to_off() {
         timeout_s: 7.0,
         backoff_s: 3.0,
         quorum_min: 5,
+        // Gilbert–Elliott knobs: ge_p = 0 keeps every chain inert, so the
+        // weird state-dependent multipliers must never be observable
+        ge_p: 0.0,
+        ge_r: 0.9,
+        ge_loss: 1.0,
+        ge_bw: 0.01,
+        ge_lat: 100.0,
+        // bandwidth heterogeneity off: sigma/bounds must be dead knobs
+        bw_dist: BwDist::Off,
+        bw_sigma: 9.0,
+        bw_min: 0.5,
+        bw_max: 0.5,
     };
     assert!(!inert.enabled());
     for &exchange in &[GroupExchange::FullGather, GroupExchange::ReduceScatter]

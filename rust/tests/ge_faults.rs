@@ -1,0 +1,282 @@
+//! Gilbert–Elliott link-chain verification: an inert GE config must be
+//! bit-identical to the seed behaviour (zero extra draws, even with a
+//! `LinkState` wired into the context), an active bursty plan must stay
+//! bit-identical across the serial and parallel engines (all chain
+//! advances happen in the serial schedule phase), the chain must reach
+//! its stationary bad fraction `p / (p + r)`, and the Trainer must
+//! surface burst counters and bandwidth percentiles through
+//! `RunSummary` deterministically.
+
+use std::sync::Arc;
+
+use marfl::aggregation::{AggCtx, AggReport, GroupExchange, PeerState};
+use marfl::config::ExperimentConfig;
+use marfl::coordinator::MarAggregator;
+use marfl::fl::Trainer;
+use marfl::metrics::{CommLedger, CommSnapshot};
+use marfl::net::{BwDist, Fabric, FaultConfig, LinkState};
+use marfl::rng::Rng;
+use marfl::runtime::Runtime;
+use marfl::sim::SimClock;
+
+fn toy_model(p: usize) -> marfl::models::ModelMeta {
+    marfl::models::ModelMeta {
+        name: "toy".into(),
+        param_count: p,
+        padded_len: p,
+        input_shape: vec![4],
+        classes: 3,
+        batch: 8,
+        eval_chunk: 8,
+        init_file: String::new(),
+        artifacts: Default::default(),
+    }
+}
+
+fn random_states(n: usize, p: usize, seed: u64) -> Vec<PeerState> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| PeerState {
+            theta: (0..p).map(|_| rng.normal() as f32).collect(),
+            momentum: (0..p).map(|_| rng.normal() as f32 * 0.1).collect(),
+        })
+        .collect()
+}
+
+/// A bursty plan: π = p/(p+r) = 0.25 of links bad at any time, mean
+/// burst length 1/r ≈ 3.3 schedule ticks.
+fn bursty_plan() -> FaultConfig {
+    FaultConfig {
+        loss: 0.05,
+        ge_p: 0.1,
+        ge_r: 0.3,
+        ge_loss: 0.5,
+        ge_bw: 0.25,
+        ge_lat: 4.0,
+        bw_dist: BwDist::LogNormal,
+        bw_sigma: 0.5,
+        bw_min: 0.2,
+        bw_max: 1.0,
+        ..FaultConfig::default()
+    }
+}
+
+/// One MAR aggregate call under `faults` with an optional link chain;
+/// returns (states, ledger snapshot, clock, report, link state).
+#[allow(clippy::too_many_arguments)]
+fn run_mar_linked(
+    n: usize,
+    m: usize,
+    g: usize,
+    p: usize,
+    exchange: GroupExchange,
+    faults: &FaultConfig,
+    links: Option<LinkState>,
+    parallel: bool,
+    rng_seed: u64,
+) -> (Vec<PeerState>, CommSnapshot, f64, AggReport, Option<LinkState>) {
+    let mut states = random_states(n, p, 0x6E17 ^ n as u64);
+    let agg: Vec<usize> = (0..n).collect();
+    let ledger = Arc::new(CommLedger::new());
+    let fabric = Fabric::new(ledger.clone(), 12.5e6, 0.02);
+    let mut clock = SimClock::new();
+    let mut rng = Rng::new(rng_seed);
+    let model = toy_model(p);
+    let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 7)
+        .with_exchange(exchange)
+        .with_parallel(parallel);
+    ledger.reset(); // drop DHT join traffic
+    let mut links = links;
+    let mut ctx = AggCtx {
+        fabric: &fabric,
+        clock: &mut clock,
+        rng: &mut rng,
+        runtime: None,
+        model: &model,
+        faults,
+        links: links.as_mut(),
+    };
+    let report = mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
+    (states, ledger.snapshot(), clock.now(), report, links)
+}
+
+/// (a) Inert GE config ⇒ bit-identical to the plain plan, even when a
+/// `LinkState` is wired into the context: with `ge_p = 0` and
+/// `bw_dist = "off"` the chain code path must never run, never draw,
+/// and never perturb states, ledger, clock or report.
+#[test]
+fn inert_ge_config_is_bit_identical_to_seed() {
+    let inert = FaultConfig {
+        loss: 0.15, // ordinary i.i.d. losses stay on
+        ge_p: 0.0,  // ...but every chain is frozen good
+        ge_r: 0.9,
+        ge_loss: 1.0,
+        ge_bw: 0.01,
+        ge_lat: 100.0,
+        bw_dist: BwDist::Off,
+        bw_sigma: 9.0,
+        bw_min: 0.5,
+        bw_max: 0.5,
+        ..FaultConfig::default()
+    };
+    assert!(!inert.time_correlated());
+    let base = FaultConfig { loss: 0.15, ..FaultConfig::default() };
+    for &exchange in &[GroupExchange::FullGather, GroupExchange::ReduceScatter]
+    {
+        for &parallel in &[false, true] {
+            let (b_states, b_snap, b_clock, b_rep, _) = run_mar_linked(
+                27, 3, 3, 129, exchange, &base, None, parallel, 77,
+            );
+            // wire a (necessarily empty) LinkState in anyway: the
+            // delegation guard, not the caller, must keep it inert
+            let ls = LinkState::new(&inert, 27, &mut Rng::new(5));
+            let (i_states, i_snap, i_clock, i_rep, i_ls) = run_mar_linked(
+                27,
+                3,
+                3,
+                129,
+                exchange,
+                &inert,
+                Some(ls.clone()),
+                parallel,
+                77,
+            );
+            for (a, b) in b_states.iter().zip(&i_states) {
+                assert_eq!(a.theta, b.theta, "inert GE perturbed states");
+                assert_eq!(a.momentum, b.momentum);
+            }
+            assert_eq!(b_snap, i_snap, "inert GE perturbed the ledger");
+            assert_eq!(b_clock.to_bits(), i_clock.to_bits());
+            assert_eq!(b_rep, i_rep);
+            assert_eq!(
+                i_ls.unwrap(),
+                ls,
+                "inert GE must never touch the link state"
+            );
+        }
+    }
+}
+
+/// (b) An active bursty plan stays bit-identical across engines: chain
+/// advances and bandwidth draws all happen in the serial schedule
+/// phase, so serial and group-parallel runs agree on states, ledger,
+/// clock, counters — and on the final chain state itself.
+#[test]
+fn bursty_plan_parallel_matches_serial() {
+    let plan = bursty_plan();
+    for &exchange in &[GroupExchange::FullGather, GroupExchange::ReduceScatter]
+    {
+        let mk = || LinkState::new(&plan, 27, &mut Rng::new(5));
+        let (s_states, s_snap, s_clock, s_rep, s_ls) = run_mar_linked(
+            27, 3, 3, 129, exchange, &plan, Some(mk()), false, 77,
+        );
+        let (p_states, p_snap, p_clock, p_rep, p_ls) = run_mar_linked(
+            27, 3, 3, 129, exchange, &plan, Some(mk()), true, 77,
+        );
+        for (i, (a, b)) in s_states.iter().zip(&p_states).enumerate() {
+            assert_eq!(a.theta, b.theta, "peer {i} theta diverged");
+            assert_eq!(a.momentum, b.momentum, "peer {i} momentum diverged");
+        }
+        assert_eq!(s_snap, p_snap, "ledger diverged under bursty faults");
+        assert_eq!(s_clock.to_bits(), p_clock.to_bits(), "clock diverged");
+        assert_eq!(s_rep, p_rep, "fault counters diverged");
+        let (s_ls, p_ls) = (s_ls.unwrap(), p_ls.unwrap());
+        assert_eq!(s_ls, p_ls, "link chains diverged across engines");
+        assert!(
+            s_ls.ge_bad_transitions > 0,
+            "π = 0.25 over 27² chains must produce burst onsets"
+        );
+    }
+}
+
+/// (c) Chain stationarity: advancing one chain many times from the
+/// stationary initial distribution keeps the empirical bad fraction at
+/// `p / (p + r)` within sampling noise.
+#[test]
+fn chain_reaches_stationary_bad_fraction() {
+    let cfg = FaultConfig { ge_p: 0.12, ge_r: 0.28, ..FaultConfig::default() };
+    let mut ls = LinkState::new(&cfg, 2, &mut Rng::new(11));
+    let mut rng = Rng::new(12);
+    let steps = 40_000usize;
+    let mut bad = 0usize;
+    for _ in 0..steps {
+        if ls.advance(&cfg, 0, 1, &mut rng) {
+            bad += 1;
+        }
+    }
+    let want = cfg.ge_p / (cfg.ge_p + cfg.ge_r);
+    let got = bad as f64 / steps as f64;
+    assert!(
+        (got - want).abs() < 0.02,
+        "empirical bad fraction {got:.4} vs stationary {want:.4}"
+    );
+    // every recorded onset is a good→bad flip, so onsets can cover at
+    // most half the steps
+    assert!(ls.ge_bad_transitions > 0);
+    assert!((ls.ge_bad_transitions as usize) < steps / 2 + 1);
+}
+
+/// End-to-end: a bursty Trainer run surfaces burst counters and
+/// bandwidth percentiles through `RunSummary`, reproducibly; the same
+/// config with the chain knobs zeroed reports neither.
+#[test]
+fn trainer_surfaces_burst_stats_deterministically() {
+    let rt = Runtime::new(&marfl::models::default_artifact_dir()).unwrap();
+    let base = ExperimentConfig {
+        model: "head".into(),
+        peers: 9,
+        group_size: 3,
+        iterations: 4,
+        samples_per_peer: 32,
+        test_samples: 250,
+        eval_every: 4,
+        local_batches: 2,
+        seed: 991,
+        ..Default::default()
+    };
+    let run = |cfg: ExperimentConfig| {
+        let mut t = Trainer::new(cfg, &rt).unwrap();
+        t.run().unwrap()
+    };
+
+    let clean = run(base.clone());
+    assert_eq!(clean.faults.ge_bad_transitions, 0);
+    assert_eq!(clean.faults.bursty_losses, 0);
+    assert!(clean.bw_percentiles.is_none(), "no bw draw when dist is off");
+
+    let mut bursty_cfg = base.clone();
+    bursty_cfg.faults = bursty_plan();
+    let a = run(bursty_cfg.clone());
+    let b = run(bursty_cfg.clone());
+    assert!(
+        a.faults.ge_bad_transitions > 0,
+        "bursty run must observe burst onsets"
+    );
+    assert!(a.faults.msgs_lost > 0, "bursty run must lose messages");
+    let [p10, p50, p90] =
+        a.bw_percentiles.expect("lognormal bw draw must report percentiles");
+    assert!(p10 <= p50 && p50 <= p90, "percentiles must be ordered");
+    assert!(
+        p10 >= bursty_cfg.faults.bw_min - 1e-12
+            && p90 <= bursty_cfg.faults.bw_max + 1e-12,
+        "percentiles must respect the clamp: [{p10}, {p50}, {p90}]"
+    );
+    assert_eq!(a.faults, b.faults, "burst counters must be reproducible");
+    assert_eq!(a.bw_percentiles, b.bw_percentiles);
+    assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
+    assert_eq!(a.comm, b.comm);
+
+    // the bursty plan must actually cost something relative to the
+    // matched i.i.d.-only plan (same loss, chains frozen)
+    let mut iid_cfg = base;
+    iid_cfg.faults =
+        FaultConfig { loss: bursty_plan().loss, ..FaultConfig::default() };
+    let iid = run(iid_cfg);
+    assert!(
+        a.sim_time_s > iid.sim_time_s,
+        "bad-state slowdowns must show up in simulated time: \
+         bursty {} vs iid {}",
+        a.sim_time_s,
+        iid.sim_time_s
+    );
+}

@@ -59,6 +59,7 @@ fn run_mkd(
         runtime: Some(&rt),
         model: &model,
         faults: &marfl::net::FaultConfig::OFF,
+        links: None,
     };
     let report = kd
         .run_mkd(
@@ -143,6 +144,7 @@ fn mkd_updates_never_perturb_aliased_snapshots() {
         runtime: Some(&rt),
         model: &model,
         faults: &marfl::net::FaultConfig::OFF,
+        links: None,
     };
     kd.run_mkd(
         1,

@@ -65,6 +65,7 @@ fn run_mar(
         runtime: None,
         model: &model,
         faults: &marfl::net::FaultConfig::OFF,
+        links: None,
     };
     mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
     (states, ledger.snapshot(), clock.now())
@@ -113,6 +114,7 @@ fn parallel_reduce_scatter_matches_serial() {
             runtime: None,
             model: &model,
             faults: &marfl::net::FaultConfig::OFF,
+            links: None,
         };
         mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
         (states, ledger.snapshot())
@@ -220,6 +222,7 @@ fn parallel_baselines_reproducible() {
                 runtime: None,
                 model: &model,
                 faults: &marfl::net::FaultConfig::OFF,
+                links: None,
             };
             agg_impl.aggregate(&mut states, &agg, &mut ctx).unwrap();
             (states, ledger.snapshot())

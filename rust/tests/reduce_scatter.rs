@@ -71,6 +71,7 @@ fn run_mar_budget(
         runtime: None,
         model: &model,
         faults: &marfl::net::FaultConfig::OFF,
+        links: None,
     };
     let report = mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
     (states, ledger.snapshot(), clock.now(), report)

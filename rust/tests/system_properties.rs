@@ -75,6 +75,7 @@ fn property_all_strategies_preserve_subset_mean() {
                 runtime: None,
                 model: &b.model,
                 faults: &marfl::net::FaultConfig::OFF,
+                links: None,
             };
             s.aggregate(&mut states, &agg_idx, &mut ctx).unwrap();
             let (got, _) = mean_of(&states, &agg_idx);
@@ -117,6 +118,7 @@ fn property_mar_contracts_distortion_and_preserves_mean() {
             runtime: None,
             model: &b.model,
             faults: &marfl::net::FaultConfig::OFF,
+            links: None,
         };
         mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
         let after = avg_distortion(
@@ -159,6 +161,7 @@ fn property_mar_transfer_count_bounded() {
             runtime: None,
             model: &b2.model,
             faults: &marfl::net::FaultConfig::OFF,
+            links: None,
         };
         mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
         let msgs = b2.ledger.snapshot().data_msgs as usize;
@@ -221,6 +224,7 @@ fn property_scaling_shape() {
             runtime: None,
             model: &b.model,
             faults: &marfl::net::FaultConfig::OFF,
+            links: None,
         };
         mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
         b.ledger.snapshot().data_msgs as f64
