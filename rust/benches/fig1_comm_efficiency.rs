@@ -48,7 +48,9 @@ fn measure(n: usize, m: usize, g: usize, which: &str) -> u64 {
         }
         "fedavg" => {
             let mut ctx = b.ctx();
-            FedAvgServer.aggregate(&mut states, &agg, &mut ctx).unwrap();
+            FedAvgServer::default()
+                .aggregate(&mut states, &agg, &mut ctx)
+                .unwrap();
         }
         "rdfl" => {
             let mut ctx = b.ctx();

@@ -1,0 +1,209 @@
+//! Figure 9 extension — Byzantine resilience of robust group
+//! aggregation.
+//!
+//! Sweeps the ground-truth attacker fraction {0, 0.1, 0.2, 0.3} under a
+//! per-iteration sign-flip attack (attack::AttackPlan) across the four
+//! group-center estimators (aggregation::robust): plain `mean` (the
+//! bit-exact legacy path, no defence), coordinate-wise `trimmed_mean`
+//! and `median`, and `norm_clip`. Robust estimators additionally run
+//! reputation-gated matchmaking (coordinator::mar bans persistent
+//! outliers from future groups); the undefended mean runs without it,
+//! as the vulnerable baseline.
+//!
+//! Emits `fig9_byzantine.csv` and `BENCH_byz.json`. The shape gate
+//! encodes the robustness claim: at 30% sign-flip the trimmed-mean +
+//! reputation run keeps its final loss within 2x the attack-free run
+//! while the plain mean ends up measurably worse than the defended run.
+//! `MARFL_BENCH_FULL=1` lengthens the sweep; `MARFL_BENCH_NO_ASSERT=1`
+//! records results without enforcing the gate.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{emit_csv, iters, mib, results_dir, runtime, timed};
+use marfl::aggregation::robust::RobustEstimator;
+use marfl::attack::{AttackConfig, AttackMode};
+use marfl::config::ExperimentConfig;
+use marfl::fl::Trainer;
+use marfl::metrics::write_json;
+use marfl::util::json::{arr, num, obj, s};
+
+/// EWMA reputation ban threshold used by every defended cell.
+const REP: f64 = 0.4;
+
+fn attack_plan(frac: f64, est: RobustEstimator) -> AttackConfig {
+    AttackConfig {
+        frac,
+        mode: AttackMode::SignFlip,
+        scale: 1.0,
+        robust: est,
+        trim: 0.25,
+        // plain mean is the undefended baseline; every robust estimator
+        // also gets reputation-gated matchmaking. Attack-free rows run
+        // without reputation so the mean cell stays on the bit-exact
+        // legacy path and the zero-counter gate below is meaningful.
+        rep_threshold: if est == RobustEstimator::Mean || frac == 0.0 {
+            0.0
+        } else {
+            REP
+        },
+        ..AttackConfig::default()
+    }
+}
+
+fn main() {
+    let peers = 16; // 4^2 MAR grid; 30% -> 5 ground-truth attackers
+    let t = iters(10, 30);
+    println!(
+        "Byzantine resilience — sign-flip fraction sweep x estimator \
+         (peers={peers}, T={t})\n"
+    );
+    let rt = runtime();
+    let base = ExperimentConfig {
+        model: "head".into(),
+        peers,
+        group_size: 4,
+        mar_rounds: 2, // 16 = 4^2
+        iterations: t,
+        samples_per_peer: 32,
+        test_samples: 1000,
+        eval_every: t,
+        seed: 20261,
+        ..Default::default()
+    };
+
+    let estimators = [
+        RobustEstimator::Mean,
+        RobustEstimator::TrimmedMean,
+        RobustEstimator::Median,
+        RobustEstimator::NormClip,
+    ];
+    let fracs = [0.0f64, 0.1, 0.2, 0.3];
+
+    let mut rows = vec![vec![
+        "estimator".into(),
+        "frac".into(),
+        "rep_threshold".into(),
+        "attackers_active".into(),
+        "flagged_peers".into(),
+        "flag_precision".into(),
+        "flag_recall".into(),
+        "data_mib".into(),
+        "final_accuracy".into(),
+        "final_loss".into(),
+        "loss_ratio".into(),
+    ]];
+    let mut json_rows = Vec::new();
+    // (estimator, frac) -> final loss, for the shape gate
+    let mut losses = std::collections::BTreeMap::new();
+    let mut clean_loss = f64::NAN;
+
+    for &est in &estimators {
+        for &frac in &fracs {
+            let atk = attack_plan(frac, est);
+            let label = format!("{} frac={frac}", est.name());
+            let cfg = ExperimentConfig { attack: atk.clone(), ..base.clone() };
+            let run = timed(&label, || {
+                Trainer::new(cfg, &rt).unwrap().run().unwrap()
+            });
+            if est == RobustEstimator::Mean && frac == 0.0 {
+                clean_loss = run.final_loss;
+            }
+            let ratio = run.final_loss / clean_loss;
+            println!(
+                "    acc {:.3}  loss {:.3} ({ratio:.2}x clean)  \
+                 attackers {}  flagged {} (P {:.2} R {:.2})",
+                run.final_accuracy,
+                run.final_loss,
+                run.attackers_active,
+                run.flagged_peers,
+                run.flag_precision,
+                run.flag_recall
+            );
+            rows.push(vec![
+                est.name().into(),
+                frac.to_string(),
+                atk.rep_threshold.to_string(),
+                run.attackers_active.to_string(),
+                run.flagged_peers.to_string(),
+                format!("{:.4}", run.flag_precision),
+                format!("{:.4}", run.flag_recall),
+                format!("{:.3}", mib(run.comm.data_bytes)),
+                format!("{:.4}", run.final_accuracy),
+                format!("{:.4}", run.final_loss),
+                format!("{ratio:.4}"),
+            ]);
+            json_rows.push(obj(vec![
+                ("estimator", s(est.name())),
+                ("frac", num(frac)),
+                ("rep_threshold", num(atk.rep_threshold)),
+                ("attackers_active", num(run.attackers_active as f64)),
+                ("flagged_peers", num(run.flagged_peers as f64)),
+                ("flag_precision", num(run.flag_precision)),
+                ("flag_recall", num(run.flag_recall)),
+                ("data_bytes", num(run.comm.data_bytes as f64)),
+                ("final_accuracy", num(run.final_accuracy)),
+                ("final_loss", num(run.final_loss)),
+                ("loss_ratio", num(ratio)),
+            ]));
+            // attack-off rows must be indistinguishable from the seed:
+            // no ground-truth attackers, nothing flagged. This is the
+            // zero-overhead contract CI pins at fixed seeds.
+            if frac == 0.0 {
+                assert_eq!(
+                    run.attackers_active, 0,
+                    "attack-off row recorded attackers ({label})"
+                );
+                assert_eq!(
+                    run.flagged_peers, 0,
+                    "attack-off row flagged peers ({label})"
+                );
+            } else {
+                assert!(
+                    run.attackers_active > 0,
+                    "attacked row recorded no active attackers ({label})"
+                );
+            }
+            losses
+                .insert((est.name(), (frac * 10.0).round() as u32), run.final_loss);
+        }
+    }
+    emit_csv("fig9_byzantine.csv", &rows);
+
+    let doc = obj(vec![
+        ("bench", s("byzantine")),
+        ("peers", num(peers as f64)),
+        ("iterations", num(t as f64)),
+        ("mode", s("sign_flip")),
+        ("rep_threshold", num(REP)),
+        ("results", arr(json_rows)),
+    ]);
+    let path = results_dir().join("BENCH_byz.json");
+    write_json(&path, &doc).expect("write BENCH_byz.json");
+    println!("  -> {}", path.display());
+
+    // ---- paper-shape assertion -------------------------------------
+    // At 30% sign-flip the defended run (trimmed mean + reputation)
+    // must stay within 2x the attack-free loss, and the undefended
+    // plain mean must end up strictly worse than the defended run —
+    // the distortion the robust path exists to remove.
+    let mean_03 = losses[&("mean", 3)];
+    let trimmed_03 = losses[&("trimmed_mean", 3)];
+    println!(
+        "\nloss at frac=0.3: clean {clean_loss:.3} | trimmed+rep \
+         {trimmed_03:.3} | plain mean {mean_03:.3}"
+    );
+    if std::env::var("MARFL_BENCH_NO_ASSERT").is_err() {
+        assert!(
+            trimmed_03 <= 2.0 * clean_loss,
+            "trimmed mean under 30% sign-flip must stay within 2x the \
+             attack-free loss (got {trimmed_03:.4} vs clean {clean_loss:.4})"
+        );
+        assert!(
+            mean_03 > trimmed_03,
+            "plain mean under 30% sign-flip must be worse than the \
+             defended trimmed mean (mean {mean_03:.4} vs trimmed \
+             {trimmed_03:.4})"
+        );
+    }
+}

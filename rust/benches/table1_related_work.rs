@@ -34,6 +34,7 @@ fn run(which: &str) -> (u64, f64, f64) {
     };
     let before = avg_distortion(&thetas(&states));
     let mut mar;
+    let mut fedavg;
     let mut gossip = Gossip::default();
     let mut saps = Saps::default();
     let aggregator: &mut dyn Aggregate = match which {
@@ -42,7 +43,10 @@ fn run(which: &str) -> (u64, f64, f64) {
             b.ledger.reset();
             &mut mar
         }
-        "fedavg" => &mut FedAvgServer,
+        "fedavg" => {
+            fedavg = FedAvgServer::default();
+            &mut fedavg
+        }
         "rdfl" => &mut RingRdfl,
         "arfl" => &mut AllToAll,
         "bar" => &mut Butterfly,

@@ -8,12 +8,30 @@
 
 use anyhow::Result;
 
-use super::{mean_of, payload_bytes, AggCtx, AggReport, Aggregate, PeerState, Theta};
+use super::robust::RobustPolicy;
+use super::{
+    payload_bytes, robust_mean_of, AggCtx, AggReport, Aggregate, PeerState,
+    Theta,
+};
 use crate::metrics::Plane;
 use crate::net::LinkFault;
 
 #[derive(Debug, Default)]
-pub struct FedAvgServer;
+pub struct FedAvgServer {
+    /// Server-side center estimator over ALL received uploads (`Mean`
+    /// delegates to the bit-exact legacy average). A trusted server is
+    /// the easiest place to run robust statistics — the baseline the
+    /// Byzantine bench compares MAR's in-group defenses against.
+    robust: RobustPolicy,
+}
+
+impl FedAvgServer {
+    /// Select the server's center estimator.
+    pub fn with_robust(mut self, robust: RobustPolicy) -> Self {
+        self.robust = robust;
+        self
+    }
+}
 
 impl Aggregate for FedAvgServer {
     fn name(&self) -> &'static str {
@@ -36,7 +54,7 @@ impl Aggregate for FedAvgServer {
         // N uploads through the server's ingress link (sequential at the
         // server — the bottleneck), then the average, then N broadcasts.
         let upload = ctx.fabric.sequential(agg.len(), bytes, Plane::Data);
-        let (theta, mom) = mean_of(states, agg);
+        let (theta, mom) = robust_mean_of(states, agg, self.robust);
         let (theta, mom) = (Theta::new(theta), Theta::new(mom));
         let broadcast = ctx.fabric.sequential(agg.len(), bytes, Plane::Data);
         ctx.clock.advance(upload + broadcast);
@@ -115,7 +133,7 @@ impl FedAvgServer {
         if received.len() < agg.len() {
             report.faults.quorum_degraded_rounds += 1;
         }
-        let (theta, mom) = mean_of(states, &received);
+        let (theta, mom) = robust_mean_of(states, &received, self.robust);
         let (theta, mom) = (Theta::new(theta), Theta::new(mom));
         // broadcasts: every live client gets a download attempt; a lost
         // broadcast leaves that client on its pre-round state
@@ -149,7 +167,9 @@ impl FedAvgServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::aggregation::robust::RobustEstimator;
     use crate::aggregation::test_support::*;
+    use crate::aggregation::mean_of;
 
     #[test]
     fn produces_exact_global_average() {
@@ -158,10 +178,52 @@ mod tests {
         let (want_t, _) = mean_of(&states, &agg);
         let mut tc = TestCtx::new(32);
         let mut ctx = tc.ctx();
-        FedAvgServer.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        FedAvgServer::default().aggregate(&mut states, &agg, &mut ctx).unwrap();
         for s in &states {
             crate::testing::assert_allclose(&s.theta, &want_t, 1e-6, 1e-7);
         }
+    }
+
+    #[test]
+    fn robust_server_bounds_one_amplified_upload() {
+        // one client uploads a 100×-amplified state; the trimmed server
+        // mean must land inside the honest envelope while the plain mean
+        // is dragged far outside it
+        let n = 6;
+        let mk = || {
+            let mut states = random_states(n, 16, 7);
+            for v in states[3].theta.make_mut_slice() {
+                *v *= 100.0;
+            }
+            states
+        };
+        let agg: Vec<usize> = (0..n).collect();
+        let honest_max = mk()
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != 3)
+            .flat_map(|(_, s)| s.theta.iter().map(|v| v.abs()))
+            .fold(0.0f32, f32::max);
+        let mut plain = mk();
+        let mut tc = TestCtx::new(16);
+        FedAvgServer::default()
+            .aggregate(&mut plain, &agg, &mut tc.ctx())
+            .unwrap();
+        let mut robust = mk();
+        let mut tc2 = TestCtx::new(16);
+        FedAvgServer::default()
+            .with_robust(RobustPolicy {
+                est: RobustEstimator::TrimmedMean,
+                trim: 0.25,
+            })
+            .aggregate(&mut robust, &agg, &mut tc2.ctx())
+            .unwrap();
+        let plain_max =
+            plain[0].theta.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        let robust_max =
+            robust[0].theta.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        assert!(robust_max <= honest_max, "{robust_max} vs {honest_max}");
+        assert!(plain_max > 2.0 * honest_max, "{plain_max} vs {honest_max}");
     }
 
     #[test]
@@ -170,7 +232,7 @@ mod tests {
         let agg: Vec<usize> = (0..10).collect();
         let mut tc = TestCtx::new(16);
         let mut ctx = tc.ctx();
-        FedAvgServer.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        FedAvgServer::default().aggregate(&mut states, &agg, &mut ctx).unwrap();
         let snap = tc.ledger.snapshot();
         assert_eq!(snap.data_msgs, 20);
         assert_eq!(snap.data_bytes, 20 * 2 * 16 * 4);
@@ -183,7 +245,9 @@ mod tests {
         let before2 = states[2].theta.clone();
         let mut tc = TestCtx::new(8);
         let mut ctx = tc.ctx();
-        FedAvgServer.aggregate(&mut states, &[0, 1, 3], &mut ctx).unwrap();
+        FedAvgServer::default()
+            .aggregate(&mut states, &[0, 1, 3], &mut ctx)
+            .unwrap();
         assert_eq!(states[2].theta, before2, "non-aggregator was touched");
     }
 
@@ -193,7 +257,9 @@ mod tests {
         let before = states[1].theta.clone();
         let mut tc = TestCtx::new(8);
         let mut ctx = tc.ctx();
-        let rep = FedAvgServer.aggregate(&mut states, &[1], &mut ctx).unwrap();
+        let rep = FedAvgServer::default()
+            .aggregate(&mut states, &[1], &mut ctx)
+            .unwrap();
         assert_eq!(rep, AggReport::default());
         assert_eq!(states[1].theta, before);
     }

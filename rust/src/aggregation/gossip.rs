@@ -14,6 +14,7 @@
 
 use anyhow::Result;
 
+use super::robust::{l2_norm, RobustEstimator, RobustPolicy};
 use super::{payload_bytes, AggCtx, AggReport, Aggregate, PeerState};
 use crate::metrics::Plane;
 use crate::net::{FaultCounters, LinkFault};
@@ -22,11 +23,26 @@ use crate::net::{FaultCounters, LinkFault};
 pub struct Gossip {
     /// models pulled per peer per iteration
     pub fanout: usize,
+    /// Robust merge policy. Gossip merges are pairwise (k = 2), where
+    /// coordinate-wise trimming and the median both degenerate to the
+    /// plain mean — only `norm_clip` changes behaviour, scaling a
+    /// pulled state whose θ norm exceeds the puller's own down to that
+    /// norm before merging (the epidemic analogue of clipping at the
+    /// group median). `Mean` keeps the exact legacy merge.
+    robust: RobustPolicy,
 }
 
 impl Default for Gossip {
     fn default() -> Self {
-        Gossip { fanout: 1 }
+        Gossip { fanout: 1, robust: RobustPolicy::MEAN }
+    }
+}
+
+impl Gossip {
+    /// Select the pairwise merge policy.
+    pub fn with_robust(mut self, robust: RobustPolicy) -> Self {
+        self.robust = robust;
+        self
     }
 }
 
@@ -114,6 +130,7 @@ impl Aggregate for Gossip {
             .map(|&i| (states[i].theta.clone(), states[i].momentum.clone()))
             .collect();
         let fabric = ctx.fabric;
+        let clip = self.robust.est == RobustEstimator::NormClip;
         let lane_times =
             crate::exec::par_map_at(states, agg, |slot, st| {
                 let mut lane = 0.0;
@@ -128,12 +145,25 @@ impl Aggregate for Gossip {
                         None => lane += fabric.send(bytes, Plane::Data),
                     }
                     let (ot, om) = &snapshot[other];
+                    // norm-clip: damp a pulled state louder than our own
+                    // (f32 factor so the clean 1.0 path stays bit-exact)
+                    let w = if clip {
+                        let own = l2_norm(&st.theta);
+                        let pulled = l2_norm(ot);
+                        if pulled > own && pulled > 0.0 {
+                            (own / pulled) as f32
+                        } else {
+                            1.0
+                        }
+                    } else {
+                        1.0
+                    };
                     // merge: equal-weight average of own and pulled state
                     for (dst, &v) in st.theta.make_mut().iter_mut().zip(ot) {
-                        *dst = 0.5 * (*dst + v);
+                        *dst = 0.5 * (*dst + w * v);
                     }
                     for (dst, &v) in st.momentum.make_mut().iter_mut().zip(om) {
-                        *dst = 0.5 * (*dst + v);
+                        *dst = 0.5 * (*dst + w * v);
                     }
                 }
                 lane
@@ -227,13 +257,45 @@ mod tests {
     }
 
     #[test]
+    fn norm_clip_damps_amplified_pulls() {
+        // two peers: each pulls the other. Peer 1's state is amplified
+        // 100×; a clipped merge keeps peer 0 inside its own norm, while
+        // the plain merge blows it up ~50×.
+        let mk = || {
+            let mut states = random_states(2, 16, 55);
+            for v in states[1].theta.make_mut_slice() {
+                *v *= 100.0;
+            }
+            states
+        };
+        let own_norm = l2_norm(&mk()[0].theta);
+        let clip_policy =
+            RobustPolicy { est: RobustEstimator::NormClip, trim: 0.25 };
+        let mut clipped = mk();
+        let mut tc = TestCtx::new(16);
+        Gossip::default()
+            .with_robust(clip_policy)
+            .aggregate(&mut clipped, &[0, 1], &mut tc.ctx())
+            .unwrap();
+        assert!(l2_norm(&clipped[0].theta) <= own_norm * 1.01);
+        let mut plain = mk();
+        let mut tc2 = TestCtx::new(16);
+        Gossip::default()
+            .aggregate(&mut plain, &[0, 1], &mut tc2.ctx())
+            .unwrap();
+        assert!(l2_norm(&plain[0].theta) > 10.0 * own_norm);
+    }
+
+    #[test]
     fn fanout_increases_traffic_linearly() {
         let n = 10;
         let mut states = random_states(n, 8, 54);
         let agg: Vec<usize> = (0..n).collect();
         let mut tc = TestCtx::new(8);
         let mut ctx = tc.ctx();
-        Gossip { fanout: 3 }.aggregate(&mut states, &agg, &mut ctx).unwrap();
+        Gossip { fanout: 3, ..Default::default() }
+            .aggregate(&mut states, &agg, &mut ctx)
+            .unwrap();
         assert_eq!(tc.ledger.snapshot().data_msgs as usize, 3 * n);
     }
 }

@@ -21,6 +21,7 @@ pub mod butterfly;
 pub mod fedavg;
 pub mod gossip;
 pub mod ring;
+pub mod robust;
 pub mod saps;
 
 pub use alltoall::AllToAll;
@@ -107,6 +108,9 @@ pub struct AggReport {
     /// round's matchmaking, spending one unit of `mar.rs_retry_budget`
     /// (0 with the default budget of 0, where every drop falls back)
     pub rs_retries: usize,
+    /// peers newly banned by the reputation ledger during this
+    /// aggregation (0 whenever reputation gating is off)
+    pub flagged_peers: u64,
     /// fault-injection outcomes for this aggregation (all zero when the
     /// plan is off)
     pub faults: FaultCounters,
@@ -231,6 +235,69 @@ pub fn mean_of(states: &[PeerState], members: &[usize]) -> (Vec<f32>, Vec<f32>) 
     (theta, mom)
 }
 
+/// [`mean_of`] under a robust-center policy: `Mean` delegates to the
+/// bit-exact strip-mined mean; the other estimators run their own
+/// kernels (same striping, same f64 ordering guarantees). Used by the
+/// server-collected FedAvg baseline.
+pub fn robust_mean_of(
+    states: &[PeerState],
+    members: &[usize],
+    policy: robust::RobustPolicy,
+) -> (Vec<f32>, Vec<f32>) {
+    if policy.is_mean() {
+        return mean_of(states, members);
+    }
+    assert!(!members.is_empty());
+    let n = members.len();
+    let p = states[members[0]].theta.len();
+    let q = states[members[0]].momentum.len();
+    for &i in members {
+        assert_eq!(states[i].theta.len(), p, "ragged theta lengths");
+        assert_eq!(states[i].momentum.len(), q, "ragged momentum lengths");
+    }
+    let mut theta = vec![0.0f32; p];
+    let mut mom = vec![0.0f32; q];
+    match policy.est {
+        robust::RobustEstimator::Mean => unreachable!("delegated above"),
+        robust::RobustEstimator::NormClip => {
+            let w =
+                robust::clip_weights(n, |k| states[members[k]].theta.as_slice());
+            robust::weighted_mean_indexed_into(
+                n,
+                |k| states[members[k]].theta.as_slice(),
+                &w,
+                &mut theta,
+                true,
+            );
+            robust::weighted_mean_indexed_into(
+                n,
+                |k| states[members[k]].momentum.as_slice(),
+                &w,
+                &mut mom,
+                true,
+            );
+        }
+        robust::RobustEstimator::TrimmedMean | robust::RobustEstimator::Median => {
+            let drop = policy.drop_count(n);
+            robust::trimmed_indexed_into(
+                n,
+                |k| states[members[k]].theta.as_slice(),
+                &mut theta,
+                drop,
+                true,
+            );
+            robust::trimmed_indexed_into(
+                n,
+                |k| states[members[k]].momentum.as_slice(),
+                &mut mom,
+                drop,
+                true,
+            );
+        }
+    }
+    (theta, mom)
+}
+
 /// How a group's member states are accessed during in-place averaging —
 /// one body ([`average_rows`]) serves both the slice+indices shape
 /// (serial engine) and the exclusive-views shape handed out by
@@ -296,9 +363,25 @@ impl GroupRows for ViewRows<'_, '_> {
 /// striping (used inside group-parallel lanes, where the outer fan-out
 /// owns the cores).
 fn average_rows<R: GroupRows>(rows: &mut R) {
+    robust_average_rows(rows, robust::RobustPolicy::MEAN, false);
+}
+
+/// Generalized [`average_rows`]: the group center is computed by
+/// `policy` (the `Mean` arm runs the exact legacy `mean_indexed_into`
+/// calls — bit-identical), and when `want_scores` each member's L2
+/// distance to the center is measured BEFORE the zero-copy broadcast
+/// rewrites the members (afterwards every member aliases the center).
+fn robust_average_rows<R: GroupRows>(
+    rows: &mut R,
+    policy: robust::RobustPolicy,
+    want_scores: bool,
+) -> Option<robust::GroupScores> {
     let n = rows.rows();
     if n < 2 {
-        return;
+        return want_scores.then(|| robust::GroupScores {
+            dists: vec![0.0; n],
+            center_norm: 0.0,
+        });
     }
     let p = rows.theta(0).len();
     let q = rows.momentum(0).len();
@@ -308,12 +391,63 @@ fn average_rows<R: GroupRows>(rows: &mut R) {
     }
     let mut tbuf = vec![0.0f32; p];
     let mut mbuf = vec![0.0f32; q];
+    let scores;
     {
         let shared = &*rows;
-        mean_indexed_into(n, |k| shared.theta(k), tbuf.as_mut_slice(), false);
-        mean_indexed_into(n, |k| shared.momentum(k), mbuf.as_mut_slice(), false);
+        match policy.est {
+            robust::RobustEstimator::Mean => {
+                mean_indexed_into(n, |k| shared.theta(k), tbuf.as_mut_slice(), false);
+                mean_indexed_into(
+                    n,
+                    |k| shared.momentum(k),
+                    mbuf.as_mut_slice(),
+                    false,
+                );
+            }
+            robust::RobustEstimator::NormClip => {
+                // clip by θ norms; momentum rides with its θ's weight so
+                // an amplified state is damped coherently
+                let w = robust::clip_weights(n, |k| shared.theta(k));
+                robust::weighted_mean_indexed_into(
+                    n,
+                    |k| shared.theta(k),
+                    &w,
+                    tbuf.as_mut_slice(),
+                    false,
+                );
+                robust::weighted_mean_indexed_into(
+                    n,
+                    |k| shared.momentum(k),
+                    &w,
+                    mbuf.as_mut_slice(),
+                    false,
+                );
+            }
+            robust::RobustEstimator::TrimmedMean | robust::RobustEstimator::Median => {
+                let drop = policy.drop_count(n);
+                robust::trimmed_indexed_into(
+                    n,
+                    |k| shared.theta(k),
+                    tbuf.as_mut_slice(),
+                    drop,
+                    false,
+                );
+                robust::trimmed_indexed_into(
+                    n,
+                    |k| shared.momentum(k),
+                    mbuf.as_mut_slice(),
+                    drop,
+                    false,
+                );
+            }
+        }
+        scores = want_scores.then(|| robust::GroupScores {
+            dists: (0..n).map(|k| robust::l2_distance(shared.theta(k), &tbuf)).collect(),
+            center_norm: robust::l2_norm(&tbuf),
+        });
     }
     rows.write_all(Theta::new(tbuf), Theta::new(mbuf));
+    scores
 }
 
 /// [`average_rows`] over `states[members]` (serial reference engine).
@@ -352,9 +486,27 @@ pub fn average_views(views: &mut [&mut PeerState]) {
 /// thread-local borrow held across the fan-out), so a work-stealing
 /// re-entry on this thread cannot alias them.
 fn average_rows_chunked<R: GroupRows>(rows: &mut R, stripe_parallel: bool) {
+    robust_average_rows_chunked(rows, stripe_parallel, robust::RobustPolicy::MEAN, false);
+}
+
+/// Generalized [`average_rows_chunked`]: each chunk owner applies
+/// `policy` to its owned stripe. Coordinate-wise estimators (trimmed
+/// mean, median) are stripe-local, and norm-clip weights come from
+/// FULL-vector norms, so every estimator assembles exactly the vector
+/// its full-gather counterpart computes — the `Mean` arm runs the
+/// legacy stripe bodies bit-exactly.
+fn robust_average_rows_chunked<R: GroupRows>(
+    rows: &mut R,
+    stripe_parallel: bool,
+    policy: robust::RobustPolicy,
+    want_scores: bool,
+) -> Option<robust::GroupScores> {
     let n = rows.rows();
     if n < 2 {
-        return;
+        return want_scores.then(|| robust::GroupScores {
+            dists: vec![0.0; n],
+            center_norm: 0.0,
+        });
     }
     let p = rows.theta(0).len();
     let q = rows.momentum(0).len();
@@ -364,20 +516,27 @@ fn average_rows_chunked<R: GroupRows>(rows: &mut R, stripe_parallel: bool) {
     }
     let mut tbuf = vec![0.0f32; p];
     let mut mbuf = vec![0.0f32; q];
+    let scores;
     {
         let shared = &*rows;
         let par = stripe_parallel && crate::exec::threads() > 1;
+        let drop = policy.drop_count(n);
+        let clip = (policy.est == robust::RobustEstimator::NormClip)
+            .then(|| robust::clip_weights(n, |k| shared.theta(k)));
         crate::exec::map_ranges_mut(
             tbuf.as_mut_slice(),
             &crate::exec::stripe_ranges(p, n),
             par,
             |owner, stripe| {
-                let r = crate::exec::stripe_range(p, n, owner);
-                mean_indexed_into(
+                robust_owner_stripe(
                     n,
-                    |k| &shared.theta(k)[r.start..r.end],
+                    |k| shared.theta(k),
+                    p,
+                    owner,
                     stripe,
-                    false,
+                    policy,
+                    drop,
+                    clip.as_deref(),
                 );
             },
         )
@@ -387,18 +546,66 @@ fn average_rows_chunked<R: GroupRows>(rows: &mut R, stripe_parallel: bool) {
             &crate::exec::stripe_ranges(q, n),
             par,
             |owner, stripe| {
-                let r = crate::exec::stripe_range(q, n, owner);
-                mean_indexed_into(
+                robust_owner_stripe(
                     n,
-                    |k| &shared.momentum(k)[r.start..r.end],
+                    |k| shared.momentum(k),
+                    q,
+                    owner,
                     stripe,
-                    false,
+                    policy,
+                    drop,
+                    clip.as_deref(),
                 );
             },
         )
         .expect("owner stripes are disjoint by construction");
+        scores = want_scores.then(|| robust::GroupScores {
+            dists: (0..n).map(|k| robust::l2_distance(shared.theta(k), &tbuf)).collect(),
+            center_norm: robust::l2_norm(&tbuf),
+        });
     }
     rows.write_all(Theta::new(tbuf), Theta::new(mbuf));
+    scores
+}
+
+/// One chunk owner's estimate of its stripe under `policy` — the
+/// shared body of [`robust_average_rows_chunked`]. `drop` and `clip`
+/// are precomputed by the caller (clip weights over FULL vectors).
+#[allow(clippy::too_many_arguments)]
+fn robust_owner_stripe<'a, F>(
+    n: usize,
+    vecs: F,
+    len: usize,
+    owner: usize,
+    stripe: &mut [f32],
+    policy: robust::RobustPolicy,
+    drop: usize,
+    clip: Option<&[f64]>,
+) where
+    F: Fn(usize) -> &'a [f32] + Sync,
+{
+    let r = crate::exec::stripe_range(len, n, owner);
+    match policy.est {
+        robust::RobustEstimator::Mean => {
+            mean_indexed_into(n, |k| &vecs(k)[r.start..r.end], stripe, false)
+        }
+        robust::RobustEstimator::NormClip => robust::weighted_mean_indexed_into(
+            n,
+            |k| &vecs(k)[r.start..r.end],
+            clip.expect("clip weights precomputed"),
+            stripe,
+            false,
+        ),
+        robust::RobustEstimator::TrimmedMean | robust::RobustEstimator::Median => {
+            robust::trimmed_indexed_into(
+                n,
+                |k| &vecs(k)[r.start..r.end],
+                stripe,
+                drop,
+                false,
+            )
+        }
+    }
 }
 
 /// [`average_rows_chunked`] over `states[members]` — the serial-engine
@@ -414,6 +621,67 @@ pub fn average_group_chunked(states: &mut [PeerState], members: &[usize]) {
 /// either way.
 pub fn average_views_chunked(views: &mut [&mut PeerState], stripe_parallel: bool) {
     average_rows_chunked(&mut ViewRows { views }, stripe_parallel);
+}
+
+// ---------------------------------------------------------------------
+// Robust entry points (Byzantine-tolerant centers + outlier scores)
+// ---------------------------------------------------------------------
+//
+// Policy-threaded versions of the averaging wrappers above. A `Mean`
+// policy runs the exact same code paths bit-for-bit; `want_scores`
+// additionally returns each member's distance to the center (measured
+// before the broadcast) for the reputation ledger. See
+// [`robust`] for the estimators and `attack` for the adversary model.
+
+/// Robust [`average_group_native`]; returns outlier scores on request.
+pub fn robust_average_group_native(
+    states: &mut [PeerState],
+    members: &[usize],
+    policy: robust::RobustPolicy,
+    want_scores: bool,
+) -> Option<robust::GroupScores> {
+    robust_average_rows(&mut SliceRows { states, members }, policy, want_scores)
+}
+
+/// Robust [`average_views`] (group-parallel lane body).
+pub fn robust_average_views(
+    views: &mut [&mut PeerState],
+    policy: robust::RobustPolicy,
+    want_scores: bool,
+) -> Option<robust::GroupScores> {
+    robust_average_rows(&mut ViewRows { views }, policy, want_scores)
+}
+
+/// Robust [`average_group_chunked`] (chunk-owned reduce-scatter path:
+/// the estimator applies per owned stripe, assembling the identical
+/// vector).
+pub fn robust_average_group_chunked(
+    states: &mut [PeerState],
+    members: &[usize],
+    policy: robust::RobustPolicy,
+    want_scores: bool,
+) -> Option<robust::GroupScores> {
+    robust_average_rows_chunked(
+        &mut SliceRows { states, members },
+        false,
+        policy,
+        want_scores,
+    )
+}
+
+/// Robust [`average_views_chunked`].
+pub fn robust_average_views_chunked(
+    views: &mut [&mut PeerState],
+    stripe_parallel: bool,
+    policy: robust::RobustPolicy,
+    want_scores: bool,
+) -> Option<robust::GroupScores> {
+    robust_average_rows_chunked(
+        &mut ViewRows { views },
+        stripe_parallel,
+        policy,
+        want_scores,
+    )
 }
 
 /// The compute one chunk owner performs during reduce-scatter: the mean
@@ -464,6 +732,25 @@ pub(crate) fn pjrt_group_mean_enabled() -> bool {
         std::env::var_os("MARFL_PJRT_GROUP_MEAN").is_some()
     });
     *FLAG
+}
+
+/// Policy-threaded [`average_group`]: a plain-`Mean` policy with no
+/// score request dispatches through [`average_group`] (keeping the
+/// PJRT artifact path reachable, bit-exactly); robust estimators and
+/// score collection always run the native path — the Pallas artifact
+/// only computes means.
+pub fn robust_average_group(
+    states: &mut [PeerState],
+    members: &[usize],
+    ctx: &mut AggCtx<'_>,
+    policy: robust::RobustPolicy,
+    want_scores: bool,
+) -> Result<Option<robust::GroupScores>> {
+    if policy.is_mean() && !want_scores {
+        average_group(states, members, ctx)?;
+        return Ok(None);
+    }
+    Ok(robust_average_group_native(states, members, policy, want_scores))
 }
 
 /// Average the states of `members` and write the result back to each of
@@ -717,17 +1004,31 @@ pub fn book_group_exchange(group_len: usize, bytes: u64, ctx: &mut AggCtx<'_>) -
 }
 
 /// Build an `Aggregate` for a strategy (MAR is constructed separately in
-/// `coordinator`, since it owns the DHT).
+/// `coordinator`, since it owns the DHT). Plain-`Mean` policy — the
+/// bit-exact legacy construction.
 pub fn baseline_for(
     strategy: crate::config::Strategy,
 ) -> Option<Box<dyn Aggregate>> {
+    baseline_for_robust(strategy, robust::RobustPolicy::MEAN)
+}
+
+/// [`baseline_for`] with a robust-center policy. The server-mediated
+/// and gossip baselines honor it (FedAvg trims over ALL received
+/// updates; gossip clips its pairwise pulls); the fixed-schedule
+/// all-reduce topologies (ring, butterfly, all-to-all, SAPS) keep their
+/// exact pairwise/global means — their wire protocols average
+/// incrementally, where coordinate-wise trimming has no analogue.
+pub fn baseline_for_robust(
+    strategy: crate::config::Strategy,
+    policy: robust::RobustPolicy,
+) -> Option<Box<dyn Aggregate>> {
     use crate::config::Strategy::*;
     match strategy {
-        FedAvg => Some(Box::new(FedAvgServer::default())),
+        FedAvg => Some(Box::new(FedAvgServer::default().with_robust(policy))),
         Rdfl => Some(Box::new(RingRdfl::default())),
         ArFl => Some(Box::new(AllToAll::default())),
         Bar => Some(Box::new(Butterfly::default())),
-        Gossip => Some(Box::new(gossip::Gossip::default())),
+        Gossip => Some(Box::new(gossip::Gossip::default().with_robust(policy))),
         Saps => Some(Box::new(saps::Saps::default())),
         MarFl => None,
     }

@@ -1,0 +1,398 @@
+//! Byzantine-robust group estimators.
+//!
+//! MAR's small groups make robust statistics cheap: a k-member group can
+//! afford a coordinate-wise sort (k ≤ group size, typically 4–8), so the
+//! classic estimators — trimmed mean, coordinate-wise median, norm
+//! clipping — run at a small constant factor over the plain mean. All
+//! kernels here follow the `mean_indexed_into` contract: f64
+//! accumulation, strip-mined over [`super::MEAN_STRIPE`]-wide output
+//! chunks, every element combining its inputs in a fixed order — so
+//! results are bit-identical regardless of strip width or thread count,
+//! and the chunk-owned reduce-scatter path (which applies the same
+//! estimator per owned stripe) assembles the exact same vector as the
+//! full-gather path.
+//!
+//! `RobustEstimator::Mean` is *the* existing averaging path: callers
+//! that select it delegate to `mean_indexed_into` bit-exactly, so a run
+//! with `attack.robust = "mean"` is indistinguishable from a build
+//! without this module.
+
+use super::MEAN_STRIPE;
+
+/// Which center a group computes from its members' states.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RobustEstimator {
+    /// Plain element-wise mean — bit-exact delegation to the existing
+    /// averaging kernels (the determinism-contract default).
+    #[default]
+    Mean,
+    /// Coordinate-wise trimmed mean: drop the `⌊trim·k⌋` smallest and
+    /// largest values per coordinate, average the rest. Tolerates up to
+    /// `⌊trim·k⌋` Byzantine members per group.
+    TrimmedMean,
+    /// Coordinate-wise median (the trimmed mean at maximal trim: one
+    /// survivor per coordinate for odd k, two averaged for even k).
+    Median,
+    /// Norm clipping: scale each member's contribution down to the
+    /// median L2 norm before averaging — defeats model-replacement
+    /// amplification while leaving honest updates untouched.
+    NormClip,
+}
+
+impl RobustEstimator {
+    /// Parse a config-file name (`attack.robust`).
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        Ok(match name {
+            "mean" => RobustEstimator::Mean,
+            "trimmed_mean" => RobustEstimator::TrimmedMean,
+            "median" => RobustEstimator::Median,
+            "norm_clip" => RobustEstimator::NormClip,
+            other => anyhow::bail!(
+                "unknown robust estimator '{other}' \
+                 (mean|trimmed_mean|median|norm_clip)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RobustEstimator::Mean => "mean",
+            RobustEstimator::TrimmedMean => "trimmed_mean",
+            RobustEstimator::Median => "median",
+            RobustEstimator::NormClip => "norm_clip",
+        }
+    }
+}
+
+/// An estimator plus its trim fraction — the value threaded through the
+/// aggregation call tree.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RobustPolicy {
+    pub est: RobustEstimator,
+    /// Fraction trimmed from EACH side under `TrimmedMean` (ignored by
+    /// the other estimators). Must stay below 0.5.
+    pub trim: f64,
+}
+
+impl Default for RobustPolicy {
+    fn default() -> Self {
+        RobustPolicy::MEAN
+    }
+}
+
+impl RobustPolicy {
+    /// The bit-exact legacy averaging policy.
+    pub const MEAN: RobustPolicy =
+        RobustPolicy { est: RobustEstimator::Mean, trim: 0.25 };
+
+    pub fn is_mean(&self) -> bool {
+        self.est == RobustEstimator::Mean
+    }
+
+    /// Values dropped from each side of a sorted k-member coordinate.
+    /// Clamped so at least one value survives (two for even k under
+    /// `Median`).
+    pub fn drop_count(&self, k: usize) -> usize {
+        match self.est {
+            RobustEstimator::Mean | RobustEstimator::NormClip => 0,
+            RobustEstimator::TrimmedMean => {
+                ((self.trim * k as f64).floor() as usize).min(k.saturating_sub(1) / 2)
+            }
+            RobustEstimator::Median => k.saturating_sub(1) / 2,
+        }
+    }
+}
+
+/// Per-group outlier evidence returned by the robust averaging wrappers
+/// when the caller wants reputation scores: each member's L2 distance to
+/// the group center, plus the center's own norm (the absolute scale the
+/// outlier rule normalizes against).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupScores {
+    /// `dists[k]` = ‖θ_k − center‖₂, f64, index order (member order).
+    pub dists: Vec<f64>,
+    /// ‖center‖₂.
+    pub center_norm: f64,
+}
+
+/// One trimmed strip: sort each coordinate's k values, drop `drop` from
+/// each side, average the rest in sorted order (fixed order ⇒ the result
+/// is independent of strip width).
+fn trimmed_stripe_into<'a, F: Fn(usize) -> &'a [f32]>(
+    rows: usize,
+    row: &F,
+    off: usize,
+    out: &mut [f32],
+    drop: usize,
+) {
+    let srcs: Vec<&[f32]> = (0..rows).map(|r| &row(r)[off..off + out.len()]).collect();
+    let keep = rows - 2 * drop;
+    let inv = 1.0 / keep as f64;
+    let mut vals = vec![0.0f32; rows];
+    for (i, dst) in out.iter_mut().enumerate() {
+        for (v, s) in vals.iter_mut().zip(&srcs) {
+            *v = s[i];
+        }
+        vals.sort_unstable_by(|a, b| a.total_cmp(b));
+        let acc: f64 = vals[drop..rows - drop].iter().map(|&v| v as f64).sum();
+        *dst = (acc * inv) as f32;
+    }
+}
+
+/// Write the coordinate-wise `drop`-trimmed mean of `rows` vectors into
+/// `out`. `drop = 0` is the plain mean computed through the sort kernel;
+/// callers wanting the bit-exact legacy mean use
+/// [`super::mean_indexed_into`] instead. With `parallel`, strips fan out
+/// across the `exec` pool (bit-identical: coordinates are independent).
+pub fn trimmed_indexed_into<'a, F>(
+    rows: usize,
+    row: F,
+    out: &mut [f32],
+    drop: usize,
+    parallel: bool,
+) where
+    F: Fn(usize) -> &'a [f32] + Sync,
+{
+    assert!(rows > 0, "trimmed mean of zero rows");
+    assert!(2 * drop < rows, "trim {drop} leaves no survivors of {rows}");
+    if parallel && out.len() >= 2 * MEAN_STRIPE && crate::exec::threads() > 1 {
+        use rayon::prelude::*;
+        crate::exec::pool().install(|| {
+            out.par_chunks_mut(MEAN_STRIPE).enumerate().for_each(|(ci, chunk)| {
+                trimmed_stripe_into(rows, &row, ci * MEAN_STRIPE, chunk, drop);
+            });
+        });
+    } else {
+        for (ci, chunk) in out.chunks_mut(MEAN_STRIPE).enumerate() {
+            trimmed_stripe_into(rows, &row, ci * MEAN_STRIPE, chunk, drop);
+        }
+    }
+}
+
+/// One weighted strip, accumulated in the shared per-thread f64 scratch.
+fn weighted_stripe_into<'a, F: Fn(usize) -> &'a [f32]>(
+    rows: usize,
+    row: &F,
+    weights: &[f64],
+    off: usize,
+    out: &mut [f32],
+    inv: f64,
+) {
+    super::MEAN_ACC.with(|acc| {
+        let mut acc = acc.borrow_mut();
+        acc.clear();
+        acc.resize(out.len(), 0.0);
+        for r in 0..rows {
+            let w = weights[r];
+            let src = &row(r)[off..off + out.len()];
+            for (a, &v) in acc.iter_mut().zip(src) {
+                *a += w * v as f64;
+            }
+        }
+        for (dst, &a) in out.iter_mut().zip(acc.iter()) {
+            *dst = (a * inv) as f32;
+        }
+    });
+}
+
+/// Weighted mean `out = (1/rows) Σ_r weights[r]·row(r)` — the norm-clip
+/// combiner. Member-order f64 accumulation, strip-mined like
+/// [`super::mean_indexed_into`]; weights come from full-vector norms
+/// ([`clip_weights`]), so applying this kernel per owned stripe yields
+/// the same result as over the full vector.
+pub fn weighted_mean_indexed_into<'a, F>(
+    rows: usize,
+    row: F,
+    weights: &[f64],
+    out: &mut [f32],
+    parallel: bool,
+) where
+    F: Fn(usize) -> &'a [f32] + Sync,
+{
+    assert!(rows > 0, "weighted mean of zero rows");
+    assert_eq!(weights.len(), rows);
+    let inv = 1.0 / rows as f64;
+    if parallel && out.len() >= 2 * MEAN_STRIPE && crate::exec::threads() > 1 {
+        use rayon::prelude::*;
+        crate::exec::pool().install(|| {
+            out.par_chunks_mut(MEAN_STRIPE).enumerate().for_each(|(ci, chunk)| {
+                weighted_stripe_into(rows, &row, weights, ci * MEAN_STRIPE, chunk, inv);
+            });
+        });
+    } else {
+        for (ci, chunk) in out.chunks_mut(MEAN_STRIPE).enumerate() {
+            weighted_stripe_into(rows, &row, weights, ci * MEAN_STRIPE, chunk, inv);
+        }
+    }
+}
+
+/// Norm-clip weights: `min(1, c / ‖row_r‖)` where `c` is the median of
+/// the rows' L2 norms. Norms accumulate in f64, index order, over the
+/// FULL vectors — the caller passes full-row accessors even on the
+/// chunk-owned path, which is what makes stripe-wise clipping exact.
+pub fn clip_weights<'a, F: Fn(usize) -> &'a [f32]>(rows: usize, row: F) -> Vec<f64> {
+    assert!(rows > 0, "clip weights of zero rows");
+    let norms: Vec<f64> = (0..rows)
+        .map(|r| {
+            row(r)
+                .iter()
+                .map(|&v| {
+                    let x = v as f64;
+                    x * x
+                })
+                .sum::<f64>()
+                .sqrt()
+        })
+        .collect();
+    let mut sorted = norms.clone();
+    sorted.sort_unstable_by(|a, b| a.total_cmp(b));
+    let c = if rows % 2 == 1 {
+        sorted[rows / 2]
+    } else {
+        0.5 * (sorted[rows / 2 - 1] + sorted[rows / 2])
+    };
+    norms
+        .iter()
+        .map(|&n| if n <= c || n == 0.0 { 1.0 } else { c / n })
+        .collect()
+}
+
+/// L2 norm of an f32 vector, f64 index-order accumulation.
+pub fn l2_norm(a: &[f32]) -> f64 {
+    a.iter()
+        .map(|&v| {
+            let x = v as f64;
+            x * x
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// L2 distance between two equal-length f32 vectors, f64 index-order
+/// accumulation — the reputation outlier score.
+pub fn l2_distance(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows_of<'a>(
+        data: &'a [Vec<f32>],
+    ) -> impl Fn(usize) -> &'a [f32] + Sync + 'a {
+        move |r| data[r].as_slice()
+    }
+
+    #[test]
+    fn parse_round_trips_every_estimator() {
+        for est in [
+            RobustEstimator::Mean,
+            RobustEstimator::TrimmedMean,
+            RobustEstimator::Median,
+            RobustEstimator::NormClip,
+        ] {
+            assert_eq!(RobustEstimator::parse(est.name()).unwrap(), est);
+        }
+        assert!(RobustEstimator::parse("krum").is_err());
+    }
+
+    #[test]
+    fn drop_count_clamps_to_survivors() {
+        let tm = |trim| RobustPolicy { est: RobustEstimator::TrimmedMean, trim };
+        assert_eq!(tm(0.25).drop_count(4), 1);
+        assert_eq!(tm(0.25).drop_count(8), 2);
+        assert_eq!(tm(0.49).drop_count(4), 1); // floor(1.96) = 1
+        assert_eq!(tm(0.4).drop_count(5), 2);
+        let med = RobustPolicy { est: RobustEstimator::Median, trim: 0.0 };
+        assert_eq!(med.drop_count(5), 2); // 1 survivor
+        assert_eq!(med.drop_count(4), 1); // 2 survivors
+        assert_eq!(med.drop_count(2), 0);
+        assert_eq!(RobustPolicy::MEAN.drop_count(9), 0);
+    }
+
+    #[test]
+    fn trimmed_mean_matches_sorted_reference() {
+        let data = vec![
+            vec![1.0f32, -9.0, 0.5],
+            vec![2.0, 1.0, 0.5],
+            vec![100.0, 2.0, 0.5],
+            vec![3.0, 3.0, -0.5],
+        ];
+        let mut out = vec![0.0f32; 3];
+        trimmed_indexed_into(4, rows_of(&data), &mut out, 1, false);
+        // col 0: sorted [1,2,3,100] → (2+3)/2; col 1: [-9,1,2,3] → 1.5
+        assert_eq!(out, vec![2.5, 1.5, 0.5]);
+    }
+
+    #[test]
+    fn median_odd_and_even() {
+        let data = vec![vec![1.0f32], vec![5.0], vec![-3.0]];
+        let mut out = vec![0.0f32];
+        let med = RobustPolicy { est: RobustEstimator::Median, trim: 0.0 };
+        trimmed_indexed_into(3, rows_of(&data), &mut out, med.drop_count(3), false);
+        assert_eq!(out, vec![1.0]);
+        let data = vec![vec![1.0f32], vec![5.0], vec![-3.0], vec![2.0]];
+        trimmed_indexed_into(4, rows_of(&data), &mut out, med.drop_count(4), false);
+        assert_eq!(out, vec![1.5]); // (1+2)/2
+    }
+
+    #[test]
+    fn trimmed_parallel_strips_bit_identical() {
+        let p = 3 * MEAN_STRIPE + 41;
+        let mut rng = crate::rng::Rng::new(71);
+        let data: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..p).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut serial = vec![0.0f32; p];
+        let mut par = vec![0.0f32; p];
+        trimmed_indexed_into(6, rows_of(&data), &mut serial, 2, false);
+        trimmed_indexed_into(6, rows_of(&data), &mut par, 2, true);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn clip_weights_scale_only_above_median_norm() {
+        let data = vec![
+            vec![3.0f32, 4.0],   // norm 5
+            vec![0.6, 0.8],      // norm 1
+            vec![30.0, 40.0],    // norm 50
+        ];
+        let w = clip_weights(3, rows_of(&data));
+        assert_eq!(w[0], 1.0); // at the median
+        assert_eq!(w[1], 1.0); // below
+        assert!((w[2] - 0.1).abs() < 1e-12); // 5 / 50
+        // weighted mean bounds the amplified row's pull
+        let mut out = vec![0.0f32; 2];
+        weighted_mean_indexed_into(3, rows_of(&data), &w, &mut out, false);
+        assert!((out[0] - (3.0 + 0.6 + 3.0) / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weighted_mean_with_unit_weights_matches_mean() {
+        let p = 2 * MEAN_STRIPE + 17;
+        let mut rng = crate::rng::Rng::new(72);
+        let data: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..p).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut want = vec![0.0f32; p];
+        super::super::mean_indexed_into(5, rows_of(&data), &mut want, false);
+        let mut got = vec![0.0f32; p];
+        weighted_mean_indexed_into(5, rows_of(&data), &[1.0; 5], &mut got, false);
+        assert_eq!(got, want, "unit weights must reproduce the exact mean");
+    }
+
+    #[test]
+    fn l2_distance_basics() {
+        assert_eq!(l2_distance(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+        assert_eq!(l2_distance(&[1.0], &[1.0]), 0.0);
+    }
+}

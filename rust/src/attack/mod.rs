@@ -1,0 +1,618 @@
+//! Byzantine adversary subsystem: deterministic attacker selection,
+//! update corruption, and reputation-gated peer exclusion.
+//!
+//! The fault fabric (net::faults) models peers that *fail*; this module
+//! models peers that *participate and lie*. It follows the repo's
+//! determinism contract end-to-end:
+//!
+//! * every random draw (attacker selection, noise vectors) happens in
+//!   the serial schedule phase from a dedicated RNG fork, gated on
+//!   `attack.frac > 0` — an attack-off run makes ZERO extra draws and is
+//!   bit-identical to a build without this module;
+//! * corruption rewrites states through [`Theta::make_mut_slice`], so
+//!   copy-on-write aliasing (group-mean broadcasts, KD snapshots) stays
+//!   correct — an attacker sharing a post-average handle detaches
+//!   instead of poisoning its groupmates retroactively;
+//! * attacked runs stay bit-identical serial-vs-parallel because the
+//!   corruption pass completes before any aggregation lane fans out.
+//!
+//! Defenses live next door: robust group estimators in
+//! [`crate::aggregation::robust`], and the [`Reputation`] ledger here,
+//! which folds per-round outlier scores into an EWMA and lets the MAR
+//! matchmaker exclude peers whose reputation falls below
+//! `attack.rep_threshold`.
+
+use crate::aggregation::robust::{GroupScores, RobustEstimator, RobustPolicy};
+use crate::aggregation::PeerState;
+use crate::rng::Rng;
+
+/// How an attacker corrupts its update before the group exchange.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AttackMode {
+    /// Send `−scale · θ` (and flipped momentum): the classic
+    /// sign-flipping attack that drags a plain mean toward zero or
+    /// beyond.
+    #[default]
+    SignFlip,
+    /// Add `scale · N(0, 1)` noise per coordinate of θ — an unreliable /
+    /// corrupted-node model rather than a directed attack.
+    GaussNoise,
+    /// Multiply the state by `scale` — model-replacement-style
+    /// amplification (a boosted update that dominates a plain mean).
+    Scale,
+}
+
+impl AttackMode {
+    /// Parse a config-file name (`attack.mode`).
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        Ok(match name {
+            "sign_flip" => AttackMode::SignFlip,
+            "gauss_noise" => AttackMode::GaussNoise,
+            "scale" => AttackMode::Scale,
+            other => anyhow::bail!(
+                "unknown attack mode '{other}' (sign_flip|gauss_noise|scale)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AttackMode::SignFlip => "sign_flip",
+            AttackMode::GaussNoise => "gauss_noise",
+            AttackMode::Scale => "scale",
+        }
+    }
+}
+
+/// The validated `attack.*` config block: adversary knobs plus the
+/// defense selection (robust estimator + reputation threshold).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttackConfig {
+    /// Fraction of peers that are Byzantine (ground truth, drawn once
+    /// per run). `0.0` disables the whole subsystem.
+    pub frac: f64,
+    /// Corruption applied to attacker updates each iteration.
+    pub mode: AttackMode,
+    /// Mode-specific magnitude: flip/amplification factor, or noise σ.
+    pub scale: f64,
+    /// Colluding attackers all send ONE identical corrupted state (the
+    /// lowest-indexed attacker's), sharing a single `Theta` allocation —
+    /// harder for coordinate-wise trimming, cheaper for us to simulate.
+    pub collude: bool,
+    /// Group center estimator (`mean` = bit-exact legacy averaging).
+    pub robust: RobustEstimator,
+    /// Per-side trim fraction for `trimmed_mean`.
+    pub trim: f64,
+    /// Reputation ban threshold in `(0, 1)`; `0.0` disables
+    /// reputation-gated matchmaking.
+    pub rep_threshold: f64,
+}
+
+impl Default for AttackConfig {
+    fn default() -> Self {
+        AttackConfig {
+            frac: 0.0,
+            mode: AttackMode::SignFlip,
+            scale: 1.0,
+            collude: false,
+            robust: RobustEstimator::Mean,
+            trim: 0.25,
+            rep_threshold: 0.0,
+        }
+    }
+}
+
+impl AttackConfig {
+    /// Attack injection active? (Defenses may run without attackers —
+    /// e.g. a robust estimator hardening an honest run.)
+    pub fn enabled(&self) -> bool {
+        self.frac > 0.0
+    }
+
+    /// Reputation-gated matchmaking active?
+    pub fn rep_enabled(&self) -> bool {
+        self.rep_threshold > 0.0
+    }
+
+    /// Anything here that departs from the bit-exact legacy path?
+    pub fn any_active(&self) -> bool {
+        self.enabled() || self.rep_enabled() || !self.policy().is_mean()
+    }
+
+    /// The estimator policy threaded through aggregation.
+    pub fn policy(&self) -> RobustPolicy {
+        RobustPolicy { est: self.robust, trim: self.trim }
+    }
+
+    /// Range checks (called from `config::ExperimentConfig::validate`).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !(0.0..0.5).contains(&self.frac) {
+            anyhow::bail!("attack.frac must be in [0, 0.5), got {}", self.frac);
+        }
+        if !self.scale.is_finite() || self.scale <= 0.0 {
+            anyhow::bail!("attack.scale must be finite and > 0, got {}", self.scale);
+        }
+        if !(0.0..0.5).contains(&self.trim) {
+            anyhow::bail!("attack.trim must be in [0, 0.5), got {}", self.trim);
+        }
+        if !(0.0..1.0).contains(&self.rep_threshold) {
+            anyhow::bail!(
+                "attack.rep_threshold must be in [0, 1), got {}",
+                self.rep_threshold
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The per-run ground truth: which peers are Byzantine, and what they
+/// have done so far. Drawn ONCE at trainer setup from a dedicated RNG
+/// fork (tag 4), gated on `attack.frac > 0`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttackPlan {
+    attacker: Vec<bool>,
+    mode: AttackMode,
+    scale: f64,
+    collude: bool,
+    /// Attackers that corrupted an update at least once this run.
+    active: Vec<bool>,
+}
+
+impl AttackPlan {
+    /// Select `round(frac · n)` attackers (clamped below half) from a
+    /// forked RNG. Deterministic per (seed, n, frac).
+    pub fn new(cfg: &AttackConfig, n: usize, rng: &mut Rng) -> Self {
+        let want = (cfg.frac * n as f64).round() as usize;
+        let count = want.min(n.saturating_sub(1) / 2);
+        let mut attacker = vec![false; n];
+        for i in rng.sample_indices(n, count) {
+            attacker[i] = true;
+        }
+        AttackPlan {
+            attacker,
+            mode: cfg.mode,
+            scale: cfg.scale,
+            collude: cfg.collude,
+            active: vec![false; n],
+        }
+    }
+
+    pub fn is_attacker(&self, peer: usize) -> bool {
+        self.attacker[peer]
+    }
+
+    /// Ground-truth attacker count.
+    pub fn count(&self) -> usize {
+        self.attacker.iter().filter(|&&a| a).count()
+    }
+
+    /// Attackers that actually corrupted an update this run.
+    pub fn active_count(&self) -> u64 {
+        self.active.iter().filter(|&&a| a).count() as u64
+    }
+
+    pub fn attacker_flags(&self) -> &[bool] {
+        &self.attacker
+    }
+
+    /// Corrupt every attacking participant's state in place, in
+    /// participant order (serial schedule phase — `rng` draws happen
+    /// here and nowhere else). Sign-flip and scale rewrite θ and
+    /// momentum (no draws); Gaussian noise perturbs θ only, one draw per
+    /// coordinate (one shared vector when colluding). Colluders all end
+    /// up holding ONE shared corrupted allocation.
+    pub fn corrupt(
+        &mut self,
+        states: &mut [PeerState],
+        participants: &[usize],
+        rng: &mut Rng,
+    ) {
+        let attackers: Vec<usize> = participants
+            .iter()
+            .copied()
+            .filter(|&p| self.attacker[p])
+            .collect();
+        if attackers.is_empty() {
+            return;
+        }
+        if self.collude {
+            let lead = attackers[0];
+            self.corrupt_one(states, lead, rng);
+            let theta = states[lead].theta.clone();
+            let mom = states[lead].momentum.clone();
+            for &p in &attackers[1..] {
+                states[p].theta = theta.clone();
+                states[p].momentum = mom.clone();
+                self.active[p] = true;
+            }
+        } else {
+            for &p in &attackers {
+                self.corrupt_one(states, p, rng);
+            }
+        }
+    }
+
+    fn corrupt_one(&mut self, states: &mut [PeerState], p: usize, rng: &mut Rng) {
+        self.active[p] = true;
+        let st = &mut states[p];
+        match self.mode {
+            AttackMode::SignFlip => {
+                let f = -self.scale as f32;
+                for v in st.theta.make_mut_slice() {
+                    *v *= f;
+                }
+                for v in st.momentum.make_mut_slice() {
+                    *v *= f;
+                }
+            }
+            AttackMode::Scale => {
+                let f = self.scale as f32;
+                for v in st.theta.make_mut_slice() {
+                    *v *= f;
+                }
+                for v in st.momentum.make_mut_slice() {
+                    *v *= f;
+                }
+            }
+            AttackMode::GaussNoise => {
+                let s = self.scale;
+                for v in st.theta.make_mut_slice() {
+                    *v += (s * rng.normal()) as f32;
+                }
+            }
+        }
+    }
+}
+
+/// Ban length once a peer's reputation crosses the threshold.
+const BAN_ITERS: u64 = 4;
+/// EWMA smoothing factor for per-iteration health observations.
+const REP_ALPHA: f64 = 0.5;
+/// A member is an outlier when its distance to the group center exceeds
+/// BOTH `OUTLIER_REL · median(dists)` and `OUTLIER_ABS · ‖center‖` — the
+/// relative test finds the odd one out, the absolute floor keeps a
+/// converged group's tiny jitter from flagging honest peers.
+const OUTLIER_REL: f64 = 3.0;
+const OUTLIER_ABS: f64 = 0.05;
+/// Never ban more than this fraction of the population — the
+/// matchmaker must always retain a working majority.
+const MAX_BANNED_FRAC: f64 = 0.45;
+
+/// EWMA reputation ledger with bounded bans and rejoin probation.
+///
+/// Scores arrive per aggregation round via [`Reputation::observe_group`]
+/// (serial fold, group/member order); [`Reputation::fold_iteration`]
+/// applies each peer's WORST observation of the iteration to its EWMA
+/// once, then bans peers below the threshold for [`BAN_ITERS`]
+/// iterations (probation: an expired ban resets the reputation exactly
+/// to the threshold, so one more bad iteration re-bans). The worst-of
+/// staging matters: after round 1 of a MAR iteration an attacker holds
+/// the shared group mean and looks perfectly healthy in rounds 2+, so
+/// averaging observations would wash the round-1 evidence out.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Reputation {
+    rep: Vec<f64>,
+    /// Worst observation this iteration: `None` = unobserved.
+    staged: Vec<Option<bool>>,
+    /// Ban expiry (iteration index); 0 = not banned.
+    banned_until: Vec<u64>,
+    ever_flagged: Vec<bool>,
+    threshold: f64,
+    max_banned: usize,
+    iter: u64,
+}
+
+impl Reputation {
+    pub fn new(n: usize, threshold: f64) -> Self {
+        Reputation {
+            rep: vec![1.0; n],
+            staged: vec![None; n],
+            banned_until: vec![0; n],
+            ever_flagged: vec![false; n],
+            threshold,
+            max_banned: (MAX_BANNED_FRAC * n as f64).floor() as usize,
+            iter: 0,
+        }
+    }
+
+    /// Fold one group's outlier evidence (member order).
+    pub fn observe_group(&mut self, members: &[usize], scores: &GroupScores) {
+        debug_assert_eq!(members.len(), scores.dists.len());
+        if members.len() < 3 {
+            return; // no meaningful "odd one out" below 3 members
+        }
+        let mut sorted = scores.dists.clone();
+        sorted.sort_unstable_by(|a, b| a.total_cmp(b));
+        let k = sorted.len();
+        let med = if k % 2 == 1 {
+            sorted[k / 2]
+        } else {
+            0.5 * (sorted[k / 2 - 1] + sorted[k / 2])
+        };
+        let floor = OUTLIER_ABS * scores.center_norm.max(1e-12);
+        for (&peer, &d) in members.iter().zip(&scores.dists) {
+            let outlier = d > OUTLIER_REL * med && d > floor;
+            let healthy = !outlier;
+            self.staged[peer] = Some(match self.staged[peer] {
+                Some(prev) => prev && healthy,
+                None => healthy,
+            });
+        }
+    }
+
+    /// Apply the staged observations, expire old bans (probation), issue
+    /// new ones (bounded, ascending peer order). Returns the number of
+    /// newly banned peers. Call exactly once per aggregation call, after
+    /// all rounds folded.
+    pub fn fold_iteration(&mut self) -> u64 {
+        self.iter += 1;
+        for (rep, staged) in self.rep.iter_mut().zip(self.staged.iter_mut()) {
+            if let Some(healthy) = staged.take() {
+                let obs = if healthy { 1.0 } else { 0.0 };
+                *rep = (1.0 - REP_ALPHA) * *rep + REP_ALPHA * obs;
+            }
+        }
+        let mut newly = 0u64;
+        for p in 0..self.rep.len() {
+            if self.banned_until[p] > 0 {
+                if self.iter >= self.banned_until[p] {
+                    self.banned_until[p] = 0;
+                    self.rep[p] = self.threshold; // probation
+                }
+                continue;
+            }
+            if self.rep[p] < self.threshold && self.banned() < self.max_banned {
+                self.banned_until[p] = self.iter + BAN_ITERS;
+                self.ever_flagged[p] = true;
+                newly += 1;
+            }
+        }
+        newly
+    }
+
+    pub fn is_banned(&self, peer: usize) -> bool {
+        self.banned_until[peer] > 0
+    }
+
+    /// Currently banned peers.
+    pub fn banned(&self) -> usize {
+        self.banned_until.iter().filter(|&&b| b > 0).count()
+    }
+
+    /// Peers flagged (banned) at least once this run.
+    pub fn ever_flagged(&self) -> &[bool] {
+        &self.ever_flagged
+    }
+
+    pub fn score(&self, peer: usize) -> f64 {
+        self.rep[peer]
+    }
+}
+
+/// Flagging quality against the ground-truth attacker set:
+/// `(flagged, precision, recall)`. Precision/recall are 1.0 when their
+/// denominator is empty (nothing flagged / no attackers).
+pub fn flag_quality(flagged: &[bool], attacker: &[bool]) -> (u64, f64, f64) {
+    debug_assert_eq!(flagged.len(), attacker.len());
+    let n_flag = flagged.iter().filter(|&&f| f).count();
+    let n_atk = attacker.iter().filter(|&&a| a).count();
+    let hit = flagged
+        .iter()
+        .zip(attacker)
+        .filter(|&(&f, &a)| f && a)
+        .count();
+    let precision = if n_flag == 0 { 1.0 } else { hit as f64 / n_flag as f64 };
+    let recall = if n_atk == 0 { 1.0 } else { hit as f64 / n_atk as f64 };
+    (n_flag as u64, precision, recall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_mode() {
+        for mode in [AttackMode::SignFlip, AttackMode::GaussNoise, AttackMode::Scale]
+        {
+            assert_eq!(AttackMode::parse(mode.name()).unwrap(), mode);
+        }
+        assert!(AttackMode::parse("backdoor").is_err());
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_ranges() {
+        let ok = AttackConfig::default();
+        ok.validate().unwrap();
+        assert!(AttackConfig { frac: 0.5, ..ok.clone() }.validate().is_err());
+        assert!(AttackConfig { frac: -0.1, ..ok.clone() }.validate().is_err());
+        assert!(AttackConfig { scale: 0.0, ..ok.clone() }.validate().is_err());
+        assert!(AttackConfig { trim: 0.5, ..ok.clone() }.validate().is_err());
+        assert!(
+            AttackConfig { rep_threshold: 1.0, ..ok.clone() }.validate().is_err()
+        );
+        AttackConfig { frac: 0.3, rep_threshold: 0.6, ..ok }.validate().unwrap();
+    }
+
+    #[test]
+    fn plan_selection_is_deterministic_and_clamped() {
+        let cfg = AttackConfig { frac: 0.3, ..Default::default() };
+        let a = AttackPlan::new(&cfg, 20, &mut Rng::new(9));
+        let b = AttackPlan::new(&cfg, 20, &mut Rng::new(9));
+        assert_eq!(a, b);
+        assert_eq!(a.count(), 6); // round(0.3 · 20)
+        assert_eq!(a.active_count(), 0);
+        // clamp: never half or more, even with an aggressive frac
+        let cfg = AttackConfig { frac: 0.49, ..Default::default() };
+        let plan = AttackPlan::new(&cfg, 4, &mut Rng::new(9));
+        assert!(plan.count() <= 1);
+    }
+
+    fn states(n: usize, p: usize) -> Vec<PeerState> {
+        (0..n)
+            .map(|i| PeerState {
+                theta: vec![i as f32 + 1.0; p].into(),
+                momentum: vec![0.5; p].into(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sign_flip_rewrites_theta_and_momentum() {
+        let cfg = AttackConfig { frac: 0.4, scale: 2.0, ..Default::default() };
+        let mut rng = Rng::new(3);
+        let mut plan = AttackPlan::new(&cfg, 5, &mut rng);
+        let mut st = states(5, 4);
+        let before: Vec<_> = st.iter().map(|s| s.theta.to_vec()).collect();
+        plan.corrupt(&mut st, &[0, 1, 2, 3, 4], &mut rng);
+        for p in 0..5 {
+            if plan.is_attacker(p) {
+                assert_eq!(st[p].theta[0], -2.0 * before[p][0]);
+                assert_eq!(st[p].momentum[0], -1.0);
+            } else {
+                assert_eq!(st[p].theta.to_vec(), before[p]);
+            }
+        }
+        assert_eq!(plan.active_count(), plan.count() as u64);
+    }
+
+    #[test]
+    fn corrupt_detaches_shared_storage() {
+        // an attacker aliasing a group mean must CoW-detach, never
+        // poison the peers sharing the allocation
+        let cfg = AttackConfig { frac: 0.4, ..Default::default() };
+        let mut rng = Rng::new(5);
+        let mut plan = AttackPlan::new(&cfg, 5, &mut rng);
+        let atk = (0..5).find(|&p| plan.is_attacker(p)).unwrap();
+        let honest = (0..5).find(|&p| !plan.is_attacker(p)).unwrap();
+        let mut st = states(5, 4);
+        let shared = st[honest].theta.clone();
+        st[atk].theta = shared.clone();
+        assert!(st[atk].theta.shares_storage(&st[honest].theta));
+        plan.corrupt(&mut st, &[atk], &mut rng);
+        assert!(!st[atk].theta.shares_storage(&st[honest].theta));
+        assert_eq!(st[honest].theta, shared);
+    }
+
+    #[test]
+    fn colluders_share_one_corrupted_allocation() {
+        let cfg = AttackConfig {
+            frac: 0.45,
+            collude: true,
+            mode: AttackMode::GaussNoise,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(7);
+        let mut plan = AttackPlan::new(&cfg, 9, &mut rng);
+        let mut st = states(9, 8);
+        let participants: Vec<usize> = (0..9).collect();
+        let draws_before = rng.clone();
+        plan.corrupt(&mut st, &participants, &mut rng);
+        let atks: Vec<usize> =
+            (0..9).filter(|&p| plan.is_attacker(p)).collect();
+        assert!(atks.len() >= 2);
+        for w in atks.windows(2) {
+            assert!(st[w[0]].theta.shares_storage(&st[w[1]].theta));
+        }
+        // collusion draws ONE noise vector total (8 coords)
+        let mut replay = draws_before;
+        for _ in 0..8 {
+            replay.normal();
+        }
+        assert_eq!(replay.next_u64(), rng.next_u64());
+    }
+
+    #[test]
+    fn reputation_bans_persistent_outliers_with_probation() {
+        let mut rep = Reputation::new(6, 0.5);
+        let members = [0usize, 1, 2, 3];
+        // peer 3 is a strong outlier every iteration
+        let scores = GroupScores {
+            dists: vec![0.1, 0.12, 0.09, 50.0],
+            center_norm: 10.0,
+        };
+        rep.observe_group(&members, &scores);
+        assert_eq!(rep.fold_iteration(), 0); // rep 0.5, not yet below
+        rep.observe_group(&members, &scores);
+        assert_eq!(rep.fold_iteration(), 1); // rep 0.25 < 0.5 → ban
+        assert!(rep.is_banned(3));
+        assert!(!rep.is_banned(0));
+        assert_eq!(rep.banned(), 1);
+        // ban expires after BAN_ITERS folds; probation resets to the
+        // threshold, so one more bad iteration re-bans immediately
+        for _ in 0..BAN_ITERS {
+            rep.fold_iteration();
+        }
+        assert!(!rep.is_banned(3));
+        assert_eq!(rep.score(3), 0.5);
+        rep.observe_group(&members, &scores);
+        assert_eq!(rep.fold_iteration(), 1);
+        assert!(rep.is_banned(3));
+        assert_eq!(rep.ever_flagged(), &[false, false, false, true, false, false]);
+    }
+
+    #[test]
+    fn worst_observation_of_iteration_wins() {
+        let mut rep = Reputation::new(4, 0.5);
+        let bad = GroupScores {
+            dists: vec![0.1, 0.1, 0.1, 40.0],
+            center_norm: 10.0,
+        };
+        let clean = GroupScores {
+            dists: vec![0.1, 0.1, 0.1, 0.1],
+            center_norm: 10.0,
+        };
+        // round 1 catches the outlier, rounds 2-3 (post-average alias)
+        // look clean — the round-1 evidence must survive the fold
+        rep.observe_group(&[0, 1, 2, 3], &bad);
+        rep.observe_group(&[0, 1, 2, 3], &clean);
+        rep.observe_group(&[0, 1, 2, 3], &clean);
+        rep.fold_iteration();
+        assert_eq!(rep.score(3), 0.5);
+        assert_eq!(rep.score(0), 1.0);
+    }
+
+    #[test]
+    fn converged_groups_never_flag_anyone() {
+        // tiny absolute distances (relative spread is huge, absolute is
+        // noise) must not produce outliers
+        let mut rep = Reputation::new(4, 0.5);
+        let scores = GroupScores {
+            dists: vec![1e-9, 1e-9, 1e-9, 1e-6],
+            center_norm: 10.0,
+        };
+        for _ in 0..10 {
+            rep.observe_group(&[0, 1, 2, 3], &scores);
+            rep.fold_iteration();
+        }
+        assert_eq!(rep.banned(), 0);
+    }
+
+    #[test]
+    fn ban_count_is_bounded() {
+        // pathological evidence: a different peer looks like a strong
+        // outlier every iteration — the active-ban set must stay capped
+        let mut rep = Reputation::new(10, 0.9);
+        let scores = GroupScores {
+            dists: vec![50.0, 0.1, 0.1],
+            center_norm: 10.0,
+        };
+        for p in 0..8usize {
+            rep.observe_group(&[p, 8, 9], &scores);
+            rep.fold_iteration();
+            assert!(rep.banned() <= 4, "cap is floor(0.45 · 10) = 4");
+        }
+        assert!(rep.ever_flagged().iter().filter(|&&f| f).count() >= 4);
+    }
+
+    #[test]
+    fn flag_quality_counts() {
+        let flagged = [true, false, true, false];
+        let attacker = [true, false, false, true];
+        let (n, p, r) = flag_quality(&flagged, &attacker);
+        assert_eq!(n, 2);
+        assert_eq!(p, 0.5);
+        assert_eq!(r, 0.5);
+        let (n, p, r) = flag_quality(&[false; 4], &[false; 4]);
+        assert_eq!((n, p, r), (0, 1.0, 1.0));
+    }
+}

@@ -14,6 +14,8 @@ use anyhow::{bail, Context, Result};
 
 use toml_lite::{parse_value, Value};
 
+use crate::aggregation::robust::RobustEstimator;
+use crate::attack::{AttackConfig, AttackMode};
 use crate::net::{BwDist, FaultConfig};
 
 /// Aggregation technique (paper baselines + contribution).
@@ -178,6 +180,9 @@ pub struct ExperimentConfig {
     pub link_latency: f64,
     /// fault-injection plan (net::faults) — all knobs default off
     pub faults: FaultConfig,
+    /// Byzantine adversary + robust-aggregation plan (attack) — all
+    /// knobs default off (`frac = 0`, estimator `mean`)
+    pub attack: AttackConfig,
     /// stop once this test accuracy is reached (0 disables)
     pub target_accuracy: f64,
 }
@@ -214,6 +219,7 @@ impl Default for ExperimentConfig {
             link_bandwidth: 12.5e6,
             link_latency: 0.02,
             faults: FaultConfig::default(),
+            attack: AttackConfig::default(),
             target_accuracy: 0.0,
         }
     }
@@ -362,6 +368,24 @@ impl ExperimentConfig {
             "faults.bw_sigma" => self.faults.bw_sigma = f64_of(v)?,
             "faults.bw_min" => self.faults.bw_min = f64_of(v)?,
             "faults.bw_max" => self.faults.bw_max = f64_of(v)?,
+            "faults.bw_redraw_rounds" => {
+                self.faults.bw_redraw_rounds = usize_of(v)?
+            }
+            "attack.frac" => self.attack.frac = f64_of(v)?,
+            "attack.mode" => {
+                self.attack.mode = AttackMode::parse(
+                    v.as_str().ok_or_else(|| anyhow::anyhow!("expected string"))?,
+                )?
+            }
+            "attack.scale" => self.attack.scale = f64_of(v)?,
+            "attack.collude" => self.attack.collude = bool_of(v)?,
+            "attack.robust" => {
+                self.attack.robust = RobustEstimator::parse(
+                    v.as_str().ok_or_else(|| anyhow::anyhow!("expected string"))?,
+                )?
+            }
+            "attack.trim" => self.attack.trim = f64_of(v)?,
+            "attack.rep_threshold" => self.attack.rep_threshold = f64_of(v)?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -445,6 +469,7 @@ impl ExperimentConfig {
         if !(f.bw_min > 0.0 && f.bw_min <= f.bw_max) {
             bail!("faults.bw_min/bw_max must satisfy 0 < bw_min <= bw_max");
         }
+        self.attack.validate()?;
         Ok(())
     }
 }
@@ -595,6 +620,47 @@ mod tests {
     }
 
     #[test]
+    fn byzantine_knobs_apply_and_validate() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.attack.enabled());
+        assert!(c.attack.policy().is_mean());
+        c.apply_overrides(&[
+            "attack.frac=0.2".into(),
+            "attack.mode=gauss_noise".into(),
+            "attack.scale=2.0".into(),
+            "attack.collude=true".into(),
+            "attack.robust=trimmed_mean".into(),
+            "attack.trim=0.3".into(),
+            "attack.rep_threshold=0.4".into(),
+            "faults.bw_redraw_rounds=5".into(),
+        ])
+        .unwrap();
+        assert!(c.attack.enabled());
+        assert!(c.attack.rep_enabled());
+        assert_eq!(c.attack.mode, AttackMode::GaussNoise);
+        assert_eq!(c.attack.robust, RobustEstimator::TrimmedMean);
+        assert!(c.attack.collude);
+        assert_eq!(c.faults.bw_redraw_rounds, 5);
+        assert!(c.validate().is_ok());
+        // half-or-more Byzantine peers break every estimator: rejected
+        c.attack.frac = 0.5;
+        assert!(c.validate().is_err());
+        c.attack.frac = 0.2;
+        c.attack.trim = 0.5;
+        assert!(c.validate().is_err());
+        c.attack.trim = 0.3;
+        c.attack.rep_threshold = 1.0;
+        assert!(c.validate().is_err());
+        c.attack.rep_threshold = 0.4;
+        c.attack.scale = -1.0;
+        assert!(c.validate().is_err());
+        // unknown mode / estimator names are rejected at set() time
+        let mut c2 = ExperimentConfig::default();
+        assert!(c2.apply_overrides(&["attack.mode=backdoor".into()]).is_err());
+        assert!(c2.apply_overrides(&["attack.robust=krum".into()]).is_err());
+    }
+
+    #[test]
     fn unknown_key_rejected() {
         let mut c = ExperimentConfig::default();
         assert!(c.apply_overrides(&["bogus=1".into()]).is_err());
@@ -620,6 +686,7 @@ mod tests {
             "configs/mkd_20ng.toml",
             "configs/churn_markov.toml",
             "configs/faults_bursty.toml",
+            "configs/byzantine.toml",
         ] {
             let cfg = ExperimentConfig::load(
                 Path::new(preset),
@@ -649,6 +716,14 @@ mod tests {
         .unwrap();
         assert_eq!(churn.churn_model, "markov");
         assert!(churn.faults.enabled());
+        let byz = ExperimentConfig::load(
+            Path::new("configs/byzantine.toml"),
+            &[],
+        )
+        .unwrap();
+        assert!(byz.attack.enabled());
+        assert!(byz.attack.rep_enabled());
+        assert_eq!(byz.attack.robust, RobustEstimator::TrimmedMean);
     }
 
     #[test]

@@ -29,13 +29,16 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::group_key::{grid_keys, perfect_grid, random_keys, GroupKey};
+use crate::aggregation::robust::{GroupScores, RobustPolicy};
 use crate::aggregation::{
-    average_group, average_group_chunked, average_group_native, average_views,
-    average_views_chunked, book_full_gather_faulty, book_group_exchange_fabric,
+    book_full_gather_faulty, book_group_exchange_fabric,
     book_group_exchange_mode, book_reduce_scatter_fabric,
-    book_reduce_scatter_faulty, payload_bytes, AggCtx, AggReport, Aggregate,
-    ExchangeTiming, GroupExchange, PeerState,
+    book_reduce_scatter_faulty, payload_bytes, robust_average_group,
+    robust_average_group_chunked, robust_average_group_native,
+    robust_average_views, robust_average_views_chunked, AggCtx, AggReport,
+    Aggregate, ExchangeTiming, GroupExchange, PeerState,
 };
+use crate::attack::Reputation;
 use crate::exec;
 use crate::dht::{decode_peer, encode_peer, Key, SimDht};
 use crate::metrics::CommLedger;
@@ -73,6 +76,15 @@ pub struct MarAggregator {
     /// The serial path is kept as the bit-identical reference for the
     /// determinism tests and the serial-vs-parallel scaling bench.
     pub parallel: bool,
+    /// within-group robust center (`attack.robust`). `Mean` (default)
+    /// runs the exact legacy averaging bit for bit; the other estimators
+    /// bound the pull any single Byzantine member exerts on the group
+    /// center (see [`crate::aggregation::robust`]).
+    pub robust: RobustPolicy,
+    /// reputation ledger gating matchmaking (`attack.rep_threshold`);
+    /// `None` disables scoring entirely — no per-group distance work, no
+    /// behavioural change
+    rep: Option<Reputation>,
     dht: SimDht,
     /// peer index -> DHT node id
     node_ids: Vec<Key>,
@@ -110,6 +122,8 @@ impl MarAggregator {
             rs_drop: 0.0,
             rs_retry_budget: 0,
             parallel: true,
+            robust: RobustPolicy::MEAN,
+            rep: None,
             dht,
             node_ids,
             iteration: 0,
@@ -142,6 +156,33 @@ impl MarAggregator {
     pub fn with_parallel(mut self, parallel: bool) -> Self {
         self.parallel = parallel;
         self
+    }
+
+    /// Select the within-group robust aggregation policy
+    /// (`attack.robust` / `attack.trim`).
+    pub fn with_robust(mut self, robust: RobustPolicy) -> Self {
+        self.robust = robust;
+        self
+    }
+
+    /// Enable reputation-gated matchmaking: each group's members are
+    /// scored by their distance to the group's robust center, folded
+    /// into an EWMA reputation, and peers whose reputation falls below
+    /// `threshold` stop announcing on the DHT for a few iterations
+    /// (bounded ban count, probational rejoin — see [`Reputation`]).
+    /// Because the control plane is pipelined (round g+1's membership
+    /// is fixed before round g's scores exist), a ban takes effect from
+    /// the *next* `aggregate` call, never mid-iteration. `threshold <= 0`
+    /// disables the ledger.
+    pub fn with_reputation(mut self, threshold: f64) -> Self {
+        self.rep = (threshold > 0.0)
+            .then(|| Reputation::new(self.node_ids.len(), threshold));
+        self
+    }
+
+    /// The reputation ledger, when enabled ([`Self::with_reputation`]).
+    pub fn reputation(&self) -> Option<&Reputation> {
+        self.rep.as_ref()
     }
 
     /// Drain the peers that crash-faulted during the last `aggregate`
@@ -271,7 +312,11 @@ impl MarAggregator {
         fabric: &Fabric,
     ) -> (Vec<Vec<usize>>, f64) {
         let keys = random_keys(agg.len(), self.group_size, 1, rng);
-        let alive = vec![true; agg.len()];
+        // reputation bans gate every matchmaking pass, including MKD's
+        let alive: Vec<bool> = match &self.rep {
+            Some(rep) => agg.iter().map(|&peer| !rep.is_banned(peer)).collect(),
+            None => vec![true; agg.len()],
+        };
         self.matchmake_timed(agg, &keys, &alive, 0, tag, fabric)
     }
 }
@@ -343,7 +388,12 @@ fn survivor_links(links: &[LinkFault], lost: &[usize]) -> Vec<LinkFault> {
 /// carries the pre-drawn loss plan and `links` the members' pre-drawn
 /// link faults (empty when link faults are off — the bookers then take
 /// their exact legacy paths); `stripe_par` fans owner stripes across the
-/// pool when the round's group count underfills it.
+/// pool when the round's group count underfills it. `policy` selects the
+/// robust center (`Mean` is the exact legacy path); `want_scores`
+/// additionally returns each member's distance to the center for the
+/// reputation ledger. Lossy groups yield no reputation evidence — their
+/// members are already penalized through the fault path.
+#[allow(clippy::too_many_arguments)]
 fn exchange_lane(
     views: &mut [&mut PeerState],
     plan: &GroupPlan,
@@ -352,7 +402,9 @@ fn exchange_lane(
     bytes: u64,
     fabric: &Fabric,
     stripe_par: bool,
-) -> ExchangeTiming {
+    policy: RobustPolicy,
+    want_scores: bool,
+) -> (ExchangeTiming, Option<GroupScores>) {
     match (exchange, plan) {
         (GroupExchange::ReduceScatter, GroupPlan::Keep) => {
             let timing = if links.is_empty() {
@@ -360,8 +412,9 @@ fn exchange_lane(
             } else {
                 book_reduce_scatter_faulty(links, bytes, fabric)
             };
-            average_views_chunked(views, stripe_par);
-            timing
+            let scores =
+                robust_average_views_chunked(views, stripe_par, policy, want_scores);
+            (timing, scores)
         }
         (GroupExchange::FullGather, GroupPlan::Keep) => {
             let t = if links.is_empty() {
@@ -374,15 +427,15 @@ fn exchange_lane(
             } else {
                 book_full_gather_faulty(links, bytes, fabric)
             };
-            average_views(views);
-            ExchangeTiming { reduce_scatter_s: 0.0, all_gather_s: t }
+            let scores = robust_average_views(views, policy, want_scores);
+            (ExchangeTiming { reduce_scatter_s: 0.0, all_gather_s: t }, scores)
         }
         (_, GroupPlan::Retry(_)) | (_, GroupPlan::Abort(_)) => {
             // members vanished but nobody averages: the survivors time
             // out on the missing traffic (one link latency) and either
             // defer to the next round's matchmaking (Retry) or sit the
             // round out below quorum (Abort) — no recovery bytes
-            lossy_timing(exchange, fabric.latency, 0.0)
+            (lossy_timing(exchange, fabric.latency, 0.0), None)
         }
         (_, GroupPlan::Degraded(lost)) => {
             // members vanished: the survivors time out on the missing
@@ -404,15 +457,16 @@ fn exchange_lane(
             } else {
                 book_full_gather_faulty(&survivor_links(links, lost), bytes, fabric)
             };
-            average_views(&mut survivors);
-            lossy_timing(exchange, fabric.latency, t)
+            robust_average_views(&mut survivors, policy, false);
+            (lossy_timing(exchange, fabric.latency, t), None)
         }
     }
 }
 
 /// Serial-reference twin of [`exchange_lane`] (keeps the Pallas
-/// `group_mean` dispatch available on the full-gather path; chunk-owned
-/// averaging is native-only).
+/// `group_mean` dispatch available on the mean-policy full-gather path;
+/// chunk-owned and robust averaging are native-only).
+#[allow(clippy::too_many_arguments)]
 fn exchange_lane_serial(
     states: &mut [PeerState],
     members: &[usize],
@@ -421,7 +475,9 @@ fn exchange_lane_serial(
     exchange: GroupExchange,
     bytes: u64,
     ctx: &mut AggCtx<'_>,
-) -> Result<ExchangeTiming> {
+    policy: RobustPolicy,
+    want_scores: bool,
+) -> Result<(ExchangeTiming, Option<GroupScores>)> {
     Ok(match (exchange, plan) {
         (GroupExchange::ReduceScatter, GroupPlan::Keep) => {
             let timing = if links.is_empty() {
@@ -429,8 +485,9 @@ fn exchange_lane_serial(
             } else {
                 book_reduce_scatter_faulty(links, bytes, ctx.fabric)
             };
-            average_group_chunked(states, members);
-            timing
+            let scores =
+                robust_average_group_chunked(states, members, policy, want_scores);
+            (timing, scores)
         }
         (GroupExchange::FullGather, GroupPlan::Keep) => {
             let t = if links.is_empty() {
@@ -443,11 +500,12 @@ fn exchange_lane_serial(
             } else {
                 book_full_gather_faulty(links, bytes, ctx.fabric)
             };
-            average_group(states, members, ctx)?;
-            ExchangeTiming { reduce_scatter_s: 0.0, all_gather_s: t }
+            let scores =
+                robust_average_group(states, members, ctx, policy, want_scores)?;
+            (ExchangeTiming { reduce_scatter_s: 0.0, all_gather_s: t }, scores)
         }
         (_, GroupPlan::Retry(_)) | (_, GroupPlan::Abort(_)) => {
-            lossy_timing(exchange, ctx.fabric.latency, 0.0)
+            (lossy_timing(exchange, ctx.fabric.latency, 0.0), None)
         }
         (_, GroupPlan::Degraded(lost)) => {
             let survivors: Vec<usize> = members
@@ -470,8 +528,8 @@ fn exchange_lane_serial(
                     ctx.fabric,
                 )
             };
-            average_group_native(states, &survivors);
-            lossy_timing(exchange, ctx.fabric.latency, t)
+            robust_average_group_native(states, &survivors, policy, false);
+            (lossy_timing(exchange, ctx.fabric.latency, t), None)
         }
     })
 }
@@ -508,8 +566,16 @@ impl Aggregate for MarAggregator {
         self.crashed_last.clear();
         let mut fault_totals = FaultCounters::default();
         // chunk owners that dropped this iteration: stale state, excluded
-        // from every subsequent round's matchmaking
-        let mut alive = vec![true; n];
+        // from every subsequent round's matchmaking. Reputation bans
+        // (decided at the end of *previous* iterations — the pipelined
+        // control plane fixes membership before scores exist) start a
+        // peer out dead for the whole iteration.
+        let mut alive: Vec<bool> = match &self.rep {
+            Some(rep) => agg.iter().map(|&peer| !rep.is_banned(peer)).collect(),
+            None => vec![true; n],
+        };
+        let policy = self.robust;
+        let want_scores = self.rep.is_some();
         // the Pallas artifact path runs through the (non-Sync-friendly)
         // runtime dispatch; keep it on the serial reference engine
         let run_parallel = self.parallel
@@ -715,39 +781,53 @@ impl Aggregate for MarAggregator {
             // owners across the idle workers (bit-identical either way)
             let stripe_par =
                 run_parallel && member_groups.len() * 2 <= exec::threads();
-            let lane_times: Vec<ExchangeTiming> = if run_parallel {
-                // every group books its exchange and averages
-                // concurrently; lane order (and thus the clock) matches
-                // the serial path because results come back in group order
-                let fabric = ctx.fabric;
-                let plans_ref = &plans;
-                let links_ref = &link_plans;
-                exec::par_disjoint_map(states, &member_groups, |gi, views| {
-                    exchange_lane(
-                        views,
-                        &plans_ref[gi],
-                        &links_ref[gi],
-                        exchange,
-                        bytes,
-                        fabric,
-                        stripe_par,
-                    )
-                })?
-            } else {
-                let mut lane_times = Vec::with_capacity(member_groups.len());
-                for (gi, members) in member_groups.iter().enumerate() {
-                    lane_times.push(exchange_lane_serial(
-                        states,
-                        members,
-                        &plans[gi],
-                        &link_plans[gi],
-                        exchange,
-                        bytes,
-                        ctx,
-                    )?);
+            let lane_out: Vec<(ExchangeTiming, Option<GroupScores>)> =
+                if run_parallel {
+                    // every group books its exchange and averages
+                    // concurrently; lane order (and thus the clock) matches
+                    // the serial path because results come back in group order
+                    let fabric = ctx.fabric;
+                    let plans_ref = &plans;
+                    let links_ref = &link_plans;
+                    exec::par_disjoint_map(states, &member_groups, |gi, views| {
+                        exchange_lane(
+                            views,
+                            &plans_ref[gi],
+                            &links_ref[gi],
+                            exchange,
+                            bytes,
+                            fabric,
+                            stripe_par,
+                            policy,
+                            want_scores,
+                        )
+                    })?
+                } else {
+                    let mut lane_out = Vec::with_capacity(member_groups.len());
+                    for (gi, members) in member_groups.iter().enumerate() {
+                        lane_out.push(exchange_lane_serial(
+                            states,
+                            members,
+                            &plans[gi],
+                            &link_plans[gi],
+                            exchange,
+                            bytes,
+                            ctx,
+                            policy,
+                            want_scores,
+                        )?);
+                    }
+                    lane_out
+                };
+            // fold this round's outlier evidence in group order (serial,
+            // deterministic regardless of lane scheduling)
+            if let Some(rep) = self.rep.as_mut() {
+                for (gi, (_, scores)) in lane_out.iter().enumerate() {
+                    if let Some(sc) = scores {
+                        rep.observe_group(&member_groups[gi], sc);
+                    }
                 }
-                lane_times
-            };
+            }
             // groups communicate concurrently; within a group the
             // all-gather starts only once its reduction is done; the next
             // round's matchmaking hides under the exchange. Causality
@@ -756,9 +836,9 @@ impl Aggregate for MarAggregator {
             // that lost an owner books its matchmaking sequentially
             // (survivors time out first, then re-announce) instead of
             // overlapped.
-            let lanes = lane_times
+            let lanes = lane_out
                 .iter()
-                .map(|t| (t.reduce_scatter_s, t.all_gather_s));
+                .map(|(t, _)| (t.reduce_scatter_s, t.all_gather_s));
             if plans.iter().all(|p| *p == GroupPlan::Keep) {
                 ctx.clock.pipelined_two_phase(mm_next, lanes);
             } else {
@@ -779,11 +859,18 @@ impl Aggregate for MarAggregator {
                 "chunk-owned booking must match the closed form"
             );
         }
+        // iteration boundary: EWMA-fold the staged observations, expire
+        // old bans, hand out new ones (bounded; see `Reputation`)
+        let flagged_peers = match self.rep.as_mut() {
+            Some(rep) => rep.fold_iteration(),
+            None => 0,
+        };
         Ok(AggReport {
             rounds: d,
             groups: groups_formed,
             rs_fallbacks,
             rs_retries,
+            flagged_peers,
             faults: fault_totals,
         })
     }

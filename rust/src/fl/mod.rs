@@ -12,7 +12,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::aggregation::{baseline_for, AggCtx, Aggregate, PeerState};
+use crate::aggregation::{baseline_for_robust, AggCtx, Aggregate, PeerState};
+use crate::attack::AttackPlan;
 use crate::config::{ExperimentConfig, Strategy};
 use crate::coordinator::MarAggregator;
 use crate::data::{build as build_data, FlData};
@@ -83,6 +84,21 @@ pub struct RunSummary {
     /// times `MarkovChurn::step` resurrected a random peer to keep the
     /// network non-empty
     pub markov_revivals: u64,
+    /// ground-truth Byzantine peers that corrupted at least one upload
+    /// during the run (0 when `attack.frac = 0`)
+    pub attackers_active: u64,
+    /// peers the reputation ledger ever banned (0 unless
+    /// `attack.rep_threshold` is on)
+    pub flagged_peers: u64,
+    /// precision of the ever-flagged set against the ground-truth
+    /// attacker set (1.0 when nothing was flagged)
+    pub flag_precision: f64,
+    /// recall of the ever-flagged set against the ground-truth attacker
+    /// set (1.0 when there were no attackers)
+    pub flag_recall: f64,
+    /// slow-schedule re-draws of the heterogeneous per-peer bandwidth
+    /// capacities (`faults.bw_redraw_rounds`; 0 on the static default)
+    pub bw_redraws: u64,
     pub final_accuracy: f64,
     pub final_loss: f64,
 }
@@ -120,6 +136,10 @@ pub struct Trainer<'rt> {
     /// gated construction keeps time-uncorrelated plans draw-identical
     /// to the seed
     links: Option<LinkState>,
+    /// ground-truth Byzantine plan, present only when `attack.frac > 0`
+    /// — gated exactly like the fault RNG so clean runs stay
+    /// bit-identical
+    attack: Option<AttackPlan>,
     /// peers that crash-faulted and have not yet rejoined: they resume
     /// with a booked fresh-θ pull the next time they participate
     stale: Vec<bool>,
@@ -154,6 +174,10 @@ impl<'rt> Trainer<'rt> {
         let ledger = Arc::new(CommLedger::new());
         let fabric =
             Fabric::new(ledger.clone(), cfg.link_bandwidth, cfg.link_latency);
+        // one robust policy threads through every averaging surface: MAR
+        // groups, the MKD teacher-logit ensemble, and the baselines that
+        // have a trimming analogue (`Mean` keeps each bit-identical)
+        let policy = cfg.attack.policy();
         let agg = match cfg.strategy {
             Strategy::MarFl => {
                 let mut mar = MarAggregator::new(
@@ -162,7 +186,9 @@ impl<'rt> Trainer<'rt> {
                     cfg.effective_mar_rounds(),
                     ledger.clone(),
                     cfg.seed,
-                );
+                )
+                .with_robust(policy)
+                .with_reputation(cfg.attack.rep_threshold);
                 if cfg.reduce_scatter {
                     mar = mar
                         .with_exchange(
@@ -174,16 +200,15 @@ impl<'rt> Trainer<'rt> {
                 Agg::Mar(mar)
             }
             s => Agg::Baseline(
-                baseline_for(s).context("baseline construction")?,
+                baseline_for_robust(s, policy)
+                    .context("baseline construction")?,
             ),
         };
         let kd = if cfg.kd.enabled && cfg.strategy == Strategy::MarFl {
-            Some(KdEngine::new(
-                cfg.kd.clone(),
-                rt.meta.kd_tau,
-                cfg.eta,
-                cfg.mu,
-            ))
+            Some(
+                KdEngine::new(cfg.kd.clone(), rt.meta.kd_tau, cfg.eta, cfg.mu)
+                    .with_robust(policy),
+            )
         } else {
             None
         };
@@ -208,6 +233,12 @@ impl<'rt> Trainer<'rt> {
             .faults
             .time_correlated()
             .then(|| LinkState::new(&cfg.faults, cfg.peers, &mut rng.fork(3)));
+        // ground-truth attacker set: one gated fork (tag 4) draws it once
+        // per run, so attack-free configs consume zero extra randomness
+        let attack = cfg
+            .attack
+            .enabled()
+            .then(|| AttackPlan::new(&cfg.attack, cfg.peers, &mut rng.fork(4)));
         let label = cfg.strategy.name().to_string();
         let peers = cfg.peers;
         Ok(Trainer {
@@ -232,6 +263,7 @@ impl<'rt> Trainer<'rt> {
             rejoin_pulls: 0,
             churn_rescues: 0,
             links,
+            attack,
             stale: vec![false; peers],
             label,
         })
@@ -284,6 +316,29 @@ impl<'rt> Trainer<'rt> {
                 self.faults.bursty_losses,
             );
         }
+        // attack/defence scorecard: ground truth from the plan, flags
+        // from the MAR reputation ledger (empty-set conventions give
+        // 1.0/1.0 so clean runs read as "nothing wrongly flagged")
+        let attackers_active =
+            self.attack.as_ref().map(|p| p.active_count()).unwrap_or(0);
+        let mut flagged_peers = 0u64;
+        let mut flag_precision = 1.0;
+        let mut flag_recall = 1.0;
+        if let Agg::Mar(m) = &self.agg {
+            if let Some(rep) = m.reputation() {
+                let honest = vec![false; self.cfg.peers];
+                let attacker = self
+                    .attack
+                    .as_ref()
+                    .map(|p| p.attacker_flags())
+                    .unwrap_or(&honest);
+                let (f, p, r) =
+                    crate::attack::flag_quality(rep.ever_flagged(), attacker);
+                flagged_peers = f;
+                flag_precision = p;
+                flag_recall = r;
+            }
+        }
         Ok(RunSummary {
             comm: self.ledger.snapshot(),
             sim_time_s: self.clock.now(),
@@ -304,6 +359,15 @@ impl<'rt> Trainer<'rt> {
                 .and_then(|ls| ls.bw_percentiles()),
             churn_rescues: self.churn_rescues,
             markov_revivals,
+            attackers_active,
+            flagged_peers,
+            flag_precision,
+            flag_recall,
+            bw_redraws: self
+                .links
+                .as_ref()
+                .map(|ls| ls.bw_redraws)
+                .unwrap_or(0),
             final_loss: last.0,
             final_accuracy: last.1,
             curve,
@@ -312,6 +376,13 @@ impl<'rt> Trainer<'rt> {
 
     /// One FL iteration (Algorithm 1 body).
     fn iteration(&mut self, t: usize) -> Result<()> {
+        // slow-schedule heterogeneous-bandwidth re-draw: capacities shift
+        // every `faults.bw_redraw_rounds` iterations from the LinkState's
+        // own dedicated RNG, so the schedule streams below never move
+        // (0 = static, bit-identical to the previous behaviour)
+        if let Some(ls) = self.links.as_mut() {
+            ls.maybe_redraw(&self.cfg.faults, t as u64);
+        }
         // U_t: participants for the entire iteration. Bernoulli sampling
         // (paper §3.1) or the bursty Markov availability trace.
         let mut churn_rng = self.rng.fork(t as u64 * 31 + 1);
@@ -470,6 +541,16 @@ impl<'rt> Trainer<'rt> {
                 self.faults.add(kd_rep.faults);
                 self.straggler_exposed_s += kd_rep.straggler_exposed_s;
             }
+        }
+
+        // Byzantine corruption: attackers replace their uploads after
+        // local training and distillation, just before privatization and
+        // exchange — the group sees the corrupted state, exactly what a
+        // malicious peer controls. Draws come from a dedicated gated fork
+        // (tag +6) so clean runs consume zero extra randomness.
+        if let Some(plan) = &mut self.attack {
+            let mut atk_rng = self.rng.fork(t as u64 * 31 + 6);
+            plan.corrupt(&mut self.states, &aggers, &mut atk_rng);
         }
 
         // DP privatization before aggregation (Algorithm 4)

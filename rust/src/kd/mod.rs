@@ -29,6 +29,10 @@
 
 use anyhow::Result;
 
+use crate::aggregation::robust::{
+    clip_weights, trimmed_indexed_into, weighted_mean_indexed_into,
+    RobustEstimator, RobustPolicy,
+};
 use crate::aggregation::{AggCtx, PeerState, Theta};
 use crate::config::KdConfig;
 use crate::coordinator::MarAggregator;
@@ -66,16 +70,34 @@ pub struct KdEngine {
     /// serial path is the bit-identical reference for the determinism
     /// tests and the MKD serial-vs-parallel ablation in `micro_hotpath`.
     pub parallel: bool,
+    /// robust policy for the top-ℓ teacher-logit ensemble
+    /// (`attack.robust`): a Byzantine teacher's logits are bounded the
+    /// same way its model updates are in MAR groups. `Mean` (default)
+    /// keeps the exact legacy f32 accumulation bit for bit.
+    robust: RobustPolicy,
 }
 
 impl KdEngine {
     pub fn new(cfg: KdConfig, tau: f64, eta: f32, mu: f32) -> Self {
-        KdEngine { cfg, tau: tau as f32, eta, mu, parallel: true }
+        KdEngine {
+            cfg,
+            tau: tau as f32,
+            eta,
+            mu,
+            parallel: true,
+            robust: RobustPolicy::MEAN,
+        }
     }
 
     /// Force the serial reference engine (benchmark/verification aid).
     pub fn with_parallel(mut self, parallel: bool) -> Self {
         self.parallel = parallel;
+        self
+    }
+
+    /// Select the robust policy for the teacher-logit ensemble.
+    pub fn with_robust(mut self, robust: RobustPolicy) -> Self {
+        self.robust = robust;
         self
     }
 
@@ -171,15 +193,30 @@ impl KdEngine {
                     continue;
                 }
                 // per-member link draws for the gather (serial order).
-                // Deliberately i.i.d.: the logit gather fans out to
-                // k-1 peers at once, so it has no single directed link
-                // for a Gilbert–Elliott chain to key on — the bursty
-                // `LinkState` layer applies to model exchange only.
+                // Decision revisited (PR 8): these draws used to be
+                // i.i.d. per lane on the argument that a fan-out gather
+                // has no single link to key a chain on — but the gather
+                // IS k−1 directed transfers, so with a time-correlated
+                // `LinkState` present each member now walks its
+                // per-destination Gilbert–Elliott chains, exactly like
+                // MAR's model exchange. Without one, `draw_member`
+                // delegates to the seed's `draw_link(k−1)` bit for bit.
                 let links: Vec<LinkFault> = if link_on {
                     members
                         .iter()
-                        .map(|_| {
-                            let lf = fp.draw_link(members.len() - 1, ctx.rng);
+                        .map(|&src| {
+                            let dsts: Vec<usize> = members
+                                .iter()
+                                .copied()
+                                .filter(|&d| d != src)
+                                .collect();
+                            let lf = fp.draw_member(
+                                src,
+                                &dsts,
+                                1,
+                                ctx.links.as_deref_mut(),
+                                ctx.rng,
+                            );
                             report.faults.absorb(&lf);
                             lf
                         })
@@ -306,16 +343,43 @@ impl KdEngine {
                     rated.sort_by(|a, b| a.0.total_cmp(&b.0));
                     let ell = self.top_ell(rated.len());
                     rated.truncate(ell);
-                    // z̄_b = mean of selected teacher logits
+                    // z̄_b = robust center of the selected teacher logits.
+                    // The `Mean` policy keeps the legacy f32 accumulation
+                    // loop verbatim (bit-identical); the other estimators
+                    // bound what one Byzantine teacher that survived the
+                    // KL rating can inject into the distillation target.
                     let mut zbar = vec![0.0f32; model.batch * model.classes];
-                    for &(_, zi) in &rated {
-                        for (a, &v) in zbar.iter_mut().zip(&cache[zi]) {
-                            *a += v;
+                    if self.robust.is_mean() || rated.len() < 2 {
+                        for &(_, zi) in &rated {
+                            for (a, &v) in zbar.iter_mut().zip(&cache[zi]) {
+                                *a += v;
+                            }
                         }
-                    }
-                    let inv = 1.0 / rated.len().max(1) as f32;
-                    for a in &mut zbar {
-                        *a *= inv;
+                        let inv = 1.0 / rated.len().max(1) as f32;
+                        for a in &mut zbar {
+                            *a *= inv;
+                        }
+                    } else {
+                        let row = |k: usize| cache[rated[k].1].as_slice();
+                        match self.robust.est {
+                            RobustEstimator::NormClip => {
+                                let w = clip_weights(rated.len(), row);
+                                weighted_mean_indexed_into(
+                                    rated.len(),
+                                    row,
+                                    &w,
+                                    &mut zbar,
+                                    false,
+                                );
+                            }
+                            _ => trimmed_indexed_into(
+                                rated.len(),
+                                row,
+                                &mut zbar,
+                                self.robust.drop_count(rated.len()),
+                                false,
+                            ),
+                        }
                     }
                     // E local distillation epochs, stepped in place
                     // through the copy-on-write handles: the first

@@ -20,6 +20,7 @@
 //! Start with [`fl::Trainer`] (end-to-end loop) or the `marfl` CLI.
 
 pub mod aggregation;
+pub mod attack;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -90,6 +90,11 @@ pub struct FaultConfig {
     pub bw_min: f64,
     /// upper bound of the per-peer capacity multiplier
     pub bw_max: f64,
+    /// re-draw the heterogeneous per-peer capacities every this many FL
+    /// iterations (0 = one static draw per run, the previous behaviour,
+    /// bit-identical). Re-draws come from the [`LinkState`]'s own
+    /// dedicated RNG stream, so the schedule streams never move.
+    pub bw_redraw_rounds: usize,
 }
 
 /// Shape of the per-peer heterogeneous-bandwidth draw. `Off` keeps every
@@ -151,6 +156,7 @@ impl Default for FaultConfig {
             bw_sigma: 0.5,
             bw_min: 0.1,
             bw_max: 1.0,
+            bw_redraw_rounds: 0,
         }
     }
 }
@@ -179,6 +185,7 @@ impl FaultConfig {
         bw_sigma: 0.5,
         bw_min: 0.1,
         bw_max: 1.0,
+        bw_redraw_rounds: 0,
     };
 
     /// Any fault axis active?
@@ -427,6 +434,12 @@ pub struct LinkState {
     bad: Vec<bool>,
     /// per-peer capacity multipliers; empty when `bw_dist = "off"`
     peer_bw: Vec<f64>,
+    /// dedicated stream for the slow capacity re-draws, forked only when
+    /// `bw_redraw_rounds > 0` (gated — the static schedule constructs
+    /// with zero extra draws)
+    redraw_rng: Option<Rng>,
+    /// slow-schedule capacity re-draws performed
+    pub bw_redraws: u64,
     /// good→bad transitions observed (burst onsets)
     pub ge_bad_transitions: u64,
     /// message losses that happened while the link was in the bad state
@@ -445,7 +458,28 @@ impl LinkState {
         } else {
             Vec::new()
         };
-        let peer_bw = match cfg.bw_dist {
+        let peer_bw = Self::draw_bw(cfg, peers, rng);
+        // the re-draw stream is forked *after* the pinned construction
+        // draws and only when the slow schedule is on, so
+        // `bw_redraw_rounds = 0` builds the identical state with zero
+        // extra draws
+        let redraw_rng = (cfg.hetero_bw() && cfg.bw_redraw_rounds > 0)
+            .then(|| rng.fork(1));
+        LinkState {
+            n: peers,
+            bad,
+            peer_bw,
+            redraw_rng,
+            bw_redraws: 0,
+            ge_bad_transitions: 0,
+            bursty_losses: 0,
+        }
+    }
+
+    /// The per-peer capacity draw — construction and slow re-draws share
+    /// it (same distribution, same draw order).
+    fn draw_bw(cfg: &FaultConfig, peers: usize, rng: &mut Rng) -> Vec<f64> {
+        match cfg.bw_dist {
             BwDist::Off => Vec::new(),
             BwDist::Uniform => {
                 (0..peers).map(|_| rng.range_f64(cfg.bw_min, cfg.bw_max)).collect()
@@ -460,8 +494,24 @@ impl LinkState {
                     })
                     .collect()
             }
-        };
-        LinkState { n: peers, bad, peer_bw, ge_bad_transitions: 0, bursty_losses: 0 }
+        }
+    }
+
+    /// Slow-schedule capacity re-draw (`faults.bw_redraw_rounds`): on
+    /// iterations that are multiples of the schedule, every peer draws a
+    /// fresh capacity multiplier from the state's dedicated stream —
+    /// modelling links whose quality shifts over minutes, not per
+    /// message. No-op (and draw-free) off-schedule or when the knob is 0.
+    pub fn maybe_redraw(&mut self, cfg: &FaultConfig, iter: u64) {
+        let every = cfg.bw_redraw_rounds as u64;
+        if every == 0 || iter == 0 || iter % every != 0 {
+            return;
+        }
+        if let Some(rng) = self.redraw_rng.as_mut() {
+            let bw = Self::draw_bw(cfg, self.n, rng);
+            self.peer_bw = bw;
+            self.bw_redraws += 1;
+        }
     }
 
     /// Advance the `src → dst` chain one step and return its new state
@@ -840,6 +890,46 @@ mod tests {
                 .bw_percentiles()
                 .is_none());
         }
+    }
+
+    #[test]
+    fn bw_redraw_follows_slow_schedule() {
+        let cfg = FaultConfig {
+            bw_dist: BwDist::Uniform,
+            bw_min: 0.2,
+            bw_max: 0.9,
+            bw_redraw_rounds: 3,
+            ..FaultConfig::default()
+        };
+        let caps = |ls: &LinkState| (0..16).map(|p| ls.peer_bw(p)).collect::<Vec<_>>();
+        let mut ls = LinkState::new(&cfg, 16, &mut Rng::new(23));
+        let initial = caps(&ls);
+        // off-schedule iterations change nothing (and draw nothing)
+        ls.maybe_redraw(&cfg, 1);
+        ls.maybe_redraw(&cfg, 2);
+        assert_eq!(ls.bw_redraws, 0);
+        assert_eq!(caps(&ls), initial);
+        // on-schedule: fresh capacities, still within bounds
+        ls.maybe_redraw(&cfg, 3);
+        assert_eq!(ls.bw_redraws, 1);
+        let redrawn = caps(&ls);
+        assert_ne!(redrawn, initial);
+        for bw in &redrawn {
+            assert!((0.2..=0.9).contains(bw));
+        }
+        // deterministic: a second run replays the identical stream
+        let mut ls2 = LinkState::new(&cfg, 16, &mut Rng::new(23));
+        ls2.maybe_redraw(&cfg, 3);
+        assert_eq!(ls, ls2);
+        // static schedule: identical construction draws (the re-draw
+        // fork is gated), no re-draws ever
+        let static_cfg =
+            FaultConfig { bw_redraw_rounds: 0, ..cfg.clone() };
+        let mut ls3 = LinkState::new(&static_cfg, 16, &mut Rng::new(23));
+        assert_eq!(caps(&ls3), initial);
+        ls3.maybe_redraw(&static_cfg, 3);
+        assert_eq!(ls3.bw_redraws, 0);
+        assert_eq!(caps(&ls3), initial);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! reproducible from a single seed.
 
 /// xoshiro256** — fast, high-quality, 256-bit state.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Rng {
     s: [u64; 4],
     /// cached second Box–Muller variate

@@ -1,0 +1,308 @@
+//! Byzantine-robustness verification: an inert `attack.*` block must be
+//! bit-identical to the seed behaviour (zero extra RNG draws), attacked
+//! aggregation must stay bit-identical across the serial and
+//! group-parallel engines for every robust estimator (with the
+//! reputation ledger agreeing too), the trimmed mean must respect its
+//! breakdown point coordinate-wise, and the Trainer must surface the
+//! attack/defence scorecard through `RunSummary` deterministically.
+
+use std::sync::Arc;
+
+use marfl::aggregation::robust::{RobustEstimator, RobustPolicy};
+use marfl::aggregation::{
+    robust_average_group_native, AggCtx, AggReport, GroupExchange, PeerState,
+};
+use marfl::attack::{AttackConfig, AttackMode, Reputation};
+use marfl::config::ExperimentConfig;
+use marfl::coordinator::MarAggregator;
+use marfl::fl::Trainer;
+use marfl::metrics::{CommLedger, CommSnapshot};
+use marfl::net::{BwDist, Fabric, FaultConfig};
+use marfl::rng::Rng;
+use marfl::runtime::Runtime;
+use marfl::sim::SimClock;
+
+fn toy_model(p: usize) -> marfl::models::ModelMeta {
+    marfl::models::ModelMeta {
+        name: "toy".into(),
+        param_count: p,
+        padded_len: p,
+        input_shape: vec![4],
+        classes: 3,
+        batch: 8,
+        eval_chunk: 8,
+        init_file: String::new(),
+        artifacts: Default::default(),
+    }
+}
+
+fn random_states(n: usize, p: usize, seed: u64) -> Vec<PeerState> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| PeerState {
+            theta: (0..p).map(|_| rng.normal() as f32).collect(),
+            momentum: (0..p).map(|_| rng.normal() as f32 * 0.1).collect(),
+        })
+        .collect()
+}
+
+/// Flip the sign of every attacker's full state — the same corruption
+/// `attack::AttackPlan` applies under `sign_flip`, inlined here so the
+/// MAR-level tests control exactly who attacks when.
+fn flip(states: &mut [PeerState], attackers: &[usize]) {
+    for &a in attackers {
+        for v in states[a].theta.make_mut_slice() {
+            *v = -*v;
+        }
+        for v in states[a].momentum.make_mut_slice() {
+            *v = -*v;
+        }
+    }
+}
+
+/// Three MAR iterations with re-corrupted attackers between calls;
+/// returns (states, ledger, clock, reports, reputation ledger).
+fn run_attacked_mar(
+    est: RobustEstimator,
+    exchange: GroupExchange,
+    parallel: bool,
+) -> (Vec<PeerState>, CommSnapshot, f64, Vec<AggReport>, Reputation) {
+    let (n, m, g, p) = (16, 4, 2, 97);
+    let attackers = [3usize, 7, 12];
+    let mut states = random_states(n, p, 0xB124);
+    let agg: Vec<usize> = (0..n).collect();
+    let ledger = Arc::new(CommLedger::new());
+    let fabric = Fabric::new(ledger.clone(), 12.5e6, 0.02);
+    let mut clock = SimClock::new();
+    let mut rng = Rng::new(404);
+    let model = toy_model(p);
+    let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 7)
+        .with_exchange(exchange)
+        .with_parallel(parallel)
+        .with_robust(RobustPolicy { est, trim: 0.25 })
+        .with_reputation(0.4);
+    ledger.reset(); // drop DHT join traffic
+    let mut reports = Vec::new();
+    for _ in 0..3 {
+        flip(&mut states, &attackers);
+        let mut ctx = AggCtx {
+            fabric: &fabric,
+            clock: &mut clock,
+            rng: &mut rng,
+            runtime: None,
+            model: &model,
+            faults: &FaultConfig::OFF,
+            links: None,
+        };
+        reports.push(mar.aggregate(&mut states, &agg, &mut ctx).unwrap());
+    }
+    let rep = mar.reputation().unwrap().clone();
+    (states, ledger.snapshot(), clock.now(), reports, rep)
+}
+
+/// (a) Inert attack block ⇒ bit-identical to the seed path: with
+/// `frac = 0`, a `mean` estimator and reputation off, every other
+/// `attack.*` knob may be set arbitrarily and the run must not change
+/// by a single bit (no `AttackPlan`, no fork(4), no score passes).
+#[test]
+fn inert_attack_config_is_bit_identical_to_seed() {
+    let rt = Runtime::new(&marfl::models::default_artifact_dir()).unwrap();
+    let base = ExperimentConfig {
+        model: "head".into(),
+        peers: 9,
+        group_size: 3,
+        iterations: 4,
+        samples_per_peer: 32,
+        test_samples: 250,
+        eval_every: 4,
+        local_batches: 2,
+        seed: 991,
+        ..Default::default()
+    };
+    let run = |cfg: ExperimentConfig| {
+        let mut t = Trainer::new(cfg, &rt).unwrap();
+        let summary = t.run().unwrap();
+        let states: Vec<PeerState> = t.states().to_vec();
+        (states, summary)
+    };
+    let (plain_states, plain) = run(base.clone());
+
+    let mut inert = base;
+    inert.attack = AttackConfig {
+        frac: 0.0, // off — everything below must be dead weight
+        mode: AttackMode::Scale,
+        scale: 7.0,
+        collude: true,
+        robust: RobustEstimator::Mean,
+        trim: 0.4,
+        rep_threshold: 0.0,
+    };
+    inert.validate().unwrap();
+    let (inert_states, irun) = run(inert);
+
+    for (a, b) in plain_states.iter().zip(&inert_states) {
+        assert_eq!(a.theta, b.theta, "inert attack block perturbed states");
+        assert_eq!(a.momentum, b.momentum);
+    }
+    assert_eq!(plain.comm, irun.comm, "inert attack block changed traffic");
+    assert_eq!(plain.sim_time_s.to_bits(), irun.sim_time_s.to_bits());
+    assert_eq!(
+        plain.final_loss.to_bits(),
+        irun.final_loss.to_bits(),
+        "inert attack block changed the model"
+    );
+    assert_eq!(irun.attackers_active, 0);
+    assert_eq!(irun.flagged_peers, 0);
+    assert_eq!(irun.flag_precision, 1.0);
+    assert_eq!(irun.flag_recall, 1.0);
+}
+
+/// (b) Attacked aggregation stays bit-identical across engines for
+/// every estimator: the robust kernels and the outlier-score pass all
+/// run (or are folded) in deterministic group order, so serial and
+/// group-parallel runs agree on states, ledger, clock, flag counters —
+/// and on the reputation ledger itself.
+#[test]
+fn attacked_aggregation_parallel_matches_serial() {
+    for est in [
+        RobustEstimator::Mean,
+        RobustEstimator::TrimmedMean,
+        RobustEstimator::Median,
+        RobustEstimator::NormClip,
+    ] {
+        for exchange in
+            [GroupExchange::FullGather, GroupExchange::ReduceScatter]
+        {
+            let (s_states, s_snap, s_clock, s_reps, s_rep) =
+                run_attacked_mar(est, exchange, false);
+            let (p_states, p_snap, p_clock, p_reps, p_rep) =
+                run_attacked_mar(est, exchange, true);
+            let tag = format!("{}/{exchange:?}", est.name());
+            for (i, (a, b)) in s_states.iter().zip(&p_states).enumerate() {
+                assert_eq!(a.theta, b.theta, "{tag}: peer {i} theta diverged");
+                assert_eq!(a.momentum, b.momentum, "{tag}: peer {i} momentum");
+            }
+            assert_eq!(s_snap, p_snap, "{tag}: ledger diverged");
+            assert_eq!(s_clock.to_bits(), p_clock.to_bits(), "{tag}: clock");
+            assert_eq!(s_reps, p_reps, "{tag}: reports diverged");
+            assert_eq!(s_rep, p_rep, "{tag}: reputation ledgers diverged");
+        }
+    }
+}
+
+/// (c) Breakdown point: with `f <= drop_count` corrupted rows, the
+/// trimmed-mean center stays within the honest rows' coordinate-wise
+/// envelope no matter how extreme the corruption — and the plain mean
+/// (sanity check) does not.
+#[test]
+fn trimmed_mean_respects_breakdown_point() {
+    let p = 33;
+    let members: Vec<usize> = (0..4).collect();
+    let build = || {
+        let mut states = random_states(4, p, 0xCAFE);
+        // one attacker (== drop_count for k=4, trim=0.25), arbitrarily hot
+        for (j, v) in states[2].theta.make_mut_slice().iter_mut().enumerate() {
+            *v = if j % 2 == 0 { 1e6 } else { -1e6 };
+        }
+        states
+    };
+    let honest = [0usize, 1, 3];
+    let pristine = build();
+    let (lo, hi): (Vec<f32>, Vec<f32>) = (0..p)
+        .map(|j| {
+            let vals: Vec<f32> =
+                honest.iter().map(|&k| pristine[k].theta.as_slice()[j]).collect();
+            (
+                vals.iter().copied().fold(f32::INFINITY, f32::min),
+                vals.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+            )
+        })
+        .unzip();
+
+    let policy =
+        RobustPolicy { est: RobustEstimator::TrimmedMean, trim: 0.25 };
+    assert_eq!(policy.drop_count(4), 1);
+    let mut states = build();
+    robust_average_group_native(&mut states, &members, policy, false);
+    for (j, &c) in states[0].theta.as_slice().iter().enumerate() {
+        assert!(
+            c >= lo[j] - 1e-4 && c <= hi[j] + 1e-4,
+            "coordinate {j}: trimmed center {c} left honest envelope \
+             [{}, {}]",
+            lo[j],
+            hi[j]
+        );
+    }
+
+    // the undefended mean is dragged out of the envelope by the same row
+    let mut states = build();
+    robust_average_group_native(&mut states, &members, RobustPolicy::MEAN, false);
+    let escaped = states[0]
+        .theta
+        .as_slice()
+        .iter()
+        .enumerate()
+        .filter(|&(j, &c)| c < lo[j] - 1e-4 || c > hi[j] + 1e-4)
+        .count();
+    assert!(escaped > p / 2, "plain mean must be dominated by the attacker");
+}
+
+/// (d) End-to-end scorecard determinism: two identical byzantine runs
+/// (sign-flip attackers, trimmed mean + reputation, slow bandwidth
+/// redraws) report the exact same attack/defence counters and finish in
+/// bit-identical states.
+#[test]
+fn byzantine_trainer_runs_are_reproducible() {
+    let rt = Runtime::new(&marfl::models::default_artifact_dir()).unwrap();
+    let mut cfg = ExperimentConfig {
+        model: "head".into(),
+        peers: 9,
+        group_size: 3,
+        iterations: 6,
+        samples_per_peer: 32,
+        test_samples: 250,
+        eval_every: 6,
+        local_batches: 2,
+        seed: 2468,
+        ..Default::default()
+    };
+    cfg.attack = AttackConfig {
+        frac: 0.3, // round(0.3 * 9) = 3 ground-truth attackers
+        robust: RobustEstimator::TrimmedMean,
+        trim: 0.25,
+        rep_threshold: 0.4,
+        ..AttackConfig::default()
+    };
+    cfg.faults = FaultConfig {
+        bw_dist: BwDist::Uniform,
+        bw_min: 0.3,
+        bw_max: 0.9,
+        bw_redraw_rounds: 2,
+        ..FaultConfig::default()
+    };
+    cfg.validate().unwrap();
+    let run = |cfg: ExperimentConfig| {
+        let mut t = Trainer::new(cfg, &rt).unwrap();
+        let summary = t.run().unwrap();
+        let states: Vec<PeerState> = t.states().to_vec();
+        (states, summary)
+    };
+    let (a_states, a) = run(cfg.clone());
+    let (b_states, b) = run(cfg);
+
+    assert_eq!(a.attackers_active, 3, "all 3 planted attackers must fire");
+    // redraw schedule: iterations 2 and 4 (t % 2 == 0, t > 0)
+    assert_eq!(a.bw_redraws, 2);
+    assert_eq!(a.attackers_active, b.attackers_active);
+    assert_eq!(a.flagged_peers, b.flagged_peers);
+    assert_eq!(a.flag_precision.to_bits(), b.flag_precision.to_bits());
+    assert_eq!(a.flag_recall.to_bits(), b.flag_recall.to_bits());
+    assert_eq!(a.bw_redraws, b.bw_redraws);
+    assert_eq!(a.comm, b.comm);
+    assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+    for (x, y) in a_states.iter().zip(&b_states) {
+        assert_eq!(x.theta, y.theta);
+        assert_eq!(x.momentum, y.momentum);
+    }
+}

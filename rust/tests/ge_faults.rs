@@ -216,6 +216,94 @@ fn chain_reaches_stationary_bad_fraction() {
     assert!((ls.ge_bad_transitions as usize) < steps / 2 + 1);
 }
 
+/// (d) KD logit-exchange lanes under an active link chain: the
+/// per-directed-link GE observations (PR 8's `draw_member` swap in
+/// `kd::run_mkd`) all happen in the serial schedule phase, so the
+/// student-parallel engine stays bit-identical to the serial reference
+/// — states, ledger, clock, report counters, and the chain itself.
+#[test]
+fn kd_logit_lanes_bursty_parallel_matches_serial() {
+    use marfl::kd::{KdEngine, KdReport};
+
+    let plan = bursty_plan();
+    let run = |parallel: bool| -> (
+        Vec<PeerState>,
+        CommSnapshot,
+        f64,
+        KdReport,
+        LinkState,
+    ) {
+        let peers = 12;
+        let rt = Runtime::new(&marfl::models::default_artifact_dir()).unwrap();
+        let model = rt.meta.model("head").unwrap().clone();
+        let mut rng = Rng::new(0x5EED);
+        let mut fl =
+            marfl::data::build("head", peers, 32, 250, true, 1.0, &mut rng.fork(1));
+        let theta0 = rt.init_params("head").unwrap();
+        let mut states = vec![PeerState::new(theta0); peers];
+        let agg: Vec<usize> = (0..peers).collect();
+        let ledger = Arc::new(CommLedger::new());
+        let fabric = Fabric::new(ledger.clone(), 12.5e6, 0.02);
+        let mut mar = MarAggregator::new(peers, 4, 2, ledger.clone(), 7);
+        ledger.reset(); // drop DHT join traffic
+        let kd = KdEngine::new(
+            marfl::config::KdConfig {
+                enabled: true,
+                k_iterations: 6,
+                rho_ell: 0.4,
+                epochs: 2,
+            },
+            rt.meta.kd_tau,
+            0.1,
+            0.9,
+        )
+        .with_parallel(parallel);
+        let mut clock = SimClock::new();
+        let mut kd_rng = rng.fork(2);
+        let mut links = Some(LinkState::new(&plan, peers, &mut Rng::new(5)));
+        let mut ctx = AggCtx {
+            fabric: &fabric,
+            clock: &mut clock,
+            rng: &mut kd_rng,
+            runtime: Some(&rt),
+            model: &model,
+            faults: &plan,
+            links: links.as_mut(),
+        };
+        let report = kd
+            .run_mkd(
+                1,
+                &rt,
+                &model,
+                &fl.train,
+                &mut fl.shards,
+                &mut states,
+                &agg,
+                &mut mar,
+                &mut ctx,
+            )
+            .unwrap();
+        (states, ledger.snapshot(), clock.now(), report, links.unwrap())
+    };
+
+    let (s_states, s_snap, s_clock, s_rep, s_ls) = run(false);
+    let (p_states, p_snap, p_clock, p_rep, p_ls) = run(true);
+    for (i, (a, b)) in s_states.iter().zip(&p_states).enumerate() {
+        assert_eq!(a.theta, b.theta, "peer {i} theta diverged");
+        assert_eq!(a.momentum, b.momentum, "peer {i} momentum diverged");
+    }
+    assert_eq!(s_snap, p_snap, "ledger diverged on bursty KD lanes");
+    assert_eq!(s_clock.to_bits(), p_clock.to_bits(), "clock diverged");
+    assert_eq!(s_rep.kd_steps, p_rep.kd_steps);
+    assert_eq!(s_rep.teacher_transfers, p_rep.teacher_transfers);
+    assert_eq!(s_rep.mean_loss.to_bits(), p_rep.mean_loss.to_bits());
+    assert_eq!(s_rep.faults, p_rep.faults, "KD fault counters diverged");
+    assert_eq!(s_ls, p_ls, "link chains diverged across KD engines");
+    // the chain actually fired on the logit lanes
+    assert!(s_rep.faults.msgs_lost + s_rep.faults.bursty_losses > 0);
+    assert!(s_rep.kd_steps > 0, "the pass must still do KD work");
+}
+
 /// End-to-end: a bursty Trainer run surfaces burst counters and
 /// bandwidth percentiles through `RunSummary`, reproducibly; the same
 /// config with the chain knobs zeroed reports neither.

@@ -60,7 +60,7 @@ fn property_all_strategies_preserve_subset_mean() {
         let k = 2 + rng.below(n - 2).min(n - 2);
         let agg_idx = rng.sample_indices(n, k.max(2));
         let strategies: Vec<Box<dyn Aggregate>> = vec![
-            Box::new(FedAvgServer),
+            Box::new(FedAvgServer::default()),
             Box::new(RingRdfl),
             Box::new(AllToAll),
         ];
