@@ -1,21 +1,31 @@
 //! Figure 9 extension — Byzantine resilience of robust group
-//! aggregation.
+//! aggregation, now as an arms race.
 //!
-//! Sweeps the ground-truth attacker fraction {0, 0.1, 0.2, 0.3} under a
-//! per-iteration sign-flip attack (attack::AttackPlan) across the four
-//! group-center estimators (aggregation::robust): plain `mean` (the
-//! bit-exact legacy path, no defence), coordinate-wise `trimmed_mean`
-//! and `median`, and `norm_clip`. Robust estimators additionally run
-//! reputation-gated matchmaking (coordinator::mar bans persistent
-//! outliers from future groups); the undefended mean runs without it,
-//! as the vulnerable baseline.
+//! Two arms share one harness:
 //!
-//! Emits `fig9_byzantine.csv` and `BENCH_byz.json`. The shape gate
-//! encodes the robustness claim: at 30% sign-flip the trimmed-mean +
-//! reputation run keeps its final loss within 2x the attack-free run
-//! while the plain mean ends up measurably worse than the defended run.
+//! * **static** — per-iteration sign-flip over the attacker fraction
+//!   {0, 0.1, 0.2, 0.3} across all six group-center estimators
+//!   (aggregation::robust): the bit-exact legacy `mean` (no defence),
+//!   coordinate-wise `trimmed_mean` and `median`, `norm_clip`, and the
+//!   selection pair `krum` / `multi_krum`. Robust estimators also run
+//!   reputation-gated matchmaking (coordinator::mar).
+//! * **adaptive** — `adaptive_scale` attackers (attack::AttackPlan)
+//!   that read their own outlier ratio from the previous round's
+//!   reputation ledger and dial the corruption to sit just under the
+//!   ban threshold, against `mean`, `trimmed_mean` and `multi_krum`
+//!   with the forgiving reputation armed (`rep_decay`, `parole_rounds`)
+//!   — bans expire into parole, flipped parolees are re-banned, and the
+//!   `paroles_granted` / `reban_count` columns quantify the cycle.
+//!
+//! Emits `fig9_byzantine.csv` and `BENCH_byz.json`. The shape gates
+//! encode the robustness claims: at 30% static sign-flip the
+//! trimmed-mean + reputation run keeps its final loss within 2x the
+//! attack-free run while the plain mean ends up measurably worse; at
+//! 20% adaptive attackers Multi-Krum + parole stays within 2x clean
+//! (with paroles actually granted and flag precision no worse than the
+//! static baseline) while trimmed-mean-only degrades below it.
 //! `MARFL_BENCH_FULL=1` lengthens the sweep; `MARFL_BENCH_NO_ASSERT=1`
-//! records results without enforcing the gate.
+//! records results without enforcing the gates.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -30,32 +40,43 @@ use marfl::util::json::{arr, num, obj, s};
 
 /// EWMA reputation ban threshold used by every defended cell.
 const REP: f64 = 0.4;
+/// Forgiveness knobs for the adaptive arm's defended cells: scores
+/// drift back toward neutral and bans expire into parole.
+const REP_DECAY: f64 = 0.05;
+const PAROLE_ROUNDS: u64 = 2;
 
-fn attack_plan(frac: f64, est: RobustEstimator) -> AttackConfig {
+fn attack_plan(frac: f64, mode: AttackMode, est: RobustEstimator) -> AttackConfig {
+    // plain mean is the undefended baseline; every robust estimator
+    // also gets reputation-gated matchmaking. Attack-free rows run
+    // without reputation so the mean cell stays on the bit-exact
+    // legacy path and the zero-counter gate below is meaningful.
+    let defended = est != RobustEstimator::Mean && frac > 0.0;
+    let adaptive = mode == AttackMode::AdaptiveScale;
     AttackConfig {
         frac,
-        mode: AttackMode::SignFlip,
+        mode,
         scale: 1.0,
         robust: est,
         trim: 0.25,
-        // plain mean is the undefended baseline; every robust estimator
-        // also gets reputation-gated matchmaking. Attack-free rows run
-        // without reputation so the mean cell stays on the bit-exact
-        // legacy path and the zero-counter gate below is meaningful.
-        rep_threshold: if est == RobustEstimator::Mean || frac == 0.0 {
-            0.0
-        } else {
-            REP
-        },
+        rep_threshold: if defended { REP } else { 0.0 },
+        rep_decay: if defended && adaptive { REP_DECAY } else { 0.0 },
+        parole_rounds: if defended && adaptive { PAROLE_ROUNDS } else { 0 },
         ..AttackConfig::default()
     }
+}
+
+/// Per-cell results kept around for the shape gates.
+struct Cell {
+    loss: f64,
+    precision: f64,
+    paroles: u64,
 }
 
 fn main() {
     let peers = 16; // 4^2 MAR grid; 30% -> 5 ground-truth attackers
     let t = iters(10, 30);
     println!(
-        "Byzantine resilience — sign-flip fraction sweep x estimator \
+        "Byzantine arms race — attacker mode x fraction x estimator \
          (peers={peers}, T={t})\n"
     );
     let rt = runtime();
@@ -72,100 +93,153 @@ fn main() {
         ..Default::default()
     };
 
-    let estimators = [
-        RobustEstimator::Mean,
-        RobustEstimator::TrimmedMean,
-        RobustEstimator::Median,
-        RobustEstimator::NormClip,
+    // (mode, estimators, fractions): the static arm sweeps every
+    // estimator from the clean baseline up; the adaptive arm skips
+    // frac=0 (identical to clean by the zero-draw contract) and pits
+    // the threshold-probing attacker against the undefended mean, the
+    // coordinate-wise trimmed mean, and Multi-Krum + parole.
+    let arms: [(AttackMode, &[RobustEstimator], &[f64]); 2] = [
+        (
+            AttackMode::SignFlip,
+            &[
+                RobustEstimator::Mean,
+                RobustEstimator::TrimmedMean,
+                RobustEstimator::Median,
+                RobustEstimator::NormClip,
+                RobustEstimator::Krum,
+                RobustEstimator::MultiKrum,
+            ],
+            &[0.0f64, 0.1, 0.2, 0.3],
+        ),
+        (
+            AttackMode::AdaptiveScale,
+            &[
+                RobustEstimator::Mean,
+                RobustEstimator::TrimmedMean,
+                RobustEstimator::MultiKrum,
+            ],
+            &[0.1, 0.2, 0.3],
+        ),
     ];
-    let fracs = [0.0f64, 0.1, 0.2, 0.3];
 
     let mut rows = vec![vec![
+        "mode".into(),
         "estimator".into(),
         "frac".into(),
         "rep_threshold".into(),
+        "rep_decay".into(),
+        "parole_rounds".into(),
         "attackers_active".into(),
         "flagged_peers".into(),
         "flag_precision".into(),
         "flag_recall".into(),
+        "paroles_granted".into(),
+        "reban_count".into(),
         "data_mib".into(),
         "final_accuracy".into(),
         "final_loss".into(),
         "loss_ratio".into(),
     ]];
     let mut json_rows = Vec::new();
-    // (estimator, frac) -> final loss, for the shape gate
-    let mut losses = std::collections::BTreeMap::new();
+    // (mode, estimator, frac*10) -> gate-relevant results
+    let mut cells = std::collections::BTreeMap::new();
     let mut clean_loss = f64::NAN;
 
-    for &est in &estimators {
-        for &frac in &fracs {
-            let atk = attack_plan(frac, est);
-            let label = format!("{} frac={frac}", est.name());
-            let cfg = ExperimentConfig { attack: atk.clone(), ..base.clone() };
-            let run = timed(&label, || {
-                Trainer::new(cfg, &rt).unwrap().run().unwrap()
-            });
-            if est == RobustEstimator::Mean && frac == 0.0 {
-                clean_loss = run.final_loss;
+    for &(mode, estimators, fracs) in &arms {
+        for &est in estimators {
+            for &frac in fracs {
+                let atk = attack_plan(frac, mode, est);
+                let label =
+                    format!("{} {} frac={frac}", mode.name(), est.name());
+                let cfg =
+                    ExperimentConfig { attack: atk.clone(), ..base.clone() };
+                let run = timed(&label, || {
+                    Trainer::new(cfg, &rt).unwrap().run().unwrap()
+                });
+                if est == RobustEstimator::Mean && frac == 0.0 {
+                    clean_loss = run.final_loss;
+                }
+                let ratio = run.final_loss / clean_loss;
+                println!(
+                    "    acc {:.3}  loss {:.3} ({ratio:.2}x clean)  \
+                     attackers {}  flagged {} (P {:.2} R {:.2})  \
+                     paroles {}  rebans {}",
+                    run.final_accuracy,
+                    run.final_loss,
+                    run.attackers_active,
+                    run.flagged_peers,
+                    run.flag_precision,
+                    run.flag_recall,
+                    run.paroles_granted,
+                    run.reban_count
+                );
+                rows.push(vec![
+                    mode.name().into(),
+                    est.name().into(),
+                    frac.to_string(),
+                    atk.rep_threshold.to_string(),
+                    atk.rep_decay.to_string(),
+                    atk.parole_rounds.to_string(),
+                    run.attackers_active.to_string(),
+                    run.flagged_peers.to_string(),
+                    format!("{:.4}", run.flag_precision),
+                    format!("{:.4}", run.flag_recall),
+                    run.paroles_granted.to_string(),
+                    run.reban_count.to_string(),
+                    format!("{:.3}", mib(run.comm.data_bytes)),
+                    format!("{:.4}", run.final_accuracy),
+                    format!("{:.4}", run.final_loss),
+                    format!("{ratio:.4}"),
+                ]);
+                json_rows.push(obj(vec![
+                    ("mode", s(mode.name())),
+                    ("estimator", s(est.name())),
+                    ("frac", num(frac)),
+                    ("rep_threshold", num(atk.rep_threshold)),
+                    ("rep_decay", num(atk.rep_decay)),
+                    ("parole_rounds", num(atk.parole_rounds as f64)),
+                    ("attackers_active", num(run.attackers_active as f64)),
+                    ("flagged_peers", num(run.flagged_peers as f64)),
+                    ("flag_precision", num(run.flag_precision)),
+                    ("flag_recall", num(run.flag_recall)),
+                    ("paroles_granted", num(run.paroles_granted as f64)),
+                    ("reban_count", num(run.reban_count as f64)),
+                    ("data_bytes", num(run.comm.data_bytes as f64)),
+                    ("final_accuracy", num(run.final_accuracy)),
+                    ("final_loss", num(run.final_loss)),
+                    ("loss_ratio", num(ratio)),
+                ]));
+                // attack-off rows must be indistinguishable from the
+                // seed: no ground-truth attackers, nothing flagged. This
+                // is the zero-overhead contract CI pins at fixed seeds.
+                if frac == 0.0 {
+                    assert_eq!(
+                        run.attackers_active, 0,
+                        "attack-off row recorded attackers ({label})"
+                    );
+                    assert_eq!(
+                        run.flagged_peers, 0,
+                        "attack-off row flagged peers ({label})"
+                    );
+                    assert_eq!(
+                        run.paroles_granted, 0,
+                        "attack-off row granted paroles ({label})"
+                    );
+                } else {
+                    assert!(
+                        run.attackers_active > 0,
+                        "attacked row recorded no active attackers ({label})"
+                    );
+                }
+                cells.insert(
+                    (mode.name(), est.name(), (frac * 10.0).round() as u32),
+                    Cell {
+                        loss: run.final_loss,
+                        precision: run.flag_precision,
+                        paroles: run.paroles_granted,
+                    },
+                );
             }
-            let ratio = run.final_loss / clean_loss;
-            println!(
-                "    acc {:.3}  loss {:.3} ({ratio:.2}x clean)  \
-                 attackers {}  flagged {} (P {:.2} R {:.2})",
-                run.final_accuracy,
-                run.final_loss,
-                run.attackers_active,
-                run.flagged_peers,
-                run.flag_precision,
-                run.flag_recall
-            );
-            rows.push(vec![
-                est.name().into(),
-                frac.to_string(),
-                atk.rep_threshold.to_string(),
-                run.attackers_active.to_string(),
-                run.flagged_peers.to_string(),
-                format!("{:.4}", run.flag_precision),
-                format!("{:.4}", run.flag_recall),
-                format!("{:.3}", mib(run.comm.data_bytes)),
-                format!("{:.4}", run.final_accuracy),
-                format!("{:.4}", run.final_loss),
-                format!("{ratio:.4}"),
-            ]);
-            json_rows.push(obj(vec![
-                ("estimator", s(est.name())),
-                ("frac", num(frac)),
-                ("rep_threshold", num(atk.rep_threshold)),
-                ("attackers_active", num(run.attackers_active as f64)),
-                ("flagged_peers", num(run.flagged_peers as f64)),
-                ("flag_precision", num(run.flag_precision)),
-                ("flag_recall", num(run.flag_recall)),
-                ("data_bytes", num(run.comm.data_bytes as f64)),
-                ("final_accuracy", num(run.final_accuracy)),
-                ("final_loss", num(run.final_loss)),
-                ("loss_ratio", num(ratio)),
-            ]));
-            // attack-off rows must be indistinguishable from the seed:
-            // no ground-truth attackers, nothing flagged. This is the
-            // zero-overhead contract CI pins at fixed seeds.
-            if frac == 0.0 {
-                assert_eq!(
-                    run.attackers_active, 0,
-                    "attack-off row recorded attackers ({label})"
-                );
-                assert_eq!(
-                    run.flagged_peers, 0,
-                    "attack-off row flagged peers ({label})"
-                );
-            } else {
-                assert!(
-                    run.attackers_active > 0,
-                    "attacked row recorded no active attackers ({label})"
-                );
-            }
-            losses
-                .insert((est.name(), (frac * 10.0).round() as u32), run.final_loss);
         }
     }
     emit_csv("fig9_byzantine.csv", &rows);
@@ -174,24 +248,39 @@ fn main() {
         ("bench", s("byzantine")),
         ("peers", num(peers as f64)),
         ("iterations", num(t as f64)),
-        ("mode", s("sign_flip")),
+        ("modes", arr(vec![s("sign_flip"), s("adaptive_scale")])),
         ("rep_threshold", num(REP)),
+        ("rep_decay", num(REP_DECAY)),
+        ("parole_rounds", num(PAROLE_ROUNDS as f64)),
         ("results", arr(json_rows)),
     ]);
     let path = results_dir().join("BENCH_byz.json");
     write_json(&path, &doc).expect("write BENCH_byz.json");
     println!("  -> {}", path.display());
 
-    // ---- paper-shape assertion -------------------------------------
-    // At 30% sign-flip the defended run (trimmed mean + reputation)
-    // must stay within 2x the attack-free loss, and the undefended
-    // plain mean must end up strictly worse than the defended run —
-    // the distortion the robust path exists to remove.
-    let mean_03 = losses[&("mean", 3)];
-    let trimmed_03 = losses[&("trimmed_mean", 3)];
+    // ---- paper-shape assertions ------------------------------------
+    // Static arm: at 30% sign-flip the defended run (trimmed mean +
+    // reputation) must stay within 2x the attack-free loss, and the
+    // undefended plain mean must end up strictly worse than the
+    // defended run — the distortion the robust path exists to remove.
+    let mean_03 = cells[&("sign_flip", "mean", 3)].loss;
+    let trimmed_03 = cells[&("sign_flip", "trimmed_mean", 3)].loss;
     println!(
-        "\nloss at frac=0.3: clean {clean_loss:.3} | trimmed+rep \
+        "\nstatic loss at frac=0.3: clean {clean_loss:.3} | trimmed+rep \
          {trimmed_03:.3} | plain mean {mean_03:.3}"
+    );
+    // Adaptive arm: at 20% threshold-probing attackers Multi-Krum +
+    // parole must hold within 2x clean with paroles actually granted
+    // and flag precision no worse than the static trimmed-mean
+    // baseline, while the coordinate-wise trimmed mean — which the
+    // dialed-down blend leaks through — lands strictly worse.
+    let mk_02 = &cells[&("adaptive_scale", "multi_krum", 2)];
+    let tm_02 = &cells[&("adaptive_scale", "trimmed_mean", 2)];
+    let static_tm_02 = &cells[&("sign_flip", "trimmed_mean", 2)];
+    println!(
+        "adaptive loss at frac=0.2: multi_krum+parole {:.3} (P {:.2}, \
+         paroles {}) | trimmed-only {:.3}",
+        mk_02.loss, mk_02.precision, mk_02.paroles, tm_02.loss
     );
     if std::env::var("MARFL_BENCH_NO_ASSERT").is_err() {
         assert!(
@@ -204,6 +293,33 @@ fn main() {
             "plain mean under 30% sign-flip must be worse than the \
              defended trimmed mean (mean {mean_03:.4} vs trimmed \
              {trimmed_03:.4})"
+        );
+        assert!(
+            mk_02.loss <= 2.0 * clean_loss,
+            "multi-krum + parole under 20% adaptive attackers must stay \
+             within 2x the attack-free loss (got {:.4} vs clean \
+             {clean_loss:.4})",
+            mk_02.loss
+        );
+        assert!(
+            tm_02.loss > mk_02.loss,
+            "trimmed-mean-only must degrade against adaptive attackers \
+             relative to multi-krum + parole (trimmed {:.4} vs \
+             multi-krum {:.4})",
+            tm_02.loss,
+            mk_02.loss
+        );
+        assert!(
+            mk_02.paroles > 0,
+            "the adaptive defended run must cycle bans through parole \
+             (paroles_granted = 0)"
+        );
+        assert!(
+            mk_02.precision >= static_tm_02.precision,
+            "adaptive-arm flag precision ({:.4}) must not fall below \
+             the static-attack baseline ({:.4})",
+            mk_02.precision,
+            static_tm_02.precision
         );
     }
 }

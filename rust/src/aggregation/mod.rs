@@ -294,6 +294,29 @@ pub fn robust_mean_of(
                 true,
             );
         }
+        robust::RobustEstimator::Krum | robust::RobustEstimator::MultiKrum => {
+            if n < 3 {
+                return mean_of(states, members);
+            }
+            let sel = robust::krum_select(
+                n,
+                |k| states[members[k]].theta.as_slice(),
+                policy.krum_f(n),
+                policy.est == robust::RobustEstimator::MultiKrum,
+            );
+            mean_indexed_into(
+                sel.len(),
+                |k| states[members[sel[k]]].theta.as_slice(),
+                &mut theta,
+                true,
+            );
+            mean_indexed_into(
+                sel.len(),
+                |k| states[members[sel[k]]].momentum.as_slice(),
+                &mut mom,
+                true,
+            );
+        }
     }
     (theta, mom)
 }
@@ -440,6 +463,24 @@ fn robust_average_rows<R: GroupRows>(
                     false,
                 );
             }
+            robust::RobustEstimator::Krum | robust::RobustEstimator::MultiKrum => {
+                // selection over full θ vectors; the momentum center
+                // averages the same selected members so both halves of
+                // the state move coherently. k < 3 degenerates to mean.
+                let sel = krum_members(n, |k| shared.theta(k), policy);
+                mean_indexed_into(
+                    sel.len(),
+                    |k| shared.theta(sel[k]),
+                    tbuf.as_mut_slice(),
+                    false,
+                );
+                mean_indexed_into(
+                    sel.len(),
+                    |k| shared.momentum(sel[k]),
+                    mbuf.as_mut_slice(),
+                    false,
+                );
+            }
         }
         scores = want_scores.then(|| robust::GroupScores {
             dists: (0..n).map(|k| robust::l2_distance(shared.theta(k), &tbuf)).collect(),
@@ -448,6 +489,26 @@ fn robust_average_rows<R: GroupRows>(
     }
     rows.write_all(Theta::new(tbuf), Theta::new(mbuf));
     scores
+}
+
+/// The member subset a Krum-family policy averages: the Krum winner (or
+/// the Multi-Krum survivor set) for k ≥ 3, every member below that —
+/// selection needs `k − f − 2 ≥ 1` neighbours, so tiny groups degrade
+/// to the plain mean. Shared by the full-gather and chunk-owned paths
+/// so both assemble the identical center.
+fn krum_members<'a, F>(n: usize, theta: F, policy: robust::RobustPolicy) -> Vec<usize>
+where
+    F: Fn(usize) -> &'a [f32] + Sync,
+{
+    if n < 3 {
+        return (0..n).collect();
+    }
+    robust::krum_select(
+        n,
+        theta,
+        policy.krum_f(n),
+        policy.est == robust::RobustEstimator::MultiKrum,
+    )
 }
 
 /// [`average_rows`] over `states[members]` (serial reference engine).
@@ -523,6 +584,11 @@ fn robust_average_rows_chunked<R: GroupRows>(
         let drop = policy.drop_count(n);
         let clip = (policy.est == robust::RobustEstimator::NormClip)
             .then(|| robust::clip_weights(n, |k| shared.theta(k)));
+        // Krum selection reads FULL θ vectors (like clip weights), so it
+        // is precomputed once here; every owner stripe then averages the
+        // same selected rows — assembling exactly the full-gather center
+        let sel =
+            policy.is_selection().then(|| krum_members(n, |k| shared.theta(k), policy));
         crate::exec::map_ranges_mut(
             tbuf.as_mut_slice(),
             &crate::exec::stripe_ranges(p, n),
@@ -537,6 +603,7 @@ fn robust_average_rows_chunked<R: GroupRows>(
                     policy,
                     drop,
                     clip.as_deref(),
+                    sel.as_deref(),
                 );
             },
         )
@@ -555,6 +622,7 @@ fn robust_average_rows_chunked<R: GroupRows>(
                     policy,
                     drop,
                     clip.as_deref(),
+                    sel.as_deref(),
                 );
             },
         )
@@ -569,8 +637,9 @@ fn robust_average_rows_chunked<R: GroupRows>(
 }
 
 /// One chunk owner's estimate of its stripe under `policy` — the
-/// shared body of [`robust_average_rows_chunked`]. `drop` and `clip`
-/// are precomputed by the caller (clip weights over FULL vectors).
+/// shared body of [`robust_average_rows_chunked`]. `drop`, `clip` and
+/// `sel` are precomputed by the caller (clip weights and the Krum
+/// selection both come from FULL vectors).
 #[allow(clippy::too_many_arguments)]
 fn robust_owner_stripe<'a, F>(
     n: usize,
@@ -581,6 +650,7 @@ fn robust_owner_stripe<'a, F>(
     policy: robust::RobustPolicy,
     drop: usize,
     clip: Option<&[f64]>,
+    sel: Option<&[usize]>,
 ) where
     F: Fn(usize) -> &'a [f32] + Sync,
 {
@@ -602,6 +672,15 @@ fn robust_owner_stripe<'a, F>(
                 |k| &vecs(k)[r.start..r.end],
                 stripe,
                 drop,
+                false,
+            )
+        }
+        robust::RobustEstimator::Krum | robust::RobustEstimator::MultiKrum => {
+            let sel = sel.expect("krum selection precomputed");
+            mean_indexed_into(
+                sel.len(),
+                |k| &vecs(sel[k])[r.start..r.end],
+                stripe,
                 false,
             )
         }

@@ -37,6 +37,16 @@ pub enum RobustEstimator {
     /// median L2 norm before averaging — defeats model-replacement
     /// amplification while leaving honest updates untouched.
     NormClip,
+    /// Krum (Blanchard et al.): score every member by the summed squared
+    /// distance to its `k − f − 2` nearest neighbours and take the
+    /// single lowest-scored member's state as the center — a full
+    /// selection, so a Byzantine row is either chosen or contributes
+    /// nothing (no coordinate-wise leakage).
+    Krum,
+    /// Multi-Krum: average the `k − f` lowest-Krum-scored members —
+    /// Krum's selection robustness with (most of) the mean's variance
+    /// reduction.
+    MultiKrum,
 }
 
 impl RobustEstimator {
@@ -47,9 +57,11 @@ impl RobustEstimator {
             "trimmed_mean" => RobustEstimator::TrimmedMean,
             "median" => RobustEstimator::Median,
             "norm_clip" => RobustEstimator::NormClip,
+            "krum" => RobustEstimator::Krum,
+            "multi_krum" => RobustEstimator::MultiKrum,
             other => anyhow::bail!(
                 "unknown robust estimator '{other}' \
-                 (mean|trimmed_mean|median|norm_clip)"
+                 (mean|trimmed_mean|median|norm_clip|krum|multi_krum)"
             ),
         })
     }
@@ -60,6 +72,8 @@ impl RobustEstimator {
             RobustEstimator::TrimmedMean => "trimmed_mean",
             RobustEstimator::Median => "median",
             RobustEstimator::NormClip => "norm_clip",
+            RobustEstimator::Krum => "krum",
+            RobustEstimator::MultiKrum => "multi_krum",
         }
     }
 }
@@ -94,12 +108,29 @@ impl RobustPolicy {
     /// `Median`).
     pub fn drop_count(&self, k: usize) -> usize {
         match self.est {
-            RobustEstimator::Mean | RobustEstimator::NormClip => 0,
+            RobustEstimator::Mean
+            | RobustEstimator::NormClip
+            | RobustEstimator::Krum
+            | RobustEstimator::MultiKrum => 0,
             RobustEstimator::TrimmedMean => {
                 ((self.trim * k as f64).floor() as usize).min(k.saturating_sub(1) / 2)
             }
             RobustEstimator::Median => k.saturating_sub(1) / 2,
         }
+    }
+
+    /// Selection-based estimator (Krum / Multi-Krum)?
+    pub fn is_selection(&self) -> bool {
+        matches!(self.est, RobustEstimator::Krum | RobustEstimator::MultiKrum)
+    }
+
+    /// Byzantine allowance `f` for Krum selection: the trim fraction of
+    /// the group (`⌊trim·k⌋`, the same knob the trimmed mean uses),
+    /// clamped so the score still has `k − f − 2 ≥ 1` neighbours.
+    /// Groups with `k < 3` have no meaningful selection — callers fall
+    /// back to the plain mean there.
+    pub fn krum_f(&self, k: usize) -> usize {
+        ((self.trim * k as f64).floor() as usize).min(k.saturating_sub(3))
     }
 }
 
@@ -257,6 +288,49 @@ pub fn clip_weights<'a, F: Fn(usize) -> &'a [f32]>(rows: usize, row: F) -> Vec<f
         .collect()
 }
 
+/// Krum / Multi-Krum selection over FULL member vectors. Pairwise
+/// squared L2 distances accumulate in f64, index order; member `i`'s
+/// Krum score is the sum of its `k − f − 2` smallest distances (at
+/// least one), ordered by `total_cmp` with an index tie-break so the
+/// selection is fully deterministic. Returns the selected member
+/// indices in ascending order — one for Krum, `k − f` for Multi-Krum.
+/// Like [`clip_weights`], selection always reads full rows: the caller
+/// precomputes it once and the chunk-owned path then averages the same
+/// selected rows per owned stripe, assembling exactly the full-gather
+/// vector.
+pub fn krum_select<'a, F: Fn(usize) -> &'a [f32]>(
+    rows: usize,
+    row: F,
+    f: usize,
+    multi: bool,
+) -> Vec<usize> {
+    assert!(rows >= 3, "krum selection needs at least 3 rows");
+    assert!(f + 2 < rows, "krum allowance f={f} leaves no neighbours of {rows}");
+    let mut d2 = vec![0.0f64; rows * rows];
+    for i in 0..rows {
+        for j in (i + 1)..rows {
+            let d = l2_distance(row(i), row(j));
+            let dd = d * d;
+            d2[i * rows + j] = dd;
+            d2[j * rows + i] = dd;
+        }
+    }
+    let near = rows - f - 2; // neighbours per score, ≥ 1 by the assert
+    let mut scored: Vec<(f64, usize)> = (0..rows)
+        .map(|i| {
+            let mut ds: Vec<f64> =
+                (0..rows).filter(|&j| j != i).map(|j| d2[i * rows + j]).collect();
+            ds.sort_unstable_by(|a, b| a.total_cmp(b));
+            (ds[..near].iter().sum::<f64>(), i)
+        })
+        .collect();
+    scored.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let take = if multi { rows - f } else { 1 };
+    let mut sel: Vec<usize> = scored[..take].iter().map(|&(_, i)| i).collect();
+    sel.sort_unstable();
+    sel
+}
+
 /// L2 norm of an f32 vector, f64 index-order accumulation.
 pub fn l2_norm(a: &[f32]) -> f64 {
     a.iter()
@@ -299,10 +373,42 @@ mod tests {
             RobustEstimator::TrimmedMean,
             RobustEstimator::Median,
             RobustEstimator::NormClip,
+            RobustEstimator::Krum,
+            RobustEstimator::MultiKrum,
         ] {
             assert_eq!(RobustEstimator::parse(est.name()).unwrap(), est);
         }
-        assert!(RobustEstimator::parse("krum").is_err());
+        assert!(RobustEstimator::parse("bulyan").is_err());
+    }
+
+    #[test]
+    fn krum_f_clamps_to_neighbourhood() {
+        let kp = |trim| RobustPolicy { est: RobustEstimator::Krum, trim };
+        assert_eq!(kp(0.25).krum_f(4), 1); // one neighbour per score
+        assert_eq!(kp(0.25).krum_f(8), 2);
+        assert_eq!(kp(0.45).krum_f(4), 1); // floor(1.8)=1 == k-3
+        assert_eq!(kp(0.45).krum_f(10), 4);
+        assert_eq!(kp(0.25).krum_f(3), 0); // k=3 admits no allowance
+        assert_eq!(kp(0.0).krum_f(6), 0);
+    }
+
+    #[test]
+    fn krum_rejects_the_far_outlier() {
+        // four tight rows + one far row: the outlier's nearest-neighbour
+        // sums dominate, so Krum never selects it and Multi-Krum drops
+        // exactly it
+        let data = vec![
+            vec![0.0f32, 0.0],
+            vec![0.1, 0.0],
+            vec![0.0, 0.1],
+            vec![100.0, 100.0],
+            vec![0.1, 0.1],
+        ];
+        let sel = krum_select(5, rows_of(&data), 1, false);
+        assert_eq!(sel.len(), 1);
+        assert_ne!(sel[0], 3, "krum must not pick the planted outlier");
+        let msel = krum_select(5, rows_of(&data), 1, true);
+        assert_eq!(msel, vec![0, 1, 2, 4], "multi-krum keeps the tight cluster");
     }
 
     #[test]

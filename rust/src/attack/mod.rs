@@ -40,6 +40,21 @@ pub enum AttackMode {
     /// Multiply the state by `scale` — model-replacement-style
     /// amplification (a boosted update that dominates a plain mean).
     Scale,
+    /// Adaptive sign-flip blend: attacker `p` sends `(1 − 2·s_p)·θ`
+    /// where `s_p` starts at `scale` (a full flip at `scale = 1`) and is
+    /// re-dialed every iteration from the attacker's own outlier ratio
+    /// in the previous round's `GroupScores` — shrinking when the
+    /// detector flagged it, probing back up when it passed, aiming to
+    /// sit just under the reputation threshold. The controller is
+    /// purely deterministic (zero RNG draws) and advances only in the
+    /// serial schedule phase ([`AttackPlan::adapt`]).
+    AdaptiveScale,
+    /// "A little is enough"-style collusion: every attacker sends the
+    /// SAME small perturbation of the honest population — the
+    /// coordinate-wise participant mean shifted by `scale` standard
+    /// deviations — hiding inside the natural cross-peer spread.
+    /// Inherently collusive (one shared allocation); zero RNG draws.
+    Alie,
 }
 
 impl AttackMode {
@@ -49,8 +64,11 @@ impl AttackMode {
             "sign_flip" => AttackMode::SignFlip,
             "gauss_noise" => AttackMode::GaussNoise,
             "scale" => AttackMode::Scale,
+            "adaptive_scale" => AttackMode::AdaptiveScale,
+            "alie" => AttackMode::Alie,
             other => anyhow::bail!(
-                "unknown attack mode '{other}' (sign_flip|gauss_noise|scale)"
+                "unknown attack mode '{other}' \
+                 (sign_flip|gauss_noise|scale|adaptive_scale|alie)"
             ),
         })
     }
@@ -60,6 +78,8 @@ impl AttackMode {
             AttackMode::SignFlip => "sign_flip",
             AttackMode::GaussNoise => "gauss_noise",
             AttackMode::Scale => "scale",
+            AttackMode::AdaptiveScale => "adaptive_scale",
+            AttackMode::Alie => "alie",
         }
     }
 }
@@ -86,6 +106,16 @@ pub struct AttackConfig {
     /// Reputation ban threshold in `(0, 1)`; `0.0` disables
     /// reputation-gated matchmaking.
     pub rep_threshold: f64,
+    /// Per-iteration EWMA drift back toward the neutral reputation
+    /// (1.0), in `[0, 1)`. `0.0` (default) keeps scores sticky — the
+    /// exact pre-parole behaviour. Dead weight unless `rep_threshold`
+    /// is set.
+    pub rep_decay: f64,
+    /// Ban length in iterations before a banned peer re-enters
+    /// matchmaking *on parole* (a tighter re-ban threshold for a
+    /// bounded window). `0` (default) disables parole and keeps the
+    /// fixed legacy ban length bit-exactly.
+    pub parole_rounds: u64,
 }
 
 impl Default for AttackConfig {
@@ -98,6 +128,8 @@ impl Default for AttackConfig {
             robust: RobustEstimator::Mean,
             trim: 0.25,
             rep_threshold: 0.0,
+            rep_decay: 0.0,
+            parole_rounds: 0,
         }
     }
 }
@@ -141,9 +173,26 @@ impl AttackConfig {
                 self.rep_threshold
             );
         }
+        if !(0.0..1.0).contains(&self.rep_decay) {
+            anyhow::bail!(
+                "attack.rep_decay must be in [0, 1), got {}",
+                self.rep_decay
+            );
+        }
         Ok(())
     }
 }
+
+/// Adaptive-scale controller constants: the attacker steers its worst
+/// observed outlier ratio (`distance / flag threshold`) toward
+/// `ADAPT_TARGET` — just under the detector's trip point — moving its
+/// scale multiplicatively by at most `ADAPT_STEP_MAX` up or down to
+/// `ADAPT_STEP_MIN` per iteration, never above the configured `scale`
+/// and never below `ADAPT_FLOOR · scale` (the probe stays alive).
+const ADAPT_TARGET: f64 = 0.9;
+const ADAPT_STEP_MIN: f64 = 0.25;
+const ADAPT_STEP_MAX: f64 = 1.25;
+const ADAPT_FLOOR: f64 = 1e-3;
 
 /// The per-run ground truth: which peers are Byzantine, and what they
 /// have done so far. Drawn ONCE at trainer setup from a dedicated RNG
@@ -156,6 +205,9 @@ pub struct AttackPlan {
     collude: bool,
     /// Attackers that corrupted an update at least once this run.
     active: Vec<bool>,
+    /// Per-peer adapted scale (`adaptive_scale` only; attacker slots
+    /// start at `scale` and are re-dialed by [`AttackPlan::adapt`]).
+    adapt: Vec<f64>,
 }
 
 impl AttackPlan {
@@ -174,6 +226,40 @@ impl AttackPlan {
             scale: cfg.scale,
             collude: cfg.collude,
             active: vec![false; n],
+            adapt: vec![cfg.scale; n],
+        }
+    }
+
+    /// Adaptive attack (needs last-round detector feedback)?
+    pub fn adaptive(&self) -> bool {
+        self.mode == AttackMode::AdaptiveScale
+    }
+
+    /// The current adapted scale of `peer` (attacker slots only move).
+    pub fn adapted_scale(&self, peer: usize) -> f64 {
+        self.adapt[peer]
+    }
+
+    /// Serial-phase controller step for `adaptive_scale`: each attacker
+    /// reads its own worst outlier ratio from the PREVIOUS iteration
+    /// (`Reputation::last_ratios`; `0.0` = unobserved, e.g. banned or
+    /// in a sub-3 group — the scale holds) and multiplies its scale
+    /// toward the [`ADAPT_TARGET`] trip-point ratio. Deterministic, no
+    /// RNG draws; other modes ignore the call entirely.
+    pub fn adapt(&mut self, last_ratio: &[f64]) {
+        if self.mode != AttackMode::AdaptiveScale {
+            return;
+        }
+        debug_assert_eq!(last_ratio.len(), self.attacker.len());
+        for (p, s) in self.adapt.iter_mut().enumerate() {
+            if !self.attacker[p] {
+                continue;
+            }
+            let r = last_ratio[p];
+            if r > 0.0 {
+                let step = (ADAPT_TARGET / r).clamp(ADAPT_STEP_MIN, ADAPT_STEP_MAX);
+                *s = (*s * step).clamp(ADAPT_FLOOR * self.scale, self.scale);
+            }
         }
     }
 
@@ -197,10 +283,12 @@ impl AttackPlan {
 
     /// Corrupt every attacking participant's state in place, in
     /// participant order (serial schedule phase — `rng` draws happen
-    /// here and nowhere else). Sign-flip and scale rewrite θ and
-    /// momentum (no draws); Gaussian noise perturbs θ only, one draw per
-    /// coordinate (one shared vector when colluding). Colluders all end
-    /// up holding ONE shared corrupted allocation.
+    /// here and nowhere else). Sign-flip, scale and the adaptive blend
+    /// rewrite θ and momentum (no draws); Gaussian noise perturbs θ
+    /// only, one draw per coordinate (one shared vector when
+    /// colluding); `alie` computes the participant mean/σ once and is
+    /// always collusive (no draws). Colluders all end up holding ONE
+    /// shared corrupted allocation.
     pub fn corrupt(
         &mut self,
         states: &mut [PeerState],
@@ -213,6 +301,10 @@ impl AttackPlan {
             .filter(|&p| self.attacker[p])
             .collect();
         if attackers.is_empty() {
+            return;
+        }
+        if self.mode == AttackMode::Alie {
+            self.corrupt_alie(states, participants, &attackers);
             return;
         }
         if self.collude {
@@ -260,12 +352,90 @@ impl AttackPlan {
                     *v += (s * rng.normal()) as f32;
                 }
             }
+            AttackMode::AdaptiveScale => {
+                // (1 − 2s)·θ: s = 1 is the full sign flip, s → 0 an
+                // arbitrarily small (undetectable) pull toward zero —
+                // the blend the controller dials along
+                let f = (1.0 - 2.0 * self.adapt[p]) as f32;
+                for v in st.theta.make_mut_slice() {
+                    *v *= f;
+                }
+                for v in st.momentum.make_mut_slice() {
+                    *v *= f;
+                }
+            }
+            AttackMode::Alie => unreachable!("alie handled in corrupt()"),
+        }
+    }
+
+    /// "A little is enough": every attacker sends the coordinate-wise
+    /// participant mean shifted DOWN by `scale` cross-peer standard
+    /// deviations (θ and momentum alike) — a colluding bloc hiding
+    /// inside the honest spread. Statistics accumulate in f64 over the
+    /// pre-corruption states in participant order; all attackers share
+    /// ONE corrupted allocation. Zero RNG draws.
+    fn corrupt_alie(
+        &mut self,
+        states: &mut [PeerState],
+        participants: &[usize],
+        attackers: &[usize],
+    ) {
+        let theta = crate::params::Theta::new(alie_center(
+            participants,
+            |i| states[i].theta.as_slice(),
+            self.scale,
+        ));
+        let mom = crate::params::Theta::new(alie_center(
+            participants,
+            |i| states[i].momentum.as_slice(),
+            self.scale,
+        ));
+        for &p in attackers {
+            states[p].theta = theta.clone();
+            states[p].momentum = mom.clone();
+            self.active[p] = true;
         }
     }
 }
 
-/// Ban length once a peer's reputation crosses the threshold.
+/// Coordinate-wise `mean − z·σ` over the participants' vectors (f64,
+/// participant order) — the ALIE corruption direction.
+fn alie_center<'a, F: Fn(usize) -> &'a [f32]>(
+    participants: &[usize],
+    row: F,
+    z: f64,
+) -> Vec<f32> {
+    let len = row(participants[0]).len();
+    let n = participants.len() as f64;
+    let mut mean = vec![0.0f64; len];
+    for &i in participants {
+        for (a, &v) in mean.iter_mut().zip(row(i)) {
+            *a += v as f64;
+        }
+    }
+    for a in &mut mean {
+        *a /= n;
+    }
+    let mut var = vec![0.0f64; len];
+    for &i in participants {
+        for ((s, &m), &v) in var.iter_mut().zip(&mean).zip(row(i)) {
+            let d = v as f64 - m;
+            *s += d * d;
+        }
+    }
+    mean.iter()
+        .zip(&var)
+        .map(|(&m, &s2)| (m - z * (s2 / n).sqrt()) as f32)
+        .collect()
+}
+
+/// Ban length once a peer's reputation crosses the threshold (the
+/// legacy fixed term, used whenever parole is off).
 const BAN_ITERS: u64 = 4;
+/// Length of the parole window that follows a `parole_rounds`-long ban:
+/// the re-entered peer is re-banned at the tighter parole threshold for
+/// this many iterations, then fully reinstated.
+const PAROLE_WINDOW: u64 = 4;
 /// EWMA smoothing factor for per-iteration health observations.
 const REP_ALPHA: f64 = 0.5;
 /// A member is an outlier when its distance to the group center exceeds
@@ -278,7 +448,8 @@ const OUTLIER_ABS: f64 = 0.05;
 /// matchmaker must always retain a working majority.
 const MAX_BANNED_FRAC: f64 = 0.45;
 
-/// EWMA reputation ledger with bounded bans and rejoin probation.
+/// EWMA reputation ledger with bounded bans, rejoin probation, and
+/// (optionally) score decay + parole.
 ///
 /// Scores arrive per aggregation round via [`Reputation::observe_group`]
 /// (serial fold, group/member order); [`Reputation::fold_iteration`]
@@ -289,6 +460,15 @@ const MAX_BANNED_FRAC: f64 = 0.45;
 /// staging matters: after round 1 of a MAR iteration an attacker holds
 /// the shared group mean and looks perfectly healthy in rounds 2+, so
 /// averaging observations would wash the round-1 evidence out.
+///
+/// [`Reputation::with_parole`] arms the forgiveness layer: scores decay
+/// toward neutral at `decay` per iteration (a false positive is no
+/// longer sticky for the whole run), bans last `parole_rounds` instead
+/// of [`BAN_ITERS`], and an expiring ban enters a [`PAROLE_WINDOW`]-long
+/// parole in which the peer rejoins matchmaking under the tighter
+/// [`Reputation::parole_threshold`] — one bad iteration there re-bans
+/// it (`reban_count`). `decay = 0` and `parole_rounds = 0` keep every
+/// legacy code path bit-exactly.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Reputation {
     rep: Vec<f64>,
@@ -297,9 +477,27 @@ pub struct Reputation {
     /// Ban expiry (iteration index); 0 = not banned.
     banned_until: Vec<u64>,
     ever_flagged: Vec<bool>,
+    /// Bans that actually gated ≥ 1 matchmaking pass (a ban issued in
+    /// the last iteration never gates — the scorecard only counts the
+    /// ones that did).
+    effective: Vec<bool>,
+    /// Parole expiry (iteration index); 0 = not on parole.
+    parole_until: Vec<u64>,
+    /// Worst outlier ratio (`distance / flag threshold`) staged this
+    /// iteration; `0.0` = unobserved.
+    ratio_staged: Vec<f64>,
+    /// The staged ratios of the last FOLDED iteration — the detector
+    /// signal an adaptive attacker steers by ([`AttackPlan::adapt`]).
+    last_ratio: Vec<f64>,
     threshold: f64,
     max_banned: usize,
     iter: u64,
+    /// Per-iteration drift toward neutral; 0 = sticky legacy scores.
+    decay: f64,
+    /// Ban length under parole; 0 = parole off ([`BAN_ITERS`] bans).
+    parole_rounds: u64,
+    paroles_granted: u64,
+    reban_count: u64,
 }
 
 impl Reputation {
@@ -309,10 +507,32 @@ impl Reputation {
             staged: vec![None; n],
             banned_until: vec![0; n],
             ever_flagged: vec![false; n],
+            effective: vec![false; n],
+            parole_until: vec![0; n],
+            ratio_staged: vec![0.0; n],
+            last_ratio: vec![0.0; n],
             threshold,
             max_banned: (MAX_BANNED_FRAC * n as f64).floor() as usize,
             iter: 0,
+            decay: 0.0,
+            parole_rounds: 0,
+            paroles_granted: 0,
+            reban_count: 0,
         }
+    }
+
+    /// Arm reputation decay and/or parole (both default off — the
+    /// bit-exact legacy ledger).
+    pub fn with_parole(mut self, decay: f64, parole_rounds: u64) -> Self {
+        self.decay = decay;
+        self.parole_rounds = parole_rounds;
+        self
+    }
+
+    /// The tighter ban threshold applied while a peer is on parole:
+    /// halfway between the base threshold and neutral.
+    pub fn parole_threshold(&self) -> f64 {
+        self.threshold + 0.5 * (1.0 - self.threshold)
     }
 
     /// Fold one group's outlier evidence (member order).
@@ -330,6 +550,9 @@ impl Reputation {
             0.5 * (sorted[k / 2 - 1] + sorted[k / 2])
         };
         let floor = OUTLIER_ABS * scores.center_norm.max(1e-12);
+        // the flag trip point: outlier ⟺ d > max(rel·med, floor); the
+        // ratio against it is the signal adaptive attackers observe
+        let trip = (OUTLIER_REL * med).max(floor).max(1e-12);
         for (&peer, &d) in members.iter().zip(&scores.dists) {
             let outlier = d > OUTLIER_REL * med && d > floor;
             let healthy = !outlier;
@@ -337,33 +560,70 @@ impl Reputation {
                 Some(prev) => prev && healthy,
                 None => healthy,
             });
+            self.ratio_staged[peer] = self.ratio_staged[peer].max(d / trip);
         }
     }
 
-    /// Apply the staged observations, expire old bans (probation), issue
-    /// new ones (bounded, ascending peer order). Returns the number of
-    /// newly banned peers. Call exactly once per aggregation call, after
-    /// all rounds folded.
+    /// Apply the staged observations, expire old bans (probation /
+    /// parole), issue new ones (bounded, ascending peer order). Returns
+    /// the number of newly banned peers. Call exactly once per
+    /// aggregation call, after all rounds folded.
     pub fn fold_iteration(&mut self) -> u64 {
         self.iter += 1;
+        // publish this iteration's detector signal for the (next)
+        // serial schedule phase, then clear the staging
+        for (last, staged) in
+            self.last_ratio.iter_mut().zip(self.ratio_staged.iter_mut())
+        {
+            *last = std::mem::take(staged);
+        }
         for (rep, staged) in self.rep.iter_mut().zip(self.staged.iter_mut()) {
             if let Some(healthy) = staged.take() {
                 let obs = if healthy { 1.0 } else { 0.0 };
                 *rep = (1.0 - REP_ALPHA) * *rep + REP_ALPHA * obs;
             }
         }
+        if self.decay > 0.0 {
+            // forgiveness drift: every score relaxes toward neutral, so
+            // one false positive stops shadowing a peer forever
+            for rep in self.rep.iter_mut() {
+                *rep += self.decay * (1.0 - *rep);
+            }
+        }
+        let parole_threshold = self.parole_threshold();
+        let ban_len =
+            if self.parole_rounds > 0 { self.parole_rounds } else { BAN_ITERS };
         let mut newly = 0u64;
         for p in 0..self.rep.len() {
             if self.banned_until[p] > 0 {
                 if self.iter >= self.banned_until[p] {
                     self.banned_until[p] = 0;
-                    self.rep[p] = self.threshold; // probation
+                    if self.parole_rounds > 0 {
+                        // parole: rejoin matchmaking, but for a window
+                        // the tighter threshold applies — and the score
+                        // re-enters exactly AT it, so one bad iteration
+                        // re-bans
+                        self.parole_until[p] = self.iter + PAROLE_WINDOW;
+                        self.rep[p] = parole_threshold;
+                        self.paroles_granted += 1;
+                    } else {
+                        self.rep[p] = self.threshold; // probation
+                    }
                 }
                 continue;
             }
-            if self.rep[p] < self.threshold && self.banned() < self.max_banned {
-                self.banned_until[p] = self.iter + BAN_ITERS;
+            let thresh = if self.parole_until[p] > self.iter {
+                parole_threshold
+            } else {
+                self.threshold
+            };
+            if self.rep[p] < thresh && self.banned() < self.max_banned {
+                self.banned_until[p] = self.iter + ban_len;
                 self.ever_flagged[p] = true;
+                if self.parole_until[p] > self.iter {
+                    self.parole_until[p] = 0;
+                    self.reban_count += 1;
+                }
                 newly += 1;
             }
         }
@@ -374,6 +634,11 @@ impl Reputation {
         self.banned_until[peer] > 0
     }
 
+    /// Peer currently inside its parole window?
+    pub fn on_parole(&self, peer: usize) -> bool {
+        self.parole_until[peer] > self.iter
+    }
+
     /// Currently banned peers.
     pub fn banned(&self) -> usize {
         self.banned_until.iter().filter(|&&b| b > 0).count()
@@ -382,6 +647,35 @@ impl Reputation {
     /// Peers flagged (banned) at least once this run.
     pub fn ever_flagged(&self) -> &[bool] {
         &self.ever_flagged
+    }
+
+    /// Record that `peer`'s ban actually excluded it from a matchmaking
+    /// pass (called by the matchmaker when it drops a banned peer).
+    pub fn note_gated(&mut self, peer: usize) {
+        self.effective[peer] = true;
+    }
+
+    /// Bans that gated ≥ 1 matchmaking pass — the effective flag set
+    /// the precision/recall scorecard is computed over (a ban issued on
+    /// the final iteration never gates anything and must not count).
+    pub fn effective_flags(&self) -> &[bool] {
+        &self.effective
+    }
+
+    /// Worst per-peer outlier ratios of the last folded iteration
+    /// (`0.0` = unobserved) — the adaptive attacker's feedback channel.
+    pub fn last_ratios(&self) -> &[f64] {
+        &self.last_ratio
+    }
+
+    /// Paroles granted this run (ban → parole re-entries).
+    pub fn paroles_granted(&self) -> u64 {
+        self.paroles_granted
+    }
+
+    /// Peers re-banned while on parole.
+    pub fn reban_count(&self) -> u64 {
+        self.reban_count
     }
 
     pub fn score(&self, peer: usize) -> f64 {
@@ -412,8 +706,13 @@ mod tests {
 
     #[test]
     fn parse_round_trips_every_mode() {
-        for mode in [AttackMode::SignFlip, AttackMode::GaussNoise, AttackMode::Scale]
-        {
+        for mode in [
+            AttackMode::SignFlip,
+            AttackMode::GaussNoise,
+            AttackMode::Scale,
+            AttackMode::AdaptiveScale,
+            AttackMode::Alie,
+        ] {
             assert_eq!(AttackMode::parse(mode.name()).unwrap(), mode);
         }
         assert!(AttackMode::parse("backdoor").is_err());
@@ -430,7 +729,19 @@ mod tests {
         assert!(
             AttackConfig { rep_threshold: 1.0, ..ok.clone() }.validate().is_err()
         );
-        AttackConfig { frac: 0.3, rep_threshold: 0.6, ..ok }.validate().unwrap();
+        assert!(AttackConfig { rep_decay: 1.0, ..ok.clone() }.validate().is_err());
+        assert!(
+            AttackConfig { rep_decay: -0.1, ..ok.clone() }.validate().is_err()
+        );
+        AttackConfig {
+            frac: 0.3,
+            rep_threshold: 0.6,
+            rep_decay: 0.1,
+            parole_rounds: 3,
+            ..ok
+        }
+        .validate()
+        .unwrap();
     }
 
     #[test]
@@ -602,6 +913,218 @@ mod tests {
             assert!(rep.banned() <= 4, "cap is floor(0.45 · 10) = 4");
         }
         assert!(rep.ever_flagged().iter().filter(|&&f| f).count() >= 4);
+    }
+
+    #[test]
+    fn adaptive_controller_steers_toward_the_trip_point() {
+        let cfg = AttackConfig {
+            frac: 0.4,
+            mode: AttackMode::AdaptiveScale,
+            scale: 1.0,
+            ..Default::default()
+        };
+        let mut plan = AttackPlan::new(&cfg, 5, &mut Rng::new(11));
+        let atk = (0..5).find(|&p| plan.is_attacker(p)).unwrap();
+        let honest = (0..5).find(|&p| !plan.is_attacker(p)).unwrap();
+        assert_eq!(plan.adapted_scale(atk), 1.0);
+        // flagged hard (ratio 3 ≫ target): shrink by target/ratio
+        let mut ratios = vec![0.0; 5];
+        ratios[atk] = 3.0;
+        ratios[honest] = 3.0; // non-attacker slots must never move
+        plan.adapt(&ratios);
+        assert_eq!(plan.adapted_scale(atk), ADAPT_TARGET / 3.0);
+        assert_eq!(plan.adapted_scale(honest), 1.0);
+        // sitting exactly on target: hold
+        ratios[atk] = ADAPT_TARGET;
+        plan.adapt(&ratios);
+        assert_eq!(plan.adapted_scale(atk), ADAPT_TARGET / 3.0);
+        // passing clean (tiny ratio): probe back up, capped per step...
+        ratios[atk] = 1e-6;
+        plan.adapt(&ratios);
+        assert_eq!(plan.adapted_scale(atk), ADAPT_TARGET / 3.0 * ADAPT_STEP_MAX);
+        // ...and never above the configured scale
+        for _ in 0..64 {
+            plan.adapt(&ratios);
+        }
+        assert_eq!(plan.adapted_scale(atk), 1.0);
+        // hammered every round: bounded below by the probe floor
+        ratios[atk] = 1e9;
+        for _ in 0..64 {
+            plan.adapt(&ratios);
+        }
+        assert_eq!(plan.adapted_scale(atk), ADAPT_FLOOR);
+        // unobserved (banned / sub-3 group): hold
+        ratios[atk] = 0.0;
+        plan.adapt(&ratios);
+        assert_eq!(plan.adapted_scale(atk), ADAPT_FLOOR);
+    }
+
+    #[test]
+    fn adaptive_corruption_is_a_dialable_flip_with_zero_draws() {
+        let cfg = AttackConfig {
+            frac: 0.4,
+            mode: AttackMode::AdaptiveScale,
+            scale: 1.0,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(13);
+        let mut plan = AttackPlan::new(&cfg, 5, &mut rng);
+        let atk = (0..5).find(|&p| plan.is_attacker(p)).unwrap();
+        let mut st = states(5, 4);
+        let before = st[atk].theta.to_vec();
+        let frozen = rng.clone();
+        // full scale ⇒ (1 − 2·1)·θ = −θ, the classic sign flip
+        plan.corrupt(&mut st, &[0, 1, 2, 3, 4], &mut rng);
+        assert_eq!(st[atk].theta[0], -before[0]);
+        assert_eq!(st[atk].momentum[0], -0.5);
+        // dialed down ⇒ the blend shrinks toward identity
+        let mut ratios = vec![0.0; 5];
+        ratios[atk] = 3.0;
+        plan.adapt(&ratios);
+        let s = plan.adapted_scale(atk);
+        let prev = st[atk].theta.to_vec();
+        plan.corrupt(&mut st, &[0, 1, 2, 3, 4], &mut rng);
+        assert_eq!(st[atk].theta[0], (1.0 - 2.0 * s) as f32 * prev[0]);
+        // the whole adaptive path made zero RNG draws
+        let mut replay = frozen;
+        assert_eq!(replay.next_u64(), rng.next_u64());
+    }
+
+    #[test]
+    fn alie_colludes_inside_the_honest_spread_with_zero_draws() {
+        let cfg = AttackConfig {
+            frac: 0.45,
+            mode: AttackMode::Alie,
+            scale: 1.0,
+            collude: false, // alie colludes regardless
+            ..Default::default()
+        };
+        let mut rng = Rng::new(17);
+        let mut plan = AttackPlan::new(&cfg, 9, &mut rng);
+        let mut st = states(9, 8);
+        let participants: Vec<usize> = (0..9).collect();
+        let frozen = rng.clone();
+        plan.corrupt(&mut st, &participants, &mut rng);
+        let atks: Vec<usize> = (0..9).filter(|&p| plan.is_attacker(p)).collect();
+        assert!(atks.len() >= 2);
+        for w in atks.windows(2) {
+            assert!(st[w[0]].theta.shares_storage(&st[w[1]].theta));
+            assert!(st[w[0]].momentum.shares_storage(&st[w[1]].momentum));
+        }
+        // θ_i = i+1 per row ⇒ mean 5, σ = sqrt(60/9); the corrupted
+        // upload is mean − scale·σ in every coordinate
+        let expect = (5.0 - (60.0f64 / 9.0).sqrt()) as f32;
+        for &v in st[atks[0]].theta.as_slice() {
+            assert_eq!(v, expect);
+        }
+        // momentum is constant 0.5 across peers ⇒ σ = 0, center survives
+        assert_eq!(st[atks[0]].momentum[0], 0.5);
+        assert_eq!(plan.active_count(), atks.len() as u64);
+        let mut replay = frozen;
+        assert_eq!(replay.next_u64(), rng.next_u64());
+    }
+
+    #[test]
+    fn parole_grants_probation_then_rebans_at_the_tight_threshold() {
+        let mut rep = Reputation::new(6, 0.5).with_parole(0.1, 2);
+        let members = [0usize, 1, 2, 3];
+        let scores = GroupScores {
+            dists: vec![0.1, 0.12, 0.09, 50.0],
+            center_norm: 10.0,
+        };
+        rep.observe_group(&members, &scores);
+        assert_eq!(rep.fold_iteration(), 0); // 0.5 decays to 0.55 ≥ 0.5
+        rep.observe_group(&members, &scores);
+        assert_eq!(rep.fold_iteration(), 1); // 0.3475 < 0.5 → ban
+        assert!(rep.is_banned(3));
+        // parole_rounds = 2: one more fold still banned, then parole
+        rep.fold_iteration();
+        assert!(rep.is_banned(3));
+        rep.fold_iteration();
+        assert!(!rep.is_banned(3), "ban must expire into parole");
+        assert!(rep.on_parole(3));
+        assert_eq!(rep.paroles_granted(), 1);
+        assert_eq!(rep.score(3), rep.parole_threshold());
+        // one bad iteration inside the window re-bans immediately
+        // under the tighter parole bar and bumps the re-ban counter
+        rep.observe_group(&members, &scores);
+        assert_eq!(rep.fold_iteration(), 1);
+        assert!(rep.is_banned(3));
+        assert!(!rep.on_parole(3));
+        assert_eq!(rep.reban_count(), 1);
+        // honest peers never wobble through any of it
+        assert!(!rep.is_banned(0));
+        assert_eq!(rep.score(0), 1.0);
+    }
+
+    #[test]
+    fn decay_forgives_instead_of_shadowing_forever() {
+        let mut sticky = Reputation::new(4, 0.5);
+        let mut forgiving = Reputation::new(4, 0.5).with_parole(0.5, 0);
+        let members = [0usize, 1, 2, 3];
+        let bad = GroupScores {
+            dists: vec![0.1, 0.12, 0.09, 50.0],
+            center_norm: 10.0,
+        };
+        // one bad iteration (the false positive), then silence
+        for rep in [&mut sticky, &mut forgiving] {
+            rep.observe_group(&members, &bad);
+            rep.fold_iteration();
+        }
+        assert_eq!(sticky.score(3), 0.5);
+        assert_eq!(forgiving.score(3), 0.75); // 0.5 + 0.5·(1 − 0.5)
+        for _ in 0..6 {
+            sticky.fold_iteration();
+            forgiving.fold_iteration();
+        }
+        assert_eq!(sticky.score(3), 0.5, "sticky scores never recover");
+        assert!(forgiving.score(3) > 0.99, "decay drifts back to neutral");
+        assert_eq!(forgiving.banned(), 0);
+    }
+
+    #[test]
+    fn effective_flags_require_a_gated_matchmaking_pass() {
+        let mut rep = Reputation::new(4, 0.5);
+        let members = [0usize, 1, 2, 3];
+        let scores = GroupScores {
+            dists: vec![0.1, 0.12, 0.09, 50.0],
+            center_norm: 10.0,
+        };
+        for _ in 0..2 {
+            rep.observe_group(&members, &scores);
+            rep.fold_iteration();
+        }
+        assert!(rep.is_banned(3));
+        assert!(rep.ever_flagged()[3]);
+        // banned, but no matchmaking pass has dropped it yet — the
+        // scorecard set stays empty (a final-iteration ban never gates)
+        assert!(!rep.effective_flags()[3]);
+        assert_eq!(flag_quality(rep.effective_flags(), &[false, false, false, true]).0, 0);
+        rep.note_gated(3);
+        assert!(rep.effective_flags()[3]);
+        let (n, p, r) =
+            flag_quality(rep.effective_flags(), &[false, false, false, true]);
+        assert_eq!((n, p, r), (1, 1.0, 1.0));
+    }
+
+    #[test]
+    fn last_ratios_publish_then_clear_the_detector_signal() {
+        let mut rep = Reputation::new(4, 0.5);
+        let members = [0usize, 1, 2, 3];
+        let scores = GroupScores {
+            dists: vec![0.1, 0.12, 0.09, 50.0],
+            center_norm: 10.0,
+        };
+        assert!(rep.last_ratios().iter().all(|&r| r == 0.0));
+        rep.observe_group(&members, &scores);
+        // staged but not yet folded: the attacker cannot see this round
+        assert!(rep.last_ratios().iter().all(|&r| r == 0.0));
+        rep.fold_iteration();
+        assert!(rep.last_ratios()[3] > 1.0, "outlier sits past the trip point");
+        assert!(rep.last_ratios()[0] < 1.0 && rep.last_ratios()[0] > 0.0);
+        // an unobserved iteration clears the signal (ratio 0 = hold)
+        rep.fold_iteration();
+        assert!(rep.last_ratios().iter().all(|&r| r == 0.0));
     }
 
     #[test]

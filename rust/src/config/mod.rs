@@ -386,6 +386,10 @@ impl ExperimentConfig {
             }
             "attack.trim" => self.attack.trim = f64_of(v)?,
             "attack.rep_threshold" => self.attack.rep_threshold = f64_of(v)?,
+            "attack.rep_decay" => self.attack.rep_decay = f64_of(v)?,
+            "attack.parole_rounds" => {
+                self.attack.parole_rounds = usize_of(v)? as u64
+            }
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -632,6 +636,8 @@ mod tests {
             "attack.robust=trimmed_mean".into(),
             "attack.trim=0.3".into(),
             "attack.rep_threshold=0.4".into(),
+            "attack.rep_decay=0.05".into(),
+            "attack.parole_rounds=3".into(),
             "faults.bw_redraw_rounds=5".into(),
         ])
         .unwrap();
@@ -640,6 +646,8 @@ mod tests {
         assert_eq!(c.attack.mode, AttackMode::GaussNoise);
         assert_eq!(c.attack.robust, RobustEstimator::TrimmedMean);
         assert!(c.attack.collude);
+        assert_eq!(c.attack.rep_decay, 0.05);
+        assert_eq!(c.attack.parole_rounds, 3);
         assert_eq!(c.faults.bw_redraw_rounds, 5);
         assert!(c.validate().is_ok());
         // half-or-more Byzantine peers break every estimator: rejected
@@ -654,10 +662,33 @@ mod tests {
         c.attack.rep_threshold = 0.4;
         c.attack.scale = -1.0;
         assert!(c.validate().is_err());
+        c.attack.scale = 2.0;
+        // EWMA decay is a [0,1) rate: 1.0 would erase history instantly
+        c.attack.rep_decay = 1.0;
+        assert!(c.validate().is_err());
+        c.attack.rep_decay = -0.1;
+        assert!(c.validate().is_err());
+        c.attack.rep_decay = 0.0;
+        assert!(c.validate().is_ok());
         // unknown mode / estimator names are rejected at set() time
         let mut c2 = ExperimentConfig::default();
         assert!(c2.apply_overrides(&["attack.mode=backdoor".into()]).is_err());
-        assert!(c2.apply_overrides(&["attack.robust=krum".into()]).is_err());
+        assert!(c2.apply_overrides(&["attack.robust=bulyan".into()]).is_err());
+        // the adaptive modes and selection estimators parse
+        c2.apply_overrides(&[
+            "attack.mode=adaptive_scale".into(),
+            "attack.robust=krum".into(),
+        ])
+        .unwrap();
+        assert_eq!(c2.attack.mode, AttackMode::AdaptiveScale);
+        assert_eq!(c2.attack.robust, RobustEstimator::Krum);
+        c2.apply_overrides(&[
+            "attack.mode=alie".into(),
+            "attack.robust=multi_krum".into(),
+        ])
+        .unwrap();
+        assert_eq!(c2.attack.mode, AttackMode::Alie);
+        assert_eq!(c2.attack.robust, RobustEstimator::MultiKrum);
     }
 
     #[test]
@@ -687,6 +718,7 @@ mod tests {
             "configs/churn_markov.toml",
             "configs/faults_bursty.toml",
             "configs/byzantine.toml",
+            "configs/byzantine_adaptive.toml",
         ] {
             let cfg = ExperimentConfig::load(
                 Path::new(preset),
@@ -724,6 +756,17 @@ mod tests {
         assert!(byz.attack.enabled());
         assert!(byz.attack.rep_enabled());
         assert_eq!(byz.attack.robust, RobustEstimator::TrimmedMean);
+        let adaptive = ExperimentConfig::load(
+            Path::new("configs/byzantine_adaptive.toml"),
+            &[],
+        )
+        .unwrap();
+        assert!(adaptive.attack.enabled());
+        assert!(adaptive.attack.rep_enabled());
+        assert_eq!(adaptive.attack.mode, AttackMode::AdaptiveScale);
+        assert_eq!(adaptive.attack.robust, RobustEstimator::MultiKrum);
+        assert!(adaptive.attack.rep_decay > 0.0);
+        assert!(adaptive.attack.parole_rounds > 0);
     }
 
     #[test]

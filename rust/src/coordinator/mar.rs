@@ -180,6 +180,15 @@ impl MarAggregator {
         self
     }
 
+    /// Arm reputation decay + parole (`attack.rep_decay`,
+    /// `attack.parole_rounds` — see [`Reputation::with_parole`]). A
+    /// no-op when reputation gating is disabled; `(0.0, 0)` keeps the
+    /// legacy sticky-score / fixed-ban ledger bit-exactly.
+    pub fn with_parole(mut self, decay: f64, parole_rounds: u64) -> Self {
+        self.rep = self.rep.take().map(|r| r.with_parole(decay, parole_rounds));
+        self
+    }
+
     /// The reputation ledger, when enabled ([`Self::with_reputation`]).
     pub fn reputation(&self) -> Option<&Reputation> {
         self.rep.as_ref()
@@ -312,11 +321,18 @@ impl MarAggregator {
         fabric: &Fabric,
     ) -> (Vec<Vec<usize>>, f64) {
         let keys = random_keys(agg.len(), self.group_size, 1, rng);
-        // reputation bans gate every matchmaking pass, including MKD's
-        let alive: Vec<bool> = match &self.rep {
-            Some(rep) => agg.iter().map(|&peer| !rep.is_banned(peer)).collect(),
-            None => vec![true; agg.len()],
-        };
+        // reputation bans gate every matchmaking pass, including MKD's;
+        // a ban that excludes someone here is *effective* (it shaped
+        // membership) and counts toward the flag scorecard
+        let mut alive = vec![true; agg.len()];
+        if let Some(rep) = self.rep.as_mut() {
+            for (pos, &peer) in agg.iter().enumerate() {
+                if rep.is_banned(peer) {
+                    alive[pos] = false;
+                    rep.note_gated(peer);
+                }
+            }
+        }
         self.matchmake_timed(agg, &keys, &alive, 0, tag, fabric)
     }
 }
@@ -570,10 +586,17 @@ impl Aggregate for MarAggregator {
         // (decided at the end of *previous* iterations — the pipelined
         // control plane fixes membership before scores exist) start a
         // peer out dead for the whole iteration.
-        let mut alive: Vec<bool> = match &self.rep {
-            Some(rep) => agg.iter().map(|&peer| !rep.is_banned(peer)).collect(),
-            None => vec![true; n],
-        };
+        let mut alive: Vec<bool> = vec![true; n];
+        if let Some(rep) = self.rep.as_mut() {
+            for (pos, &peer) in agg.iter().enumerate() {
+                if rep.is_banned(peer) {
+                    alive[pos] = false;
+                    // this ban shaped membership — it counts as an
+                    // effective flag in the precision/recall scorecard
+                    rep.note_gated(peer);
+                }
+            }
+        }
         let policy = self.robust;
         let want_scores = self.rep.is_some();
         // the Pallas artifact path runs through the (non-Sync-friendly)

@@ -96,6 +96,11 @@ pub struct RunSummary {
     /// recall of the ever-flagged set against the ground-truth attacker
     /// set (1.0 when there were no attackers)
     pub flag_recall: f64,
+    /// bans that expired into a probation window
+    /// (`attack.parole_rounds > 0`; 0 on the sticky-ban default)
+    pub paroles_granted: u64,
+    /// peers re-banned while on parole (tighter re-ban threshold)
+    pub reban_count: u64,
     /// slow-schedule re-draws of the heterogeneous per-peer bandwidth
     /// capacities (`faults.bw_redraw_rounds`; 0 on the static default)
     pub bw_redraws: u64,
@@ -188,7 +193,8 @@ impl<'rt> Trainer<'rt> {
                     cfg.seed,
                 )
                 .with_robust(policy)
-                .with_reputation(cfg.attack.rep_threshold);
+                .with_reputation(cfg.attack.rep_threshold)
+                .with_parole(cfg.attack.rep_decay, cfg.attack.parole_rounds);
                 if cfg.reduce_scatter {
                     mar = mar
                         .with_exchange(
@@ -324,6 +330,8 @@ impl<'rt> Trainer<'rt> {
         let mut flagged_peers = 0u64;
         let mut flag_precision = 1.0;
         let mut flag_recall = 1.0;
+        let mut paroles_granted = 0u64;
+        let mut reban_count = 0u64;
         if let Agg::Mar(m) = &self.agg {
             if let Some(rep) = m.reputation() {
                 let honest = vec![false; self.cfg.peers];
@@ -332,11 +340,19 @@ impl<'rt> Trainer<'rt> {
                     .as_ref()
                     .map(|p| p.attacker_flags())
                     .unwrap_or(&honest);
-                let (f, p, r) =
-                    crate::attack::flag_quality(rep.ever_flagged(), attacker);
+                // score over *effective* bans — those that gated at
+                // least one matchmaking pass — so a ban landed on the
+                // final fold (which never removed anyone from a group)
+                // cannot distort precision/recall
+                let (f, p, r) = crate::attack::flag_quality(
+                    rep.effective_flags(),
+                    attacker,
+                );
                 flagged_peers = f;
                 flag_precision = p;
                 flag_recall = r;
+                paroles_granted = rep.paroles_granted();
+                reban_count = rep.reban_count();
             }
         }
         Ok(RunSummary {
@@ -363,6 +379,8 @@ impl<'rt> Trainer<'rt> {
             flagged_peers,
             flag_precision,
             flag_recall,
+            paroles_granted,
+            reban_count,
             bw_redraws: self
                 .links
                 .as_ref()
@@ -549,6 +567,17 @@ impl<'rt> Trainer<'rt> {
         // malicious peer controls. Draws come from a dedicated gated fork
         // (tag +6) so clean runs consume zero extra randomness.
         if let Some(plan) = &mut self.attack {
+            // Adaptive attackers steer on last iteration's published
+            // distance ratios (a black-box read of the defender's own
+            // ledger) strictly in this serial phase, before any lane
+            // forks — zero RNG draws, so determinism pins are untouched.
+            if plan.adaptive() {
+                if let Agg::Mar(m) = &self.agg {
+                    if let Some(rep) = m.reputation() {
+                        plan.adapt(rep.last_ratios());
+                    }
+                }
+            }
             let mut atk_rng = self.rng.fork(t as u64 * 31 + 6);
             plan.corrupt(&mut self.states, &aggers, &mut atk_rng);
         }

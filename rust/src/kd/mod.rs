@@ -30,10 +30,10 @@
 use anyhow::Result;
 
 use crate::aggregation::robust::{
-    clip_weights, trimmed_indexed_into, weighted_mean_indexed_into,
-    RobustEstimator, RobustPolicy,
+    clip_weights, krum_select, trimmed_indexed_into,
+    weighted_mean_indexed_into, RobustEstimator, RobustPolicy,
 };
-use crate::aggregation::{AggCtx, PeerState, Theta};
+use crate::aggregation::{mean_indexed_into, AggCtx, PeerState, Theta};
 use crate::config::KdConfig;
 use crate::coordinator::MarAggregator;
 use crate::data::{Dataset, Shard};
@@ -371,6 +371,33 @@ impl KdEngine {
                                     &mut zbar,
                                     false,
                                 );
+                            }
+                            RobustEstimator::Krum
+                            | RobustEstimator::MultiKrum => {
+                                // selection needs ≥3 rows to leave a
+                                // neighbourhood; smaller ensembles mean
+                                if rated.len() < 3 {
+                                    mean_indexed_into(
+                                        rated.len(),
+                                        row,
+                                        &mut zbar,
+                                        false,
+                                    );
+                                } else {
+                                    let sel = krum_select(
+                                        rated.len(),
+                                        row,
+                                        self.robust.krum_f(rated.len()),
+                                        self.robust.est
+                                            == RobustEstimator::MultiKrum,
+                                    );
+                                    mean_indexed_into(
+                                        sel.len(),
+                                        |k| row(sel[k]),
+                                        &mut zbar,
+                                        false,
+                                    );
+                                }
                             }
                             _ => trimmed_indexed_into(
                                 rated.len(),

@@ -67,9 +67,26 @@ fn run_attacked_mar(
     exchange: GroupExchange,
     parallel: bool,
 ) -> (Vec<PeerState>, CommSnapshot, f64, Vec<AggReport>, Reputation) {
-    let (n, m, g, p) = (16, 4, 2, 97);
+    let mut states = random_states(16, 97, 0xB124);
+    run_mar_iters(&mut states, est, exchange, parallel, (0.0, 0), 3)
+}
+
+/// Drive `iters` MAR iterations over `states` (16 peers, groups of 4,
+/// 2 rounds) with sign-flipping attackers 3/7/12 re-corrupted before
+/// every call, reputation at 0.4 and the given `(rep_decay,
+/// parole_rounds)` pair.
+fn run_mar_iters(
+    states: &mut [PeerState],
+    est: RobustEstimator,
+    exchange: GroupExchange,
+    parallel: bool,
+    parole: (f64, u64),
+    iters: usize,
+) -> (Vec<PeerState>, CommSnapshot, f64, Vec<AggReport>, Reputation) {
+    let (n, m, g) = (16, 4, 2);
+    assert_eq!(states.len(), n);
+    let p = states[0].theta.len();
     let attackers = [3usize, 7, 12];
-    let mut states = random_states(n, p, 0xB124);
     let agg: Vec<usize> = (0..n).collect();
     let ledger = Arc::new(CommLedger::new());
     let fabric = Fabric::new(ledger.clone(), 12.5e6, 0.02);
@@ -80,11 +97,12 @@ fn run_attacked_mar(
         .with_exchange(exchange)
         .with_parallel(parallel)
         .with_robust(RobustPolicy { est, trim: 0.25 })
-        .with_reputation(0.4);
+        .with_reputation(0.4)
+        .with_parole(parole.0, parole.1);
     ledger.reset(); // drop DHT join traffic
     let mut reports = Vec::new();
-    for _ in 0..3 {
-        flip(&mut states, &attackers);
+    for _ in 0..iters {
+        flip(states, &attackers);
         let mut ctx = AggCtx {
             fabric: &fabric,
             clock: &mut clock,
@@ -94,10 +112,23 @@ fn run_attacked_mar(
             faults: &FaultConfig::OFF,
             links: None,
         };
-        reports.push(mar.aggregate(&mut states, &agg, &mut ctx).unwrap());
+        reports.push(mar.aggregate(states, &agg, &mut ctx).unwrap());
     }
     let rep = mar.reputation().unwrap().clone();
-    (states, ledger.snapshot(), clock.now(), reports, rep)
+    (states.to_vec(), ledger.snapshot(), clock.now(), reports, rep)
+}
+
+/// A tight honest cluster (spread ≪ ‖θ‖) where a sign-flipped attacker
+/// is an unambiguous outlier in every ≥3-member group it joins.
+fn clustered_states(n: usize, p: usize) -> Vec<PeerState> {
+    (0..n)
+        .map(|i| PeerState {
+            theta: (0..p)
+                .map(|j| 1.0 + 1e-4 * (i * p + j) as f32)
+                .collect(),
+            momentum: (0..p).map(|_| 0.01).collect(),
+        })
+        .collect()
 }
 
 /// (a) Inert attack block ⇒ bit-identical to the seed path: with
@@ -136,6 +167,8 @@ fn inert_attack_config_is_bit_identical_to_seed() {
         robust: RobustEstimator::Mean,
         trim: 0.4,
         rep_threshold: 0.0,
+        rep_decay: 0.0,
+        parole_rounds: 0,
     };
     inert.validate().unwrap();
     let (inert_states, irun) = run(inert);
@@ -155,6 +188,8 @@ fn inert_attack_config_is_bit_identical_to_seed() {
     assert_eq!(irun.flagged_peers, 0);
     assert_eq!(irun.flag_precision, 1.0);
     assert_eq!(irun.flag_recall, 1.0);
+    assert_eq!(irun.paroles_granted, 0);
+    assert_eq!(irun.reban_count, 0);
 }
 
 /// (b) Attacked aggregation stays bit-identical across engines for
@@ -169,6 +204,8 @@ fn attacked_aggregation_parallel_matches_serial() {
         RobustEstimator::TrimmedMean,
         RobustEstimator::Median,
         RobustEstimator::NormClip,
+        RobustEstimator::Krum,
+        RobustEstimator::MultiKrum,
     ] {
         for exchange in
             [GroupExchange::FullGather, GroupExchange::ReduceScatter]
@@ -298,6 +335,194 @@ fn byzantine_trainer_runs_are_reproducible() {
     assert_eq!(a.flag_precision.to_bits(), b.flag_precision.to_bits());
     assert_eq!(a.flag_recall.to_bits(), b.flag_recall.to_bits());
     assert_eq!(a.bw_redraws, b.bw_redraws);
+    assert_eq!(a.comm, b.comm);
+    assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+    for (x, y) in a_states.iter().zip(&b_states) {
+        assert_eq!(x.theta, y.theta);
+        assert_eq!(x.momentum, y.momentum);
+    }
+}
+
+/// (e) Krum selection pinned against a hand-computed 5-member group:
+/// with `trim = 0.25` the allowance is `f = ⌊0.25·5⌋ = 1`, so every row
+/// scores the sum of its `5 − 1 − 2 = 2` nearest squared distances.
+///
+/// ```text
+/// rows: r0 = 0⃗, r1 = 0.25·e0, r2 = 0.25·e1, r3 = 100·(1,1,1,1), r4 = 0.75·e0
+/// d²(0,1) = d²(0,2) = 0.0625   d²(1,2) = 0.125
+/// d²(0,4) = 0.5625   d²(1,4) = 0.25   d²(2,4) = 0.625
+/// scores: s(0) = 0.125 ← unique minimum, s(1) = s(2) = 0.1875,
+///         s(4) = 0.8125, s(3) astronomically large
+/// ```
+///
+/// Krum must return exactly `r0` (a bit-for-bit copy of the winner);
+/// Multi-Krum averages the `5 − f = 4` lowest-scored rows `{0, 1, 2, 4}`
+/// — all coordinates are powers of two, so the expected centers are
+/// exact in f32. Both engines must agree.
+#[test]
+fn krum_selection_pinned_on_a_hand_computed_group() {
+    let rows: [[f32; 4]; 5] = [
+        [0.0, 0.0, 0.0, 0.0],
+        [0.25, 0.0, 0.0, 0.0],
+        [0.0, 0.25, 0.0, 0.0],
+        [100.0, 100.0, 100.0, 100.0],
+        [0.75, 0.0, 0.0, 0.0],
+    ];
+    let build = || -> Vec<PeerState> {
+        rows.iter()
+            .map(|r| PeerState {
+                theta: r.to_vec().into(),
+                momentum: r.iter().map(|&v| 0.5 * v).collect(),
+            })
+            .collect()
+    };
+    let members: Vec<usize> = (0..5).collect();
+    for parallel in [false, true] {
+        let mut st = build();
+        robust_average_group_native(
+            &mut st,
+            &members,
+            RobustPolicy { est: RobustEstimator::Krum, trim: 0.25 },
+            parallel,
+        );
+        for &mm in &members {
+            assert_eq!(
+                st[mm].theta.to_vec(),
+                rows[0],
+                "Krum (parallel={parallel}) must select r0 verbatim"
+            );
+            assert_eq!(st[mm].momentum.to_vec(), [0.0f32; 4]);
+        }
+        let mut st = build();
+        robust_average_group_native(
+            &mut st,
+            &members,
+            RobustPolicy { est: RobustEstimator::MultiKrum, trim: 0.25 },
+            parallel,
+        );
+        for &mm in &members {
+            assert_eq!(
+                st[mm].theta.to_vec(),
+                [0.25f32, 0.0625, 0.0, 0.0],
+                "Multi-Krum (parallel={parallel}) must average {{0,1,2,4}}"
+            );
+            assert_eq!(
+                st[mm].momentum.to_vec(),
+                [0.125f32, 0.03125, 0.0, 0.0]
+            );
+        }
+    }
+}
+
+/// (f) Parole round-trip — ban → parole → re-ban — happens and is
+/// bit-identical serial-vs-parallel: a tight honest cluster makes the
+/// sign-flipped attackers unambiguous outliers, `parole_rounds = 2`
+/// cycles them back into matchmaking where the flipped upload re-bans
+/// them at the tighter parole threshold, and the whole trajectory
+/// (states, ledger, clock, reports, reputation incl. counters) agrees
+/// across engines for both a coordinate-wise and a selection estimator.
+#[test]
+fn parole_round_trip_is_deterministic_across_engines() {
+    for est in [RobustEstimator::TrimmedMean, RobustEstimator::MultiKrum] {
+        let mut s_init = clustered_states(16, 33);
+        let (s_states, s_snap, s_clock, s_reps, s_rep) = run_mar_iters(
+            &mut s_init,
+            est,
+            GroupExchange::FullGather,
+            false,
+            (0.05, 2),
+            8,
+        );
+        let mut p_init = clustered_states(16, 33);
+        let (p_states, p_snap, p_clock, p_reps, p_rep) = run_mar_iters(
+            &mut p_init,
+            est,
+            GroupExchange::FullGather,
+            true,
+            (0.05, 2),
+            8,
+        );
+        let tag = est.name();
+        assert!(
+            s_rep.paroles_granted() > 0,
+            "{tag}: bans must expire into parole within 8 iterations"
+        );
+        assert!(
+            s_rep.reban_count() > 0,
+            "{tag}: a flipped parolee must be re-banned in its window"
+        );
+        for (i, (a, b)) in s_states.iter().zip(&p_states).enumerate() {
+            assert_eq!(a.theta, b.theta, "{tag}: peer {i} theta diverged");
+            assert_eq!(a.momentum, b.momentum, "{tag}: peer {i} momentum");
+        }
+        assert_eq!(s_snap, p_snap, "{tag}: ledger diverged");
+        assert_eq!(s_clock.to_bits(), p_clock.to_bits(), "{tag}: clock");
+        assert_eq!(s_reps, p_reps, "{tag}: reports diverged");
+        assert_eq!(s_rep, p_rep, "{tag}: reputation ledgers diverged");
+    }
+}
+
+/// (g) Inert-identity pin for the parole knobs: `rep_decay = 0 ∧
+/// parole_rounds = 0 ∧ mode = sign_flip` spelled out explicitly must be
+/// byte-identical to a config that never mentions them (the PR 8
+/// sticky-ban seed path), with both parole counters pinned at zero.
+#[test]
+fn parole_knobs_off_match_the_sticky_ban_seed() {
+    let rt = Runtime::new(&marfl::models::default_artifact_dir()).unwrap();
+    let base = ExperimentConfig {
+        model: "head".into(),
+        peers: 9,
+        group_size: 3,
+        iterations: 5,
+        samples_per_peer: 32,
+        test_samples: 250,
+        eval_every: 5,
+        local_batches: 2,
+        seed: 31415,
+        ..Default::default()
+    };
+    let run = |mut cfg: ExperimentConfig, attack: AttackConfig| {
+        cfg.attack = attack;
+        cfg.validate().unwrap();
+        let mut t = Trainer::new(cfg, &rt).unwrap();
+        let summary = t.run().unwrap();
+        let states: Vec<PeerState> = t.states().to_vec();
+        (states, summary)
+    };
+    // seed path: the parole knobs are never mentioned
+    let (a_states, a) = run(
+        base.clone(),
+        AttackConfig {
+            frac: 0.3,
+            robust: RobustEstimator::TrimmedMean,
+            trim: 0.25,
+            rep_threshold: 0.4,
+            ..AttackConfig::default()
+        },
+    );
+    // explicit inert values: must take the identical code path
+    let (b_states, b) = run(
+        base,
+        AttackConfig {
+            frac: 0.3,
+            mode: AttackMode::SignFlip,
+            scale: 1.0,
+            collude: false,
+            robust: RobustEstimator::TrimmedMean,
+            trim: 0.25,
+            rep_threshold: 0.4,
+            rep_decay: 0.0,
+            parole_rounds: 0,
+        },
+    );
+    assert_eq!(a.paroles_granted, 0, "sticky bans must never parole");
+    assert_eq!(a.reban_count, 0);
+    assert_eq!(a.paroles_granted, b.paroles_granted);
+    assert_eq!(a.reban_count, b.reban_count);
+    assert_eq!(a.flagged_peers, b.flagged_peers);
+    assert_eq!(a.flag_precision.to_bits(), b.flag_precision.to_bits());
+    assert_eq!(a.flag_recall.to_bits(), b.flag_recall.to_bits());
     assert_eq!(a.comm, b.comm);
     assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
     assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
