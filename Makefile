@@ -9,7 +9,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS ?= artifacts
 
-.PHONY: build test verify bench bench-micro artifacts fmt clippy doc clean
+.PHONY: build test verify bench bench-micro trajectory artifacts fmt clippy doc clean
 
 build:
 	$(CARGO) build --release
@@ -26,6 +26,12 @@ bench:
 # (machine-readable perf trajectory, tracked across PRs).
 bench-micro:
 	$(CARGO) bench --bench micro_hotpath
+
+# Fold every rust/results/BENCH_*.json the benches emitted into a single
+# rust/results/BENCH_trajectory.json (schema marfl-trajectory/v1) — the
+# one artifact trend dashboards diff across PRs.
+trajectory:
+	$(CARGO) run --release --bin marfl -- trajectory --dir rust/results
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)

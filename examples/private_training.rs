@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         println!(
             "{sigma:>6}   {:>8.3}   {:>9.2}   (adaptive, γ=0.5)",
             summary.final_accuracy,
-            summary.epsilon.unwrap(),
+            summary.dp.epsilon.unwrap(),
         );
     }
     println!(

@@ -18,7 +18,7 @@ use std::time::Instant;
 use marfl::aggregation::{
     AggCtx, Aggregate, AllToAll, FedAvgServer, GroupExchange, PeerState, RingRdfl,
 };
-use marfl::coordinator::MarAggregator;
+use marfl::coordinator::{AggOptions, MarAggregator};
 use marfl::metrics::{CommLedger, CommSnapshot};
 use marfl::net::Fabric;
 use marfl::rng::Rng;
@@ -134,8 +134,14 @@ fn main() -> anyhow::Result<()> {
             let mut st = states(n, &mut rng);
             let agg: Vec<usize> = (0..n).collect();
             let mdl = model();
-            let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 3)
-                .with_parallel(parallel);
+            let mut mar = MarAggregator::with_options(
+                n,
+                m,
+                g,
+                ledger.clone(),
+                3,
+                AggOptions { parallel, ..AggOptions::default() },
+            );
             let mut ctx = AggCtx {
                 fabric: &fabric,
                 clock: &mut clock,
@@ -161,8 +167,14 @@ fn main() -> anyhow::Result<()> {
             let mut st = states(n, &mut rng);
             let agg: Vec<usize> = (0..n).collect();
             let mdl = model();
-            let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 3)
-                .with_exchange(exchange);
+            let mut mar = MarAggregator::with_options(
+                n,
+                m,
+                g,
+                ledger.clone(),
+                3,
+                AggOptions { exchange, ..AggOptions::default() },
+            );
             ledger.reset(); // exclude one-time join traffic
             let mut ctx = AggCtx {
                 fabric: &fabric,

@@ -15,6 +15,8 @@ use marfl::net::Fabric;
 use marfl::rng::Rng;
 use marfl::runtime::Runtime;
 use marfl::sim::SimClock;
+use marfl::telemetry::BenchReport;
+use marfl::util::json::{arr, num, obj, s, Json};
 
 /// Where figure CSVs land.
 pub fn results_dir() -> PathBuf {
@@ -52,6 +54,50 @@ pub fn iters(quick: usize, full: usize) -> usize {
 pub fn emit_csv(name: &str, rows: &[Vec<String>]) {
     let path = results_dir().join(name);
     write_csv(&path, rows).expect("write csv");
+    println!("  -> {}", path.display());
+}
+
+/// Pin a table's header row. Bench CSV/JSON column names are a public
+/// interface — plot scripts and CI consume them — so a drift (e.g. from
+/// an internal rename like the `RunSummary` scorecard cutover) must fail
+/// the bench loudly instead of silently breaking downstream readers.
+pub fn assert_stable_columns(csv: &str, rows: &[Vec<String>], expected: &[&str]) {
+    assert!(!rows.is_empty(), "{csv}: table has no header row");
+    let got: Vec<&str> = rows[0].iter().map(|c| c.as_str()).collect();
+    assert_eq!(got, expected, "{csv}: column names drifted");
+}
+
+/// Emit a bench's result table as `BENCH_<name>.json` through the shared
+/// `marfl-bench/v1` envelope ([`BenchReport`]): one object per data row,
+/// keyed by the header row, numeric where the cell parses as a number.
+/// Keeps every bench's JSON inside the one schema `marfl trajectory`
+/// folds.
+pub fn emit_bench_report(name: &str, kind: &str, rows: &[Vec<String>]) {
+    assert!(!rows.is_empty(), "BENCH_{name}: table has no header row");
+    let header = &rows[0];
+    let json_rows: Vec<Json> = rows[1..]
+        .iter()
+        .map(|r| {
+            obj(header
+                .iter()
+                .zip(r)
+                .map(|(k, v)| {
+                    // non-finite parses ("inf", "nan") stay strings —
+                    // they have no JSON number representation
+                    let cell = match v.parse::<f64>() {
+                        Ok(n) if n.is_finite() => num(n),
+                        _ => s(v),
+                    };
+                    (k.as_str(), cell)
+                })
+                .collect())
+        })
+        .collect();
+    let path = BenchReport::new(name)
+        .field("kind", s(kind))
+        .field("results", arr(json_rows))
+        .write(&results_dir())
+        .unwrap_or_else(|e| panic!("write BENCH_{name}.json: {e}"));
     println!("  -> {}", path.display());
 }
 

@@ -9,7 +9,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{emit_csv, iters, mib, runtime, timed};
+use common::{assert_stable_columns, emit_bench_report, emit_csv, iters, mib, runtime, timed};
 use marfl::config::ExperimentConfig;
 use marfl::fl::Trainer;
 
@@ -73,7 +73,21 @@ fn main() {
         ]);
         out.push((label, run));
     }
+    assert_stable_columns(
+        "fig11_approx_aggregation.csv",
+        &rows,
+        &[
+            "variant",
+            "group_size",
+            "mar_rounds",
+            "data_bytes",
+            "rs_bytes",
+            "ag_bytes",
+            "final_accuracy",
+        ],
+    );
     emit_csv("fig11_approx_aggregation.csv", &rows);
+    emit_bench_report("approx_agg", "approx_aggregation", &rows);
 
     let exact = &out[0].1;
     let approx = &out[1].1;

@@ -11,11 +11,11 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{emit_csv, mib, SynthBundle};
+use common::{assert_stable_columns, emit_csv, mib, SynthBundle};
 use marfl::aggregation::{
     Aggregate, AllToAll, Butterfly, FedAvgServer, GroupExchange, RingRdfl,
 };
-use marfl::coordinator::MarAggregator;
+use marfl::coordinator::{AggOptions, MarAggregator};
 use marfl::testing::rel_err;
 
 /// (peer count, MAR group size, MAR rounds) — paper's sweep points with
@@ -31,10 +31,19 @@ fn measure(n: usize, m: usize, g: usize, which: &str) -> u64 {
     let before = b.ledger.snapshot();
     match which {
         "marfl" | "marfl-rs" => {
-            let mut mar = MarAggregator::new(n, m, g, b.ledger.clone(), 11);
-            if which == "marfl-rs" {
-                mar = mar.with_exchange(GroupExchange::ReduceScatter);
-            }
+            let exchange = if which == "marfl-rs" {
+                GroupExchange::ReduceScatter
+            } else {
+                GroupExchange::FullGather
+            };
+            let mut mar = MarAggregator::with_options(
+                n,
+                m,
+                g,
+                b.ledger.clone(),
+                11,
+                AggOptions { exchange, ..AggOptions::default() },
+            );
             // exclude one-time DHT join traffic from the per-iteration cost
             let joined = b.ledger.snapshot();
             let mut ctx = b.ctx();
@@ -115,7 +124,21 @@ fn main() {
     println!(
         "  (* BAR aggregates only the largest 2^k subset — Appendix B.3 excludes it as unreliable)"
     );
+    assert_stable_columns(
+        "fig1_comm_efficiency.csv",
+        &rows,
+        &[
+            "peers",
+            "fedavg_bytes",
+            "marfl_bytes",
+            "marfl_rs_bytes",
+            "bar_bytes",
+            "rdfl_bytes",
+            "arfl_bytes",
+        ],
+    );
     emit_csv("fig1_comm_efficiency.csv", &rows);
+    common::emit_bench_report("comm", "comm_efficiency", &rows);
 
     // ---- paper-shape assertions ------------------------------------
     let (_, fedavg, marfl, rdfl, arfl) = results[results.len() - 1];

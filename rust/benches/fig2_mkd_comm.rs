@@ -11,7 +11,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{emit_csv, full_mode, iters, mib, runtime, timed};
+use common::{assert_stable_columns, emit_bench_report, emit_csv, full_mode, iters, mib, runtime, timed};
 use marfl::config::ExperimentConfig;
 use marfl::fl::Trainer;
 
@@ -69,7 +69,18 @@ fn main() {
             ]);
         }
     }
+    assert_stable_columns(
+        "fig2_mkd_comm.csv",
+        &rows,
+        &[
+            "variant",
+            "iteration",
+            "data_bytes",
+            "accuracy",
+        ],
+    );
     emit_csv("fig2_mkd_comm.csv", &rows);
+    emit_bench_report("mkd_comm", "mkd_comm", &rows);
 
     let plain_bytes = plain.curve.bytes_to_accuracy(target);
     let kd_bytes = kd.curve.bytes_to_accuracy(target);

@@ -12,11 +12,11 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{emit_csv, iters, mib, results_dir, runtime, timed};
+use common::{assert_stable_columns, emit_csv, iters, mib, results_dir, runtime, timed};
 use marfl::config::{ExperimentConfig, Strategy};
 use marfl::fl::Trainer;
-use marfl::metrics::write_json;
 use marfl::net::FaultConfig;
+use marfl::telemetry::BenchReport;
 use marfl::util::json::{arr, num, obj, s};
 
 fn main() {
@@ -105,8 +105,8 @@ fn main() {
             "    acc {:.3}  data {:.0} MiB  revivals {}  rescues {}",
             run.final_accuracy,
             mib(run.comm.data_bytes),
-            run.markov_revivals,
-            run.churn_rescues
+            run.reliability.markov_revivals,
+            run.reliability.churn_rescues
         );
         rows.push(vec![
             label.to_string(),
@@ -118,6 +118,18 @@ fn main() {
         ]);
         acc.insert(label.to_string(), run.final_accuracy);
     }
+    assert_stable_columns(
+        "fig3_churn.csv",
+        &rows,
+        &[
+            "scenario",
+            "strategy",
+            "participation",
+            "dropout",
+            "final_accuracy",
+            "data_bytes",
+        ],
+    );
     emit_csv("fig3_churn.csv", &rows);
 
     // ---- fault-injection matrix (BENCH_churn.json) ------------------
@@ -180,18 +192,18 @@ fn main() {
             f.quorum_degraded_rounds,
             f.crashes,
             f.ge_bad_transitions,
-            run.straggler_exposed_s,
+            f.straggler_exposed_s,
             run.final_accuracy
         );
         if off {
             assert!(
-                !f.any() && run.straggler_exposed_s == 0.0,
+                !f.any() && f.straggler_exposed_s == 0.0,
                 "faults-off row must report all-zero fault counters"
             );
         } else {
             assert!(f.msgs_lost > 0, "loss must lose messages ({label})");
             assert!(
-                run.straggler_exposed_s > 0.0,
+                f.straggler_exposed_s > 0.0,
                 "stragglers must surface exposed time ({label})"
             );
         }
@@ -215,7 +227,7 @@ fn main() {
             f.crashes.to_string(),
             f.ge_bad_transitions.to_string(),
             f.bursty_losses.to_string(),
-            format!("{:.3}", run.straggler_exposed_s),
+            format!("{:.3}", f.straggler_exposed_s),
             format!("{:.4}", run.final_accuracy),
             run.comm.data_bytes.to_string(),
         ]);
@@ -231,20 +243,39 @@ fn main() {
             ("crashes", num(f.crashes as f64)),
             ("ge_bad_transitions", num(f.ge_bad_transitions as f64)),
             ("bursty_losses", num(f.bursty_losses as f64)),
-            ("straggler_exposed_s", num(run.straggler_exposed_s)),
+            ("straggler_exposed_s", num(f.straggler_exposed_s)),
             ("final_accuracy", num(run.final_accuracy)),
             ("data_bytes", num(run.comm.data_bytes as f64)),
         ]));
     }
+    assert_stable_columns(
+        "fig3_fault_matrix.csv",
+        &fault_csv,
+        &[
+            "scenario",
+            "loss",
+            "straggler_prob",
+            "ge_p",
+            "msgs_lost",
+            "retries",
+            "timeouts",
+            "quorum_degraded",
+            "crashes",
+            "ge_bad_transitions",
+            "bursty_losses",
+            "straggler_exposed_s",
+            "final_accuracy",
+            "data_bytes",
+        ],
+    );
     emit_csv("fig3_fault_matrix.csv", &fault_csv);
-    let churn_doc = obj(vec![
-        ("bench", s("churn_fault_matrix")),
-        ("peers", num(peers as f64)),
-        ("iterations", num(t as f64)),
-        ("results", arr(fault_rows)),
-    ]);
-    let churn_path = results_dir().join("BENCH_churn.json");
-    write_json(&churn_path, &churn_doc).expect("write BENCH_churn.json");
+    let churn_path = BenchReport::new("churn")
+        .field("kind", s("churn_fault_matrix"))
+        .field("peers", num(peers as f64))
+        .field("iterations", num(t as f64))
+        .field("results", arr(fault_rows))
+        .write(&results_dir())
+        .expect("write BENCH_churn.json");
     println!("  -> {}", churn_path.display());
 
     // ---- reduce-scatter reliability vs owner-drop rate --------------
@@ -253,8 +284,8 @@ fn main() {
     // (seed behavior) the group falls back to a survivors-only full
     // gather; with a budget it defers to the next round's matchmaking
     // instead, trading averaging progress for recovery bytes.
-    // `RunSummary::{rs_fallbacks, rs_retries}` surface both counts, so
-    // reliability is plottable against drop rate and budget.
+    // `RunSummary::reliability.{rs_fallbacks, rs_retries}` surface both
+    // counts, so reliability is plottable against drop rate and budget.
     println!("\nreduce-scatter reliability vs mar.rs_drop × mar.rs_retry_budget\n");
     let mut rs_rows = vec![vec![
         "rs_drop".into(),
@@ -279,31 +310,45 @@ fn main() {
             let run = timed(&format!("marfl rs_drop={drop} budget={budget}"), || {
                 Trainer::new(cfg, &rt).unwrap().run().unwrap()
             });
+            let rel = run.reliability;
             let per_iter =
-                run.rs_fallbacks as f64 / run.iterations_run.max(1) as f64;
+                rel.rs_fallbacks as f64 / run.iterations_run.max(1) as f64;
             println!(
                 "    fallbacks {} ({per_iter:.2}/iter)  retries {}  acc {:.3}  data {:.0} MiB",
-                run.rs_fallbacks,
-                run.rs_retries,
+                rel.rs_fallbacks,
+                rel.rs_retries,
                 run.final_accuracy,
                 mib(run.comm.data_bytes)
             );
             rs_rows.push(vec![
                 drop.to_string(),
                 budget.to_string(),
-                run.rs_fallbacks.to_string(),
-                run.rs_retries.to_string(),
+                rel.rs_fallbacks.to_string(),
+                rel.rs_retries.to_string(),
                 format!("{per_iter:.3}"),
                 format!("{:.4}", run.final_accuracy),
                 run.comm.data_bytes.to_string(),
             ]);
             if budget == 0 {
-                fallbacks.insert((drop * 100.0) as u64, run.rs_fallbacks);
+                fallbacks.insert((drop * 100.0) as u64, rel.rs_fallbacks);
             } else {
-                retried.insert((drop * 100.0) as u64, run.rs_retries);
+                retried.insert((drop * 100.0) as u64, rel.rs_retries);
             }
         }
     }
+    assert_stable_columns(
+        "fig3_rs_reliability.csv",
+        &rs_rows,
+        &[
+            "rs_drop",
+            "rs_retry_budget",
+            "rs_fallbacks",
+            "rs_retries",
+            "fallbacks_per_iter",
+            "final_accuracy",
+            "data_bytes",
+        ],
+    );
     emit_csv("fig3_rs_reliability.csv", &rs_rows);
     assert_eq!(
         fallbacks[&0], 0,

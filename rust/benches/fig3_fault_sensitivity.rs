@@ -17,11 +17,11 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{emit_csv, iters, mib, results_dir, runtime, timed};
+use common::{assert_stable_columns, emit_csv, iters, mib, results_dir, runtime, timed};
 use marfl::config::{ExperimentConfig, Strategy};
 use marfl::fl::Trainer;
-use marfl::metrics::write_json;
 use marfl::net::FaultConfig;
+use marfl::telemetry::BenchReport;
 use marfl::util::json::{arr, num, obj, s};
 
 /// Fixed stationary bad fraction for the whole sweep.
@@ -189,17 +189,37 @@ fn main() {
             }
         }
     }
+    assert_stable_columns(
+        "fig3_fault_sensitivity.csv",
+        &rows,
+        &[
+            "strategy",
+            "ge_r",
+            "ge_p",
+            "burst_len",
+            "data_mib",
+            "surcharge_mib",
+            "rel_surcharge",
+            "surcharge_time_s",
+            "retries",
+            "timeouts",
+            "degraded_rounds",
+            "ge_bad_transitions",
+            "bursty_losses",
+            "final_accuracy",
+            "acc_drop",
+        ],
+    );
     emit_csv("fig3_fault_sensitivity.csv", &rows);
 
-    let doc = obj(vec![
-        ("bench", s("fault_sensitivity")),
-        ("peers", num(peers as f64)),
-        ("iterations", num(t as f64)),
-        ("pi_bad", num(PI_BAD)),
-        ("results", arr(json_rows)),
-    ]);
-    let path = results_dir().join("BENCH_faults.json");
-    write_json(&path, &doc).expect("write BENCH_faults.json");
+    let path = BenchReport::new("faults")
+        .field("kind", s("fault_sensitivity"))
+        .field("peers", num(peers as f64))
+        .field("iterations", num(t as f64))
+        .field("pi_bad", num(PI_BAD))
+        .field("results", arr(json_rows))
+        .write(&results_dir())
+        .expect("write BENCH_faults.json");
     println!("  -> {}", path.display());
 
     // ---- paper-shape assertion -------------------------------------

@@ -10,7 +10,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{emit_csv, iters, runtime, timed};
+use common::{assert_stable_columns, emit_bench_report, emit_csv, iters, runtime, timed};
 use marfl::config::{ExperimentConfig, Strategy};
 use marfl::fl::Trainer;
 
@@ -54,6 +54,7 @@ fn main() {
             let run =
                 timed(&label, || Trainer::new(cfg, &rt).unwrap().run().unwrap());
             let eps = run
+                .dp
                 .epsilon
                 .map(|e| format!("{e:.2}"))
                 .unwrap_or_else(|| "inf".into());
@@ -65,11 +66,22 @@ fn main() {
                 format!("{:.4}", run.final_accuracy),
             ]);
             if strategy == Strategy::MarFl {
-                marfl_acc.push((sigma, run.final_accuracy, run.epsilon));
+                marfl_acc.push((sigma, run.final_accuracy, run.dp.epsilon));
             }
         }
     }
+    assert_stable_columns(
+        "fig4_dp.csv",
+        &rows,
+        &[
+            "strategy",
+            "noise_multiplier",
+            "epsilon",
+            "final_accuracy",
+        ],
+    );
     emit_csv("fig4_dp.csv", &rows);
+    emit_bench_report("dp", "dp_privacy_utility", &rows);
 
     // ---- paper-shape assertions ------------------------------------
     let no_dp = marfl_acc[0].1;

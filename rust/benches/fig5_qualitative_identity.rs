@@ -9,7 +9,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{emit_csv, iters, runtime, timed};
+use common::{assert_stable_columns, emit_bench_report, emit_csv, iters, runtime, timed};
 use marfl::config::{ExperimentConfig, Strategy};
 use marfl::fl::Trainer;
 
@@ -73,6 +73,17 @@ fn main() {
         }
         println!();
     }
+    assert_stable_columns(
+        "fig5_qualitative_identity.csv",
+        &rows,
+        &[
+            "model",
+            "strategy",
+            "iteration",
+            "accuracy",
+        ],
+    );
     emit_csv("fig5_qualitative_identity.csv", &rows);
+    emit_bench_report("identity", "qualitative_identity", &rows);
     println!("qualitative identity holds on both tasks");
 }

@@ -9,7 +9,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{emit_csv, iters, runtime, timed};
+use common::{assert_stable_columns, emit_bench_report, emit_csv, iters, runtime, timed};
 use marfl::config::ExperimentConfig;
 use marfl::data::lda;
 use marfl::fl::Trainer;
@@ -85,7 +85,19 @@ fn main() {
         );
         gaps.push((model, gap));
     }
+    assert_stable_columns(
+        "fig8_heterogeneity.csv",
+        &rows,
+        &[
+            "model",
+            "split",
+            "heterogeneity_tv",
+            "final_accuracy",
+            "curve_mean_accuracy",
+        ],
+    );
     emit_csv("fig8_heterogeneity.csv", &rows);
+    emit_bench_report("heterogeneity", "heterogeneity", &rows);
 
     // paper shape: the language task suffers more from heterogeneity than
     // the vision task (in convergence speed — exact averaging makes the

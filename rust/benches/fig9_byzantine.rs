@@ -30,12 +30,12 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{emit_csv, iters, mib, results_dir, runtime, timed};
+use common::{assert_stable_columns, emit_csv, iters, mib, results_dir, runtime, timed};
 use marfl::aggregation::robust::RobustEstimator;
 use marfl::attack::{AttackConfig, AttackMode};
 use marfl::config::ExperimentConfig;
 use marfl::fl::Trainer;
-use marfl::metrics::write_json;
+use marfl::telemetry::BenchReport;
 use marfl::util::json::{arr, num, obj, s};
 
 /// EWMA reputation ban threshold used by every defended cell.
@@ -166,12 +166,12 @@ fn main() {
                      paroles {}  rebans {}",
                     run.final_accuracy,
                     run.final_loss,
-                    run.attackers_active,
-                    run.flagged_peers,
-                    run.flag_precision,
-                    run.flag_recall,
-                    run.paroles_granted,
-                    run.reban_count
+                    run.byzantine.attackers_active,
+                    run.byzantine.flagged_peers,
+                    run.byzantine.flag_precision,
+                    run.byzantine.flag_recall,
+                    run.byzantine.paroles_granted,
+                    run.byzantine.reban_count
                 );
                 rows.push(vec![
                     mode.name().into(),
@@ -180,12 +180,12 @@ fn main() {
                     atk.rep_threshold.to_string(),
                     atk.rep_decay.to_string(),
                     atk.parole_rounds.to_string(),
-                    run.attackers_active.to_string(),
-                    run.flagged_peers.to_string(),
-                    format!("{:.4}", run.flag_precision),
-                    format!("{:.4}", run.flag_recall),
-                    run.paroles_granted.to_string(),
-                    run.reban_count.to_string(),
+                    run.byzantine.attackers_active.to_string(),
+                    run.byzantine.flagged_peers.to_string(),
+                    format!("{:.4}", run.byzantine.flag_precision),
+                    format!("{:.4}", run.byzantine.flag_recall),
+                    run.byzantine.paroles_granted.to_string(),
+                    run.byzantine.reban_count.to_string(),
                     format!("{:.3}", mib(run.comm.data_bytes)),
                     format!("{:.4}", run.final_accuracy),
                     format!("{:.4}", run.final_loss),
@@ -198,12 +198,12 @@ fn main() {
                     ("rep_threshold", num(atk.rep_threshold)),
                     ("rep_decay", num(atk.rep_decay)),
                     ("parole_rounds", num(atk.parole_rounds as f64)),
-                    ("attackers_active", num(run.attackers_active as f64)),
-                    ("flagged_peers", num(run.flagged_peers as f64)),
-                    ("flag_precision", num(run.flag_precision)),
-                    ("flag_recall", num(run.flag_recall)),
-                    ("paroles_granted", num(run.paroles_granted as f64)),
-                    ("reban_count", num(run.reban_count as f64)),
+                    ("attackers_active", num(run.byzantine.attackers_active as f64)),
+                    ("flagged_peers", num(run.byzantine.flagged_peers as f64)),
+                    ("flag_precision", num(run.byzantine.flag_precision)),
+                    ("flag_recall", num(run.byzantine.flag_recall)),
+                    ("paroles_granted", num(run.byzantine.paroles_granted as f64)),
+                    ("reban_count", num(run.byzantine.reban_count as f64)),
                     ("data_bytes", num(run.comm.data_bytes as f64)),
                     ("final_accuracy", num(run.final_accuracy)),
                     ("final_loss", num(run.final_loss)),
@@ -214,20 +214,20 @@ fn main() {
                 // is the zero-overhead contract CI pins at fixed seeds.
                 if frac == 0.0 {
                     assert_eq!(
-                        run.attackers_active, 0,
+                        run.byzantine.attackers_active, 0,
                         "attack-off row recorded attackers ({label})"
                     );
                     assert_eq!(
-                        run.flagged_peers, 0,
+                        run.byzantine.flagged_peers, 0,
                         "attack-off row flagged peers ({label})"
                     );
                     assert_eq!(
-                        run.paroles_granted, 0,
+                        run.byzantine.paroles_granted, 0,
                         "attack-off row granted paroles ({label})"
                     );
                 } else {
                     assert!(
-                        run.attackers_active > 0,
+                        run.byzantine.attackers_active > 0,
                         "attacked row recorded no active attackers ({label})"
                     );
                 }
@@ -235,27 +235,47 @@ fn main() {
                     (mode.name(), est.name(), (frac * 10.0).round() as u32),
                     Cell {
                         loss: run.final_loss,
-                        precision: run.flag_precision,
-                        paroles: run.paroles_granted,
+                        precision: run.byzantine.flag_precision,
+                        paroles: run.byzantine.paroles_granted,
                     },
                 );
             }
         }
     }
+    assert_stable_columns(
+        "fig9_byzantine.csv",
+        &rows,
+        &[
+            "mode",
+            "estimator",
+            "frac",
+            "rep_threshold",
+            "rep_decay",
+            "parole_rounds",
+            "attackers_active",
+            "flagged_peers",
+            "flag_precision",
+            "flag_recall",
+            "paroles_granted",
+            "reban_count",
+            "data_mib",
+            "final_accuracy",
+            "final_loss",
+            "loss_ratio",
+        ],
+    );
     emit_csv("fig9_byzantine.csv", &rows);
 
-    let doc = obj(vec![
-        ("bench", s("byzantine")),
-        ("peers", num(peers as f64)),
-        ("iterations", num(t as f64)),
-        ("modes", arr(vec![s("sign_flip"), s("adaptive_scale")])),
-        ("rep_threshold", num(REP)),
-        ("rep_decay", num(REP_DECAY)),
-        ("parole_rounds", num(PAROLE_ROUNDS as f64)),
-        ("results", arr(json_rows)),
-    ]);
-    let path = results_dir().join("BENCH_byz.json");
-    write_json(&path, &doc).expect("write BENCH_byz.json");
+    let path = BenchReport::new("byz")
+        .field("peers", num(peers as f64))
+        .field("iterations", num(t as f64))
+        .field("modes", arr(vec![s("sign_flip"), s("adaptive_scale")]))
+        .field("rep_threshold", num(REP))
+        .field("rep_decay", num(REP_DECAY))
+        .field("parole_rounds", num(PAROLE_ROUNDS as f64))
+        .field("results", arr(json_rows))
+        .write(&results_dir())
+        .expect("write BENCH_byz.json");
     println!("  -> {}", path.display());
 
     // ---- paper-shape assertions ------------------------------------

@@ -26,14 +26,15 @@ use marfl::aggregation::{
     GroupExchange, PeerState,
 };
 use marfl::config::KdConfig;
-use marfl::coordinator::MarAggregator;
+use marfl::coordinator::{AggOptions, MarAggregator};
 use marfl::data::{build as build_data, synth};
 use marfl::exec;
 use marfl::kd::KdEngine;
-use marfl::metrics::{write_json, CommLedger};
+use marfl::metrics::CommLedger;
 use marfl::net::Fabric;
 use marfl::rng::Rng;
 use marfl::sim::SimClock;
+use marfl::telemetry::{BenchReport, MetricRegistry};
 use marfl::util::json::{arr, num, obj, s, Json};
 
 /// Collected (name, µs/op) rows for BENCH_micro.json.
@@ -135,14 +136,13 @@ fn main() {
     }
     // machine-readable kernel ablation (BENCH_kernels.json, uploaded by
     // CI alongside the other bench artifacts)
-    let kernels_doc = obj(vec![
-        ("bench", s("kernel_ablation")),
-        ("backend", s("native")),
-        ("threads", num(1.0)), // a step is single-threaded by design
-        ("results", arr(kernel_rows)),
-    ]);
-    let kernels_path = common::results_dir().join("BENCH_kernels.json");
-    write_json(&kernels_path, &kernels_doc).expect("write BENCH_kernels.json");
+    let kernels_path = BenchReport::new("kernels")
+        .field("kind", s("kernel_ablation"))
+        .field("backend", s("native"))
+        .field("threads", num(1.0)) // a step is single-threaded by design
+        .field("results", arr(kernel_rows))
+        .write(&common::results_dir())
+        .expect("write BENCH_kernels.json");
     println!("  -> {}", kernels_path.display());
     // acceptance gate: >=1.5x single-thread cnn step throughput for the
     // workspace/in-place path; MARFL_BENCH_NO_ASSERT=1 downgrades to
@@ -221,8 +221,17 @@ fn main() {
         let mut b = SynthBundle::new(m.padded_len);
         let mut states = b.states(125);
         let agg: Vec<usize> = (0..125).collect();
-        let mut mar = MarAggregator::new(125, 5, 3, b.ledger.clone(), 5)
-            .with_exchange(GroupExchange::ReduceScatter);
+        let mut mar = MarAggregator::with_options(
+            125,
+            5,
+            3,
+            b.ledger.clone(),
+            5,
+            AggOptions {
+                exchange: GroupExchange::ReduceScatter,
+                ..AggOptions::default()
+            },
+        );
         rows.bench("MAR aggregate 125 peers (reduce-scatter, M=5 G=3)", 1, 5, || {
             let mut ctx = b.ctx();
             mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
@@ -256,8 +265,14 @@ fn main() {
             let mut b = SynthBundle::new(p);
             let mut states = b.states(n);
             let agg: Vec<usize> = (0..n).collect();
-            let mut mar = MarAggregator::new(n, m_sz, 3, b.ledger.clone(), 5)
-                .with_parallel(false);
+            let mut mar = MarAggregator::with_options(
+                n,
+                m_sz,
+                3,
+                b.ledger.clone(),
+                5,
+                AggOptions { parallel: false, ..AggOptions::default() },
+            );
             let ns = bench_ns(
                 &format!("MAR aggregate N={n} P={p} serial"),
                 1,
@@ -366,16 +381,15 @@ fn main() {
     rows.0
         .push(("MKD pass parallel (N=20 M=4 G=2 E=2)".into(), mkd_parallel_us));
     // machine-readable MKD ablation (BENCH_mkd.json, uploaded by CI)
-    let mkd_doc = obj(vec![
-        ("bench", s("mkd_ablation")),
-        ("backend", s(rt.backend_name())),
-        ("threads", num(exec::threads() as f64)),
-        ("serial_us", num(mkd_serial_us)),
-        ("parallel_us", num(mkd_parallel_us)),
-        ("speedup", num(mkd_speedup)),
-    ]);
-    let mkd_path = common::results_dir().join("BENCH_mkd.json");
-    write_json(&mkd_path, &mkd_doc).expect("write BENCH_mkd.json");
+    let mkd_path = BenchReport::new("mkd")
+        .field("kind", s("mkd_ablation"))
+        .field("backend", s(rt.backend_name()))
+        .field("threads", num(exec::threads() as f64))
+        .field("serial_us", num(mkd_serial_us))
+        .field("parallel_us", num(mkd_parallel_us))
+        .field("speedup", num(mkd_speedup))
+        .write(&common::results_dir())
+        .expect("write BENCH_mkd.json");
     println!("  -> {}", mkd_path.display());
     // acceptance gate — only with enough configured workers AND enough
     // real host cores to back them (an oversubscribed pool on a 2-core
@@ -393,19 +407,69 @@ fn main() {
          MARFL_BENCH_NO_ASSERT=1 to report without gating)"
     );
 
+    println!("\ntelemetry overhead ablation (registry handles on the hot loop)\n");
+    // The metric registry is always on inside the trainer (it never
+    // touches the RNG / clock / ledger, so keeping it live is what makes
+    // telemetry-off bit-identity free). That bargain only holds if the
+    // handles are effectively invisible on the hot path, so gate the
+    // sharded-counter overhead against a registry-free baseline on a
+    // trainer-shaped workload: a full-vector reduce plus the ~handful of
+    // counter bumps one FL iteration performs.
+    let telemetry_overhead = {
+        let reg = MetricRegistry::new();
+        let ops = reg.counter("ablation.ops").expect("register ablation.ops");
+        let items =
+            reg.counter("ablation.items").expect("register ablation.items");
+        let v: Vec<f32> =
+            (0..m.padded_len).map(|_| rng.normal() as f32).collect();
+        let reduce = |buf: &[f32]| -> f32 {
+            let mut acc = 0.0f32;
+            for &x in buf {
+                acc += x * x;
+            }
+            acc
+        };
+        let off_ns = bench_ns("hot loop, registry off", 10, 60, || {
+            std::hint::black_box(reduce(std::hint::black_box(&v)));
+        });
+        let on_ns = bench_ns("hot loop, registry on", 10, 60, || {
+            std::hint::black_box(reduce(std::hint::black_box(&v)));
+            ops.inc();
+            items.add(4);
+        });
+        let overhead = on_ns / off_ns;
+        println!(
+            "  registry-on / registry-off = {overhead:.3}x \
+             (acceptance bar: <=1.03x)"
+        );
+        rows.0.push(("hot loop, registry off".into(), off_ns / 1e3));
+        rows.0.push(("hot loop, registry on".into(), on_ns / 1e3));
+        // acceptance gate: typed handles must be free on the hot path;
+        // MARFL_BENCH_NO_ASSERT=1 downgrades to report-only for hosts too
+        // noisy to trust wall-clock ratios
+        assert!(
+            overhead <= 1.03
+                || std::env::var_os("MARFL_BENCH_NO_ASSERT").is_some(),
+            "registry-on hot loop must be within 3% of registry-off \
+             (got {overhead:.3}x; set MARFL_BENCH_NO_ASSERT=1 to report \
+             without gating)"
+        );
+        overhead
+    };
+
     // machine-readable perf trajectory (BENCH_micro.json)
     let results: Vec<Json> = rows
         .0
         .iter()
         .map(|(name, us)| obj(vec![("name", s(name)), ("us_per_op", num(*us))]))
         .collect();
-    let doc = obj(vec![
-        ("bench", s("micro_hotpath")),
-        ("backend", s(rt.backend_name())),
-        ("threads", num(exec::threads() as f64)),
-        ("results", arr(results)),
-    ]);
-    let path = common::results_dir().join("BENCH_micro.json");
-    write_json(&path, &doc).expect("write BENCH_micro.json");
+    let path = BenchReport::new("micro")
+        .field("kind", s("micro_hotpath"))
+        .field("backend", s(rt.backend_name()))
+        .field("threads", num(exec::threads() as f64))
+        .field("telemetry_overhead", num(telemetry_overhead))
+        .field("results", arr(results))
+        .write(&common::results_dir())
+        .expect("write BENCH_micro.json");
     println!("\n  -> {}", path.display());
 }

@@ -15,7 +15,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{emit_csv, mib, SynthBundle};
+use common::{SynthBundle, assert_stable_columns, emit_bench_report, emit_csv, mib};
 use marfl::aggregation::{
     Aggregate, AllToAll, Butterfly, FedAvgServer, Gossip, RingRdfl, Saps,
 };
@@ -94,7 +94,18 @@ fn main() {
         residual.insert(which, resid);
         bytes_map.insert(which, bytes);
     }
+    assert_stable_columns(
+        "table1_related_work.csv",
+        &rows,
+        &[
+            "strategy",
+            "data_bytes",
+            "distortion_before",
+            "distortion_after",
+        ],
+    );
     emit_csv("table1_related_work.csv", &rows);
+    emit_bench_report("related_work", "related_work", &rows);
 
     // ---- Table-1 shape assertions ------------------------------------
     // global-aggregation systems: near-zero residual in ONE iteration

@@ -498,6 +498,24 @@ pub struct Reputation {
     parole_rounds: u64,
     paroles_granted: u64,
     reban_count: u64,
+    /// Stage ban/parole/reban transitions for the round-event trace.
+    /// Off by default — with nobody draining, the log would only grow.
+    log_events: bool,
+    /// Transitions staged by the last folds, in the fold's own
+    /// deterministic ascending-peer order ([`Self::drain_events`]).
+    events: Vec<RepEvent>,
+}
+
+/// One reputation transition, staged during [`Reputation::fold_iteration`]
+/// (ascending peer order) and drained into the round-event trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RepEvent {
+    /// A fresh ban crossed the threshold.
+    Ban(usize),
+    /// An expiring ban re-entered matchmaking on parole.
+    Parole(usize),
+    /// A peer on parole tripped the tighter threshold again.
+    Reban(usize),
 }
 
 impl Reputation {
@@ -518,7 +536,22 @@ impl Reputation {
             parole_rounds: 0,
             paroles_granted: 0,
             reban_count: 0,
+            log_events: false,
+            events: Vec::new(),
         }
+    }
+
+    /// Arm transition logging for the round-event trace. The ledger's
+    /// scoring behaviour is untouched — only [`Self::drain_events`]
+    /// starts returning the staged transitions.
+    pub fn log_events(&mut self, on: bool) {
+        self.log_events = on;
+    }
+
+    /// Drain the transitions staged since the last drain (empty unless
+    /// [`Self::log_events`] armed logging).
+    pub fn drain_events(&mut self) -> Vec<RepEvent> {
+        std::mem::take(&mut self.events)
     }
 
     /// Arm reputation decay and/or parole (both default off — the
@@ -606,6 +639,9 @@ impl Reputation {
                         self.parole_until[p] = self.iter + PAROLE_WINDOW;
                         self.rep[p] = parole_threshold;
                         self.paroles_granted += 1;
+                        if self.log_events {
+                            self.events.push(RepEvent::Parole(p));
+                        }
                     } else {
                         self.rep[p] = self.threshold; // probation
                     }
@@ -620,9 +656,17 @@ impl Reputation {
             if self.rep[p] < thresh && self.banned() < self.max_banned {
                 self.banned_until[p] = self.iter + ban_len;
                 self.ever_flagged[p] = true;
-                if self.parole_until[p] > self.iter {
+                let rebanned = self.parole_until[p] > self.iter;
+                if rebanned {
                     self.parole_until[p] = 0;
                     self.reban_count += 1;
+                }
+                if self.log_events {
+                    self.events.push(if rebanned {
+                        RepEvent::Reban(p)
+                    } else {
+                        RepEvent::Ban(p)
+                    });
                 }
                 newly += 1;
             }

@@ -38,12 +38,58 @@ use crate::aggregation::{
     robust_average_views, robust_average_views_chunked, AggCtx, AggReport,
     Aggregate, ExchangeTiming, GroupExchange, PeerState,
 };
-use crate::attack::Reputation;
+use crate::attack::{RepEvent, Reputation};
 use crate::exec;
 use crate::dht::{decode_peer, encode_peer, Key, SimDht};
 use crate::metrics::CommLedger;
 use crate::net::{Fabric, FaultCounters, LinkFault};
 use crate::rng::Rng;
+use crate::telemetry::{EventKind, TraceHandle};
+
+/// Construction-time options for [`MarAggregator`] — one struct consumed
+/// at construction in place of the old `with_exchange`/`with_rs_drop`/
+/// `with_robust`/`with_reputation`/… builder sprawl. `Default` is the
+/// seed configuration: full-gather, no drops, parallel lanes, plain mean,
+/// reputation off, no trace.
+#[derive(Clone, Debug)]
+pub struct AggOptions {
+    /// Within-group wire protocol (see [`MarAggregator::exchange`]).
+    pub exchange: GroupExchange,
+    /// Chunk-owner drop probability (see [`MarAggregator::rs_drop`]).
+    pub rs_drop: f64,
+    /// Owner-drop retry budget (see [`MarAggregator::rs_retry_budget`]).
+    pub rs_retry_budget: usize,
+    /// Parallel group lanes (see [`MarAggregator::parallel`]).
+    pub parallel: bool,
+    /// Within-group robust center (see [`MarAggregator::robust`]).
+    pub robust: RobustPolicy,
+    /// Reputation ban threshold; `<= 0` disables the ledger entirely —
+    /// no per-group distance work, no behavioural change.
+    pub rep_threshold: f64,
+    /// Per-iteration reputation decay toward neutral (`0` = sticky).
+    pub rep_decay: f64,
+    /// Ban length under parole (`0` = legacy fixed-length sticky bans).
+    pub parole_rounds: u64,
+    /// Round-event trace sink. Recording happens only in serial schedule
+    /// phases; `None` (default) keeps runs bit-identical to the seed.
+    pub trace: Option<TraceHandle>,
+}
+
+impl Default for AggOptions {
+    fn default() -> Self {
+        AggOptions {
+            exchange: GroupExchange::FullGather,
+            rs_drop: 0.0,
+            rs_retry_budget: 0,
+            parallel: true,
+            robust: RobustPolicy::MEAN,
+            rep_threshold: 0.0,
+            rep_decay: 0.0,
+            parole_rounds: 0,
+            trace: None,
+        }
+    }
+}
 
 /// MAR-FL's aggregator: owns the DHT control plane and the group-key
 /// schedule.
@@ -95,10 +141,15 @@ pub struct MarAggregator {
     /// [`Self::take_crashed`] to mark them stale / push their Markov
     /// chains Down
     crashed_last: Vec<usize>,
+    /// round-event trace sink ([`AggOptions::trace`]); recorded only in
+    /// serial schedule phases, so serial ≡ parallel byte-for-byte
+    trace: Option<TraceHandle>,
 }
 
 impl MarAggregator {
-    /// Build the control plane: every peer joins the DHT once at startup.
+    /// Build the control plane with the seed defaults: every peer joins
+    /// the DHT once at startup. Shorthand for [`Self::with_options`] with
+    /// `AggOptions::default()`.
     pub fn new(
         n_peers: usize,
         group_size: usize,
@@ -106,8 +157,34 @@ impl MarAggregator {
         ledger: Arc<CommLedger>,
         seed: u64,
     ) -> Self {
+        Self::with_options(n_peers, group_size, rounds, ledger, seed, AggOptions::default())
+    }
+
+    /// Build the control plane with explicit [`AggOptions`]. Reputation
+    /// gating activates when `opts.rep_threshold > 0`: each group's
+    /// members are scored by their distance to the group's robust
+    /// center, folded into an EWMA reputation, and peers whose
+    /// reputation falls below the threshold stop announcing on the DHT
+    /// for a few iterations (bounded ban count, probational rejoin /
+    /// parole — see [`Reputation`]). Because the control plane is
+    /// pipelined (round g+1's membership is fixed before round g's
+    /// scores exist), a ban takes effect from the *next* `aggregate`
+    /// call, never mid-iteration.
+    pub fn with_options(
+        n_peers: usize,
+        group_size: usize,
+        rounds: usize,
+        ledger: Arc<CommLedger>,
+        seed: u64,
+        opts: AggOptions,
+    ) -> Self {
         assert!(group_size >= 2);
         assert!(rounds >= 1);
+        assert!(
+            (0.0..=1.0).contains(&opts.rs_drop),
+            "rs_drop {} outside [0, 1]",
+            opts.rs_drop
+        );
         let mut dht = SimDht::new(ledger);
         let mut rng = Rng::new(seed ^ 0xD47);
         let node_ids: Vec<Key> =
@@ -115,81 +192,39 @@ impl MarAggregator {
         for id in &node_ids {
             dht.join(*id);
         }
+        let rep = (opts.rep_threshold > 0.0).then(|| {
+            let mut r = Reputation::new(n_peers, opts.rep_threshold)
+                .with_parole(opts.rep_decay, opts.parole_rounds);
+            // ban/parole transitions feed the trace; logging is armed
+            // only when someone will drain it
+            r.log_events(opts.trace.is_some());
+            r
+        });
         MarAggregator {
             group_size,
             rounds,
-            exchange: GroupExchange::FullGather,
-            rs_drop: 0.0,
-            rs_retry_budget: 0,
-            parallel: true,
-            robust: RobustPolicy::MEAN,
-            rep: None,
+            exchange: opts.exchange,
+            rs_drop: opts.rs_drop,
+            rs_retry_budget: opts.rs_retry_budget,
+            parallel: opts.parallel,
+            robust: opts.robust,
+            rep,
             dht,
             node_ids,
             iteration: 0,
             crashed_last: Vec::new(),
+            trace: opts.trace,
         }
     }
 
-    /// Switch the within-group wire protocol.
-    pub fn with_exchange(mut self, exchange: GroupExchange) -> Self {
-        self.exchange = exchange;
-        self
+    /// Record one trace event at simulated time `t` (no-op untraced).
+    fn trace_ev(&self, t: f64, kind: EventKind) {
+        if let Some(tr) = &self.trace {
+            tr.lock().unwrap().record(self.iteration as u64, t, kind);
+        }
     }
 
-    /// Set the per-group chunk-owner drop probability (see
-    /// [`Self::rs_drop`]).
-    pub fn with_rs_drop(mut self, p: f64) -> Self {
-        assert!((0.0..=1.0).contains(&p), "rs_drop {p} outside [0, 1]");
-        self.rs_drop = p;
-        self
-    }
-
-    /// Set the per-iteration owner-drop retry budget (see
-    /// [`Self::rs_retry_budget`]).
-    pub fn with_rs_retry_budget(mut self, budget: usize) -> Self {
-        self.rs_retry_budget = budget;
-        self
-    }
-
-    /// Force the serial reference engine (benchmark/verification aid).
-    pub fn with_parallel(mut self, parallel: bool) -> Self {
-        self.parallel = parallel;
-        self
-    }
-
-    /// Select the within-group robust aggregation policy
-    /// (`attack.robust` / `attack.trim`).
-    pub fn with_robust(mut self, robust: RobustPolicy) -> Self {
-        self.robust = robust;
-        self
-    }
-
-    /// Enable reputation-gated matchmaking: each group's members are
-    /// scored by their distance to the group's robust center, folded
-    /// into an EWMA reputation, and peers whose reputation falls below
-    /// `threshold` stop announcing on the DHT for a few iterations
-    /// (bounded ban count, probational rejoin — see [`Reputation`]).
-    /// Because the control plane is pipelined (round g+1's membership
-    /// is fixed before round g's scores exist), a ban takes effect from
-    /// the *next* `aggregate` call, never mid-iteration. `threshold <= 0`
-    /// disables the ledger.
-    pub fn with_reputation(mut self, threshold: f64) -> Self {
-        self.rep = (threshold > 0.0)
-            .then(|| Reputation::new(self.node_ids.len(), threshold));
-        self
-    }
-
-    /// Arm reputation decay + parole (`attack.rep_decay`,
-    /// `attack.parole_rounds` — see [`Reputation::with_parole`]). A
-    /// no-op when reputation gating is disabled; `(0.0, 0)` keeps the
-    /// legacy sticky-score / fixed-ban ledger bit-exactly.
-    pub fn with_parole(mut self, decay: f64, parole_rounds: u64) -> Self {
-        self.rep = self.rep.take().map(|r| r.with_parole(decay, parole_rounds));
-        self
-    }
-
-    /// The reputation ledger, when enabled ([`Self::with_reputation`]).
+    /// The reputation ledger, when enabled (`AggOptions::rep_threshold`).
     pub fn reputation(&self) -> Option<&Reputation> {
         self.rep.as_ref()
     }
@@ -624,6 +659,15 @@ impl Aggregate for MarAggregator {
             self.matchmake_timed(agg, &keys, &alive, 0, &scope, ctx.fabric);
         // empty data lanes: advances by mm0 exactly, attributed exposed
         ctx.clock.pipelined_two_phase(mm0, std::iter::empty());
+        self.trace_ev(
+            ctx.clock.now(),
+            EventKind::Matchmaking {
+                round: 0,
+                control_s: mm0,
+                hidden: false,
+                groups: groups.len() as u64,
+            },
+        );
         let legacy_drops_on =
             self.exchange == GroupExchange::ReduceScatter && self.rs_drop > 0.0;
         let crash_on = ctx.faults.crash_prob > 0.0;
@@ -639,7 +683,11 @@ impl Aggregate for MarAggregator {
             let mut plans: Vec<GroupPlan> = Vec::with_capacity(groups.len());
             let mut link_plans: Vec<Vec<LinkFault>> =
                 Vec::with_capacity(groups.len());
-            for group in &groups {
+            // plan drawing is a serial schedule phase: the clock has not
+            // advanced for this round yet, so every plan event lands at
+            // the same simulated instant in both engines
+            let t_plan = ctx.clock.now();
+            for (gi, group) in groups.iter().enumerate() {
                 let k = group.len();
                 // (1) legacy chunk-owner drop (seed-exact draw order)
                 let legacy_victim = if legacy_drops_on
@@ -695,10 +743,27 @@ impl Aggregate for MarAggregator {
                     for f in &links {
                         fault_totals.absorb(f);
                     }
+                    let retries: u64 = links.iter().map(|f| f.retries).sum();
+                    let timeouts: u64 = links.iter().map(|f| f.timeouts).sum();
+                    if retries + timeouts > 0 {
+                        self.trace_ev(
+                            t_plan,
+                            EventKind::FaultRetries {
+                                round: g as u64,
+                                group: gi as u64,
+                                retries,
+                                timeouts,
+                            },
+                        );
+                    }
                 }
                 fault_totals.crashes += crashed.len() as u64;
                 for &chunk in &crashed {
                     self.crashed_last.push(agg[group[chunk]]);
+                    self.trace_ev(
+                        t_plan,
+                        EventKind::Crash { peer: agg[group[chunk]] as u64 },
+                    );
                 }
                 // (4) the lost set: crashed peers, peers whose messages
                 // exhausted the retry budget, and the legacy victim
@@ -769,9 +834,24 @@ impl Aggregate for MarAggregator {
                     GroupPlan::Degraded(lost) => {
                         if legacy_victim.is_some() {
                             rs_fallbacks += 1;
+                            self.trace_ev(
+                                t_plan,
+                                EventKind::OwnerDropFallback {
+                                    round: g as u64,
+                                    group: gi as u64,
+                                },
+                            );
                         }
                         if fault_lost_any {
                             fault_totals.quorum_degraded_rounds += 1;
+                            self.trace_ev(
+                                t_plan,
+                                EventKind::QuorumDegraded {
+                                    round: g as u64,
+                                    group: gi as u64,
+                                    lost: lost.len() as u64,
+                                },
+                            );
                         }
                         if k - lost.len() >= 2 {
                             groups_formed += 1;
@@ -779,8 +859,21 @@ impl Aggregate for MarAggregator {
                     }
                     // deferred: survivors average nothing this round and
                     // re-form next round instead
-                    GroupPlan::Retry(_) => rs_retries += 1,
-                    GroupPlan::Abort(_) => {}
+                    GroupPlan::Retry(_) => {
+                        rs_retries += 1;
+                        self.trace_ev(
+                            t_plan,
+                            EventKind::RsRetry { round: g as u64, group: gi as u64 },
+                        );
+                    }
+                    GroupPlan::Abort(lost) => self.trace_ev(
+                        t_plan,
+                        EventKind::GroupAbort {
+                            round: g as u64,
+                            group: gi as u64,
+                            lost: lost.len() as u64,
+                        },
+                    ),
                 }
                 plans.push(plan);
                 link_plans.push(links);
@@ -862,12 +955,44 @@ impl Aggregate for MarAggregator {
             let lanes = lane_out
                 .iter()
                 .map(|(t, _)| (t.reduce_scatter_s, t.all_gather_s));
-            if plans.iter().all(|p| *p == GroupPlan::Keep) {
+            let all_keep = plans.iter().all(|p| *p == GroupPlan::Keep);
+            if all_keep {
                 ctx.clock.pipelined_two_phase(mm_next, lanes);
             } else {
                 ctx.clock.pipelined_two_phase(0.0, lanes);
                 // sequential pass: fully exposed on the clock
                 ctx.clock.pipelined_two_phase(mm_next, std::iter::empty());
+            }
+            // exchange span: the gating (slowest) lane per phase — the
+            // lane outputs are bit-identical between engines, so the
+            // recorded span is too
+            let rs_s = lane_out
+                .iter()
+                .map(|(t, _)| t.reduce_scatter_s)
+                .fold(0.0f64, f64::max);
+            let ag_s = lane_out
+                .iter()
+                .map(|(t, _)| t.all_gather_s)
+                .fold(0.0f64, f64::max);
+            self.trace_ev(
+                ctx.clock.now(),
+                EventKind::Exchange {
+                    round: g as u64,
+                    groups: member_groups.len() as u64,
+                    rs_s,
+                    ag_s,
+                },
+            );
+            if g + 1 < d {
+                self.trace_ev(
+                    ctx.clock.now(),
+                    EventKind::Matchmaking {
+                        round: g as u64 + 1,
+                        control_s: mm_next,
+                        hidden: all_keep,
+                        groups: next_groups.len() as u64,
+                    },
+                );
             }
             groups = next_groups;
         }
@@ -888,6 +1013,19 @@ impl Aggregate for MarAggregator {
             Some(rep) => rep.fold_iteration(),
             None => 0,
         };
+        if self.trace.is_some() {
+            let events =
+                self.rep.as_mut().map(Reputation::drain_events).unwrap_or_default();
+            let t_fold = ctx.clock.now();
+            for e in events {
+                let kind = match e {
+                    RepEvent::Ban(p) => EventKind::Ban { peer: p as u64 },
+                    RepEvent::Parole(p) => EventKind::Parole { peer: p as u64 },
+                    RepEvent::Reban(p) => EventKind::Reban { peer: p as u64 },
+                };
+                self.trace_ev(t_fold, kind);
+            }
+        }
         Ok(AggReport {
             rounds: d,
             groups: groups_formed,
@@ -1047,8 +1185,14 @@ mod tests {
         let run = |exchange, tc: &mut TestCtx| {
             let mut states = random_states(n, 1024, 26);
             let agg: Vec<usize> = (0..n).collect();
-            let mut mar = MarAggregator::new(n, 3, 3, tc.ledger.clone(), 7)
-                .with_exchange(exchange);
+            let mut mar = MarAggregator::with_options(
+                n,
+                3,
+                3,
+                tc.ledger.clone(),
+                7,
+                AggOptions { exchange, ..AggOptions::default() },
+            );
             tc.ledger.reset();
             let mut ctx = tc.ctx();
             mar.aggregate(&mut states, &agg, &mut ctx).unwrap();
@@ -1076,8 +1220,17 @@ mod tests {
         let mut tc = TestCtx::new(p);
         let mut states = random_states(n, p, 27);
         let agg: Vec<usize> = (0..n).collect();
-        let mut mar = MarAggregator::new(n, 3, 3, tc.ledger.clone(), 7)
-            .with_exchange(crate::aggregation::GroupExchange::ReduceScatter);
+        let mut mar = MarAggregator::with_options(
+            n,
+            3,
+            3,
+            tc.ledger.clone(),
+            7,
+            AggOptions {
+                exchange: crate::aggregation::GroupExchange::ReduceScatter,
+                ..AggOptions::default()
+            },
+        );
         tc.ledger.reset();
         let mut ctx = tc.ctx();
         mar.aggregate(&mut states, &agg, &mut ctx).unwrap();

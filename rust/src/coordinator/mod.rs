@@ -11,4 +11,4 @@ pub mod mar;
 pub mod mixing;
 
 pub use group_key::{grid_keys, perfect_grid, random_keys, GroupKey};
-pub use mar::MarAggregator;
+pub use mar::{AggOptions, MarAggregator};

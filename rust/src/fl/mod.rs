@@ -7,24 +7,37 @@
 //! aggregates with the configured technique (groups averaged
 //! concurrently), evaluates every `eval_every` iterations, and books every
 //! byte, hop and simulated second.
+//!
+//! Counters live in the trainer's [`MetricRegistry`] (handles resolved
+//! once at construction — see [`TrainerMetrics`]); the [`RunSummary`]
+//! scorecards are end-of-run views over that registry. An optional
+//! round-event trace ([`TrainerBuilder::trace`]) records the iteration
+//! timeline; telemetry-off runs are bit-identical to the untraced seed.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::aggregation::{baseline_for_robust, AggCtx, Aggregate, PeerState};
+use crate::aggregation::{
+    baseline_for_robust, AggCtx, Aggregate, GroupExchange, PeerState,
+};
 use crate::attack::AttackPlan;
 use crate::config::{ExperimentConfig, Strategy};
-use crate::coordinator::MarAggregator;
+use crate::coordinator::{AggOptions, MarAggregator};
 use crate::data::{build as build_data, FlData};
 use crate::dp::DpEngine;
 use crate::kd::KdEngine;
 use crate::metrics::{CommLedger, CommSnapshot, Plane, TrainCurve};
 use crate::models::ModelMeta;
-use crate::net::{ChurnModel, Fabric, FaultCounters, LinkState, MarkovChurn};
+use crate::net::{ChurnModel, Fabric, LinkState, MarkovChurn};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::sim::SimClock;
+use crate::telemetry::{
+    trace_handle, ByzantineScorecard, DpScorecard, EventKind, FaultScorecard,
+    MetricRegistry, ReliabilityScorecard, TraceHandle, TrainerMetrics,
+};
 
 /// Simulated local-compute time per mini-batch (seconds). The paper's
 /// claims are about communication; compute merely anchors the simulated
@@ -46,114 +59,70 @@ impl Agg {
     }
 }
 
-/// Outcome of a full training run.
+/// Outcome of a full training run: headline numbers at the top level,
+/// subsystem counters grouped into typed scorecards
+/// ([`ReliabilityScorecard`], [`FaultScorecard`], [`ByzantineScorecard`],
+/// [`DpScorecard`]) read back from the trainer's metric registry.
 #[derive(Clone, Debug)]
 pub struct RunSummary {
     pub curve: TrainCurve,
     pub comm: CommSnapshot,
     pub sim_time_s: f64,
     pub iterations_run: usize,
-    /// (ε, δ) guarantee when DP was active
-    pub epsilon: Option<f64>,
     /// cumulative DHT hops (MAR only)
     pub dht_hops: Option<u64>,
-    /// cumulative reduce-scatter owner-drop fallbacks across all
-    /// iterations (0 unless `mar.reduce_scatter` + `mar.rs_drop` are on)
-    /// — the reliability axis `fig3_churn` plots against `mar.rs_drop`
-    pub rs_fallbacks: u64,
-    /// cumulative owner-drop retries (groups that deferred to the next
-    /// round's matchmaking under `mar.rs_retry_budget` instead of
-    /// falling back) — the second reliability column in
-    /// `fig3_rs_reliability.csv`
-    pub rs_retries: u64,
-    /// fault-injection outcomes accumulated across the run (messages
-    /// lost, retries, timeouts, quorum-degraded groups, crashes) — all
-    /// zero when the fault plan is off
-    pub faults: FaultCounters,
-    /// simulated wall-time stragglers added beyond the fault-free
-    /// compute (training and distillation lanes)
-    pub straggler_exposed_s: f64,
-    /// crash-faulted peers that pulled a fresh θ when they rejoined
-    pub rejoin_pulls: u64,
-    /// `[p10, p50, p90]` of the per-peer bandwidth-capacity multipliers
-    /// when `faults.bw_dist` draws heterogeneous links, `None` otherwise
-    pub bw_percentiles: Option<[f64; 3]>,
-    /// times `ChurnModel::sample_aggregators`'s keep-alive fallback
-    /// rebuilt `A_t` from dropped participants
-    pub churn_rescues: u64,
-    /// times `MarkovChurn::step` resurrected a random peer to keep the
-    /// network non-empty
-    pub markov_revivals: u64,
-    /// ground-truth Byzantine peers that corrupted at least one upload
-    /// during the run (0 when `attack.frac = 0`)
-    pub attackers_active: u64,
-    /// peers the reputation ledger ever banned (0 unless
-    /// `attack.rep_threshold` is on)
-    pub flagged_peers: u64,
-    /// precision of the ever-flagged set against the ground-truth
-    /// attacker set (1.0 when nothing was flagged)
-    pub flag_precision: f64,
-    /// recall of the ever-flagged set against the ground-truth attacker
-    /// set (1.0 when there were no attackers)
-    pub flag_recall: f64,
-    /// bans that expired into a probation window
-    /// (`attack.parole_rounds > 0`; 0 on the sticky-ban default)
-    pub paroles_granted: u64,
-    /// peers re-banned while on parole (tighter re-ban threshold)
-    pub reban_count: u64,
-    /// slow-schedule re-draws of the heterogeneous per-peer bandwidth
-    /// capacities (`faults.bw_redraw_rounds`; 0 on the static default)
-    pub bw_redraws: u64,
+    /// churn / reduce-scatter recovery counters (`summary.reliability.
+    /// rs_fallbacks` is the axis `fig3_churn` plots against `mar.rs_drop`)
+    pub reliability: ReliabilityScorecard,
+    /// fault-injection outcomes, straggler exposure, and the
+    /// heterogeneous-bandwidth observations — all-zero / `None` when the
+    /// fault plan is off
+    pub faults: FaultScorecard,
+    /// attack pressure and defense quality (`attack.*` knobs)
+    pub byzantine: ByzantineScorecard,
+    /// differential-privacy budget (`dp.*` knobs)
+    pub dp: DpScorecard,
     pub final_accuracy: f64,
     pub final_loss: f64,
 }
 
-/// End-to-end MAR-FL trainer.
-pub struct Trainer<'rt> {
-    pub cfg: ExperimentConfig,
+/// Staged construction for [`Trainer`] — the single place the
+/// aggregator options, engine parallelism, and telemetry sinks are
+/// decided. `Trainer::new` is shorthand for the all-defaults build.
+pub struct TrainerBuilder<'rt> {
+    cfg: ExperimentConfig,
     rt: &'rt Runtime,
-    model: ModelMeta,
-    data: FlData,
-    states: Vec<PeerState>,
-    agg: Agg,
-    churn: ChurnModel,
-    markov: Option<MarkovChurn>,
-    ledger: Arc<CommLedger>,
-    fabric: Fabric,
-    clock: SimClock,
-    rng: Rng,
-    kd: Option<KdEngine>,
-    dp: Option<DpEngine>,
-    /// cumulative reduce-scatter owner-drop fallbacks (see `RunSummary`)
-    rs_fallbacks: u64,
-    /// cumulative owner-drop retries (see `RunSummary`)
-    rs_retries: u64,
-    /// cumulative fault-injection outcomes (see `RunSummary`)
-    faults: FaultCounters,
-    /// straggler-added simulated wall-time (see `RunSummary`)
-    straggler_exposed_s: f64,
-    /// fresh-θ pulls by rejoining crashed peers (see `RunSummary`)
-    rejoin_pulls: u64,
-    /// aggregator keep-alive rescues (see `RunSummary`)
-    churn_rescues: u64,
-    /// time-correlated link state (Gilbert–Elliott chains + per-peer
-    /// bandwidths), present only when `faults.time_correlated()` — the
-    /// gated construction keeps time-uncorrelated plans draw-identical
-    /// to the seed
-    links: Option<LinkState>,
-    /// ground-truth Byzantine plan, present only when `attack.frac > 0`
-    /// — gated exactly like the fault RNG so clean runs stay
-    /// bit-identical
-    attack: Option<AttackPlan>,
-    /// peers that crash-faulted and have not yet rejoined: they resume
-    /// with a booked fresh-θ pull the next time they participate
-    stale: Vec<bool>,
-    /// label used for the curve (strategy name by default)
-    pub label: String,
+    label: Option<String>,
+    parallel: bool,
+    trace: bool,
 }
 
-impl<'rt> Trainer<'rt> {
-    pub fn new(cfg: ExperimentConfig, rt: &'rt Runtime) -> Result<Self> {
+impl<'rt> TrainerBuilder<'rt> {
+    /// Override the curve label (strategy name by default).
+    pub fn label(mut self, label: impl Into<String>) -> Self {
+        self.label = Some(label.into());
+        self
+    }
+
+    /// Run MAR group lanes and KD distillation lanes on the serial
+    /// reference engine (`false`) instead of the thread pool (`true`,
+    /// default). Results are bit-identical either way — the serial
+    /// engine exists as the determinism reference and benchmark arm.
+    pub fn parallel(mut self, parallel: bool) -> Self {
+        self.parallel = parallel;
+        self
+    }
+
+    /// Record the per-iteration round-event timeline (off by default;
+    /// off is bit-identical to the seed). Read it back via
+    /// [`Trainer::trace`] / [`Trainer::write_trace`].
+    pub fn trace(mut self, trace: bool) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    pub fn build(self) -> Result<Trainer<'rt>> {
+        let TrainerBuilder { cfg, rt, label, parallel, trace } = self;
         cfg.validate()?;
         let model = rt.meta.model(&cfg.model)?.clone();
         let mut rng = Rng::new(cfg.seed);
@@ -179,31 +148,37 @@ impl<'rt> Trainer<'rt> {
         let ledger = Arc::new(CommLedger::new());
         let fabric =
             Fabric::new(ledger.clone(), cfg.link_bandwidth, cfg.link_latency);
+        let registry = Arc::new(MetricRegistry::new());
+        let metrics = TrainerMetrics::register(&registry)?;
+        let trace = trace.then(trace_handle);
         // one robust policy threads through every averaging surface: MAR
         // groups, the MKD teacher-logit ensemble, and the baselines that
         // have a trimming analogue (`Mean` keeps each bit-identical)
         let policy = cfg.attack.policy();
         let agg = match cfg.strategy {
             Strategy::MarFl => {
-                let mut mar = MarAggregator::new(
+                let mut opts = AggOptions {
+                    parallel,
+                    robust: policy,
+                    rep_threshold: cfg.attack.rep_threshold,
+                    rep_decay: cfg.attack.rep_decay,
+                    parole_rounds: cfg.attack.parole_rounds,
+                    trace: trace.clone(),
+                    ..AggOptions::default()
+                };
+                if cfg.reduce_scatter {
+                    opts.exchange = GroupExchange::ReduceScatter;
+                    opts.rs_drop = cfg.rs_drop;
+                    opts.rs_retry_budget = cfg.rs_retry_budget;
+                }
+                Agg::Mar(MarAggregator::with_options(
                     cfg.peers,
                     cfg.group_size,
                     cfg.effective_mar_rounds(),
                     ledger.clone(),
                     cfg.seed,
-                )
-                .with_robust(policy)
-                .with_reputation(cfg.attack.rep_threshold)
-                .with_parole(cfg.attack.rep_decay, cfg.attack.parole_rounds);
-                if cfg.reduce_scatter {
-                    mar = mar
-                        .with_exchange(
-                            crate::aggregation::GroupExchange::ReduceScatter,
-                        )
-                        .with_rs_drop(cfg.rs_drop)
-                        .with_rs_retry_budget(cfg.rs_retry_budget);
-                }
-                Agg::Mar(mar)
+                    opts,
+                ))
             }
             s => Agg::Baseline(
                 baseline_for_robust(s, policy)
@@ -213,7 +188,8 @@ impl<'rt> Trainer<'rt> {
         let kd = if cfg.kd.enabled && cfg.strategy == Strategy::MarFl {
             Some(
                 KdEngine::new(cfg.kd.clone(), rt.meta.kd_tau, cfg.eta, cfg.mu)
-                    .with_robust(policy),
+                    .with_robust(policy)
+                    .with_parallel(parallel),
             )
         } else {
             None
@@ -245,7 +221,7 @@ impl<'rt> Trainer<'rt> {
             .attack
             .enabled()
             .then(|| AttackPlan::new(&cfg.attack, cfg.peers, &mut rng.fork(4)));
-        let label = cfg.strategy.name().to_string();
+        let label = label.unwrap_or_else(|| cfg.strategy.name().to_string());
         let peers = cfg.peers;
         Ok(Trainer {
             cfg,
@@ -262,17 +238,73 @@ impl<'rt> Trainer<'rt> {
             rng,
             kd,
             dp,
-            rs_fallbacks: 0,
-            rs_retries: 0,
-            faults: FaultCounters::default(),
-            straggler_exposed_s: 0.0,
-            rejoin_pulls: 0,
-            churn_rescues: 0,
+            registry,
+            metrics,
+            trace,
             links,
             attack,
             stale: vec![false; peers],
             label,
         })
+    }
+}
+
+/// End-to-end MAR-FL trainer.
+pub struct Trainer<'rt> {
+    pub cfg: ExperimentConfig,
+    rt: &'rt Runtime,
+    model: ModelMeta,
+    data: FlData,
+    states: Vec<PeerState>,
+    agg: Agg,
+    churn: ChurnModel,
+    markov: Option<MarkovChurn>,
+    ledger: Arc<CommLedger>,
+    fabric: Fabric,
+    clock: SimClock,
+    rng: Rng,
+    kd: Option<KdEngine>,
+    dp: Option<DpEngine>,
+    /// the trainer's metric registry — every counter previously
+    /// hand-threaded as a flat field books through a handle in `metrics`
+    registry: Arc<MetricRegistry>,
+    /// pre-resolved handles into `registry` (see [`TrainerMetrics`])
+    metrics: TrainerMetrics,
+    /// round-event trace sink, shared with the MAR aggregator
+    /// ([`TrainerBuilder::trace`]); `None` = telemetry off
+    trace: Option<TraceHandle>,
+    /// time-correlated link state (Gilbert–Elliott chains + per-peer
+    /// bandwidths), present only when `faults.time_correlated()` — the
+    /// gated construction keeps time-uncorrelated plans draw-identical
+    /// to the seed
+    links: Option<LinkState>,
+    /// ground-truth Byzantine plan, present only when `attack.frac > 0`
+    /// — gated exactly like the fault RNG so clean runs stay
+    /// bit-identical
+    attack: Option<AttackPlan>,
+    /// peers that crash-faulted and have not yet rejoined: they resume
+    /// with a booked fresh-θ pull the next time they participate
+    stale: Vec<bool>,
+    /// label used for the curve (strategy name by default)
+    pub label: String,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Staged construction ([`TrainerBuilder`]).
+    pub fn builder(cfg: ExperimentConfig, rt: &'rt Runtime) -> TrainerBuilder<'rt> {
+        TrainerBuilder { cfg, rt, label: None, parallel: true, trace: false }
+    }
+
+    /// All-defaults build: parallel engines, telemetry trace off.
+    pub fn new(cfg: ExperimentConfig, rt: &'rt Runtime) -> Result<Self> {
+        Self::builder(cfg, rt).build()
+    }
+
+    /// Record one trace event at simulated time `t` (no-op untraced).
+    fn trace_ev(&self, iter: u64, t: f64, kind: EventKind) {
+        if let Some(tr) = &self.trace {
+            tr.lock().unwrap().record(iter, t, kind);
+        }
     }
 
     /// Run T iterations (or until `target_accuracy`); returns the curve
@@ -288,6 +320,11 @@ impl<'rt> Trainer<'rt> {
                 let (loss, acc) = self.evaluate()?;
                 last = (loss, acc);
                 curve.push(t, self.ledger.snapshot(), loss, acc, self.clock.now());
+                self.trace_ev(
+                    t as u64,
+                    self.clock.now(),
+                    EventKind::Eval { loss, accuracy: acc },
+                );
                 log::info!(
                     "[{}] iter {t}: loss {loss:.4} acc {acc:.4} data {} MiB",
                     self.label,
@@ -299,39 +336,44 @@ impl<'rt> Trainer<'rt> {
                 }
             }
         }
-        let markov_revivals =
-            self.markov.as_ref().map(|c| c.revivals()).unwrap_or(0);
-        // surface the link-state outcome: the chains live outside the
-        // per-round counters, so the run totals are assigned (not
-        // accumulated) from the single shared LinkState
+        // end-of-run folds into the registry: the Markov revival count
+        // and the link-state chain totals live outside the per-round
+        // counters (single shared structures), so their run totals land
+        // here exactly once
+        self.metrics
+            .markov_revivals
+            .add(self.markov.as_ref().map(|c| c.revivals()).unwrap_or(0));
         if let Some(ls) = &self.links {
-            self.faults.ge_bad_transitions = ls.ge_bad_transitions;
-            self.faults.bursty_losses = ls.bursty_losses;
+            self.metrics.ge_bad_transitions.add(ls.ge_bad_transitions);
+            self.metrics.bursty_losses.add(ls.bursty_losses);
+            self.metrics.bw_redraws.add(ls.bw_redraws);
         }
-        if self.churn_rescues > 0
-            || markov_revivals > 0
-            || self.faults.ge_bad_transitions > 0
+        let reliability = self.metrics.reliability();
+        let faults = self
+            .metrics
+            .faults(self.links.as_ref().and_then(|ls| ls.bw_percentiles()));
+        if reliability.churn_rescues > 0
+            || reliability.markov_revivals > 0
+            || faults.ge_bad_transitions > 0
         {
             log::info!(
                 "[{}] liveness: {} aggregator keep-alive rescues, \
                  {} Markov revivals, {} link bursts ({} bursty losses)",
                 self.label,
-                self.churn_rescues,
-                markov_revivals,
-                self.faults.ge_bad_transitions,
-                self.faults.bursty_losses,
+                reliability.churn_rescues,
+                reliability.markov_revivals,
+                faults.ge_bad_transitions,
+                faults.bursty_losses,
             );
         }
         // attack/defence scorecard: ground truth from the plan, flags
         // from the MAR reputation ledger (empty-set conventions give
         // 1.0/1.0 so clean runs read as "nothing wrongly flagged")
-        let attackers_active =
-            self.attack.as_ref().map(|p| p.active_count()).unwrap_or(0);
-        let mut flagged_peers = 0u64;
-        let mut flag_precision = 1.0;
-        let mut flag_recall = 1.0;
-        let mut paroles_granted = 0u64;
-        let mut reban_count = 0u64;
+        self.metrics
+            .attackers_active
+            .add(self.attack.as_ref().map(|p| p.active_count()).unwrap_or(0));
+        self.metrics.flag_precision.set(1.0);
+        self.metrics.flag_recall.set(1.0);
         if let Agg::Mar(m) = &self.agg {
             if let Some(rep) = m.reputation() {
                 let honest = vec![false; self.cfg.peers];
@@ -348,44 +390,25 @@ impl<'rt> Trainer<'rt> {
                     rep.effective_flags(),
                     attacker,
                 );
-                flagged_peers = f;
-                flag_precision = p;
-                flag_recall = r;
-                paroles_granted = rep.paroles_granted();
-                reban_count = rep.reban_count();
+                self.metrics.flagged_peers.add(f);
+                self.metrics.flag_precision.set(p);
+                self.metrics.flag_recall.set(r);
+                self.metrics.paroles_granted.add(rep.paroles_granted());
+                self.metrics.reban_count.add(rep.reban_count());
             }
         }
         Ok(RunSummary {
             comm: self.ledger.snapshot(),
             sim_time_s: self.clock.now(),
             iterations_run,
-            epsilon: self.dp.as_ref().map(|d| d.epsilon()),
             dht_hops: match &self.agg {
                 Agg::Mar(m) => Some(m.dht_hops()),
                 _ => None,
             },
-            rs_fallbacks: self.rs_fallbacks,
-            rs_retries: self.rs_retries,
-            faults: self.faults,
-            straggler_exposed_s: self.straggler_exposed_s,
-            rejoin_pulls: self.rejoin_pulls,
-            bw_percentiles: self
-                .links
-                .as_ref()
-                .and_then(|ls| ls.bw_percentiles()),
-            churn_rescues: self.churn_rescues,
-            markov_revivals,
-            attackers_active,
-            flagged_peers,
-            flag_precision,
-            flag_recall,
-            paroles_granted,
-            reban_count,
-            bw_redraws: self
-                .links
-                .as_ref()
-                .map(|ls| ls.bw_redraws)
-                .unwrap_or(0),
+            reliability,
+            faults,
+            byzantine: self.metrics.byzantine(),
+            dp: DpScorecard { epsilon: self.dp.as_ref().map(|d| d.epsilon()) },
             final_loss: last.0,
             final_accuracy: last.1,
             curve,
@@ -408,6 +431,11 @@ impl<'rt> Trainer<'rt> {
             Some(chain) => chain.step(&mut churn_rng),
             None => self.churn.sample_participants(self.cfg.peers, &mut churn_rng),
         };
+        self.trace_ev(
+            t as u64,
+            self.clock.now(),
+            EventKind::IterStart { participants: participants.len() as u64 },
+        );
 
         // fault plan RNG: forked only when the plan is live, so the
         // fault-free path consumes exactly the draws it always did and
@@ -434,7 +462,12 @@ impl<'rt> Trainer<'rt> {
                 if let Some(d) = donor {
                     self.states[p] = self.states[d].clone();
                     lanes.push(self.fabric.send(bytes, Plane::Data));
-                    self.rejoin_pulls += 1;
+                    self.metrics.rejoin_pulls.inc();
+                    self.trace_ev(
+                        t as u64,
+                        self.clock.now(),
+                        EventKind::CrashRejoin { peer: p as u64 },
+                    );
                 }
                 self.stale[p] = false;
             }
@@ -519,14 +552,22 @@ impl<'rt> Trainer<'rt> {
                 }
             }
             self.clock.advance(base * mult_max);
-            self.straggler_exposed_s += base * (mult_max - 1.0);
+            self.metrics.straggler_exposed_s.add(base * (mult_max - 1.0));
+            self.trace_ev(
+                t as u64,
+                self.clock.now(),
+                EventKind::LocalCompute {
+                    dt: base * mult_max,
+                    straggler_dt: base * (mult_max - 1.0),
+                },
+            );
         }
 
         // A_t: aggregators (participants that survive dropout)
         let (aggers, rescued) =
             self.churn.sample_aggregators_counted(&participants, &mut churn_rng);
         if rescued {
-            self.churn_rescues += 1;
+            self.metrics.churn_rescues.inc();
         }
         if aggers.len() < 2 {
             return Ok(());
@@ -556,8 +597,20 @@ impl<'rt> Trainer<'rt> {
                     mar,
                     &mut ctx,
                 )?;
-                self.faults.add(kd_rep.faults);
-                self.straggler_exposed_s += kd_rep.straggler_exposed_s;
+                self.metrics.add_faults(&kd_rep.faults);
+                self.metrics
+                    .straggler_exposed_s
+                    .add(kd_rep.straggler_exposed_s);
+                self.trace_ev(
+                    t as u64,
+                    self.clock.now(),
+                    EventKind::Mkd {
+                        rounds: kd_rep.rounds as u64,
+                        kd_steps: kd_rep.kd_steps,
+                        teacher_transfers: kd_rep.teacher_transfers,
+                        mean_loss: kd_rep.mean_loss,
+                    },
+                );
             }
         }
 
@@ -601,9 +654,9 @@ impl<'rt> Trainer<'rt> {
         };
         let report =
             self.agg.as_dyn().aggregate(&mut self.states, &aggers, &mut ctx)?;
-        self.rs_fallbacks += report.rs_fallbacks as u64;
-        self.rs_retries += report.rs_retries as u64;
-        self.faults.add(report.faults);
+        self.metrics.rs_fallbacks.add(report.rs_fallbacks as u64);
+        self.metrics.rs_retries.add(report.rs_retries as u64);
+        self.metrics.add_faults(&report.faults);
 
         // crash-faulted MAR members leave mid-exchange: their θ stays
         // stale until the next iteration they participate in (the
@@ -659,5 +712,31 @@ impl<'rt> Trainer<'rt> {
 
     pub fn model(&self) -> &ModelMeta {
         &self.model
+    }
+
+    /// The trainer's metric registry (scorecard source of truth).
+    pub fn registry(&self) -> &Arc<MetricRegistry> {
+        &self.registry
+    }
+
+    /// Pre-resolved metric handles (mid-run diagnostics).
+    pub fn metrics(&self) -> &TrainerMetrics {
+        &self.metrics
+    }
+
+    /// The recorded round-event trace (`Some` iff built with
+    /// [`TrainerBuilder::trace`]).
+    pub fn trace(&self) -> Option<&TraceHandle> {
+        self.trace.as_ref()
+    }
+
+    /// Write the recorded trace as JSONL; errors when the trainer was
+    /// built without tracing.
+    pub fn write_trace(&self, path: &Path) -> Result<()> {
+        let tr = self
+            .trace
+            .as_ref()
+            .context("trainer built without .trace(true)")?;
+        tr.lock().unwrap().write_jsonl(path)
     }
 }

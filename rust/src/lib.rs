@@ -36,6 +36,7 @@ pub mod params;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod testing;
 pub mod util;
 

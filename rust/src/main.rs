@@ -1,8 +1,11 @@
 //! `marfl` — MAR-FL launcher.
 //!
 //! Subcommands:
-//!   train   run one experiment (preset file + key=value overrides)
-//!   info    inspect the artifact registry
+//!   train        run one experiment (preset file + key=value overrides)
+//!   sweep        compare aggregation strategies on one configuration
+//!   info         inspect the artifact registry
+//!   trace-check  validate a round_trace.jsonl against marfl-trace/v1
+//!   trajectory   fold results/BENCH_*.json into BENCH_trajectory.json
 //!
 //! CLI parsing is hand-rolled (offline environment: no clap); see
 //! `marfl train --help`.
@@ -22,10 +25,13 @@ marfl — MAR-FL launcher
 
 USAGE:
   marfl train [--config <preset.toml>] [--set key=value]... \\
-              [--artifacts <dir>] [--csv <out.csv>] [--json <out.json>]
+              [--artifacts <dir>] [--csv <out.csv>] [--json <out.json>] \\
+              [--trace <round_trace.jsonl>]
   marfl sweep --strategies marfl,rdfl,arfl,fedavg [--set key=value]... \\
               [--csv <out.csv>]
   marfl info  [--artifacts <dir>]
+  marfl trace-check <round_trace.jsonl>
+  marfl trajectory [--dir <results>]
 
 Common keys for --set:
   strategy=marfl|rdfl|arfl|fedavg|bar|gossip|saps   model=cnn|head
@@ -39,7 +45,9 @@ fn main() -> ExitCode {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     init_logging();
     if args.is_empty() {
-        eprintln!("usage: marfl <train|info> [options]\n\n{TRAIN_HELP}");
+        eprintln!(
+            "usage: marfl <train|sweep|info|trace-check|trajectory> [options]\n\n{TRAIN_HELP}"
+        );
         return ExitCode::from(2);
     }
     let cmd = args.remove(0);
@@ -47,6 +55,8 @@ fn main() -> ExitCode {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
         "info" => cmd_info(&args),
+        "trace-check" => cmd_trace_check(&args),
+        "trajectory" => cmd_trajectory(&args),
         "--help" | "-h" | "help" => {
             println!("{TRAIN_HELP}");
             Ok(())
@@ -93,6 +103,8 @@ struct Flags {
     artifacts: PathBuf,
     csv: Option<PathBuf>,
     json: Option<PathBuf>,
+    trace: Option<PathBuf>,
+    dir: Option<PathBuf>,
     strategies: Vec<String>,
 }
 
@@ -103,6 +115,8 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
         artifacts: default_artifact_dir(),
         csv: None,
         json: None,
+        trace: None,
+        dir: None,
         strategies: Vec::new(),
     };
     let mut it = args.iter();
@@ -118,6 +132,8 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
             "--artifacts" => f.artifacts = PathBuf::from(value("--artifacts")?),
             "--csv" => f.csv = Some(PathBuf::from(value("--csv")?)),
             "--json" => f.json = Some(PathBuf::from(value("--json")?)),
+            "--trace" => f.trace = Some(PathBuf::from(value("--trace")?)),
+            "--dir" => f.dir = Some(PathBuf::from(value("--dir")?)),
             "--strategies" => {
                 f.strategies = value("--strategies")?
                     .split(',')
@@ -156,8 +172,13 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         cfg.effective_mar_rounds(),
     );
     let rt = Runtime::new(&flags.artifacts)?;
-    let mut trainer = Trainer::new(cfg, &rt)?;
+    let mut trainer =
+        Trainer::builder(cfg, &rt).trace(flags.trace.is_some()).build()?;
     let summary = trainer.run()?;
+    if let Some(path) = &flags.trace {
+        trainer.write_trace(path)?;
+        log::info!("round-event trace written to {path:?}");
+    }
 
     println!(
         "final: acc={:.4} loss={:.4} iterations={} data={:.2} MiB control={:.2} MiB sim_time={:.1}s{}",
@@ -168,6 +189,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         summary.comm.control_bytes as f64 / (1 << 20) as f64,
         summary.sim_time_s,
         summary
+            .dp
             .epsilon
             .map(|e| format!(" epsilon={e:.2}"))
             .unwrap_or_default(),
@@ -198,7 +220,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
             ("data_bytes", num(summary.comm.data_bytes as f64)),
             ("control_bytes", num(summary.comm.control_bytes as f64)),
             ("sim_time_s", num(summary.sim_time_s)),
-            ("epsilon", summary.epsilon.map(num).unwrap_or(Json::Null)),
+            ("epsilon", summary.dp.epsilon.map(num).unwrap_or(Json::Null)),
             ("curve", arr(points)),
         ]);
         write_json(path, &doc)?;
@@ -249,7 +271,7 @@ fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
             s.comm.data_bytes as f64 / (1 << 20) as f64,
             s.comm.control_bytes as f64 / (1 << 20) as f64,
             s.sim_time_s,
-            s.epsilon.map(|e| format!("{e:.1}")).unwrap_or_else(|| "-".into()),
+            s.dp.epsilon.map(|e| format!("{e:.1}")).unwrap_or_else(|| "-".into()),
         );
         rows.push(vec![
             name.clone(),
@@ -257,7 +279,7 @@ fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
             s.comm.data_bytes.to_string(),
             s.comm.control_bytes.to_string(),
             format!("{:.2}", s.sim_time_s),
-            s.epsilon.map(|e| format!("{e:.3}")).unwrap_or_default(),
+            s.dp.epsilon.map(|e| format!("{e:.3}")).unwrap_or_default(),
         ]);
     }
     if let Some(path) = &flags.csv {
@@ -287,5 +309,35 @@ fn cmd_info(args: &[String]) -> anyhow::Result<()> {
             m.artifacts.len()
         );
     }
+    Ok(())
+}
+
+/// Validate a round-event trace file against the `marfl-trace/v1`
+/// schema (header, per-line events, count). Exit 0 iff valid — the CI
+/// traced-run step gates on this.
+fn cmd_trace_check(args: &[String]) -> anyhow::Result<()> {
+    let path = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .ok_or_else(|| anyhow::anyhow!("usage: marfl trace-check <round_trace.jsonl>"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {path:?}: {e}"))?;
+    let trace = marfl::telemetry::RoundTrace::parse_jsonl(&text)?;
+    println!(
+        "{path}: valid {} trace, {} events",
+        marfl::telemetry::TRACE_SCHEMA,
+        trace.len()
+    );
+    Ok(())
+}
+
+/// Fold every `BENCH_*.json` in the results dir into one
+/// `BENCH_trajectory.json` (schema `marfl-trajectory/v1`) — the single
+/// document perf-trajectory tooling reads. `--dir` overrides `results/`.
+fn cmd_trajectory(args: &[String]) -> anyhow::Result<()> {
+    let flags = parse_flags(args)?;
+    let dir = flags.dir.unwrap_or_else(|| PathBuf::from("results"));
+    let path = marfl::telemetry::write_trajectory(&dir)?;
+    println!("-> {}", path.display());
     Ok(())
 }

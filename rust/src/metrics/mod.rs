@@ -9,4 +9,4 @@ pub mod writer;
 
 pub use curves::{CurvePoint, TrainCurve};
 pub use ledger::{CommLedger, CommSnapshot, ExchangePhase, Plane};
-pub use writer::{write_csv, write_json};
+pub use writer::{write_csv, write_json, write_jsonl};

@@ -40,6 +40,23 @@ pub fn write_json(path: &Path, value: &Json) -> Result<()> {
     Ok(())
 }
 
+/// Write a JSON Lines document: one compact JSON value per line. The
+/// serializer is deterministic (BTreeMap-ordered keys, shortest-round-trip
+/// floats), so identical value sequences produce byte-identical files —
+/// the property the round-trace writer relies on.
+pub fn write_jsonl(path: &Path, lines: &[Json]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut out = String::new();
+    for v in lines {
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+    fs::write(path, out).with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -35,52 +35,56 @@ mod pjrt;
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
 
 use anyhow::Result;
 
 use crate::models::{ArtifactMeta, ModelMeta};
-
-/// Stripes for the call-accounting maps: enough that pool workers on the
-/// peer-parallel training path effectively never contend on a lock.
-const CALL_STRIPES: usize = 8;
+use crate::telemetry::{Counter, Metric, MetricRegistry, MetricValue};
 
 /// Backend dispatch + per-entry-point execution accounting.
 pub struct Runtime {
     pub meta: ArtifactMeta,
     backend: Backend,
-    /// per-model counter keys, formatted once at construction so the
-    /// step hot path books metrics without allocating a `String`
-    keys: HashMap<String, CounterKeys>,
-    /// executions per entry point (perf accounting), striped per thread
-    /// and merged at read so counting stays off the hot path's locks
-    calls: [Mutex<HashMap<String, u64>>; CALL_STRIPES],
+    /// per-model execution counters, resolved to registry handles once
+    /// at construction so the step hot path books without formatting a
+    /// key or touching the name map
+    keys: HashMap<String, EntryCounters>,
+    /// the runtime's own metric registry: every `{model}_{entry}`
+    /// counter lives here (the old striped `calls` maps and per-call key
+    /// matching are gone)
+    registry: MetricRegistry,
 }
 
-/// Precomputed `{model}_{entry}` counter keys (one set per registry
-/// model). The per-step `format!` these replace used to be the only
-/// allocation left on the native step path.
-struct CounterKeys {
-    train_step: String,
-    kd_step: String,
-    logits: String,
-    eval: String,
+/// Pre-registered `{model}_{entry}` counter handles (one set per
+/// registry model). Same key names as the seed's per-call `format!`
+/// produced, so `call_counts()` output is unchanged.
+struct EntryCounters {
+    train_step: Counter,
+    kd_step: Counter,
+    logits: Counter,
+    eval: Counter,
     /// `group_mean_{model}_{k}` per supported group size k
-    group_mean: Vec<(usize, String)>,
+    group_mean: Vec<(usize, Counter)>,
 }
 
-impl CounterKeys {
-    fn new(model: &str, group_sizes: &[usize]) -> Self {
-        CounterKeys {
-            train_step: format!("{model}_train_step"),
-            kd_step: format!("{model}_kd_step"),
-            logits: format!("{model}_logits"),
-            eval: format!("{model}_eval"),
+impl EntryCounters {
+    fn register(
+        reg: &MetricRegistry,
+        model: &str,
+        group_sizes: &[usize],
+    ) -> Result<Self> {
+        Ok(EntryCounters {
+            train_step: reg.counter(&format!("{model}_train_step"))?,
+            kd_step: reg.counter(&format!("{model}_kd_step"))?,
+            logits: reg.counter(&format!("{model}_logits"))?,
+            eval: reg.counter(&format!("{model}_eval"))?,
             group_mean: group_sizes
                 .iter()
-                .map(|&k| (k, format!("group_mean_{model}_{k}")))
-                .collect(),
-        }
+                .map(|&k| {
+                    Ok((k, reg.counter(&format!("group_mean_{model}_{k}"))?))
+                })
+                .collect::<Result<_>>()?,
+        })
     }
 }
 
@@ -123,17 +127,18 @@ impl Runtime {
             ArtifactMeta::builtin(artifact_dir)
         };
         let backend = Self::pick_backend(&meta)?;
+        let registry = MetricRegistry::new();
         let keys = meta
             .models
             .keys()
-            .map(|name| (name.clone(), CounterKeys::new(name, &meta.group_sizes)))
-            .collect();
-        Ok(Runtime {
-            meta,
-            backend,
-            keys,
-            calls: std::array::from_fn(|_| Mutex::new(HashMap::new())),
-        })
+            .map(|name| {
+                Ok((
+                    name.clone(),
+                    EntryCounters::register(&registry, name, &meta.group_sizes)?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+        Ok(Runtime { meta, backend, keys, registry })
     }
 
     #[cfg(feature = "pjrt")]
@@ -193,37 +198,44 @@ impl Runtime {
         }
     }
 
-    /// Per-entry execution counts (perf diagnostics), merged across the
-    /// per-thread stripes.
+    /// The runtime's metric registry (every `{model}_{entry}` counter).
+    pub fn metric_registry(&self) -> &MetricRegistry {
+        &self.registry
+    }
+
+    /// Per-entry execution counts (perf diagnostics). Read back from the
+    /// registry; entries that never executed are omitted, matching the
+    /// lazily-populated maps this view replaced.
     pub fn call_counts(&self) -> HashMap<String, u64> {
-        let mut merged = HashMap::new();
-        for stripe in &self.calls {
-            for (entry, n) in stripe.lock().expect("calls lock").iter() {
-                *merged.entry(entry.clone()).or_insert(0) += n;
-            }
-        }
-        merged
+        self.registry
+            .snapshot()
+            .into_iter()
+            .filter_map(|(name, v)| match v {
+                MetricValue::Counter(n) if n > 0 => Some((name, n)),
+                _ => None,
+            })
+            .collect()
     }
 
-    /// Book one execution of `entry`. Allocation-free in the steady
-    /// state: only the first hit per (stripe, entry) stores an owned key.
-    fn count(&self, entry: &str) {
-        let stripe = &self.calls[crate::exec::thread_stripe(CALL_STRIPES)];
-        let mut map = stripe.lock().expect("calls lock");
-        match map.get_mut(entry) {
-            Some(n) => *n += 1,
-            None => {
-                map.insert(entry.to_string(), 1);
-            }
-        }
-    }
-
-    /// Count a per-model entry point through the precomputed keys;
-    /// ad-hoc metas outside the registry fall back to formatting.
-    fn count_model(&self, m: &ModelMeta, pick: fn(&CounterKeys) -> &str, suffix: &str) {
+    /// Count a per-model entry point through the pre-registered handles;
+    /// ad-hoc metas outside the artifact registry fall back to the
+    /// registry's get-or-register cold path.
+    fn count_model(
+        &self,
+        m: &ModelMeta,
+        pick: fn(&EntryCounters) -> &Counter,
+        suffix: &str,
+    ) {
         match self.keys.get(m.name.as_str()) {
-            Some(keys) => self.count(pick(keys)),
-            None => self.count(&format!("{}_{suffix}", m.name)),
+            Some(keys) => pick(keys).inc(),
+            None => {
+                if let Ok(c) = self
+                    .registry
+                    .counter_or_existing(&format!("{}_{suffix}", m.name))
+                {
+                    c.inc();
+                }
+            }
         }
     }
 
@@ -408,8 +420,15 @@ impl Runtime {
             .get(m.name.as_str())
             .and_then(|ks| ks.group_mean.iter().find(|(gk, _)| *gk == k))
         {
-            Some((_, key)) => self.count(key),
-            None => self.count(&format!("group_mean_{}_{k}", m.name)),
+            Some((_, c)) => c.inc(),
+            None => {
+                if let Ok(c) = self
+                    .registry
+                    .counter_or_existing(&format!("group_mean_{}_{k}", m.name))
+                {
+                    c.inc();
+                }
+            }
         }
         match &self.backend {
             Backend::Native => native::group_mean(m, stack, k),
@@ -453,21 +472,35 @@ mod tests {
     }
 
     #[test]
-    fn counter_keys_are_precomputed_for_every_registry_model() {
+    fn entry_counters_are_preregistered_for_every_registry_model() {
         let rt = Runtime::new(Path::new("/nonexistent_marfl_artifacts")).unwrap();
         for name in rt.meta.models.keys() {
-            let keys = &rt.keys[name];
-            assert_eq!(keys.train_step, format!("{name}_train_step"));
-            assert_eq!(keys.kd_step, format!("{name}_kd_step"));
-            assert_eq!(keys.logits, format!("{name}_logits"));
-            assert_eq!(keys.eval, format!("{name}_eval"));
-            assert_eq!(keys.group_mean.len(), rt.meta.group_sizes.len());
+            // registered under the seed's key names…
+            for entry in ["train_step", "kd_step", "logits", "eval"] {
+                assert!(
+                    rt.registry.get(&format!("{name}_{entry}")).is_some(),
+                    "{name}_{entry} not pre-registered"
+                );
+            }
+            for k in &rt.meta.group_sizes {
+                assert!(rt.registry.get(&format!("group_mean_{name}_{k}")).is_some());
+            }
+            assert_eq!(rt.keys[name].group_mean.len(), rt.meta.group_sizes.len());
         }
-        // counting through the precomputed keys lands on the same names
-        // the seed's per-call format! produced
+        // …but absent from call_counts until executed (the seed's maps
+        // were lazily populated)
+        assert!(!rt.call_counts().contains_key("cnn_train_step"));
+        // counting through the handles lands on the same names the
+        // seed's per-call format! produced
         let m = rt.meta.model("cnn").unwrap().clone();
         rt.count_model(&m, |k| &k.train_step, "train_step");
         rt.count_model(&m, |k| &k.train_step, "train_step");
         assert_eq!(rt.call_counts()["cnn_train_step"], 2);
+        // ad-hoc metas outside the artifact registry take the
+        // get-or-register cold path under the same naming scheme
+        let mut toy = m.clone();
+        toy.name = "toy".into();
+        rt.count_model(&toy, |k| &k.train_step, "train_step");
+        assert_eq!(rt.call_counts()["toy_train_step"], 1);
     }
 }

@@ -1,0 +1,629 @@
+//! Deterministic observability layer: typed metric registry, round-event
+//! tracing, and the shared bench-report schema.
+//!
+//! Three pieces, one contract:
+//!
+//! * [`MetricRegistry`] — typed [`Counter`] / [`Gauge`] / [`Histogram`]
+//!   handles, resolved **once** at registration so hot paths never format
+//!   a key string. Counters are sharded per thread exactly like
+//!   `CommLedger` (cache-line-padded atomic stripes merged at read), so
+//!   parallel lanes book without bouncing a contended line and serial ≡
+//!   parallel totals exactly (commutative addition).
+//! * [`RoundTrace`] (see [`trace`]) — the per-iteration event timeline,
+//!   keyed to `SimClock` simulated seconds, recorded only in serial
+//!   schedule phases or folded in deterministic group order.
+//! * [`BenchReport`] (see [`report`]) — the schema-versioned JSON
+//!   envelope every bench emits through, plus the trajectory folder.
+//!
+//! Nothing in this module touches an RNG, the `SimClock`, the ledger, or
+//! model state: telemetry-off runs are bit-identical to telemetry-on runs
+//! by construction, and the registry itself is always cheap enough to
+//! leave on (see the micro_hotpath telemetry-overhead ablation).
+
+pub mod report;
+pub mod trace;
+
+pub use report::{fold_trajectory, write_trajectory, BenchReport, BENCH_SCHEMA, TRAJECTORY_SCHEMA};
+pub use trace::{trace_handle, EventKind, RoundTrace, TraceEvent, TraceHandle, TRACE_SCHEMA};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::net::faults::FaultCounters;
+
+/// Counter stripe count — same sizing rationale as `CommLedger`: a power
+/// of two a little above typical core counts, indexed by the pool's
+/// stable per-thread stripe id.
+const METRIC_STRIPES: usize = 16;
+
+/// One cache-line-aligned counter stripe.
+#[derive(Default)]
+#[repr(align(64))]
+struct PaddedCell(AtomicU64);
+
+fn stripe_index() -> usize {
+    crate::exec::thread_stripe(METRIC_STRIPES)
+}
+
+// ---------------------------------------------------------------------------
+// Counter
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct CounterCore {
+    stripes: [PaddedCell; METRIC_STRIPES],
+}
+
+/// Monotonic `u64` counter. Handles are cheap to clone (an `Arc`); the
+/// hot path is one relaxed `fetch_add` on a thread-private stripe.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<CounterCore>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if n != 0 {
+            self.0.stripes[stripe_index()].0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Merged total across all stripes.
+    pub fn get(&self) -> u64 {
+        self.0.stripes.iter().map(|c| c.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl std::fmt::Debug for Counter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Counter").field(&self.get()).finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gauge
+// ---------------------------------------------------------------------------
+
+/// Last-value `f64` gauge (bit-stored in an `AtomicU64`). `set` is a
+/// plain store; `add` is a CAS loop — gauges are written from serial
+/// phases (clock spans, end-of-run scorecards), never from lanes.
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, dv: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + dv).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+impl std::fmt::Debug for Gauge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Gauge").field(&self.get()).finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histogram
+// ---------------------------------------------------------------------------
+
+/// Power-of-two bucket count: bucket `b` holds samples in
+/// `[2^(b-1), 2^b)` (bucket 0 holds zero), covering the full `u64` range.
+const HIST_BUCKETS: usize = 65;
+
+/// One stripe of histogram state. Buckets within a stripe share lines,
+/// but stripes never share with each other — the same contention story
+/// as the counters, just wider.
+#[repr(align(64))]
+struct HistStripe {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for HistStripe {
+    fn default() -> Self {
+        HistStripe {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+#[derive(Default)]
+struct HistogramCore {
+    stripes: [HistStripe; METRIC_STRIPES],
+}
+
+/// Log₂-bucketed `u64` histogram (latency ticks, retry counts, payload
+/// sizes). Exact `count`/`sum`, bucketed distribution.
+#[derive(Clone, Default)]
+pub struct Histogram(Arc<HistogramCore>);
+
+/// Merged histogram state at one point in time.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// `buckets[b]` counts samples in `[2^(b-1), 2^b)`; `buckets[0]` counts zeros.
+    pub buckets: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        let stripe = &self.0.stripes[stripe_index()];
+        stripe.count.fetch_add(1, Ordering::Relaxed);
+        stripe.sum.fetch_add(v, Ordering::Relaxed);
+        let b = (64 - v.leading_zeros()) as usize;
+        stripe.buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut s = HistSnapshot { count: 0, sum: 0, buckets: vec![0; HIST_BUCKETS] };
+        for stripe in &self.0.stripes {
+            s.count += stripe.count.load(Ordering::Relaxed);
+            s.sum += stripe.sum.load(Ordering::Relaxed);
+            for (acc, b) in s.buckets.iter_mut().zip(&stripe.buckets) {
+                *acc += b.load(Ordering::Relaxed);
+            }
+        }
+        s
+    }
+
+    /// Arithmetic mean of observed samples (0 if empty).
+    pub fn mean(&self) -> f64 {
+        let s = self.snapshot();
+        if s.count == 0 {
+            0.0
+        } else {
+            s.sum as f64 / s.count as f64
+        }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        f.debug_struct("Histogram").field("count", &s.count).field("sum", &s.sum).finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// A registered metric handle, any kind.
+#[derive(Clone, Debug)]
+pub enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// Point-in-time value of one metric.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistSnapshot),
+}
+
+/// The typed metric registry. Names resolve to handles **once** at
+/// registration; after that the map is never touched on a hot path.
+/// Registering the same name twice is an error — handles are meant to be
+/// created at construction and threaded by value, not re-looked-up.
+#[derive(Default)]
+pub struct MetricRegistry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl MetricRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a fresh counter under `name`. Errors if `name` exists.
+    pub fn counter(&self, name: &str) -> Result<Counter> {
+        let c = Counter::default();
+        self.insert(name, Metric::Counter(c.clone()))?;
+        Ok(c)
+    }
+
+    /// Register a fresh gauge under `name`. Errors if `name` exists.
+    pub fn gauge(&self, name: &str) -> Result<Gauge> {
+        let g = Gauge::default();
+        self.insert(name, Metric::Gauge(g.clone()))?;
+        Ok(g)
+    }
+
+    /// Register a fresh histogram under `name`. Errors if `name` exists.
+    pub fn histogram(&self, name: &str) -> Result<Histogram> {
+        let h = Histogram::default();
+        self.insert(name, Metric::Histogram(h.clone()))?;
+        Ok(h)
+    }
+
+    /// Get-or-register a counter — the cold-path fallback for callers
+    /// that only know the name at call time (e.g. ad-hoc models outside
+    /// the artifact registry). Errors if `name` is registered as a
+    /// different kind.
+    pub fn counter_or_existing(&self, name: &str) -> Result<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m.get(name) {
+            Some(Metric::Counter(c)) => Ok(c.clone()),
+            Some(_) => bail!("metric {name:?} already registered as a non-counter"),
+            None => {
+                let c = Counter::default();
+                m.insert(name.to_string(), Metric::Counter(c.clone()));
+                Ok(c)
+            }
+        }
+    }
+
+    fn insert(&self, name: &str, metric: Metric) -> Result<()> {
+        let mut m = self.metrics.lock().unwrap();
+        if m.contains_key(name) {
+            bail!("metric {name:?} already registered");
+        }
+        m.insert(name.to_string(), metric);
+        Ok(())
+    }
+
+    /// Look up an existing handle by name (registration-time use only).
+    pub fn get(&self, name: &str) -> Option<Metric> {
+        self.metrics.lock().unwrap().get(name).cloned()
+    }
+
+    /// Current value of a counter (0 if absent — absent and never-bumped
+    /// are indistinguishable by design).
+    pub fn counter_value(&self, name: &str) -> u64 {
+        match self.get(name) {
+            Some(Metric::Counter(c)) => c.get(),
+            _ => 0,
+        }
+    }
+
+    /// Current value of a gauge, if registered.
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        match self.get(name) {
+            Some(Metric::Gauge(g)) => Some(g.get()),
+            _ => None,
+        }
+    }
+
+    /// Merged point-in-time view of every registered metric, in name
+    /// order (BTreeMap — deterministic iteration).
+    pub fn snapshot(&self) -> BTreeMap<String, MetricValue> {
+        self.metrics
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| {
+                let val = match v {
+                    Metric::Counter(c) => MetricValue::Counter(c.get()),
+                    Metric::Gauge(g) => MetricValue::Gauge(g.get()),
+                    Metric::Histogram(h) => MetricValue::Histogram(h.snapshot()),
+                };
+                (k.clone(), val)
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for MetricRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricRegistry").field("metrics", &self.snapshot()).finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trainer metric set + scorecard views
+// ---------------------------------------------------------------------------
+
+/// Reliability scorecard: churn/reduce-scatter recovery counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReliabilityScorecard {
+    /// Owner-drop fallbacks: RS groups that fell back to full-gather.
+    pub rs_fallbacks: u64,
+    /// RS retries that succeeded within the retry budget.
+    pub rs_retries: u64,
+    /// Crash rejoins served by a state pull from a live peer.
+    pub rejoin_pulls: u64,
+    /// Groups re-formed after a member churned out mid-matchmaking.
+    pub churn_rescues: u64,
+    /// Markov-churn peers revived by the Gilbert–Elliott good transition.
+    pub markov_revivals: u64,
+}
+
+/// Fault scorecard: link-level loss/retry/crash counters plus the
+/// straggler and bandwidth observations. Field names mirror
+/// [`FaultCounters`] one-for-one so bench CSV columns stay stable.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultScorecard {
+    pub msgs_lost: u64,
+    pub retries: u64,
+    pub timeouts: u64,
+    pub quorum_degraded_rounds: u64,
+    pub crashes: u64,
+    pub ge_bad_transitions: u64,
+    pub bursty_losses: u64,
+    /// Simulated seconds of straggler tail exposed on the critical path.
+    pub straggler_exposed_s: f64,
+    /// Heterogeneous-bandwidth redraws applied over the run.
+    pub bw_redraws: u64,
+    /// p10/p50/p90 of drawn link bandwidths (present when links are on).
+    pub bw_percentiles: Option<[f64; 3]>,
+}
+
+impl FaultScorecard {
+    /// True when any fault *counter* fired (the straggler/bandwidth
+    /// observations are not faults).
+    pub fn any(&self) -> bool {
+        self.counters().any()
+    }
+
+    /// The link-fault counters as the wire-level [`FaultCounters`] type.
+    pub fn counters(&self) -> FaultCounters {
+        FaultCounters {
+            msgs_lost: self.msgs_lost,
+            retries: self.retries,
+            timeouts: self.timeouts,
+            quorum_degraded_rounds: self.quorum_degraded_rounds,
+            crashes: self.crashes,
+            ge_bad_transitions: self.ge_bad_transitions,
+            bursty_losses: self.bursty_losses,
+        }
+    }
+}
+
+/// Byzantine scorecard: attack pressure and defense quality.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ByzantineScorecard {
+    pub attackers_active: u64,
+    pub flagged_peers: u64,
+    pub flag_precision: f64,
+    pub flag_recall: f64,
+    pub paroles_granted: u64,
+    pub reban_count: u64,
+}
+
+/// Differential-privacy scorecard.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DpScorecard {
+    /// Spent privacy budget (None when DP is off).
+    pub epsilon: Option<f64>,
+}
+
+/// Every handle the trainer books through, resolved once at
+/// construction. This is the single home for the counters that were
+/// previously hand-threaded as flat `Trainer` fields; the `RunSummary`
+/// scorecards are views over these handles.
+#[derive(Clone, Debug)]
+pub struct TrainerMetrics {
+    // reliability
+    pub rs_fallbacks: Counter,
+    pub rs_retries: Counter,
+    pub rejoin_pulls: Counter,
+    pub churn_rescues: Counter,
+    pub markov_revivals: Counter,
+    // faults
+    pub msgs_lost: Counter,
+    pub retries: Counter,
+    pub timeouts: Counter,
+    pub quorum_degraded_rounds: Counter,
+    pub crashes: Counter,
+    pub ge_bad_transitions: Counter,
+    pub bursty_losses: Counter,
+    pub bw_redraws: Counter,
+    pub straggler_exposed_s: Gauge,
+    // byzantine
+    pub attackers_active: Counter,
+    pub flagged_peers: Counter,
+    pub paroles_granted: Counter,
+    pub reban_count: Counter,
+    pub flag_precision: Gauge,
+    pub flag_recall: Gauge,
+}
+
+impl TrainerMetrics {
+    /// Register the full trainer metric set under the `fl.*` namespace.
+    /// Errors if any name is taken (one trainer per registry).
+    pub fn register(reg: &MetricRegistry) -> Result<Self> {
+        Ok(TrainerMetrics {
+            rs_fallbacks: reg.counter("fl.reliability.rs_fallbacks")?,
+            rs_retries: reg.counter("fl.reliability.rs_retries")?,
+            rejoin_pulls: reg.counter("fl.reliability.rejoin_pulls")?,
+            churn_rescues: reg.counter("fl.reliability.churn_rescues")?,
+            markov_revivals: reg.counter("fl.reliability.markov_revivals")?,
+            msgs_lost: reg.counter("fl.faults.msgs_lost")?,
+            retries: reg.counter("fl.faults.retries")?,
+            timeouts: reg.counter("fl.faults.timeouts")?,
+            quorum_degraded_rounds: reg.counter("fl.faults.quorum_degraded_rounds")?,
+            crashes: reg.counter("fl.faults.crashes")?,
+            ge_bad_transitions: reg.counter("fl.faults.ge_bad_transitions")?,
+            bursty_losses: reg.counter("fl.faults.bursty_losses")?,
+            bw_redraws: reg.counter("fl.faults.bw_redraws")?,
+            straggler_exposed_s: reg.gauge("fl.faults.straggler_exposed_s")?,
+            attackers_active: reg.counter("fl.byzantine.attackers_active")?,
+            flagged_peers: reg.counter("fl.byzantine.flagged_peers")?,
+            paroles_granted: reg.counter("fl.byzantine.paroles_granted")?,
+            reban_count: reg.counter("fl.byzantine.reban_count")?,
+            flag_precision: reg.gauge("fl.byzantine.flag_precision")?,
+            flag_recall: reg.gauge("fl.byzantine.flag_recall")?,
+        })
+    }
+
+    /// Fold one iteration's wire-level fault counters into the registry.
+    pub fn add_faults(&self, fc: &FaultCounters) {
+        self.msgs_lost.add(fc.msgs_lost);
+        self.retries.add(fc.retries);
+        self.timeouts.add(fc.timeouts);
+        self.quorum_degraded_rounds.add(fc.quorum_degraded_rounds);
+        self.crashes.add(fc.crashes);
+        self.ge_bad_transitions.add(fc.ge_bad_transitions);
+        self.bursty_losses.add(fc.bursty_losses);
+    }
+
+    pub fn reliability(&self) -> ReliabilityScorecard {
+        ReliabilityScorecard {
+            rs_fallbacks: self.rs_fallbacks.get(),
+            rs_retries: self.rs_retries.get(),
+            rejoin_pulls: self.rejoin_pulls.get(),
+            churn_rescues: self.churn_rescues.get(),
+            markov_revivals: self.markov_revivals.get(),
+        }
+    }
+
+    /// Fault scorecard view; `bw_percentiles` is passed by the trainer
+    /// because it only exists when a link table is configured.
+    pub fn faults(&self, bw_percentiles: Option<[f64; 3]>) -> FaultScorecard {
+        FaultScorecard {
+            msgs_lost: self.msgs_lost.get(),
+            retries: self.retries.get(),
+            timeouts: self.timeouts.get(),
+            quorum_degraded_rounds: self.quorum_degraded_rounds.get(),
+            crashes: self.crashes.get(),
+            ge_bad_transitions: self.ge_bad_transitions.get(),
+            bursty_losses: self.bursty_losses.get(),
+            straggler_exposed_s: self.straggler_exposed_s.get(),
+            bw_redraws: self.bw_redraws.get(),
+            bw_percentiles,
+        }
+    }
+
+    pub fn byzantine(&self) -> ByzantineScorecard {
+        ByzantineScorecard {
+            attackers_active: self.attackers_active.get(),
+            flagged_peers: self.flagged_peers.get(),
+            flag_precision: self.flag_precision.get(),
+            flag_recall: self.flag_recall.get(),
+            paroles_granted: self.paroles_granted.get(),
+            reban_count: self.reban_count.get(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts_across_threads_exactly() {
+        let reg = MetricRegistry::new();
+        let c = reg.counter("t.hits").unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+        assert_eq!(reg.counter_value("t.hits"), 4000);
+    }
+
+    #[test]
+    fn reregistration_is_rejected() {
+        let reg = MetricRegistry::new();
+        reg.counter("x").unwrap();
+        assert!(reg.counter("x").is_err());
+        assert!(reg.gauge("x").is_err());
+        assert!(reg.histogram("x").is_err());
+    }
+
+    #[test]
+    fn counter_or_existing_returns_same_slot() {
+        let reg = MetricRegistry::new();
+        let a = reg.counter_or_existing("adhoc").unwrap();
+        let b = reg.counter_or_existing("adhoc").unwrap();
+        a.add(3);
+        b.add(4);
+        assert_eq!(reg.counter_value("adhoc"), 7);
+        reg.gauge("g").unwrap();
+        assert!(reg.counter_or_existing("g").is_err());
+    }
+
+    #[test]
+    fn gauge_set_add_get() {
+        let reg = MetricRegistry::new();
+        let g = reg.gauge("t.g").unwrap();
+        g.set(1.5);
+        g.add(0.25);
+        assert_eq!(g.get(), 1.75);
+        assert_eq!(reg.gauge_value("t.g"), Some(1.75));
+        assert_eq!(reg.gauge_value("missing"), None);
+    }
+
+    #[test]
+    fn histogram_buckets_and_mean() {
+        let h = Histogram::default();
+        h.observe(0);
+        h.observe(1);
+        h.observe(2);
+        h.observe(3);
+        h.observe(1024);
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 1030);
+        assert_eq!(s.buckets[0], 1); // zero
+        assert_eq!(s.buckets[1], 1); // 1
+        assert_eq!(s.buckets[2], 2); // 2..4
+        assert_eq!(s.buckets[11], 1); // 1024..2048
+        assert_eq!(h.mean(), 206.0);
+    }
+
+    #[test]
+    fn snapshot_is_name_ordered() {
+        let reg = MetricRegistry::new();
+        reg.counter("b").unwrap();
+        reg.counter("a").unwrap();
+        let names: Vec<_> = reg.snapshot().into_keys().collect();
+        assert_eq!(names, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn fault_scorecard_round_trips_counters() {
+        let fc = FaultCounters {
+            msgs_lost: 1,
+            retries: 2,
+            timeouts: 3,
+            quorum_degraded_rounds: 4,
+            crashes: 5,
+            ge_bad_transitions: 6,
+            bursty_losses: 7,
+        };
+        let reg = MetricRegistry::new();
+        let tm = TrainerMetrics::register(&reg).unwrap();
+        tm.add_faults(&fc);
+        let sc = tm.faults(None);
+        assert_eq!(sc.counters(), fc);
+        assert!(sc.any());
+        assert!(!FaultScorecard::default().any());
+    }
+}

@@ -1,0 +1,175 @@
+//! Shared bench-report schema and the trajectory folder.
+//!
+//! Every bench emits its `BENCH_*.json` through [`BenchReport`]: the
+//! bench's own fields stay at the top level (existing dashboards keep
+//! their key paths), and the envelope stamps two extra keys — `schema`
+//! ([`BENCH_SCHEMA`]) and `bench` (the bench's name). `fold_trajectory`
+//! then folds every `BENCH_*.json` in a results directory into one
+//! `BENCH_trajectory.json` (`make trajectory`), which CI uploads as the
+//! cross-PR perf trajectory artifact.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::write_json;
+use crate::util::json::{obj, parse, s, Json};
+
+/// Bench-report schema identifier, bumped on any envelope change.
+pub const BENCH_SCHEMA: &str = "marfl-bench/v1";
+
+/// Trajectory schema identifier.
+pub const TRAJECTORY_SCHEMA: &str = "marfl-trajectory/v1";
+
+/// Builder for one bench's `BENCH_<name>.json` document.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    bench: String,
+    fields: Vec<(String, Json)>,
+}
+
+impl BenchReport {
+    /// `name` is the file stem suffix: `BenchReport::new("churn")`
+    /// writes `BENCH_churn.json`.
+    pub fn new(name: &str) -> Self {
+        BenchReport { bench: name.to_string(), fields: Vec::new() }
+    }
+
+    /// Add one top-level field. `schema` and `bench` are reserved for
+    /// the envelope.
+    pub fn field(mut self, key: &str, value: Json) -> Self {
+        assert!(key != "schema" && key != "bench", "reserved envelope key {key:?}");
+        self.fields.push((key.to_string(), value));
+        self
+    }
+
+    /// The full document: bench fields plus the envelope keys.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> =
+            vec![("schema", s(BENCH_SCHEMA)), ("bench", s(&self.bench))];
+        for (k, v) in &self.fields {
+            pairs.push((k.as_str(), v.clone()));
+        }
+        obj(pairs)
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`, returning the path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        write_json(&path, &self.to_json())?;
+        Ok(path)
+    }
+}
+
+/// Validate that `doc` is a schema-stamped bench report.
+pub fn validate_bench_doc(doc: &Json) -> Result<()> {
+    match doc.get("schema").and_then(|v| v.as_str()) {
+        Some(BENCH_SCHEMA) => {}
+        Some(other) => bail!("unsupported bench schema {other:?} (want {BENCH_SCHEMA})"),
+        None => bail!("bench report missing \"schema\" key"),
+    }
+    if doc.get("bench").and_then(|v| v.as_str()).is_none() {
+        bail!("bench report missing \"bench\" key");
+    }
+    Ok(())
+}
+
+/// Fold every `BENCH_*.json` in `dir` (except the trajectory itself)
+/// into one trajectory document, keyed by bench file stem in sorted
+/// order. Unstamped legacy documents are folded as-is — the trajectory
+/// records what was actually emitted.
+pub fn fold_trajectory(dir: &Path) -> Result<Json> {
+    let mut names: Vec<String> = Vec::new();
+    for entry in fs::read_dir(dir).with_context(|| format!("read {dir:?}"))? {
+        let name = entry?.file_name().to_string_lossy().into_owned();
+        if name.starts_with("BENCH_") && name.ends_with(".json") && name != "BENCH_trajectory.json" {
+            names.push(name);
+        }
+    }
+    if names.is_empty() {
+        bail!("no BENCH_*.json files in {dir:?}");
+    }
+    names.sort();
+    let mut benches: Vec<(&str, Json)> = Vec::new();
+    let stems: Vec<String> = names
+        .iter()
+        .map(|n| n.trim_start_matches("BENCH_").trim_end_matches(".json").to_string())
+        .collect();
+    for (name, stem) in names.iter().zip(&stems) {
+        let text = fs::read_to_string(dir.join(name)).with_context(|| format!("read {name}"))?;
+        let doc = parse(&text).map_err(|e| anyhow::anyhow!("parse {name}: {e}"))?;
+        benches.push((stem.as_str(), doc));
+    }
+    Ok(obj(vec![
+        ("schema", s(TRAJECTORY_SCHEMA)),
+        ("benches", obj(benches)),
+    ]))
+}
+
+/// Fold and write `BENCH_trajectory.json` into `dir`, returning the path.
+pub fn write_trajectory(dir: &Path) -> Result<PathBuf> {
+    let doc = fold_trajectory(dir)?;
+    let path = dir.join("BENCH_trajectory.json");
+    write_json(&path, &doc)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::num;
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("marfl_report_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn report_stamps_envelope_and_keeps_fields_top_level() {
+        let r = BenchReport::new("demo").field("ns_per_step", num(42.0));
+        let doc = r.to_json();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("demo"));
+        assert_eq!(doc.get("ns_per_step").unwrap().as_f64(), Some(42.0));
+        validate_bench_doc(&doc).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "reserved envelope key")]
+    fn reserved_keys_rejected() {
+        let _ = BenchReport::new("demo").field("schema", num(1.0));
+    }
+
+    #[test]
+    fn validate_rejects_unstamped_docs() {
+        assert!(validate_bench_doc(&obj(vec![("x", num(1.0))])).is_err());
+        assert!(validate_bench_doc(&obj(vec![("schema", s("other/v9")), ("bench", s("x"))])).is_err());
+        assert!(validate_bench_doc(&obj(vec![("schema", s(BENCH_SCHEMA))])).is_err());
+    }
+
+    #[test]
+    fn trajectory_folds_all_bench_docs() {
+        let dir = tempdir("fold");
+        BenchReport::new("alpha").field("v", num(1.0)).write(&dir).unwrap();
+        BenchReport::new("beta").field("v", num(2.0)).write(&dir).unwrap();
+        let path = write_trajectory(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap(), "BENCH_trajectory.json");
+        let doc = parse(&fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(TRAJECTORY_SCHEMA));
+        let benches = doc.get("benches").unwrap();
+        assert_eq!(benches.get("alpha").unwrap().get("v").unwrap().as_f64(), Some(1.0));
+        assert_eq!(benches.get("beta").unwrap().get("v").unwrap().as_f64(), Some(2.0));
+        // refolding must not ingest the trajectory file itself
+        let again = fold_trajectory(&dir).unwrap();
+        assert_eq!(again.get("benches").unwrap().as_obj().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn trajectory_of_empty_dir_errors() {
+        let dir = tempdir("empty");
+        assert!(fold_trajectory(&dir).is_err());
+    }
+}

@@ -1,0 +1,378 @@
+//! Per-iteration round-event timeline.
+//!
+//! Every event is keyed to **simulated** seconds (`SimClock::now()`),
+//! never wall clock, and is recorded either in a serial schedule phase
+//! (plan drawing, matchmaking, reputation folds) or derived from values
+//! that are themselves bit-identical between the serial and parallel
+//! engines (clock spans, lane outcome counters). The trace is therefore
+//! byte-for-byte identical under `MARFL_THREADS=1` and `MARFL_THREADS=4`
+//! — that equality is pinned by `tests/telemetry.rs` and checked in CI.
+//!
+//! Wire format: JSON Lines. Line 1 is a header object carrying
+//! [`TRACE_SCHEMA`]; every following line is one event object with an
+//! `ev` discriminant plus `iter` / `t` (simulated seconds) keys. The
+//! writer goes through `util::json`, whose object keys are BTreeMap-
+//! sorted — serialization itself is deterministic.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{num, obj, parse, s, Json};
+
+/// Trace schema identifier, bumped on any wire-format change.
+pub const TRACE_SCHEMA: &str = "marfl-trace/v1";
+
+/// One discrete happening or span on the round timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// An FL iteration begins with `participants` live peers.
+    IterStart { participants: u64 },
+    /// Parallel local-SGD span: `dt` simulated seconds on the critical
+    /// path, of which `straggler_dt` is exposed straggler tail.
+    LocalCompute { dt: f64, straggler_dt: f64 },
+    /// DHT matchmaking for one group round: `control_s` of control-plane
+    /// time, `hidden` when overlapped behind the previous exchange,
+    /// producing `groups` groups.
+    Matchmaking { round: u64, control_s: f64, hidden: bool, groups: u64 },
+    /// One group round's exchange span, split into reduce-scatter and
+    /// all-gather phase times (full-gather books everything into `rs_s`).
+    Exchange { round: u64, groups: u64, rs_s: f64, ag_s: f64 },
+    /// A group burned link-fault retries/timeouts this round.
+    FaultRetries { round: u64, group: u64, retries: u64, timeouts: u64 },
+    /// A group proceeded with a survivor quorum after losses.
+    QuorumDegraded { round: u64, group: u64, lost: u64 },
+    /// An RS group fell back to full-gather after its owner dropped.
+    OwnerDropFallback { round: u64, group: u64 },
+    /// An RS group succeeded within its retry budget.
+    RsRetry { round: u64, group: u64 },
+    /// A group lost quorum and aborted the round.
+    GroupAbort { round: u64, group: u64, lost: u64 },
+    /// A peer crashed mid-exchange.
+    Crash { peer: u64 },
+    /// A crashed peer rejoined by pulling state from a live peer.
+    CrashRejoin { peer: u64 },
+    /// Reputation ban crossed the threshold for `peer`.
+    Ban { peer: u64 },
+    /// A banned peer was paroled after its clean-decay window.
+    Parole { peer: u64 },
+    /// A paroled peer tripped the threshold again.
+    Reban { peer: u64 },
+    /// Group-KD distillation summary for the iteration.
+    Mkd { rounds: u64, kd_steps: u64, teacher_transfers: u64, mean_loss: f64 },
+    /// Periodic evaluation point.
+    Eval { loss: f64, accuracy: f64 },
+}
+
+/// One timeline entry: which iteration, at what simulated time, what.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub iter: u64,
+    /// Simulated seconds (`SimClock::now()` at record time).
+    pub t: f64,
+    pub kind: EventKind,
+}
+
+/// The recorded timeline. Shared as a [`TraceHandle`]; the mutex is only
+/// ever locked from serial schedule phases, never from parallel lanes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundTrace {
+    events: Vec<TraceEvent>,
+}
+
+/// Shared handle threaded through `Trainer` → `MarAggregator`.
+pub type TraceHandle = Arc<Mutex<RoundTrace>>;
+
+/// Fresh shared trace.
+pub fn trace_handle() -> TraceHandle {
+    Arc::new(Mutex::new(RoundTrace::default()))
+}
+
+impl RoundTrace {
+    pub fn record(&mut self, iter: u64, t: f64, kind: EventKind) {
+        self.events.push(TraceEvent { iter, t, kind });
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The document as JSON values: header line, then one per event.
+    fn lines(&self) -> Vec<Json> {
+        let mut lines = Vec::with_capacity(self.events.len() + 1);
+        lines.push(obj(vec![
+            ("schema", s(TRACE_SCHEMA)),
+            ("events", num(self.events.len() as f64)),
+        ]));
+        lines.extend(self.events.iter().map(TraceEvent::to_json));
+        lines
+    }
+
+    /// Serialize as JSONL: header line, then one line per event.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for line in self.lines() {
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the JSONL document to `path` (creating parent dirs).
+    pub fn write_jsonl(&self, path: &Path) -> Result<()> {
+        crate::metrics::write_jsonl(path, &self.lines())
+    }
+
+    /// Parse and validate a JSONL trace document — the schema check used
+    /// by `marfl trace-check` and the CI traced-run step. Rejects a
+    /// missing/mismatched header, unknown event discriminants, and
+    /// missing fields.
+    pub fn parse_jsonl(text: &str) -> Result<RoundTrace> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().context("empty trace document")?;
+        let header = parse(header).map_err(|e| anyhow::anyhow!("bad header: {e}"))?;
+        match header.get("schema").and_then(|v| v.as_str()) {
+            Some(TRACE_SCHEMA) => {}
+            Some(other) => bail!("unsupported trace schema {other:?} (want {TRACE_SCHEMA})"),
+            None => bail!("trace header missing \"schema\" key"),
+        }
+        let mut trace = RoundTrace::default();
+        for (i, line) in lines.enumerate() {
+            let v = parse(line).map_err(|e| anyhow::anyhow!("bad event on line {}: {e}", i + 2))?;
+            trace.events.push(TraceEvent::from_json(&v).with_context(|| format!("line {}", i + 2))?);
+        }
+        if let Some(n) = header.get("events").and_then(|v| v.as_f64()) {
+            if n as usize != trace.events.len() {
+                bail!("header declares {} events, document has {}", n as usize, trace.events.len());
+            }
+        }
+        Ok(trace)
+    }
+}
+
+impl TraceEvent {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("iter", num(self.iter as f64)), ("t", num(self.t))];
+        let ev = match &self.kind {
+            EventKind::IterStart { participants } => {
+                pairs.push(("participants", num(*participants as f64)));
+                "iter_start"
+            }
+            EventKind::LocalCompute { dt, straggler_dt } => {
+                pairs.push(("dt", num(*dt)));
+                pairs.push(("straggler_dt", num(*straggler_dt)));
+                "local_compute"
+            }
+            EventKind::Matchmaking { round, control_s, hidden, groups } => {
+                pairs.push(("round", num(*round as f64)));
+                pairs.push(("control_s", num(*control_s)));
+                pairs.push(("hidden", Json::Bool(*hidden)));
+                pairs.push(("groups", num(*groups as f64)));
+                "matchmaking"
+            }
+            EventKind::Exchange { round, groups, rs_s, ag_s } => {
+                pairs.push(("round", num(*round as f64)));
+                pairs.push(("groups", num(*groups as f64)));
+                pairs.push(("rs_s", num(*rs_s)));
+                pairs.push(("ag_s", num(*ag_s)));
+                "exchange"
+            }
+            EventKind::FaultRetries { round, group, retries, timeouts } => {
+                pairs.push(("round", num(*round as f64)));
+                pairs.push(("group", num(*group as f64)));
+                pairs.push(("retries", num(*retries as f64)));
+                pairs.push(("timeouts", num(*timeouts as f64)));
+                "fault_retries"
+            }
+            EventKind::QuorumDegraded { round, group, lost } => {
+                pairs.push(("round", num(*round as f64)));
+                pairs.push(("group", num(*group as f64)));
+                pairs.push(("lost", num(*lost as f64)));
+                "quorum_degraded"
+            }
+            EventKind::OwnerDropFallback { round, group } => {
+                pairs.push(("round", num(*round as f64)));
+                pairs.push(("group", num(*group as f64)));
+                "owner_drop_fallback"
+            }
+            EventKind::RsRetry { round, group } => {
+                pairs.push(("round", num(*round as f64)));
+                pairs.push(("group", num(*group as f64)));
+                "rs_retry"
+            }
+            EventKind::GroupAbort { round, group, lost } => {
+                pairs.push(("round", num(*round as f64)));
+                pairs.push(("group", num(*group as f64)));
+                pairs.push(("lost", num(*lost as f64)));
+                "group_abort"
+            }
+            EventKind::Crash { peer } => {
+                pairs.push(("peer", num(*peer as f64)));
+                "crash"
+            }
+            EventKind::CrashRejoin { peer } => {
+                pairs.push(("peer", num(*peer as f64)));
+                "crash_rejoin"
+            }
+            EventKind::Ban { peer } => {
+                pairs.push(("peer", num(*peer as f64)));
+                "ban"
+            }
+            EventKind::Parole { peer } => {
+                pairs.push(("peer", num(*peer as f64)));
+                "parole"
+            }
+            EventKind::Reban { peer } => {
+                pairs.push(("peer", num(*peer as f64)));
+                "reban"
+            }
+            EventKind::Mkd { rounds, kd_steps, teacher_transfers, mean_loss } => {
+                pairs.push(("rounds", num(*rounds as f64)));
+                pairs.push(("kd_steps", num(*kd_steps as f64)));
+                pairs.push(("teacher_transfers", num(*teacher_transfers as f64)));
+                pairs.push(("mean_loss", num(*mean_loss)));
+                "mkd"
+            }
+            EventKind::Eval { loss, accuracy } => {
+                pairs.push(("loss", num(*loss)));
+                pairs.push(("accuracy", num(*accuracy)));
+                "eval"
+            }
+        };
+        pairs.push(("ev", s(ev)));
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceEvent> {
+        fn f(v: &Json, key: &str) -> Result<f64> {
+            v.get(key).and_then(|x| x.as_f64()).with_context(|| format!("missing numeric {key:?}"))
+        }
+        fn u(v: &Json, key: &str) -> Result<u64> {
+            Ok(f(v, key)? as u64)
+        }
+        let ev = v.get("ev").and_then(|x| x.as_str()).context("missing \"ev\" discriminant")?;
+        let kind = match ev {
+            "iter_start" => EventKind::IterStart { participants: u(v, "participants")? },
+            "local_compute" => EventKind::LocalCompute { dt: f(v, "dt")?, straggler_dt: f(v, "straggler_dt")? },
+            "matchmaking" => EventKind::Matchmaking {
+                round: u(v, "round")?,
+                control_s: f(v, "control_s")?,
+                hidden: matches!(v.get("hidden"), Some(Json::Bool(true))),
+                groups: u(v, "groups")?,
+            },
+            "exchange" => EventKind::Exchange {
+                round: u(v, "round")?,
+                groups: u(v, "groups")?,
+                rs_s: f(v, "rs_s")?,
+                ag_s: f(v, "ag_s")?,
+            },
+            "fault_retries" => EventKind::FaultRetries {
+                round: u(v, "round")?,
+                group: u(v, "group")?,
+                retries: u(v, "retries")?,
+                timeouts: u(v, "timeouts")?,
+            },
+            "quorum_degraded" => EventKind::QuorumDegraded {
+                round: u(v, "round")?,
+                group: u(v, "group")?,
+                lost: u(v, "lost")?,
+            },
+            "owner_drop_fallback" => {
+                EventKind::OwnerDropFallback { round: u(v, "round")?, group: u(v, "group")? }
+            }
+            "rs_retry" => EventKind::RsRetry { round: u(v, "round")?, group: u(v, "group")? },
+            "group_abort" => EventKind::GroupAbort {
+                round: u(v, "round")?,
+                group: u(v, "group")?,
+                lost: u(v, "lost")?,
+            },
+            "crash" => EventKind::Crash { peer: u(v, "peer")? },
+            "crash_rejoin" => EventKind::CrashRejoin { peer: u(v, "peer")? },
+            "ban" => EventKind::Ban { peer: u(v, "peer")? },
+            "parole" => EventKind::Parole { peer: u(v, "peer")? },
+            "reban" => EventKind::Reban { peer: u(v, "peer")? },
+            "mkd" => EventKind::Mkd {
+                rounds: u(v, "rounds")?,
+                kd_steps: u(v, "kd_steps")?,
+                teacher_transfers: u(v, "teacher_transfers")?,
+                mean_loss: f(v, "mean_loss")?,
+            },
+            "eval" => EventKind::Eval { loss: f(v, "loss")?, accuracy: f(v, "accuracy")? },
+            other => bail!("unknown event kind {other:?}"),
+        };
+        Ok(TraceEvent { iter: u(v, "iter")?, t: f(v, "t")?, kind })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RoundTrace {
+        let mut tr = RoundTrace::default();
+        tr.record(0, 0.0, EventKind::IterStart { participants: 16 });
+        tr.record(0, 1.25, EventKind::LocalCompute { dt: 1.25, straggler_dt: 0.5 });
+        tr.record(0, 1.5, EventKind::Matchmaking { round: 0, control_s: 0.25, hidden: false, groups: 4 });
+        tr.record(0, 2.0, EventKind::Exchange { round: 0, groups: 4, rs_s: 0.3, ag_s: 0.2 });
+        tr.record(0, 2.0, EventKind::FaultRetries { round: 0, group: 1, retries: 2, timeouts: 1 });
+        tr.record(0, 2.0, EventKind::QuorumDegraded { round: 0, group: 2, lost: 1 });
+        tr.record(0, 2.0, EventKind::OwnerDropFallback { round: 0, group: 3 });
+        tr.record(0, 2.0, EventKind::RsRetry { round: 0, group: 0 });
+        tr.record(0, 2.0, EventKind::GroupAbort { round: 0, group: 1, lost: 3 });
+        tr.record(1, 2.5, EventKind::Crash { peer: 7 });
+        tr.record(1, 2.5, EventKind::CrashRejoin { peer: 7 });
+        tr.record(1, 2.5, EventKind::Ban { peer: 3 });
+        tr.record(1, 2.5, EventKind::Parole { peer: 3 });
+        tr.record(1, 2.5, EventKind::Reban { peer: 3 });
+        tr.record(1, 3.0, EventKind::Mkd { rounds: 2, kd_steps: 8, teacher_transfers: 4, mean_loss: 0.75 });
+        tr.record(1, 3.0, EventKind::Eval { loss: 1.5, accuracy: 0.25 });
+        tr
+    }
+
+    #[test]
+    fn jsonl_round_trips_every_event_kind() {
+        let tr = sample();
+        let text = tr.to_jsonl();
+        let back = RoundTrace::parse_jsonl(&text).unwrap();
+        assert_eq!(back, tr);
+        // serialization is deterministic: re-serialize byte-identically
+        assert_eq!(back.to_jsonl(), text);
+    }
+
+    #[test]
+    fn header_carries_schema() {
+        let text = sample().to_jsonl();
+        let first = text.lines().next().unwrap();
+        assert!(first.contains(TRACE_SCHEMA));
+    }
+
+    #[test]
+    fn rejects_bad_documents() {
+        assert!(RoundTrace::parse_jsonl("").is_err());
+        assert!(RoundTrace::parse_jsonl("{\"schema\":\"marfl-trace/v999\"}\n").is_err());
+        assert!(RoundTrace::parse_jsonl("{\"no_schema\":1}\n").is_err());
+        let bad_event = format!("{}\n{{\"ev\":\"warp_drive\",\"iter\":0,\"t\":0}}\n", obj(vec![("schema", s(TRACE_SCHEMA))]).to_string());
+        assert!(RoundTrace::parse_jsonl(&bad_event).is_err());
+        let missing_field = format!("{}\n{{\"ev\":\"crash\",\"iter\":0,\"t\":0}}\n", obj(vec![("schema", s(TRACE_SCHEMA))]).to_string());
+        assert!(RoundTrace::parse_jsonl(&missing_field).is_err());
+    }
+
+    #[test]
+    fn write_and_read_file() {
+        let dir = std::env::temp_dir().join(format!("marfl_trace_test_{}", std::process::id()));
+        let path = dir.join("round_trace.jsonl");
+        let tr = sample();
+        tr.write_jsonl(&path).unwrap();
+        let back = RoundTrace::parse_jsonl(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back, tr);
+    }
+}

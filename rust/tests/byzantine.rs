@@ -14,7 +14,7 @@ use marfl::aggregation::{
 };
 use marfl::attack::{AttackConfig, AttackMode, Reputation};
 use marfl::config::ExperimentConfig;
-use marfl::coordinator::MarAggregator;
+use marfl::coordinator::{AggOptions, MarAggregator};
 use marfl::fl::Trainer;
 use marfl::metrics::{CommLedger, CommSnapshot};
 use marfl::net::{BwDist, Fabric, FaultConfig};
@@ -93,12 +93,22 @@ fn run_mar_iters(
     let mut clock = SimClock::new();
     let mut rng = Rng::new(404);
     let model = toy_model(p);
-    let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 7)
-        .with_exchange(exchange)
-        .with_parallel(parallel)
-        .with_robust(RobustPolicy { est, trim: 0.25 })
-        .with_reputation(0.4)
-        .with_parole(parole.0, parole.1);
+    let mut mar = MarAggregator::with_options(
+        n,
+        m,
+        g,
+        ledger.clone(),
+        7,
+        AggOptions {
+            exchange,
+            parallel,
+            robust: RobustPolicy { est, trim: 0.25 },
+            rep_threshold: 0.4,
+            rep_decay: parole.0,
+            parole_rounds: parole.1,
+            ..AggOptions::default()
+        },
+    );
     ledger.reset(); // drop DHT join traffic
     let mut reports = Vec::new();
     for _ in 0..iters {
@@ -184,12 +194,12 @@ fn inert_attack_config_is_bit_identical_to_seed() {
         irun.final_loss.to_bits(),
         "inert attack block changed the model"
     );
-    assert_eq!(irun.attackers_active, 0);
-    assert_eq!(irun.flagged_peers, 0);
-    assert_eq!(irun.flag_precision, 1.0);
-    assert_eq!(irun.flag_recall, 1.0);
-    assert_eq!(irun.paroles_granted, 0);
-    assert_eq!(irun.reban_count, 0);
+    assert_eq!(irun.byzantine.attackers_active, 0);
+    assert_eq!(irun.byzantine.flagged_peers, 0);
+    assert_eq!(irun.byzantine.flag_precision, 1.0);
+    assert_eq!(irun.byzantine.flag_recall, 1.0);
+    assert_eq!(irun.byzantine.paroles_granted, 0);
+    assert_eq!(irun.byzantine.reban_count, 0);
 }
 
 /// (b) Attacked aggregation stays bit-identical across engines for
@@ -327,14 +337,14 @@ fn byzantine_trainer_runs_are_reproducible() {
     let (a_states, a) = run(cfg.clone());
     let (b_states, b) = run(cfg);
 
-    assert_eq!(a.attackers_active, 3, "all 3 planted attackers must fire");
+    assert_eq!(a.byzantine.attackers_active, 3, "all 3 planted attackers must fire");
     // redraw schedule: iterations 2 and 4 (t % 2 == 0, t > 0)
-    assert_eq!(a.bw_redraws, 2);
-    assert_eq!(a.attackers_active, b.attackers_active);
-    assert_eq!(a.flagged_peers, b.flagged_peers);
-    assert_eq!(a.flag_precision.to_bits(), b.flag_precision.to_bits());
-    assert_eq!(a.flag_recall.to_bits(), b.flag_recall.to_bits());
-    assert_eq!(a.bw_redraws, b.bw_redraws);
+    assert_eq!(a.faults.bw_redraws, 2);
+    assert_eq!(a.byzantine.attackers_active, b.byzantine.attackers_active);
+    assert_eq!(a.byzantine.flagged_peers, b.byzantine.flagged_peers);
+    assert_eq!(a.byzantine.flag_precision.to_bits(), b.byzantine.flag_precision.to_bits());
+    assert_eq!(a.byzantine.flag_recall.to_bits(), b.byzantine.flag_recall.to_bits());
+    assert_eq!(a.faults.bw_redraws, b.faults.bw_redraws);
     assert_eq!(a.comm, b.comm);
     assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
     assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
@@ -516,13 +526,13 @@ fn parole_knobs_off_match_the_sticky_ban_seed() {
             parole_rounds: 0,
         },
     );
-    assert_eq!(a.paroles_granted, 0, "sticky bans must never parole");
-    assert_eq!(a.reban_count, 0);
-    assert_eq!(a.paroles_granted, b.paroles_granted);
-    assert_eq!(a.reban_count, b.reban_count);
-    assert_eq!(a.flagged_peers, b.flagged_peers);
-    assert_eq!(a.flag_precision.to_bits(), b.flag_precision.to_bits());
-    assert_eq!(a.flag_recall.to_bits(), b.flag_recall.to_bits());
+    assert_eq!(a.byzantine.paroles_granted, 0, "sticky bans must never parole");
+    assert_eq!(a.byzantine.reban_count, 0);
+    assert_eq!(a.byzantine.paroles_granted, b.byzantine.paroles_granted);
+    assert_eq!(a.byzantine.reban_count, b.byzantine.reban_count);
+    assert_eq!(a.byzantine.flagged_peers, b.byzantine.flagged_peers);
+    assert_eq!(a.byzantine.flag_precision.to_bits(), b.byzantine.flag_precision.to_bits());
+    assert_eq!(a.byzantine.flag_recall.to_bits(), b.byzantine.flag_recall.to_bits());
     assert_eq!(a.comm, b.comm);
     assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
     assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());

@@ -11,7 +11,7 @@ use marfl::aggregation::{
     mean_of, AggCtx, AggReport, Aggregate, GroupExchange, PeerState,
 };
 use marfl::config::ExperimentConfig;
-use marfl::coordinator::MarAggregator;
+use marfl::coordinator::{AggOptions, MarAggregator};
 use marfl::fl::Trainer;
 use marfl::metrics::{CommLedger, CommSnapshot, Plane};
 use marfl::net::{BwDist, Fabric, FaultConfig, LinkFault, RETRY_CTRL_BYTES};
@@ -63,9 +63,14 @@ fn run_mar_faulty(
     let mut clock = SimClock::new();
     let mut rng = Rng::new(rng_seed);
     let model = toy_model(p);
-    let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 7)
-        .with_exchange(exchange)
-        .with_parallel(parallel);
+    let mut mar = MarAggregator::with_options(
+        n,
+        m,
+        g,
+        ledger.clone(),
+        7,
+        AggOptions { exchange, parallel, ..AggOptions::default() },
+    );
     ledger.reset(); // drop DHT join traffic
     let mut ctx = AggCtx {
         fabric: &fabric,
@@ -312,8 +317,8 @@ fn trainer_surfaces_fault_counters_deterministically() {
     };
     let clean = run(base.clone());
     assert!(!clean.faults.any(), "default plan must report zero faults");
-    assert_eq!(clean.straggler_exposed_s, 0.0);
-    assert_eq!(clean.rejoin_pulls, 0);
+    assert_eq!(clean.faults.straggler_exposed_s, 0.0);
+    assert_eq!(clean.reliability.rejoin_pulls, 0);
 
     let mut faulty_cfg = base.clone();
     faulty_cfg.faults = FaultConfig {
@@ -325,7 +330,7 @@ fn trainer_surfaces_fault_counters_deterministically() {
     let a = run(faulty_cfg.clone());
     let b = run(faulty_cfg);
     assert!(a.faults.msgs_lost > 0, "loss=0.2 must lose messages");
-    assert!(a.straggler_exposed_s > 0.0, "stragglers must cost time");
+    assert!(a.faults.straggler_exposed_s > 0.0, "stragglers must cost time");
     assert_eq!(a.faults, b.faults, "fault counters must be reproducible");
     assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
     assert_eq!(a.comm, b.comm);

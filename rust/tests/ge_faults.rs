@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use marfl::aggregation::{AggCtx, AggReport, GroupExchange, PeerState};
 use marfl::config::ExperimentConfig;
-use marfl::coordinator::MarAggregator;
+use marfl::coordinator::{AggOptions, MarAggregator};
 use marfl::fl::Trainer;
 use marfl::metrics::{CommLedger, CommSnapshot};
 use marfl::net::{BwDist, Fabric, FaultConfig, LinkState};
@@ -82,9 +82,14 @@ fn run_mar_linked(
     let mut clock = SimClock::new();
     let mut rng = Rng::new(rng_seed);
     let model = toy_model(p);
-    let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 7)
-        .with_exchange(exchange)
-        .with_parallel(parallel);
+    let mut mar = MarAggregator::with_options(
+        n,
+        m,
+        g,
+        ledger.clone(),
+        7,
+        AggOptions { exchange, parallel, ..AggOptions::default() },
+    );
     ledger.reset(); // drop DHT join traffic
     let mut links = links;
     let mut ctx = AggCtx {
@@ -330,7 +335,7 @@ fn trainer_surfaces_burst_stats_deterministically() {
     let clean = run(base.clone());
     assert_eq!(clean.faults.ge_bad_transitions, 0);
     assert_eq!(clean.faults.bursty_losses, 0);
-    assert!(clean.bw_percentiles.is_none(), "no bw draw when dist is off");
+    assert!(clean.faults.bw_percentiles.is_none(), "no bw draw when dist is off");
 
     let mut bursty_cfg = base.clone();
     bursty_cfg.faults = bursty_plan();
@@ -342,7 +347,7 @@ fn trainer_surfaces_burst_stats_deterministically() {
     );
     assert!(a.faults.msgs_lost > 0, "bursty run must lose messages");
     let [p10, p50, p90] =
-        a.bw_percentiles.expect("lognormal bw draw must report percentiles");
+        a.faults.bw_percentiles.expect("lognormal bw draw must report percentiles");
     assert!(p10 <= p50 && p50 <= p90, "percentiles must be ordered");
     assert!(
         p10 >= bursty_cfg.faults.bw_min - 1e-12
@@ -350,7 +355,7 @@ fn trainer_surfaces_burst_stats_deterministically() {
         "percentiles must respect the clamp: [{p10}, {p50}, {p90}]"
     );
     assert_eq!(a.faults, b.faults, "burst counters must be reproducible");
-    assert_eq!(a.bw_percentiles, b.bw_percentiles);
+    assert_eq!(a.faults.bw_percentiles, b.faults.bw_percentiles);
     assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
     assert_eq!(a.comm, b.comm);
 

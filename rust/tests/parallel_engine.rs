@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use marfl::aggregation::{AggCtx, Aggregate, PeerState};
 use marfl::config::ExperimentConfig;
-use marfl::coordinator::MarAggregator;
+use marfl::coordinator::{AggOptions, MarAggregator};
 use marfl::exec;
 use marfl::fl::Trainer;
 use marfl::metrics::{CommLedger, Plane};
@@ -56,8 +56,14 @@ fn run_mar(
     let mut clock = SimClock::new();
     let mut rng = Rng::new(77);
     let model = toy_model(p);
-    let mut mar =
-        MarAggregator::new(n, m, g, ledger.clone(), 7).with_parallel(parallel);
+    let mut mar = MarAggregator::with_options(
+        n,
+        m,
+        g,
+        ledger.clone(),
+        7,
+        AggOptions { parallel, ..AggOptions::default() },
+    );
     let mut ctx = AggCtx {
         fabric: &fabric,
         clock: &mut clock,
@@ -104,9 +110,18 @@ fn parallel_reduce_scatter_matches_serial() {
         let mut clock = SimClock::new();
         let mut rng = Rng::new(5);
         let model = toy_model(129);
-        let mut mar = MarAggregator::new(n, 3, 3, ledger.clone(), 7)
-            .with_exchange(marfl::aggregation::GroupExchange::ReduceScatter)
-            .with_parallel(parallel);
+        let mut mar = MarAggregator::with_options(
+            n,
+            3,
+            3,
+            ledger.clone(),
+            7,
+            AggOptions {
+                exchange: marfl::aggregation::GroupExchange::ReduceScatter,
+                parallel,
+                ..AggOptions::default()
+            },
+        );
         let mut ctx = AggCtx {
             fabric: &fabric,
             clock: &mut clock,

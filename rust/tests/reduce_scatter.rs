@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use marfl::aggregation::{mean_of, AggCtx, AggReport, Aggregate, GroupExchange, PeerState};
-use marfl::coordinator::MarAggregator;
+use marfl::coordinator::{AggOptions, MarAggregator};
 use marfl::metrics::{CommLedger, CommSnapshot};
 use marfl::models::ModelMeta;
 use marfl::net::Fabric;
@@ -58,11 +58,20 @@ fn run_mar_budget(
     let mut clock = SimClock::new();
     let mut rng = Rng::new(77);
     let model = toy_model(p);
-    let mut mar = MarAggregator::new(n, m, g, ledger.clone(), 7)
-        .with_exchange(exchange)
-        .with_rs_drop(rs_drop)
-        .with_rs_retry_budget(rs_retry_budget)
-        .with_parallel(parallel);
+    let mut mar = MarAggregator::with_options(
+        n,
+        m,
+        g,
+        ledger.clone(),
+        7,
+        AggOptions {
+            exchange,
+            rs_drop,
+            rs_retry_budget,
+            parallel,
+            ..AggOptions::default()
+        },
+    );
     ledger.reset(); // drop DHT join traffic
     let mut ctx = AggCtx {
         fabric: &fabric,
@@ -197,17 +206,17 @@ fn retry_budget_defers_instead_of_falling_back() {
         usize::MAX,
         true,
     );
-    assert_eq!(seed_rep.rs_retries, 0, "budget 0 must never retry");
-    assert!(seed_rep.rs_fallbacks > 0);
-    assert!(ret_rep.rs_retries > 0, "an uncapped budget must retry");
+    assert_eq!(seed_rep.reliability.rs_retries, 0, "budget 0 must never retry");
+    assert!(seed_rep.reliability.rs_fallbacks > 0);
+    assert!(ret_rep.reliability.rs_retries > 0, "an uncapped budget must retry");
     assert!(
-        ret_rep.rs_fallbacks > 0,
+        ret_rep.reliability.rs_fallbacks > 0,
         "final-round drops cannot retry (no round to re-form in)"
     );
     // identical drop schedule: every drop is accounted exactly once
     assert_eq!(
-        seed_rep.rs_fallbacks,
-        ret_rep.rs_fallbacks + ret_rep.rs_retries,
+        seed_rep.reliability.rs_fallbacks,
+        ret_rep.reliability.rs_fallbacks + ret_rep.reliability.rs_retries,
         "retries must re-label fallbacks, not change the drop schedule"
     );
     // deferring skips the survivors-only recovery gathers
@@ -251,10 +260,10 @@ fn retry_budget_is_consumed_in_schedule_order() {
         budget,
         true,
     );
-    assert_eq!(capped.rs_retries, budget, "exactly the budget may be spent");
+    assert_eq!(capped.reliability.rs_retries, budget, "exactly the budget may be spent");
     assert_eq!(
-        capped.rs_retries + capped.rs_fallbacks,
-        unbounded.rs_retries + unbounded.rs_fallbacks,
+        capped.reliability.rs_retries + capped.reliability.rs_fallbacks,
+        unbounded.reliability.rs_retries + unbounded.reliability.rs_fallbacks,
         "total drops are schedule state, independent of the budget"
     );
 }

@@ -1,0 +1,249 @@
+//! Telemetry subsystem contract, end to end:
+//!
+//! 1. the typed metric registry rejects re-registration and kind
+//!    mismatches (handles are resolved exactly once);
+//! 2. recording a round-event trace is observation only — a traced run
+//!    is bit-identical to the same run untraced (states, ledger, curve,
+//!    scorecards), so telemetry-off stays bit-identical to the seed;
+//! 3. the trace itself is part of the determinism contract — serial and
+//!    parallel engines produce byte-for-byte identical JSONL under a
+//!    bursty Gilbert–Elliott fault plan with a Byzantine attack active;
+//! 4. the JSONL wire format round-trips through a file and rejects a
+//!    tampered schema header.
+
+use marfl::attack::{AttackConfig, AttackMode, RobustEstimator};
+use marfl::config::{ExperimentConfig, Strategy};
+use marfl::fl::{RunSummary, Trainer};
+use marfl::models::default_artifact_dir;
+use marfl::net::FaultConfig;
+use marfl::runtime::Runtime;
+use marfl::telemetry::{EventKind, MetricRegistry, RoundTrace, TRACE_SCHEMA};
+
+fn runtime() -> Runtime {
+    Runtime::new(&default_artifact_dir()).expect("runtime")
+}
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        strategy: Strategy::MarFl,
+        model: "head".into(),
+        peers: 16,
+        group_size: 4,
+        mar_rounds: 2, // 16 = 4²
+        iterations: 4,
+        samples_per_peer: 32,
+        test_samples: 250,
+        eval_every: 2,
+        seed: 2026,
+        ..Default::default()
+    }
+}
+
+/// Lossy/straggler/crash plan used by the bit-identity run.
+fn faulty() -> FaultConfig {
+    FaultConfig {
+        loss: 0.1,
+        straggler_prob: 0.3,
+        straggler_mult: 3.0,
+        crash_prob: 0.05,
+        ..FaultConfig::default()
+    }
+}
+
+/// Bursty Gilbert–Elliott plan (π = p/(p+r) = 0.2) for the cross-engine
+/// trace-equality run.
+fn bursty() -> FaultConfig {
+    FaultConfig {
+        loss: 0.02,
+        ge_p: 0.075,
+        ge_r: 0.3,
+        ge_loss: 0.5,
+        ge_bw: 0.25,
+        ge_lat: 4.0,
+        ..FaultConfig::default()
+    }
+}
+
+/// Bit-exact RunSummary comparison (f64s via `to_bits`, scorecards via
+/// their derived equality).
+fn assert_summaries_identical(a: &RunSummary, b: &RunSummary, tag: &str) {
+    assert_eq!(a.iterations_run, b.iterations_run, "{tag}: iterations");
+    assert_eq!(a.comm, b.comm, "{tag}: comm snapshot");
+    assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits(), "{tag}: clock");
+    assert_eq!(a.dht_hops, b.dht_hops, "{tag}: dht hops");
+    assert_eq!(a.reliability, b.reliability, "{tag}: reliability scorecard");
+    assert_eq!(a.faults, b.faults, "{tag}: fault scorecard");
+    assert_eq!(a.byzantine, b.byzantine, "{tag}: byzantine scorecard");
+    assert_eq!(
+        a.dp.epsilon.map(f64::to_bits),
+        b.dp.epsilon.map(f64::to_bits),
+        "{tag}: dp scorecard"
+    );
+    assert_eq!(
+        a.final_accuracy.to_bits(),
+        b.final_accuracy.to_bits(),
+        "{tag}: accuracy"
+    );
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{tag}: loss");
+    assert_eq!(a.curve.points.len(), b.curve.points.len(), "{tag}: curve len");
+    for (i, (p, q)) in a.curve.points.iter().zip(&b.curve.points).enumerate() {
+        assert_eq!(p.iteration, q.iteration, "{tag}: point {i} iteration");
+        assert_eq!(p.data_bytes, q.data_bytes, "{tag}: point {i} data bytes");
+        assert_eq!(
+            p.control_bytes, q.control_bytes,
+            "{tag}: point {i} control bytes"
+        );
+        assert_eq!(p.loss.to_bits(), q.loss.to_bits(), "{tag}: point {i} loss");
+        assert_eq!(
+            p.accuracy.to_bits(),
+            q.accuracy.to_bits(),
+            "{tag}: point {i} accuracy"
+        );
+        assert_eq!(
+            p.sim_time_s.to_bits(),
+            q.sim_time_s.to_bits(),
+            "{tag}: point {i} sim time"
+        );
+    }
+}
+
+/// Handles are resolved once at registration: a second registration of
+/// the same name fails regardless of kind, and the get-or-register
+/// escape hatch refuses to hand a counter handle out for a gauge.
+#[test]
+fn registry_rejects_re_registration_and_kind_mismatch() {
+    let reg = MetricRegistry::new();
+    let c = reg.counter("fl.test.counter").unwrap();
+    assert!(reg.counter("fl.test.counter").is_err(), "duplicate counter");
+    assert!(reg.gauge("fl.test.counter").is_err(), "gauge over counter name");
+    assert!(
+        reg.histogram("fl.test.counter").is_err(),
+        "histogram over counter name"
+    );
+    // get-or-register returns the SAME underlying cell…
+    let c2 = reg.counter_or_existing("fl.test.counter").unwrap();
+    c.add(3);
+    c2.add(4);
+    assert_eq!(reg.counter_value("fl.test.counter"), 7);
+    // …and refuses a kind mismatch
+    reg.gauge("fl.test.gauge").unwrap();
+    assert!(reg.counter_or_existing("fl.test.gauge").is_err());
+}
+
+/// Tracing is observation only: the same config run with and without a
+/// trace yields bit-identical models, ledger, curve, and scorecards.
+/// This is the property that makes telemetry-off bit-identical to the
+/// pre-telemetry seed — the registry never touches RNG, clock, or
+/// ledger, and the trace is the only gated component.
+#[test]
+fn traced_run_is_bit_identical_to_untraced() {
+    let rt = runtime();
+    let cfg = ExperimentConfig { faults: faulty(), ..base_cfg() };
+
+    let mut plain = Trainer::new(cfg.clone(), &rt).unwrap();
+    let plain_sum = plain.run().unwrap();
+    assert!(plain.trace().is_none(), "default build must not trace");
+
+    let mut traced = Trainer::builder(cfg, &rt).trace(true).build().unwrap();
+    let traced_sum = traced.run().unwrap();
+
+    assert_summaries_identical(&plain_sum, &traced_sum, "traced-vs-plain");
+    for (i, (a, b)) in plain.states().iter().zip(traced.states()).enumerate() {
+        assert_eq!(a.theta, b.theta, "peer {i} theta diverged under tracing");
+        assert_eq!(a.momentum, b.momentum, "peer {i} momentum diverged");
+    }
+
+    // the timeline itself is well-formed: one IterStart per iteration,
+    // one Eval per curve point, events in nondecreasing simulated time
+    let tr = traced.trace().unwrap().lock().unwrap().clone();
+    assert!(!tr.is_empty());
+    let starts = tr
+        .events()
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::IterStart { .. }))
+        .count();
+    assert_eq!(starts, traced_sum.iterations_run, "IterStart per iteration");
+    let evals = tr
+        .events()
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Eval { .. }))
+        .count();
+    assert_eq!(evals, traced_sum.curve.points.len(), "Eval per curve point");
+    for w in tr.events().windows(2) {
+        assert!(w[0].iter <= w[1].iter, "iterations must be ordered");
+    }
+}
+
+/// The trace is pinned across engines: serial and parallel runs under a
+/// bursty GE fault plan with an active sign-flip attack (robust
+/// aggregation + reputation bans) must serialize byte-for-byte
+/// identically — the same guarantee CI checks under MARFL_THREADS=1 vs 4.
+#[test]
+fn trace_is_byte_identical_across_engines_under_faults_and_attack() {
+    let rt = runtime();
+    let cfg = ExperimentConfig {
+        faults: bursty(),
+        attack: AttackConfig {
+            frac: 0.25,
+            mode: AttackMode::SignFlip,
+            scale: 1.0,
+            robust: RobustEstimator::TrimmedMean,
+            trim: 0.25,
+            rep_threshold: 0.4,
+            ..AttackConfig::default()
+        },
+        iterations: 6,
+        ..base_cfg()
+    };
+
+    let mut serial =
+        Trainer::builder(cfg.clone(), &rt).parallel(false).trace(true).build().unwrap();
+    let s_sum = serial.run().unwrap();
+    let mut par =
+        Trainer::builder(cfg, &rt).parallel(true).trace(true).build().unwrap();
+    let p_sum = par.run().unwrap();
+
+    assert_summaries_identical(&s_sum, &p_sum, "serial-vs-parallel");
+    // the scenario actually exercised both subsystems
+    assert!(s_sum.faults.msgs_lost > 0, "bursty plan must lose messages");
+    assert!(s_sum.byzantine.attackers_active > 0, "attackers must fire");
+
+    let s_jsonl = serial.trace().unwrap().lock().unwrap().to_jsonl();
+    let p_jsonl = par.trace().unwrap().lock().unwrap().to_jsonl();
+    assert!(!s_jsonl.is_empty());
+    assert_eq!(s_jsonl, p_jsonl, "trace JSONL diverged across engines");
+}
+
+/// File round-trip of a real trainer trace, plus schema tampering
+/// rejection — what `marfl trace-check` enforces in CI.
+#[test]
+fn trace_round_trips_through_file_and_rejects_tampered_schema() {
+    let rt = runtime();
+    let cfg = ExperimentConfig { faults: faulty(), ..base_cfg() };
+    let mut trainer = Trainer::builder(cfg, &rt).trace(true).build().unwrap();
+    trainer.run().unwrap();
+
+    let dir = std::env::temp_dir()
+        .join(format!("marfl_telemetry_test_{}", std::process::id()));
+    let path = dir.join("round_trace.jsonl");
+    trainer.write_trace(&path).unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let back = RoundTrace::parse_jsonl(&text).unwrap();
+    let live = trainer.trace().unwrap().lock().unwrap().clone();
+    assert_eq!(back, live, "file round-trip must preserve every event");
+    // re-serialization is byte-stable (deterministic writer)
+    assert_eq!(back.to_jsonl(), text);
+
+    let tampered = text.replacen(TRACE_SCHEMA, "marfl-trace/v999", 1);
+    assert!(
+        RoundTrace::parse_jsonl(&tampered).is_err(),
+        "tampered schema header must be rejected"
+    );
+
+    // an untraced trainer refuses to write
+    let rt2 = runtime();
+    let plain = Trainer::new(base_cfg(), &rt2).unwrap();
+    assert!(plain.write_trace(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

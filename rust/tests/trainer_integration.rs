@@ -169,7 +169,7 @@ fn dp_training_accounts_epsilon() {
     cfg.dp.noise_multiplier = 0.3;
     let mut trainer = Trainer::new(cfg, &rt).unwrap();
     let summary = trainer.run().unwrap();
-    let eps = summary.epsilon.expect("epsilon must be reported");
+    let eps = summary.dp.epsilon.expect("epsilon must be reported");
     assert!(eps > 0.0 && eps.is_finite());
     assert!(summary.final_loss.is_finite());
     // same T, more noise -> smaller ε
@@ -178,7 +178,7 @@ fn dp_training_accounts_epsilon() {
     cfg2.dp.noise_multiplier = 0.6;
     let summary2 = Trainer::new(cfg2, &rt).unwrap().run().unwrap();
     assert!(
-        summary2.epsilon.unwrap() < eps,
+        summary2.dp.epsilon.unwrap() < eps,
         "more noise must mean less privacy loss"
     );
 }
@@ -287,7 +287,7 @@ fn kitchen_sink_composition() {
     let mut trainer = Trainer::new(cfg, &rt).unwrap();
     let summary = trainer.run().unwrap();
     assert!(summary.final_loss.is_finite());
-    assert!(summary.epsilon.unwrap().is_finite());
+    assert!(summary.dp.epsilon.unwrap().is_finite());
     assert!(summary.comm.data_bytes > 0);
     assert!(summary.comm.control_bytes > 0);
     assert!(summary.sim_time_s > 0.0);
